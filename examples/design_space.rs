@@ -1,0 +1,119 @@
+//! Design-space exploration (paper §3/§6.1-6.2): the granularity dials.
+//!
+//! Sweeps the three coupled knobs the paper identifies — task size
+//! (keys/core), tree incast (width vs depth), and bucket count — and
+//! prints where the sweet spots fall on this substrate.
+//!
+//! ```sh
+//! cargo run --release --example design_space
+//! ```
+
+use std::rc::Rc;
+
+use nanosort::algo::mergemin::{run_mergemin, MergeMinConfig};
+use nanosort::algo::nanosort::{run_nanosort, NanoSortConfig};
+use nanosort::compute::NativeCompute;
+use nanosort::coordinator::Table;
+
+fn main() -> anyhow::Result<()> {
+    let compute = Rc::new(NativeCompute);
+
+    // Dial 1: MergeMin incast (Fig 4's trade-off, multiple fleet sizes).
+    let mut t1 = Table::new(
+        "MergeMin: incast sweet spot vs fleet size (128 values/core)",
+        &["cores", "incast=2", "incast=4", "incast=8", "incast=16", "incast=64"],
+    );
+    for cores in [64usize, 256, 1024] {
+        let mut cells = vec![cores.to_string()];
+        for incast in [2usize, 4, 8, 16, 64] {
+            let cfg = MergeMinConfig {
+                cores,
+                values_per_core: 128,
+                incast,
+                seed: 1,
+                ..Default::default()
+            };
+            let r = run_mergemin(&cfg, compute.clone());
+            assert!(r.correct());
+            cells.push(format!("{:.0}ns", r.summary.makespan.as_ns_f64()));
+        }
+        t1.row(cells);
+    }
+    t1.note("paper Fig 4: sweet spot at incast 8 for 64 cores");
+    println!("{}", t1.render());
+
+    // Dial 2: NanoSort granularity — fixed 65,536 keys, vary the fleet.
+    let mut t2 = Table::new(
+        "NanoSort: same 65,536 keys, more (smaller) tasks",
+        &["cores", "keys_per_core", "runtime_us", "aggregate_core_us"],
+    );
+    for (nodes, kpn) in [(256usize, 256usize), (4096, 16), (65536, 1)] {
+        let cfg = NanoSortConfig {
+            nodes,
+            keys_per_node: kpn,
+            buckets: 16,
+            median_incast: 16,
+            seed: 5,
+            ..Default::default()
+        };
+        let r = run_nanosort(&cfg, compute.clone());
+        assert!(r.validation.ok());
+        let us = r.runtime().as_us_f64();
+        t2.row(vec![
+            nodes.to_string(),
+            kpn.to_string(),
+            format!("{us:.2}"),
+            format!("{:.0}", us * nodes as f64),
+        ]);
+    }
+    t2.note("latency falls as tasks shrink — but aggregate core-time (cost) rises");
+    println!("{}", t2.render());
+
+    // Dial 3: median-tree incast within NanoSort (4,096 cores).
+    let mut t3 = Table::new(
+        "NanoSort: median-tree incast (4,096 cores, 16 keys/core, b=16)",
+        &["median_incast", "runtime_us"],
+    );
+    for f in [2usize, 4, 8, 16] {
+        let cfg = NanoSortConfig {
+            nodes: 4096,
+            keys_per_node: 16,
+            buckets: 16,
+            median_incast: f,
+            seed: 5,
+            ..Default::default()
+        };
+        let r = run_nanosort(&cfg, compute.clone());
+        assert!(r.validation.ok());
+        t3.row(vec![f.to_string(), format!("{:.2}", r.runtime().as_us_f64())]);
+    }
+    println!("{}", t3.render());
+
+    // Dial 4: buckets per level (Fig 11 shape).
+    let mut t4 = Table::new(
+        "NanoSort: buckets per level (4,096 cores, 32 keys/core)",
+        &["buckets", "depth", "runtime_us", "msgs_sent"],
+    );
+    for b in [4usize, 8, 16] {
+        let cfg = NanoSortConfig {
+            nodes: 4096,
+            keys_per_node: 32,
+            buckets: b,
+            median_incast: b,
+            seed: 5,
+            ..Default::default()
+        };
+        let depth = cfg.depth();
+        let r = run_nanosort(&cfg, compute.clone());
+        assert!(r.validation.ok());
+        t4.row(vec![
+            b.to_string(),
+            depth.to_string(),
+            format!("{:.2}", r.runtime().as_us_f64()),
+            r.summary.net.msgs_sent.to_string(),
+        ]);
+    }
+    t4.note("paper Fig 11: similar runtime despite different traffic (width/depth trade)");
+    println!("{}", t4.render());
+    Ok(())
+}

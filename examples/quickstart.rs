@@ -1,0 +1,61 @@
+//! Quickstart: sort 4,096 keys across 256 simulated nanoPU cores with the
+//! full three-layer stack — node-local compute runs through the
+//! AOT-compiled Pallas/JAX artifacts via PJRT (`--native` falls back to
+//! the pure-Rust data plane if artifacts aren't built).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use nanosort::algo::nanosort::{run_nanosort, NanoSortConfig};
+use nanosort::coordinator::ComputeChoice;
+
+fn main() -> anyhow::Result<()> {
+    let native = std::env::args().any(|a| a == "--native");
+    let choice = if native { ComputeChoice::Native } else { ComputeChoice::Xla };
+    let compute = match choice.build() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("XLA data plane unavailable ({e:#}); run `make artifacts` first.");
+            eprintln!("Falling back to the native data plane.\n");
+            ComputeChoice::Native.build()?
+        }
+    };
+    println!("data plane: {}", compute.name());
+
+    let cfg = NanoSortConfig {
+        nodes: 256,
+        keys_per_node: 16,
+        buckets: 16,
+        median_incast: 16,
+        shuffle_values: true, // full GraySort semantics: values travel too
+        seed: 42,
+        ..Default::default()
+    };
+    println!(
+        "sorting {} keys on {} cores ({} buckets, depth {})...",
+        cfg.total_keys(),
+        cfg.nodes,
+        cfg.buckets,
+        cfg.depth()
+    );
+
+    let r = run_nanosort(&cfg, compute);
+
+    println!("simulated runtime : {:.2} µs", r.runtime().as_us_f64());
+    println!("globally sorted   : {}", r.validation.globally_sorted);
+    println!("permutation intact: {}", r.validation.is_permutation);
+    println!("values intact     : {}", r.validation.values_intact);
+    println!("final skew        : {:.2}", r.skew);
+    println!("messages sent     : {}", r.summary.net.msgs_sent);
+    println!("mean utilization  : {:.1} %", 100.0 * r.summary.mean_utilization());
+    for l in &r.levels {
+        println!(
+            "  stage {}: busy {:.2} µs (mean) / idle {:.2} µs (mean)",
+            l.stage, l.mean_busy_us, l.mean_idle_us
+        );
+    }
+    assert!(r.validation.ok(), "validation failed");
+    println!("OK");
+    Ok(())
+}

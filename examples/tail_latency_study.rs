@@ -1,0 +1,114 @@
+//! Tail-latency sensitivity study (paper Fig 14, extended).
+//!
+//! The paper's point: with tens of thousands of messages in flight, the
+//! p99 latency *will* be experienced on the critical path — a 4,000 ns
+//! p99 doubles NanoSort's runtime. This example sweeps both the injected
+//! extra latency and the injection probability, and also compares how the
+//! same tails hurt MilliSort (deeper dependency chains amplify tails).
+//!
+//! ```sh
+//! cargo run --release --example tail_latency_study
+//! ```
+
+use std::rc::Rc;
+
+use nanosort::algo::millisort::{run_millisort, MilliSortConfig};
+use nanosort::algo::nanosort::{run_nanosort, NanoSortConfig};
+use nanosort::compute::NativeCompute;
+use nanosort::coordinator::Table;
+
+fn main() -> anyhow::Result<()> {
+    let compute = Rc::new(NativeCompute);
+
+    // Part 1: Fig 14 proper — NanoSort, 256 cores, sweep p99 extra.
+    let mut t1 = Table::new(
+        "NanoSort runtime vs injected p99 extra latency (256 cores, 32 keys/core)",
+        &["p99_extra_ns", "runtime_us", "slowdown", "tail_hits"],
+    );
+    let mut base = 0.0;
+    for extra in [0u64, 250, 500, 1000, 2000, 4000, 8000] {
+        let mut cfg = NanoSortConfig {
+            nodes: 256,
+            keys_per_node: 32,
+            shuffle_values: true,
+            seed: 3,
+            ..Default::default()
+        };
+        cfg.net.tail_prob = (1, 100);
+        cfg.net.tail_extra_ns = extra;
+        let r = run_nanosort(&cfg, compute.clone());
+        assert!(r.validation.ok());
+        let us = r.runtime().as_us_f64();
+        if extra == 0 {
+            base = us;
+        }
+        t1.row(vec![
+            extra.to_string(),
+            format!("{us:.2}"),
+            format!("{:.2}x", us / base),
+            r.summary.net.tail_hits.to_string(),
+        ]);
+    }
+    t1.note("paper: 4,000 ns p99 doubled runtime (26 µs -> 53 µs)");
+    println!("{}", t1.render());
+
+    // Part 2: injection probability sweep at fixed 4,000 ns.
+    let mut t2 = Table::new(
+        "Sensitivity to tail *probability* (4,000 ns extra)",
+        &["tail_fraction", "runtime_us", "slowdown"],
+    );
+    for (num, den) in [(0u64, 100u64), (1, 1000), (1, 100), (5, 100), (10, 100)] {
+        let mut cfg = NanoSortConfig {
+            nodes: 256,
+            keys_per_node: 32,
+            shuffle_values: true,
+            seed: 3,
+            ..Default::default()
+        };
+        cfg.net.tail_prob = (num, den);
+        cfg.net.tail_extra_ns = 4000;
+        let r = run_nanosort(&cfg, compute.clone());
+        let us = r.runtime().as_us_f64();
+        t2.row(vec![
+            format!("{:.3}", num as f64 / den as f64),
+            format!("{us:.2}"),
+            format!("{:.2}x", us / base),
+        ]);
+    }
+    println!("{}", t2.render());
+
+    // Part 3: the same tail vs MilliSort — longer dependency chains.
+    let mut t3 = Table::new(
+        "Same 1% tail injection vs MilliSort (128 cores, 4,096 keys)",
+        &["p99_extra_ns", "nanosort_us", "millisort_us"],
+    );
+    for extra in [0u64, 2000, 4000] {
+        let mut ncfg = NanoSortConfig {
+            nodes: 256,
+            keys_per_node: 16,
+            seed: 3,
+            ..Default::default()
+        };
+        ncfg.net.tail_prob = (1, 100);
+        ncfg.net.tail_extra_ns = extra;
+        let nr = run_nanosort(&ncfg, compute.clone());
+
+        let mut mcfg = MilliSortConfig {
+            cores: 128,
+            total_keys: 4096,
+            seed: 3,
+            ..Default::default()
+        };
+        mcfg.net.tail_prob = (1, 100);
+        mcfg.net.tail_extra_ns = extra;
+        let mr = run_millisort(&mcfg, compute.clone());
+        assert!(nr.validation.ok() && mr.validation.ok());
+        t3.row(vec![
+            extra.to_string(),
+            format!("{:.2}", nr.runtime().as_us_f64()),
+            format!("{:.2}", mr.runtime().as_us_f64()),
+        ]);
+    }
+    println!("{}", t3.render());
+    Ok(())
+}

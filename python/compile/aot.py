@@ -1,0 +1,131 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via ``make artifacts``; writes ``artifacts/<name>.hlo.txt`` plus
+``artifacts/manifest.json`` describing each entry point's shapes so the
+rust ``runtime::ArtifactRegistry`` can load them without guessing.
+
+Python runs ONLY here, at build time — never on the request path.
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # u64 keys end-to-end
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+U64 = jnp.uint64
+
+# (entry point, artifact name, example-arg shapes).
+# B = simulated-core batch, N = keys per core (power of two), P = pivots,
+# M = median-tree incast. The set covers every shape the L3 coordinator
+# requests for the paper's experiments (DESIGN.md section 4).
+SPECS = []
+
+
+def _spec(entry, name, *args):
+    SPECS.append((entry, name, args))
+
+
+def _u(shape):
+    return jax.ShapeDtypeStruct(shape, U64)
+
+
+# Local sort: per-node blocks and fleet-batched blocks.
+for b, n in [(1, 16), (1, 32), (1, 64), (1, 128), (1, 256),
+             (64, 128), (256, 32), (4096, 16), (4096, 32)]:
+    _spec("sort_block", f"sort_block_b{b}_n{n}", _u((b, n)))
+
+# Sort + order statistics (pivot-select front half).
+for b, n in [(1, 16), (1, 32), (1, 64)]:
+    _spec("sort_stats_block", f"sort_stats_block_b{b}_n{n}", _u((b, n)))
+
+# Shuffle routing: keys x pivots -> bucket ids.
+for b, n, p in [(1, 16, 15), (1, 32, 15), (1, 64, 15), (1, 32, 7),
+                (1, 32, 3), (4096, 16, 15), (4096, 32, 15), (4096, 32, 7), (4096, 32, 3)]:
+    _spec("bucketize_block", f"bucketize_block_b{b}_n{n}_p{p}", _u((b, n)), _u((p,)))
+
+# MergeMin reduce: incast blocks.
+for b, n in [(1, 2), (1, 4), (1, 8), (1, 16), (1, 32), (1, 64), (1, 128), (64, 128)]:
+    _spec("merge_min_block", f"merge_min_block_b{b}_n{n}", _u((b, n)))
+
+# Median-tree aggregation: M child pivot vectors -> element-wise median.
+for m, p in [(2, 15), (4, 15), (8, 15), (16, 15), (4, 7), (8, 7), (8, 3), (4, 3)]:
+    _spec("median_combine", f"median_combine_m{m}_p{p}", _u((m, p)))
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: pathlib.Path) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {"format": "hlo-text", "key_dtype": "u64", "artifacts": []}
+    for entry, name, args in SPECS:
+        fn = model.ENTRY_POINTS[entry]
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "entry": entry,
+                "file": path.name,
+                "inputs": [
+                    {"dtype": str(a.dtype), "shape": list(a.shape)} for a in args
+                ],
+                "outputs": [
+                    {"dtype": str(o.dtype), "shape": list(o.shape)}
+                    for o in jax.eval_shape(fn, *args)
+                ],
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            }
+        )
+        print(f"  {name}: {len(text)} chars")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    # TSV twin of the manifest for the (dependency-free) rust parser:
+    #   name \t entry \t file \t inputs \t outputs
+    # where inputs/outputs are `dtype:dim,dim;dtype:dim` lists.
+    def fmt(tensors):
+        return ";".join(
+            f"{t['dtype']}:{','.join(str(d) for d in t['shape'])}" for t in tensors
+        )
+
+    lines = ["#format=hlo-text\tkey_dtype=u64"]
+    for a in manifest["artifacts"]:
+        lines.append(
+            "\t".join([a["name"], a["entry"], a["file"], fmt(a["inputs"]), fmt(a["outputs"])])
+        )
+    (out_dir / "manifest.tsv").write_text("\n".join(lines) + "\n")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    manifest = build(out)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""L1 Pallas kernels for the NanoSort per-core compute hot-spots.
+
+- ``bitonic``: batched local key sort (the nanoTask "sort <= 64 keys").
+- ``merge_min``: batched min-reduce (MergeMin merge-tree step).
+- ``bucketize``: branch-free key -> bucket routing (shuffle step).
+- ``ref``: pure-jnp oracles for all of the above.
+"""
+
+from . import bitonic, bucketize, merge_min, ref  # noqa: F401

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: batched bitonic sort of u64 keys.
+
+This is the per-core compute hot-spot of NanoSort (paper Fig 1: "sort 40
+8-byte keys" is a canonical sub-microsecond nanoTask, Fig 8: local sort).
+Each simulated nanoPU core owns a small block of keys (<= 256); the kernel
+sorts B such blocks in one launch, one grid step per block.
+
+TPU adaptation (DESIGN.md "Hardware-Adaptation"): one VMEM-resident block
+per grid step via BlockSpec((1, N)), compare-exchange stages as branch-free
+vector ops (VPU work, no MXU). interpret=True is mandatory on this image:
+real TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compare_exchange(x, j, k):
+    """One bitonic compare-exchange stage over the last axis.
+
+    ``j`` is the partner distance, ``k`` the (power-of-two) size of the
+    bitonic blocks being merged; both are static Python ints so the whole
+    network unrolls into straight-line vector code.
+    """
+    n = x.shape[-1]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    partner = idx ^ j
+    xp = jnp.take(x, partner, axis=-1)
+    # Ascending iff bit k of the index is clear (standard bitonic network).
+    ascending = (idx & k) == 0
+    keep_lo = (idx < partner) == ascending
+    return jnp.where(keep_lo, jnp.minimum(x, xp), jnp.maximum(x, xp))
+
+
+def bitonic_sort_array(x):
+    """Sort the last axis of ``x`` with a full bitonic network (jnp ops).
+
+    Shared by the Pallas kernel body and (for cross-checking) callable on
+    plain arrays. Last-axis length must be a power of two.
+    """
+    n = x.shape[-1]
+    if n & (n - 1):
+        raise ValueError(f"bitonic sort needs a power-of-two length, got {n}")
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            x = _compare_exchange(x, j, k)
+            j //= 2
+        k *= 2
+    return x
+
+
+def _sort_kernel(x_ref, o_ref):
+    o_ref[...] = bitonic_sort_array(x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sort_blocks(x):
+    """Sort each row of ``x: u64[B, N]`` (N a power of two) ascending."""
+    b, n = x.shape
+    return pl.pallas_call(
+        _sort_kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,38 @@
+"""L1 Pallas kernel: branch-free bucket routing (the NanoSort shuffle step).
+
+Given P = b-1 sorted pivots, every key maps to bucket
+``sum(key >= pivot_i)`` in [0, b). Paper Section 4's shuffle routes each
+key to a uniformly random node of its bucket's partition; the bucket index
+computed here is the data-dependent half of that routing decision.
+
+Branch-free comparison-sum instead of binary search: P <= 15, so the
+broadcast-compare is a handful of vector ops per block — ideal VPU shape.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bucketize_kernel(keys_ref, pivots_ref, o_ref):
+    keys = keys_ref[...]  # [1, N]
+    pivots = pivots_ref[...]  # [P]
+    ge = keys[..., None] >= pivots[None, None, :]  # [1, N, P]
+    o_ref[...] = jnp.sum(ge.astype(jnp.int32), axis=-1)
+
+
+def bucketize_blocks(keys, pivots):
+    """Bucket index of each key: ``u64[B, N], u64[P] -> i32[B, N]``."""
+    b, n = keys.shape
+    (p,) = pivots.shape
+    return pl.pallas_call(
+        _bucketize_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
+        interpret=True,
+    )(keys, pivots)

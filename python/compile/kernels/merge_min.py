@@ -1,0 +1,27 @@
+"""L1 Pallas kernel: batched min-reduction (the MergeMin merge step).
+
+Paper Section 3.1 / Fig 4: each merge-tree worker reduces the minima it
+receives from its children. The kernel reduces B incast blocks at once,
+one grid step per block (VMEM-resident, tree-reduce on the VPU).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _min_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.min(x_ref[...], axis=-1)
+
+
+def merge_min_blocks(x):
+    """Minimum of each row of ``x: u64[B, N]`` -> ``u64[B]``."""
+    b, n = x.shape
+    return pl.pallas_call(
+        _min_kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,33 @@
+"""Pure-jnp correctness oracles for the L1 kernels.
+
+Every kernel must match its oracle bit-exactly (integer keys, no tolerance)
+— checked by python/tests and, cross-language, by the Rust NativeCompute
+oracle in rust/src/runtime.
+"""
+
+import jax.numpy as jnp
+
+
+def sort_blocks_ref(x):
+    """Oracle for kernels.bitonic.sort_blocks."""
+    return jnp.sort(x, axis=-1)
+
+
+def merge_min_blocks_ref(x):
+    """Oracle for kernels.merge_min.merge_min_blocks."""
+    return jnp.min(x, axis=-1)
+
+
+def bucketize_blocks_ref(keys, pivots):
+    """Oracle for kernels.bucketize.bucketize_blocks.
+
+    Bucket of key k given sorted pivots p_1..p_P is |{i : k >= p_i}|,
+    i.e. ``searchsorted(pivots, key, side='right')``.
+    """
+    return jnp.searchsorted(pivots, keys, side="right").astype(jnp.int32)
+
+
+def median_combine_ref(stacked):
+    """Oracle for model.median_combine: element-wise lower median."""
+    m = stacked.shape[0]
+    return jnp.sort(stacked, axis=0)[(m - 1) // 2]

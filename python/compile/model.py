@@ -1,0 +1,73 @@
+"""L2: the JAX compute graph that the Rust coordinator AOT-loads.
+
+Each public function here is an AOT entry point: ``aot.py`` lowers it for a
+fixed set of static shapes to HLO text and the Rust ``runtime::XlaEngine``
+executes it on the request path. Every entry point routes its hot loop
+through an L1 Pallas kernel so the whole three-layer stack is exercised.
+
+The paper's per-core compute (Section 5.2, Figs 1/2/8) decomposes into:
+  - ``sort_block``       — local key sort (NanoSort step 2a, MilliSort local sort)
+  - ``sort_stats_block`` — sort + the order statistics PivotSelect consumes
+  - ``bucketize_block``  — pivot routing for the shuffle (NanoSort step 2c)
+  - ``merge_min_block``  — MergeMin's reduce
+  - ``median_combine``   — median-tree aggregation (element-wise median of
+                           child pivot vectors; NanoSort step 2b)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bitonic, bucketize, merge_min
+
+
+def sort_block(x):
+    """Sort each row of ``u64[B, N]`` ascending (N a power of two)."""
+    return (bitonic.sort_blocks(x),)
+
+
+def sort_stats_block(x):
+    """Sort rows and return (sorted, row_min, row_max).
+
+    The min/max order statistics come for free after the sort and feed the
+    skew / sanity accounting in the coordinator.
+    """
+    s = bitonic.sort_blocks(x)
+    return (s, s[:, 0], s[:, -1])
+
+
+def bucketize_block(keys, pivots):
+    """Bucket index of each key against sorted pivots: ``-> i32[B, N]``."""
+    return (bucketize.bucketize_blocks(keys, pivots),)
+
+
+def merge_min_block(x):
+    """Row-wise minimum: ``u64[B, N] -> u64[B]``."""
+    return (merge_min.merge_min_blocks(x),)
+
+
+def median_combine(stacked):
+    """Element-wise lower median across axis 0: ``u64[M, P] -> u64[P]``.
+
+    This is the aggregation a median-tree node performs: it holds M child
+    pivot vectors and emits the per-position median. M is a tree incast
+    (<= 16), P = b-1 pivots; the sort over the tiny M axis reuses the
+    bitonic kernel by padding M to a power of two with +inf sentinels.
+    """
+    m, p = stacked.shape
+    mp = 1 << (m - 1).bit_length()  # next power of two
+    if mp != m:
+        pad = jnp.full((mp - m, p), jnp.uint64(2**64 - 1), dtype=stacked.dtype)
+        stacked = jnp.concatenate([stacked, pad], axis=0)
+    # Sort columns: transpose so each column becomes a row block.
+    cols = stacked.T  # [P, mp]
+    cols_sorted = bitonic.sort_blocks(cols)
+    return (cols_sorted[:, (m - 1) // 2],)
+
+
+ENTRY_POINTS = {
+    "sort_block": sort_block,
+    "sort_stats_block": sort_stats_block,
+    "bucketize_block": bucketize_block,
+    "merge_min_block": merge_min_block,
+    "median_combine": median_combine,
+}

@@ -1,0 +1,5 @@
+"""Shared pytest config: enable x64 before any kernel import (u64 keys)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,135 @@
+"""L1 kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Integer keys, so every comparison is bit-exact (array_equal, no tolerance).
+Hypothesis sweeps shapes and adversarial value patterns.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import bitonic, bucketize, merge_min, ref
+
+POW2 = [2, 4, 8, 16, 32, 64, 128, 256]
+
+
+def _rand_u64(rng, shape):
+    return jnp.asarray(rng.integers(0, 2**64, size=shape, dtype=np.uint64))
+
+
+# ---------------------------------------------------------------- bitonic
+@pytest.mark.parametrize("n", POW2)
+@pytest.mark.parametrize("b", [1, 3, 17])
+def test_sort_matches_ref(b, n):
+    rng = np.random.default_rng(b * 1000 + n)
+    x = _rand_u64(rng, (b, n))
+    out = bitonic.sort_blocks(x)
+    assert jnp.array_equal(out, ref.sort_blocks_ref(x))
+
+
+@pytest.mark.parametrize("n", [16, 64])
+def test_sort_edge_patterns(n):
+    patterns = [
+        jnp.zeros((1, n), jnp.uint64),
+        jnp.full((1, n), jnp.uint64(2**64 - 1)),
+        jnp.arange(n, dtype=jnp.uint64)[None, :],
+        jnp.arange(n, dtype=jnp.uint64)[None, ::-1],
+        jnp.asarray(np.tile([5, 3], n // 2)[None, :].astype(np.uint64)),
+    ]
+    for x in patterns:
+        assert jnp.array_equal(bitonic.sort_blocks(x), ref.sort_blocks_ref(x))
+
+
+def test_sort_is_permutation():
+    rng = np.random.default_rng(7)
+    x = _rand_u64(rng, (4, 64))
+    out = np.asarray(bitonic.sort_blocks(x))
+    for row_in, row_out in zip(np.asarray(x), out):
+        assert sorted(row_in.tolist()) == row_out.tolist()
+
+
+def test_sort_rejects_non_pow2():
+    with pytest.raises(ValueError, match="power-of-two"):
+        bitonic.bitonic_sort_array(jnp.zeros((1, 12), jnp.uint64))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_exp=st.integers(1, 7),
+    b=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+    clustered=st.booleans(),
+)
+def test_sort_hypothesis(n_exp, b, seed, clustered):
+    n = 1 << n_exp
+    rng = np.random.default_rng(seed)
+    if clustered:  # heavy duplicates — the paper assumes distinct keys but
+        # the kernel must tolerate ties (stability is irrelevant: keys only)
+        x = jnp.asarray(rng.integers(0, 4, size=(b, n), dtype=np.uint64))
+    else:
+        x = _rand_u64(rng, (b, n))
+    assert jnp.array_equal(bitonic.sort_blocks(x), ref.sort_blocks_ref(x))
+
+
+# -------------------------------------------------------------- merge_min
+@pytest.mark.parametrize("n", POW2)
+def test_merge_min_matches_ref(n):
+    rng = np.random.default_rng(n)
+    x = _rand_u64(rng, (5, n))
+    assert jnp.array_equal(merge_min.merge_min_blocks(x), ref.merge_min_blocks_ref(x))
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_exp=st.integers(0, 7), b=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_merge_min_hypothesis(n_exp, b, seed):
+    n = 1 << n_exp
+    rng = np.random.default_rng(seed)
+    x = _rand_u64(rng, (b, n))
+    assert jnp.array_equal(merge_min.merge_min_blocks(x), ref.merge_min_blocks_ref(x))
+
+
+def test_merge_min_extremes():
+    x = jnp.asarray(
+        np.array([[2**64 - 1, 0, 5, 9], [7, 7, 7, 7]], dtype=np.uint64)
+    )
+    out = merge_min.merge_min_blocks(x)
+    assert out.tolist() == [0, 7]
+
+
+# -------------------------------------------------------------- bucketize
+@pytest.mark.parametrize("p", [1, 3, 7, 15])
+@pytest.mark.parametrize("n", [16, 32, 64])
+def test_bucketize_matches_ref(n, p):
+    rng = np.random.default_rng(n * 100 + p)
+    keys = _rand_u64(rng, (3, n))
+    pivots = jnp.sort(_rand_u64(rng, (p,)))
+    out = bucketize.bucketize_blocks(keys, pivots)
+    assert jnp.array_equal(out, ref.bucketize_blocks_ref(keys, pivots))
+    assert int(out.max()) <= p and int(out.min()) >= 0
+
+
+def test_bucketize_boundaries():
+    # keys exactly equal to pivots go right (bucket i+1), per side='right'.
+    pivots = jnp.asarray(np.array([10, 20, 30], dtype=np.uint64))
+    keys = jnp.asarray(np.array([[0, 10, 15, 20, 30, 31, 9, 29]], dtype=np.uint64))
+    out = bucketize.bucketize_blocks(keys, pivots)
+    assert out.tolist() == [[0, 1, 1, 2, 3, 3, 0, 2]]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_exp=st.integers(1, 6),
+    p=st.sampled_from([1, 3, 7, 15]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bucketize_hypothesis(n_exp, p, seed):
+    n = 1 << n_exp
+    rng = np.random.default_rng(seed)
+    keys = _rand_u64(rng, (2, n))
+    pivots = jnp.sort(_rand_u64(rng, (p,)))
+    assert jnp.array_equal(
+        bucketize.bucketize_blocks(keys, pivots),
+        ref.bucketize_blocks_ref(keys, pivots),
+    )

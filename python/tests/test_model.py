@@ -1,0 +1,90 @@
+"""L2 entry-point tests: shapes, dtypes, and semantics of model.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rand_u64(rng, shape):
+    return jnp.asarray(rng.integers(0, 2**64, size=shape, dtype=np.uint64))
+
+
+def test_sort_block_tuple_shape():
+    rng = np.random.default_rng(0)
+    x = _rand_u64(rng, (4, 32))
+    (out,) = model.sort_block(x)
+    assert out.shape == (4, 32) and out.dtype == jnp.uint64
+    assert jnp.array_equal(out, ref.sort_blocks_ref(x))
+
+
+def test_sort_stats_block():
+    rng = np.random.default_rng(1)
+    x = _rand_u64(rng, (3, 16))
+    s, lo, hi = model.sort_stats_block(x)
+    assert jnp.array_equal(lo, x.min(axis=-1))
+    assert jnp.array_equal(hi, x.max(axis=-1))
+    assert jnp.array_equal(s, ref.sort_blocks_ref(x))
+
+
+def test_bucketize_block():
+    rng = np.random.default_rng(2)
+    keys = _rand_u64(rng, (2, 32))
+    pivots = jnp.sort(_rand_u64(rng, (15,)))
+    (out,) = model.bucketize_block(keys, pivots)
+    assert out.dtype == jnp.int32
+    assert jnp.array_equal(out, ref.bucketize_blocks_ref(keys, pivots))
+
+
+def test_merge_min_block():
+    rng = np.random.default_rng(3)
+    x = _rand_u64(rng, (6, 64))
+    (out,) = model.merge_min_block(x)
+    assert jnp.array_equal(out, x.min(axis=-1))
+
+
+@pytest.mark.parametrize("m", [2, 3, 4, 5, 8, 16])
+def test_median_combine(m):
+    rng = np.random.default_rng(m)
+    stacked = _rand_u64(rng, (m, 15))
+    (out,) = model.median_combine(stacked)
+    assert jnp.array_equal(out, ref.median_combine_ref(stacked))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(2, 16), p=st.sampled_from([3, 7, 15]), seed=st.integers(0, 2**31 - 1))
+def test_median_combine_hypothesis(m, p, seed):
+    rng = np.random.default_rng(seed)
+    stacked = _rand_u64(rng, (m, p))
+    (out,) = model.median_combine(stacked)
+    assert jnp.array_equal(out, ref.median_combine_ref(stacked))
+
+
+def test_median_combine_is_order_stat():
+    # median of known columns
+    stacked = jnp.asarray(
+        np.array([[1, 100], [2, 200], [3, 300], [4, 400], [5, 500]], dtype=np.uint64)
+    )
+    (out,) = model.median_combine(stacked)
+    assert out.tolist() == [3, 300]
+
+
+def test_entry_points_lower_to_hlo():
+    """Every AOT entry point must lower to HLO text with a u64 signature."""
+    from compile.aot import to_hlo_text
+
+    u = jax.ShapeDtypeStruct((1, 16), jnp.uint64)
+    for name, fn in model.ENTRY_POINTS.items():
+        if name == "bucketize_block":
+            args = (u, jax.ShapeDtypeStruct((15,), jnp.uint64))
+        elif name == "median_combine":
+            args = (jax.ShapeDtypeStruct((4, 15), jnp.uint64),)
+        else:
+            args = (u,)
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        assert "ENTRY" in text and "u64" in text, name

@@ -1,0 +1,67 @@
+//! Minimal benchmark harness (the offline registry has no criterion; see
+//! DESIGN.md "Dependency substitutions"). Criterion-style output: warmup,
+//! N timed iterations, mean ± std, min/max.
+
+use std::time::Instant;
+
+pub struct Bench {
+    name: &'static str,
+    samples: usize,
+}
+
+#[allow(dead_code)]
+impl Bench {
+    pub fn new(name: &'static str) -> Self {
+        Bench { name, samples: 10 }
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n;
+        self
+    }
+
+    /// Time `f` over warmup + samples; print a criterion-style line.
+    /// Returns the mean seconds per iteration.
+    pub fn run<T, F: FnMut() -> T>(self, mut f: F) -> f64 {
+        // Warmup.
+        std::hint::black_box(f());
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let n = times.len() as f64;
+        let mean = times.iter().sum::<f64>() / n;
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+        let std = var.sqrt();
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        println!(
+            "{:<56} {:>12} ± {:>10}  [{} .. {}]  ({} samples)",
+            self.name,
+            fmt_t(mean),
+            fmt_t(std),
+            fmt_t(min),
+            fmt_t(max),
+            self.samples
+        );
+        mean
+    }
+}
+
+pub fn fmt_t(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,53 @@
+//! MergeMin benchmarks (paper Figs 2/4): single-core scan cost model and
+//! the full incast sweep.
+
+#[path = "common.rs"]
+mod common;
+
+use std::rc::Rc;
+
+use common::{section, Bench};
+use nanosort::algo::mergemin::{run_mergemin, single_core_scan, MergeMinConfig};
+use nanosort::compute::NativeCompute;
+
+fn main() {
+    section("Fig 2 — single-core min scan (cost model evaluation)");
+    Bench::new("cost_model/scan_sweep_64..8192").samples(50).run(|| {
+        let mut acc = 0u64;
+        let mut n = 64;
+        while n <= 8192 {
+            acc ^= single_core_scan(n).0 .0;
+            n *= 2;
+        }
+        acc
+    });
+    for n in [64usize, 1024, 8192] {
+        let (t, miss) = single_core_scan(n);
+        println!("    -> {n} values: {:.2} µs (miss rate {miss:.3})", t.as_us_f64());
+    }
+
+    section("Fig 4 — MergeMin end-to-end per incast (64 cores, 128 v/core)");
+    let compute = Rc::new(NativeCompute);
+    for incast in [1usize, 8, 64] {
+        let cfg = MergeMinConfig { incast, ..Default::default() };
+        let c2 = compute.clone();
+        let mut sim_ns = 0.0;
+        Bench::new(Box::leak(format!("mergemin/incast={incast}").into_boxed_str()))
+            .samples(20)
+            .run(|| {
+                let r = run_mergemin(&cfg, c2.clone());
+                sim_ns = r.summary.makespan.as_ns_f64();
+                r
+            });
+        println!("    -> simulated: {sim_ns:.0} ns");
+    }
+
+    section("Scale — MergeMin at larger fleets (incast 8)");
+    for cores in [256usize, 1024, 4096] {
+        let cfg = MergeMinConfig { cores, incast: 8, ..Default::default() };
+        let c2 = compute.clone();
+        Bench::new(Box::leak(format!("mergemin/cores={cores}").into_boxed_str()))
+            .samples(5)
+            .run(|| run_mergemin(&cfg, c2.clone()));
+    }
+}

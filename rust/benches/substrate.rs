@@ -1,0 +1,80 @@
+//! Substrate microbenchmarks: the simulator's own hot paths (§Perf
+//! targets) and the XLA data-plane call overhead.
+
+#[path = "common.rs"]
+mod common;
+
+use common::{section, Bench};
+use nanosort::algo::nanosort::pivot::pivot_select;
+use nanosort::compute::{LocalCompute, NativeCompute, XlaCompute};
+use nanosort::net::{Fabric, NetConfig, Topology};
+use nanosort::sim::{SplitMix64, Time};
+
+fn main() {
+    section("Fabric — per-message routing cost");
+    let mut fabric = Fabric::new(Topology::paper(65_536), NetConfig::default(), 1);
+    let mut i = 0usize;
+    Bench::new("fabric/unicast_x100k (65,536-node topo)").samples(20).run(|| {
+        let mut acc = 0u64;
+        for _ in 0..100_000 {
+            i = (i.wrapping_mul(2654435761).wrapping_add(1)) & 0xFFFF;
+            acc ^= fabric.unicast(i, (i * 7 + 13) & 0xFFFF, 16, Time(acc & 0xFFFF)).0;
+        }
+        acc
+    });
+
+    section("RNG + PivotSelect");
+    let mut rng = SplitMix64::new(2);
+    Bench::new("rng/next_u64_x1M").samples(20).run(|| {
+        let mut acc = 0u64;
+        for _ in 0..1_000_000 {
+            acc ^= rng.next_u64();
+        }
+        acc
+    });
+    let mut keys: Vec<u64> = (0..64u64).map(|i| i * 977).collect();
+    keys.sort_unstable();
+    Bench::new("pivot_select/n64_b16_x10k").samples(20).run(|| {
+        let mut acc = 0u64;
+        for _ in 0..10_000 {
+            acc ^= pivot_select(&keys, 16, &mut rng)[7];
+        }
+        acc
+    });
+
+    section("Native data plane");
+    let native = NativeCompute;
+    let base: Vec<u64> = (0..64u64).map(|i| i.wrapping_mul(0x9E3779B97F4A7C15)).collect();
+    Bench::new("native/sort64_x10k").samples(20).run(|| {
+        let mut acc = 0u64;
+        for _ in 0..10_000 {
+            let mut k = base.clone();
+            native.sort(&mut k);
+            acc ^= k[0];
+        }
+        acc
+    });
+
+    section("XLA data plane (three-layer path)");
+    match XlaCompute::open_default() {
+        Ok(xla) => {
+            Bench::new("xla/sort64 (per call)").samples(10).run(|| {
+                let mut k = base.clone();
+                xla.sort(&mut k);
+                k[0]
+            });
+            let mut pivots: Vec<u64> = base[..15].to_vec();
+            pivots.sort_unstable();
+            Bench::new("xla/bucketize64_p15 (per call)")
+                .samples(10)
+                .run(|| xla.bucketize(&base, &pivots)[0]);
+            Bench::new("xla/merge_min64 (per call)").samples(10).run(|| xla.min(&base));
+            println!(
+                "    -> {} xla calls, {} fallbacks",
+                xla.counters.xla_calls.load(std::sync::atomic::Ordering::Relaxed),
+                xla.counters.native_fallbacks.load(std::sync::atomic::Ordering::Relaxed)
+            );
+        }
+        Err(e) => println!("xla benches skipped (run `make artifacts`): {e:#}"),
+    }
+}

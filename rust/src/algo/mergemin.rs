@@ -1,0 +1,301 @@
+//! MergeMin (paper §3.1, Figs 2/3/4): find the global minimum of values
+//! spread across cores via a k-ary merge tree — the design-space probe for
+//! the incast (tree width) vs depth trade-off.
+//!
+//! Each core scans its local values (cold, like Fig 2), then minima flow up
+//! an [`AggTree`] with the configured incast; `incast == 1` degenerates to
+//! the paper's "straight line" chain (Fig 3 left).
+
+use std::rc::Rc;
+
+use crate::compute::LocalCompute;
+use crate::cpu::{CoreModel, Temp};
+use crate::nanopu::{Ctx, NodeId, Program, WireMsg};
+use crate::net::{Fabric, NetConfig, Topology};
+use crate::sim::{Engine, RunSummary, SplitMix64, Time};
+
+use super::tree::AggTree;
+
+/// MergeMin configuration.
+#[derive(Debug, Clone)]
+pub struct MergeMinConfig {
+    pub cores: usize,
+    pub values_per_core: usize,
+    /// Merge-tree incast (1 = chain).
+    pub incast: usize,
+    pub seed: u64,
+    pub net: NetConfig,
+}
+
+impl Default for MergeMinConfig {
+    fn default() -> Self {
+        // Fig 4's setting: 64 cores, 128 values per core.
+        MergeMinConfig {
+            cores: 64,
+            values_per_core: 128,
+            incast: 8,
+            seed: 1,
+            net: NetConfig::default(),
+        }
+    }
+}
+
+/// Tree-round message carrying a partial minimum.
+#[derive(Debug, Clone)]
+pub struct MinMsg {
+    pub round: u32,
+    pub value: u64,
+}
+
+impl WireMsg for MinMsg {
+    fn wire_bytes(&self) -> u64 {
+        16 // value + round tag (the paper's 16 B messages, Fig 6)
+    }
+    fn step(&self) -> u32 {
+        self.round
+    }
+}
+
+/// Per-core MergeMin program.
+pub struct MergeMinNode {
+    id: NodeId,
+    cfg_incast: usize,
+    cores: usize,
+    values: Vec<u64>,
+    compute: Rc<dyn LocalCompute>,
+    current_min: u64,
+    round: u32,
+    got: usize,
+    /// Root's final answer (for validation).
+    pub result: Rc<std::cell::Cell<u64>>,
+}
+
+impl MergeMinNode {
+    fn tree(&self) -> AggTree {
+        AggTree::new(self.cores, self.cfg_incast.max(2))
+    }
+
+    fn is_chain(&self) -> bool {
+        self.cfg_incast <= 1
+    }
+
+    /// Advance through aggregation rounds where this node expects no
+    /// children (ragged trees), sending/terminating as appropriate.
+    fn advance(&mut self, ctx: &mut Ctx<MinMsg>) {
+        if self.is_chain() {
+            return; // chain logic lives in on_start/on_message directly
+        }
+        let tree = self.tree();
+        let rounds = tree.rounds();
+        loop {
+            let next = self.round + 1;
+            if next > rounds {
+                if self.id == 0 {
+                    self.result.set(self.current_min);
+                    ctx.finish();
+                }
+                return;
+            }
+            if tree.aggregates_at(self.id, next) {
+                let expect = tree.expected(self.id, next);
+                if self.got < expect {
+                    return; // wait for children of round `next`
+                }
+                // All children already merged; move on.
+                self.got = 0;
+                self.round = next;
+            } else {
+                // Exit: send the partial min to the parent and stop.
+                ctx.send(
+                    tree.parent(self.id),
+                    MinMsg { round: next, value: self.current_min },
+                );
+                self.round = rounds + 1; // accept nothing further
+                ctx.finish();
+                return;
+            }
+        }
+    }
+}
+
+impl Program for MergeMinNode {
+    type Msg = MinMsg;
+
+    fn on_start(&mut self, ctx: &mut Ctx<MinMsg>) {
+        // Local scan (cold cache, like Fig 2's measurement).
+        let n = self.values.len() as u64;
+        ctx.compute(ctx.core().scan_min_cycles(n, Temp::Cold));
+        self.current_min = self.compute.min(&self.values);
+        if self.is_chain() {
+            // Straight line: the last core starts the relay.
+            if self.id == self.cores - 1 {
+                if self.cores == 1 {
+                    self.result.set(self.current_min);
+                    ctx.finish();
+                } else {
+                    // Chain relays always use round tag 1: every node
+                    // receives exactly one message, immediately.
+                    ctx.send(self.id - 1, MinMsg { round: 1, value: self.current_min });
+                    ctx.finish();
+                }
+            }
+            return;
+        }
+        self.advance(ctx);
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx<MinMsg>, _src: NodeId, msg: MinMsg) {
+        ctx.compute(ctx.core().merge_cycles(1));
+        self.current_min = self.compute.min(&[self.current_min, msg.value]);
+        if self.is_chain() {
+            if self.id == 0 {
+                self.result.set(self.current_min);
+                ctx.finish();
+            } else {
+                ctx.send(self.id - 1, MinMsg { round: 1, value: self.current_min });
+                ctx.finish();
+            }
+            return;
+        }
+        self.got += 1;
+        self.advance(ctx);
+    }
+
+    fn step(&self) -> u32 {
+        // Accept messages for the next round we are waiting on.
+        self.round + 1
+    }
+}
+
+/// Outcome of a MergeMin run.
+pub struct MergeMinResult {
+    pub summary: RunSummary,
+    pub found_min: u64,
+    pub true_min: u64,
+}
+
+impl MergeMinResult {
+    pub fn correct(&self) -> bool {
+        self.found_min == self.true_min
+    }
+}
+
+/// Build and run MergeMin; `compute` is the data plane (native or XLA).
+pub fn run_mergemin(cfg: &MergeMinConfig, compute: Rc<dyn LocalCompute>) -> MergeMinResult {
+    let mut rng = SplitMix64::new(cfg.seed ^ 0x6d65_7267_656d_696e);
+    let mut true_min = u64::MAX;
+    let result = Rc::new(std::cell::Cell::new(u64::MAX));
+    let programs: Vec<MergeMinNode> = (0..cfg.cores)
+        .map(|id| {
+            let values: Vec<u64> = (0..cfg.values_per_core)
+                .map(|_| rng.next_u64() % (u64::MAX - 1))
+                .collect();
+            true_min = true_min.min(*values.iter().min().unwrap());
+            MergeMinNode {
+                id,
+                cfg_incast: cfg.incast,
+                cores: cfg.cores,
+                values,
+                compute: compute.clone(),
+                current_min: u64::MAX,
+                round: 0,
+                got: 0,
+                result: result.clone(),
+            }
+        })
+        .collect();
+    let fabric = Fabric::new(Topology::paper(cfg.cores), cfg.net.clone(), cfg.seed);
+    let engine = Engine::new(programs, fabric, CoreModel::default(), cfg.seed);
+    let summary = engine.run();
+    MergeMinResult { summary, found_min: result.get(), true_min }
+}
+
+/// Single-core scan time for Fig 2 (pure cost-model evaluation).
+pub fn single_core_scan(values: usize) -> (Time, f64) {
+    let core = CoreModel::default();
+    let cycles = core.scan_min_cycles(values as u64, Temp::Cold);
+    let miss_rate = core.cache.stream_miss_rate(values as u64 * 8, true);
+    (Time::from_cycles(cycles), miss_rate)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::NativeCompute;
+
+    fn run(cores: usize, vpc: usize, incast: usize) -> MergeMinResult {
+        let cfg = MergeMinConfig {
+            cores,
+            values_per_core: vpc,
+            incast,
+            ..Default::default()
+        };
+        run_mergemin(&cfg, Rc::new(NativeCompute))
+    }
+
+    #[test]
+    fn finds_min_across_incasts() {
+        for incast in [1usize, 2, 4, 8, 16, 64] {
+            let r = run(64, 16, incast);
+            assert!(r.correct(), "incast={incast}: {} != {}", r.found_min, r.true_min);
+        }
+    }
+
+    #[test]
+    fn finds_min_on_ragged_sizes() {
+        for cores in [1usize, 2, 3, 7, 65, 100] {
+            let r = run(cores, 8, 8);
+            assert!(r.correct(), "cores={cores}");
+        }
+    }
+
+    #[test]
+    fn fig4_shape_sweet_spot_beats_extremes() {
+        // Fig 4: incast 8 beats both incast 1 (chain) and incast 64
+        // (single-level) at 64 cores / 128 values per core.
+        let chain = run(64, 128, 1).summary.makespan;
+        let sweet = run(64, 128, 8).summary.makespan;
+        let flat = run(64, 128, 64).summary.makespan;
+        assert!(sweet < chain, "sweet {sweet} !< chain {chain}");
+        assert!(sweet < flat, "sweet {sweet} !< flat {flat}");
+    }
+
+    #[test]
+    fn fig4_sweet_spot_magnitude() {
+        // Paper: incast 8 finds the min in ~750 ns (64 cores, 128 v/core,
+        // after the local scan which dominates at small value counts).
+        // Our model includes the local cold scan (~{128 vals} = small);
+        // total should land well under 5 µs and over 0.3 µs.
+        let r = run(64, 128, 8);
+        let us = r.summary.makespan.as_us_f64();
+        assert!((0.3..5.0).contains(&us), "makespan = {us} µs");
+    }
+
+    #[test]
+    fn deeper_trees_send_fewer_messages_per_level_but_more_total() {
+        let chain = run(64, 16, 1);
+        let flat = run(64, 16, 64);
+        // Chain: 63 relay messages; flat: 63 direct messages — equal sends,
+        // but the chain's critical path is much longer.
+        assert_eq!(chain.summary.net.msgs_sent, 63);
+        assert_eq!(flat.summary.net.msgs_sent, 63);
+        assert!(chain.summary.makespan > flat.summary.makespan);
+    }
+
+    #[test]
+    fn single_core_fig2_scaling() {
+        let (t_small, _) = single_core_scan(64);
+        let (t_big, miss_big) = single_core_scan(8192);
+        assert!(t_big > t_small);
+        assert!((16.0..20.0).contains(&t_big.as_us_f64()), "{}", t_big.as_us_f64());
+        assert!(miss_big > 0.1); // streaming miss rate ~ 1/8
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = run(64, 32, 8);
+        let b = run(64, 32, 8);
+        assert_eq!(a.summary.makespan, b.summary.makespan);
+        assert_eq!(a.found_min, b.found_min);
+    }
+}

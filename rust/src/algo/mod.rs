@@ -1,0 +1,12 @@
+//! Distributed algorithms running on the simulated nanoPU cluster:
+//!
+//! - [`nanosort`] — the paper's contribution (recursive pivot/shuffle sort);
+//! - [`millisort`] — the state-of-the-art baseline it compares against;
+//! - [`mergemin`] — the §3.1 design-space probe (incast vs depth);
+//! - [`tree`] — shared k-ary aggregation-tree arithmetic.
+
+pub mod mergemin;
+pub mod millisort;
+pub mod nanosort;
+pub mod setalgebra;
+pub mod tree;

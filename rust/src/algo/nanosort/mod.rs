@@ -1,0 +1,25 @@
+//! NanoSort (paper §4/§5): recursive, quicksort-like distributed sort for
+//! extreme granularity.
+//!
+//! Per recursion level, within each node group:
+//!  1. every node sorts its keys and proposes b-1 local pivots via
+//!     [`pivot::pivot_select`] (probability-corrected, §4.2);
+//!  2. b-1 median-trees (one per pivot position, sharing one physical
+//!     tree of incast `median_incast`) aggregate per-position medians;
+//!  3. the group root broadcasts the final pivots (multicast if the
+//!     fabric supports it — §5.3/§6.2.3);
+//!  4. every node routes each key to a uniformly random node of the
+//!     key's bucket partition (the b equal slices of the group);
+//!  5. a count-tree termination protocol (sent vs received totals, with
+//!     retry rounds) detects shuffle completion and triggers recursion.
+//!
+//! After the last level each node sorts its final keys locally; the
+//! optional GraySort value phase then pulls each key's 96 B value from its
+//! origin core (§5.2).
+
+mod node;
+pub mod pivot;
+
+pub use node::{
+    run_nanosort, LevelBreakdown, NanoSortConfig, NanoSortResult, NsMsg, PivotMode,
+};

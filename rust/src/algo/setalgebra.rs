@@ -1,0 +1,285 @@
+//! Granular set-algebra (extension): distributed posting-list
+//! intersection, the paper's other motivating nanoTask workload (Fig 1:
+//! "perform 4 set algebra intersections" per µs; §3.2: web search).
+//!
+//! Demonstrates the framework's generality beyond sorting: a query names
+//! q posting lists, each sharded across all cores (sorted u64 doc-id
+//! segments). Every core intersects its local shards (a nanoTask —
+//! doc-id-range sharding means no cross-core data dependency), then
+//! result *counts* reduce up an aggregation tree, exactly like MergeMin;
+//! the root reports the global intersection cardinality.
+//!
+//! The incast knob exposes the same width/depth trade-off as Fig 4.
+
+use std::rc::Rc;
+
+use crate::algo::tree::AggTree;
+use crate::compute::LocalCompute;
+use crate::cpu::CoreModel;
+use crate::nanopu::{Ctx, NodeId, Program, WireMsg};
+use crate::net::{Fabric, NetConfig, Topology};
+use crate::sim::{Engine, RunSummary, SplitMix64};
+
+/// Set-algebra workload configuration.
+#[derive(Debug, Clone)]
+pub struct SetAlgebraConfig {
+    pub cores: usize,
+    /// Posting lists per query (q-way intersection).
+    pub lists: usize,
+    /// Doc ids per list per core (local shard size).
+    pub ids_per_core: usize,
+    /// Probability (num/den) that a doc id appears in every list —
+    /// controls result selectivity.
+    pub hit_prob: (u64, u64),
+    /// Reduce-tree incast.
+    pub incast: usize,
+    pub seed: u64,
+    pub net: NetConfig,
+}
+
+impl Default for SetAlgebraConfig {
+    fn default() -> Self {
+        SetAlgebraConfig {
+            cores: 64,
+            lists: 4,
+            ids_per_core: 128,
+            hit_prob: (1, 8),
+            incast: 8,
+            seed: 1,
+            net: NetConfig::default(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CountMsg {
+    pub round: u32,
+    pub count: u64,
+}
+
+impl WireMsg for CountMsg {
+    fn wire_bytes(&self) -> u64 {
+        16
+    }
+    fn step(&self) -> u32 {
+        self.round
+    }
+}
+
+/// Per-core program: intersect local shards, then reduce counts up-tree.
+pub struct SetAlgebraNode {
+    id: NodeId,
+    cores: usize,
+    incast: usize,
+    /// Local shards, one sorted id list per posting list.
+    shards: Vec<Vec<u64>>,
+    /// Data plane handle (the leapfrog intersection has no compiled XLA
+    /// artifact yet, so this extension's data plane is native-only; kept
+    /// so the API matches the other algorithms).
+    _compute: Rc<dyn LocalCompute>,
+    count: u64,
+    round: u32,
+    got: usize,
+    pub result: Rc<std::cell::Cell<u64>>,
+}
+
+impl SetAlgebraNode {
+    fn tree(&self) -> AggTree {
+        AggTree::new(self.cores, self.incast.max(2))
+    }
+
+    /// q-way sorted intersection via leapfrog merge; cost ≈ 2 cycles per
+    /// id visited (Fig 1: 4 intersections per µs over small lists).
+    fn intersect_local(&mut self, ctx: &mut Ctx<CountMsg>) -> u64 {
+        let visited: u64 = self.shards.iter().map(|s| s.len() as u64).sum();
+        ctx.compute(2 * visited + 20);
+        // Data plane: merge-count ids present in all q shards. Shards are
+        // sorted; walk the first and binary-search the rest.
+        let (first, rest) = match self.shards.split_first() {
+            Some(x) => x,
+            None => return 0,
+        };
+        first
+            .iter()
+            .filter(|&&id| rest.iter().all(|s| s.binary_search(&id).is_ok()))
+            .count() as u64
+    }
+
+    fn advance(&mut self, ctx: &mut Ctx<CountMsg>) {
+        let tree = self.tree();
+        let rounds = tree.rounds();
+        loop {
+            let next = self.round + 1;
+            if next > rounds {
+                if self.id == 0 {
+                    self.result.set(self.count);
+                    ctx.finish();
+                }
+                return;
+            }
+            if tree.aggregates_at(self.id, next) {
+                if self.got < tree.expected(self.id, next) {
+                    return;
+                }
+                self.got = 0;
+                self.round = next;
+            } else {
+                ctx.send(
+                    tree.parent(self.id),
+                    CountMsg { round: next, count: self.count },
+                );
+                self.round = rounds + 1;
+                ctx.finish();
+                return;
+            }
+        }
+    }
+}
+
+impl Program for SetAlgebraNode {
+    type Msg = CountMsg;
+
+    fn on_start(&mut self, ctx: &mut Ctx<CountMsg>) {
+        self.count = self.intersect_local(ctx);
+        if self.cores == 1 {
+            self.result.set(self.count);
+            ctx.finish();
+            return;
+        }
+        self.advance(ctx);
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx<CountMsg>, _src: NodeId, msg: CountMsg) {
+        ctx.compute(ctx.core().merge_cycles(1));
+        self.count += msg.count;
+        self.got += 1;
+        self.advance(ctx);
+    }
+
+    fn step(&self) -> u32 {
+        self.round + 1
+    }
+}
+
+/// Run outcome (counts validated against a direct computation).
+pub struct SetAlgebraResult {
+    pub summary: RunSummary,
+    pub found: u64,
+    pub expected: u64,
+}
+
+impl SetAlgebraResult {
+    pub fn correct(&self) -> bool {
+        self.found == self.expected
+    }
+}
+
+/// Generate shards + run the distributed intersection.
+pub fn run_setalgebra(
+    cfg: &SetAlgebraConfig,
+    compute: Rc<dyn LocalCompute>,
+) -> SetAlgebraResult {
+    let mut rng = SplitMix64::new(cfg.seed ^ 0x7365_7461_6c67);
+    let result = Rc::new(std::cell::Cell::new(u64::MAX));
+    let mut expected = 0u64;
+    let programs: Vec<SetAlgebraNode> = (0..cfg.cores)
+        .map(|id| {
+            // Doc-id-range sharding: core c owns ids with high bits = c.
+            let base = (id as u64) << 32;
+            let mut shards: Vec<Vec<u64>> = vec![Vec::new(); cfg.lists];
+            for i in 0..cfg.ids_per_core {
+                let id64 = base + i as u64;
+                if rng.chance(cfg.hit_prob.0, cfg.hit_prob.1) {
+                    // Common doc: appears in every list.
+                    for s in shards.iter_mut() {
+                        s.push(id64);
+                    }
+                    expected += 1;
+                } else {
+                    // Appears in a strict subset of lists.
+                    let skip = rng.index(cfg.lists);
+                    for (j, s) in shards.iter_mut().enumerate() {
+                        if j != skip {
+                            s.push(id64);
+                        }
+                    }
+                }
+            }
+            SetAlgebraNode {
+                id,
+                cores: cfg.cores,
+                incast: cfg.incast,
+                shards,
+                _compute: compute.clone(),
+                count: 0,
+                round: 0,
+                got: 0,
+                result: result.clone(),
+            }
+        })
+        .collect();
+    let fabric = Fabric::new(Topology::paper(cfg.cores), cfg.net.clone(), cfg.seed);
+    let summary = Engine::new(programs, fabric, CoreModel::default(), cfg.seed).run();
+    SetAlgebraResult { summary, found: result.get(), expected }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::NativeCompute;
+
+    fn run(cores: usize, lists: usize, incast: usize) -> SetAlgebraResult {
+        let cfg = SetAlgebraConfig { cores, lists, incast, ..Default::default() };
+        run_setalgebra(&cfg, Rc::new(NativeCompute))
+    }
+
+    #[test]
+    fn intersects_correctly() {
+        for cores in [1usize, 8, 64, 100] {
+            let r = run(cores, 4, 8);
+            assert!(r.correct(), "cores={cores}: {} != {}", r.found, r.expected);
+        }
+    }
+
+    #[test]
+    fn q_way_variants() {
+        for lists in [2usize, 3, 4, 8] {
+            let r = run(64, lists, 8);
+            assert!(r.correct(), "lists={lists}");
+        }
+    }
+
+    #[test]
+    fn incast_tradeoff_same_shape_as_mergemin() {
+        let deep = run(64, 4, 2).summary.makespan;
+        let sweet = run(64, 4, 8).summary.makespan;
+        let flat = run(64, 4, 64).summary.makespan;
+        assert!(sweet <= deep, "sweet {sweet} > deep {deep}");
+        assert!(sweet <= flat, "sweet {sweet} > flat {flat}");
+    }
+
+    #[test]
+    fn fig1_rate_anchor() {
+        // Fig 1: ~4 set-algebra intersections per µs on one core. One
+        // local q=4 intersection over small (16-id) shards should cost
+        // well under 1 µs of simulated core time.
+        let cfg = SetAlgebraConfig {
+            cores: 1,
+            lists: 4,
+            ids_per_core: 16,
+            ..Default::default()
+        };
+        let r = run_setalgebra(&cfg, Rc::new(NativeCompute));
+        assert!(r.correct());
+        let us = r.summary.makespan.as_us_f64();
+        assert!(us < 0.25, "one 4-way intersection = {us} µs");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = run(64, 4, 8);
+        let b = run(64, 4, 8);
+        assert_eq!(a.found, b.found);
+        assert_eq!(a.summary.makespan, b.summary.makespan);
+    }
+}

@@ -1,0 +1,159 @@
+//! k-ary aggregation-tree arithmetic shared by MergeMin's merge tree,
+//! NanoSort's median- and count-trees, and MilliSort's pivot gather.
+//!
+//! Positions `0..size` aggregate bottom-up in rounds: at round `t`
+//! (1-based), positions divisible by `incast^t` receive from the positions
+//! `pos + j·incast^(t-1)` (j = 1..incast-1... incast) that still exist.
+//! The tree root is position 0; the number of rounds is
+//! `ceil(log_incast(size))` — the paper's width/depth trade-off dial
+//! (§3.1, Fig 3/4).
+
+/// An `incast`-way aggregation tree over `size` positions.
+#[derive(Debug, Clone, Copy)]
+pub struct AggTree {
+    pub size: usize,
+    pub incast: usize,
+}
+
+impl AggTree {
+    pub fn new(size: usize, incast: usize) -> Self {
+        assert!(size >= 1, "empty tree");
+        assert!(incast >= 2, "incast must be >= 2 (chains are special-cased)");
+        AggTree { size, incast }
+    }
+
+    /// Number of aggregation rounds: smallest R with incast^R >= size.
+    pub fn rounds(&self) -> u32 {
+        let mut r = 0;
+        let mut span: u128 = 1;
+        while span < self.size as u128 {
+            span *= self.incast as u128;
+            r += 1;
+        }
+        r
+    }
+
+    fn pow(&self, t: u32) -> u128 {
+        (self.incast as u128).pow(t)
+    }
+
+    /// Does `pos` aggregate (receive) at round `t`?
+    pub fn aggregates_at(&self, pos: usize, t: u32) -> bool {
+        t >= 1 && t <= self.rounds() && (pos as u128) % self.pow(t) == 0
+    }
+
+    /// The round at which `pos` sends to its parent and stops (0 = root
+    /// never sends).
+    pub fn exit_round(&self, pos: usize) -> u32 {
+        if pos == 0 {
+            return 0;
+        }
+        let mut t = 1;
+        while (pos as u128) % self.pow(t) == 0 {
+            t += 1;
+        }
+        t
+    }
+
+    /// Parent of `pos` at its exit round.
+    pub fn parent(&self, pos: usize) -> usize {
+        let t = self.exit_round(pos);
+        assert!(t > 0, "root has no parent");
+        (pos as u128 - (pos as u128) % self.pow(t)) as usize
+    }
+
+    /// Children that send to aggregator `pos` at round `t`.
+    pub fn children(&self, pos: usize, t: u32) -> Vec<usize> {
+        debug_assert!(self.aggregates_at(pos, t));
+        let step = self.pow(t - 1);
+        (1..self.incast as u128)
+            .map(|j| pos as u128 + j * step)
+            .filter(|&c| c < self.size as u128)
+            .map(|c| c as usize)
+            .collect()
+    }
+
+    /// Number of messages aggregator `pos` expects at round `t`.
+    pub fn expected(&self, pos: usize, t: u32) -> usize {
+        self.children(pos, t).len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounds_match_paper_examples() {
+        // Fig 4: 64 cores, incast 8 => two levels; incast 64 => one level.
+        assert_eq!(AggTree::new(64, 8).rounds(), 2);
+        assert_eq!(AggTree::new(64, 64).rounds(), 1);
+        assert_eq!(AggTree::new(64, 2).rounds(), 6);
+        assert_eq!(AggTree::new(1, 8).rounds(), 0);
+        assert_eq!(AggTree::new(65, 8).rounds(), 3); // ragged
+    }
+
+    #[test]
+    fn exit_rounds_and_parents() {
+        let t = AggTree::new(64, 8);
+        assert_eq!(t.exit_round(0), 0);
+        assert_eq!(t.exit_round(1), 1);
+        assert_eq!(t.exit_round(7), 1);
+        assert_eq!(t.exit_round(8), 2);
+        assert_eq!(t.exit_round(56), 2);
+        assert_eq!(t.parent(3), 0);
+        assert_eq!(t.parent(11), 8);
+        assert_eq!(t.parent(8), 0);
+    }
+
+    #[test]
+    fn children_inverse_of_parent() {
+        for &(size, incast) in &[(64usize, 8usize), (100, 4), (16, 16), (27, 3)] {
+            let tree = AggTree::new(size, incast);
+            for t in 1..=tree.rounds() {
+                for pos in 0..size {
+                    if tree.aggregates_at(pos, t) {
+                        for c in tree.children(pos, t) {
+                            assert_eq!(tree.exit_round(c), t, "size={size} f={incast} c={c}");
+                            assert_eq!(tree.parent(c), pos);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Property: every non-root position sends exactly once, and all
+    /// values funnel to the root (count conservation).
+    #[test]
+    fn every_position_reaches_root() {
+        for &(size, incast) in &[(64usize, 8usize), (37, 4), (256, 16), (9, 3), (5, 2)] {
+            let tree = AggTree::new(size, incast);
+            // Simulate the aggregation: value count per position.
+            let mut counts = vec![1u64; size];
+            for t in 1..=tree.rounds() {
+                for pos in 0..size {
+                    if tree.aggregates_at(pos, t) {
+                        for c in tree.children(pos, t) {
+                            counts[pos] += counts[c];
+                            counts[c] = 0;
+                        }
+                    }
+                }
+            }
+            assert_eq!(counts[0], size as u64, "size={size} incast={incast}");
+            assert!(counts[1..].iter().all(|&c| c == 0));
+        }
+    }
+
+    #[test]
+    fn expected_counts() {
+        let t = AggTree::new(64, 8);
+        assert_eq!(t.expected(0, 1), 7);
+        assert_eq!(t.expected(0, 2), 7);
+        let ragged = AggTree::new(10, 8);
+        assert_eq!(ragged.expected(0, 1), 7);
+        assert_eq!(ragged.expected(8, 1), 1); // only pos 9 exists
+        assert_eq!(ragged.expected(0, 2), 1); // pos 8
+    }
+}

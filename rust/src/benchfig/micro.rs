@@ -1,0 +1,184 @@
+//! Cost-model microbenchmark figures (Table 1, Figs 1/2/3/6/7/8): these
+//! evaluate the calibrated Rocket/nanoPU model directly, mirroring the
+//! paper's single-core measurements.
+
+use crate::algo::tree::AggTree;
+use crate::coordinator::{f, Table};
+use crate::cpu::{CoreModel, Temp, TABLE1_LATENCIES_NS};
+use crate::net::NetConfig;
+use crate::sim::Time;
+
+/// Table 1: median wire-to-wire loopback latencies, plus our model's
+/// realized loopback for comparison.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table 1 — median wire-to-wire loopback latency",
+        &["system", "latency_ns"],
+    );
+    for (name, ns) in TABLE1_LATENCIES_NS {
+        t.row(vec![name.into(), ns.to_string()]);
+    }
+    let core = CoreModel::default();
+    let cfg = NetConfig::default();
+    let model =
+        (core.tx_time(8) + cfg.propagation(0, 0) + cfg.serialization(8) + core.rx_time(8))
+            .as_ns_f64();
+    t.row(vec!["(our model)".into(), f(model)]);
+    t.note("paper Table 1; our fabric is calibrated to the nanoPU's 69 ns");
+    t
+}
+
+/// Fig 1: operations that complete within 1 µs on a nanoPU core.
+pub fn fig1() -> Table {
+    let core = CoreModel::default();
+    let cfg = NetConfig::default();
+    let us = |c: u64| Time::from_cycles(c).as_us_f64();
+    let mut t = Table::new(
+        "Fig 1 — what fits in under 1 µs (3.2 GHz Rocket + nanoPU)",
+        &["operation", "model_us", "under_1us"],
+    );
+    let rows: Vec<(&str, f64)> = vec![
+        ("scan 1K 8-byte words in L1", us(core.scan_min_cycles(1024, Temp::Warm))),
+        ("sort 40 8-byte keys", us(core.sort_cycles(40, Temp::Warm))),
+        ("travel 300 m at light speed", 1.0), // physics, included for scale
+        ("receive 2 KB on a 200 Gb/s NIC", cfg.serialization(2048).as_us_f64()),
+        (
+            "118 8-byte loopback nanoRequests",
+            us(118 * (core.rx_cycles(8) + core.tx_cycles(8))),
+        ),
+    ];
+    for (name, v) in rows {
+        t.row(vec![name.into(), f(v), (v <= 1.05).to_string()]);
+    }
+    t.note("paper Fig 1 lists these as canonical sub-microsecond tasks");
+    t
+}
+
+/// Fig 2: single-core min scan — time (a) and cache miss rate (b).
+pub fn fig2() -> Table {
+    let core = CoreModel::default();
+    let mut t = Table::new(
+        "Fig 2 — single-core MergeMin scan (cold cache)",
+        &["values", "time_us", "l1_miss_rate"],
+    );
+    let mut n = 64u64;
+    while n <= 8192 {
+        let cycles = core.scan_min_cycles(n, Temp::Cold);
+        let miss = core.cache.stream_miss_rate(n * 8, true);
+        t.row(vec![n.to_string(), f(Time::from_cycles(cycles).as_us_f64()), f(miss)]);
+        n *= 2;
+    }
+    t.note("paper anchor: 8,192 values ≈ 18 µs; miss rate rises with footprint");
+    t
+}
+
+/// Fig 3: merge-tree shapes — incast vs depth (the schematic).
+pub fn fig3() -> Table {
+    let mut t = Table::new(
+        "Fig 3 — lower incast => deeper work trees (64 cores)",
+        &["incast", "depth", "root_incast_msgs"],
+    );
+    for incast in [2usize, 4, 8, 16, 64] {
+        let tree = AggTree::new(64, incast);
+        t.row(vec![
+            incast.to_string(),
+            tree.rounds().to_string(),
+            tree.expected(0, 1).to_string(),
+        ]);
+    }
+    t.row(vec!["1".into(), "63 (chain)".into(), "1".into()]);
+    t
+}
+
+/// Fig 6: time for one core to receive N messages of various sizes.
+pub fn fig6() -> Table {
+    let core = CoreModel::default();
+    let mut t = Table::new(
+        "Fig 6 — time to receive N messages (nanoPU RX register interface)",
+        &["messages", "16B_ns", "32B_ns", "64B_ns"],
+    );
+    for n in [1u64, 2, 4, 8, 16, 32, 64] {
+        t.row(vec![
+            n.to_string(),
+            f(Time::from_cycles(n * core.rx_cycles(16)).as_ns_f64()),
+            f(Time::from_cycles(n * core.rx_cycles(32)).as_ns_f64()),
+            f(Time::from_cycles(n * core.rx_cycles(64)).as_ns_f64()),
+        ]);
+    }
+    t.note("paper anchors: 1×16 B ≈ 8 ns; 64×16 B ≈ 400 ns");
+    t
+}
+
+/// Fig 7: time for one core to send N messages.
+pub fn fig7() -> Table {
+    let core = CoreModel::default();
+    let mut t = Table::new(
+        "Fig 7 — time to send N messages (nanoPU TX register interface)",
+        &["messages", "16B_ns", "32B_ns", "64B_ns"],
+    );
+    for n in [1u64, 2, 4, 8, 16, 32, 64] {
+        t.row(vec![
+            n.to_string(),
+            f(Time::from_cycles(n * core.tx_cycles(16)).as_ns_f64()),
+            f(Time::from_cycles(n * core.tx_cycles(32)).as_ns_f64()),
+            f(Time::from_cycles(n * core.tx_cycles(64)).as_ns_f64()),
+        ]);
+    }
+    t
+}
+
+/// Fig 8: single-core local sort time (cold cache).
+pub fn fig8() -> Table {
+    let core = CoreModel::default();
+    let mut t = Table::new(
+        "Fig 8 — single-core local sort (cold cache)",
+        &["keys", "time_us"],
+    );
+    let mut n = 16u64;
+    while n <= 4096 {
+        t.row(vec![
+            n.to_string(),
+            f(Time::from_cycles(core.sort_cycles(n, Temp::Cold)).as_us_f64()),
+        ]);
+        n *= 2;
+    }
+    t.note("paper anchors: 1,024 keys > 30 µs; nanoTask-appropriate ≈ ≤64 keys");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_everything_under_a_microsecond() {
+        let t = fig1();
+        for row in &t.rows {
+            assert_eq!(row[2], "true", "{} took {} µs", row[0], row[1]);
+        }
+    }
+
+    #[test]
+    fn fig2_monotone_time() {
+        let t = fig2();
+        let times: Vec<f64> = t.rows.iter().map(|r| r[1].parse().unwrap()).collect();
+        assert!(times.windows(2).all(|w| w[0] < w[1]));
+        let last: f64 = *times.last().unwrap();
+        assert!((16.0..20.0).contains(&last), "8192 values = {last} µs");
+    }
+
+    #[test]
+    fn fig8_paper_anchor() {
+        let t = fig8();
+        let row_1024 = t.rows.iter().find(|r| r[0] == "1024").unwrap();
+        let us: f64 = row_1024[1].parse().unwrap();
+        assert!(us > 28.0, "sort 1024 = {us} µs");
+    }
+
+    #[test]
+    fn fig3_depth_decreases_with_incast() {
+        let t = fig3();
+        let depths: Vec<u32> = t.rows[..5].iter().map(|r| r[1].parse().unwrap()).collect();
+        assert!(depths.windows(2).all(|w| w[0] >= w[1]));
+    }
+}

@@ -1,0 +1,391 @@
+//! Simulation-driven figures: MergeMin (Fig 4), pivot strategies (Fig 5),
+//! MilliSort scaling (Figs 9/10), and the NanoSort knob/sensitivity studies
+//! (Figs 11-15 + the §6.2.3 multicast experiment).
+
+use anyhow::Result;
+
+use crate::algo::mergemin::{run_mergemin, MergeMinConfig};
+use crate::algo::millisort::{run_millisort, MilliSortConfig};
+use crate::algo::nanosort::{
+    pivot::{expected_bucket_fractions, Strategy},
+    run_nanosort, NanoSortConfig, PivotMode,
+};
+use crate::coordinator::{f, RunOptions, Table};
+
+/// Ablation (extension): the §4.2 pivot correction measured end-to-end —
+/// PivotSelect vs naive uniform pivots, final skew and runtime per depth.
+pub fn fig_ablation(opts: &RunOptions) -> Result<Table> {
+    let mut t = Table::new(
+        "Ablation — PivotSelect vs naive pivots (16 keys/core, b=16)",
+        &["nodes", "depth", "mode", "skew", "runtime_us"],
+    );
+    let node_list: &[usize] = if opts.quick { &[256] } else { &[256, 4096, 65_536] };
+    for &nodes in node_list {
+        for (mode, name) in [(PivotMode::Paper, "paper"), (PivotMode::Naive, "naive")] {
+            // Average skew over a few seeds (skew is the noisy metric).
+            let runs = 3;
+            let mut skew_acc = 0.0;
+            let mut rt_acc = 0.0;
+            let mut depth = 0;
+            for s in 0..runs {
+                let cfg = NanoSortConfig {
+                    nodes,
+                    keys_per_node: 16,
+                    pivot_mode: mode,
+                    seed: opts.seed + s,
+                    ..Default::default()
+                };
+                depth = cfg.depth();
+                let r = run_nanosort(&cfg, opts.compute.build()?);
+                assert!(r.validation.ok());
+                skew_acc += r.skew;
+                rt_acc += r.runtime().as_us_f64();
+            }
+            t.row(vec![
+                nodes.to_string(),
+                depth.to_string(),
+                name.into(),
+                f(skew_acc / runs as f64),
+                f(rt_acc / runs as f64),
+            ]);
+        }
+    }
+    t.note("paper §4.2: naive pivots' median-vs-mean gap compounds per recursion level");
+    Ok(t)
+}
+
+/// Fig 4: MergeMin runtime vs incast (64 cores, 128 values/core).
+pub fn fig4(opts: &RunOptions) -> Table {
+    let mut t = Table::new(
+        "Fig 4 — MergeMin runtime vs incast (64 cores, 128 values/core)",
+        &["incast", "runtime_ns", "correct"],
+    );
+    for incast in [1usize, 2, 4, 8, 16, 32, 64] {
+        let cfg = MergeMinConfig {
+            incast,
+            seed: opts.seed,
+            ..Default::default()
+        };
+        let r = run_mergemin(&cfg, opts.compute.build().expect("compute"));
+        t.row(vec![
+            incast.to_string(),
+            f(r.summary.makespan.as_ns_f64()),
+            r.correct().to_string(),
+        ]);
+    }
+    t.note("paper: sweet spot at incast 8 (~750 ns merge phase); extremes lose");
+    t
+}
+
+/// Fig 5: expected bucket-size fractions for the three pivot strategies
+/// (b = 8 buckets, 8 keys per node).
+pub fn fig5(opts: &RunOptions) -> Table {
+    let b = 8;
+    let trials = if opts.quick { 100 } else { 1000 };
+    let mut t = Table::new(
+        "Fig 5 — expected bucket fractions by pivot strategy (b=8, n=8)",
+        &["bucket", "naive", "strategy2", "strategy3", "ideal"],
+    );
+    let naive = expected_bucket_fractions(Strategy::Naive, b, 101, trials, opts.seed);
+    let s2 = expected_bucket_fractions(Strategy::Shifted, b, 101, trials, opts.seed);
+    let s3 = expected_bucket_fractions(Strategy::Mixed, b, 101, trials, opts.seed);
+    for i in 0..b {
+        t.row(vec![
+            (i + 1).to_string(),
+            f(naive[i]),
+            f(s2[i]),
+            f(s3[i]),
+            f(1.0 / b as f64),
+        ]);
+    }
+    t.note("paper: naive shrinks edge buckets (median-vs-mean gap); strategy 3 ≈ uniform");
+    t
+}
+
+/// Fig 9: MilliSort runtime vs cores (4,096 keys, incast 4).
+pub fn fig9(opts: &RunOptions) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 9 — MilliSort runtime vs cores (4,096 keys, incast 4)",
+        &["cores", "runtime_us", "correct"],
+    );
+    let cores_list: &[usize] = if opts.quick { &[16, 64] } else { &[16, 32, 64, 128, 256] };
+    for &cores in cores_list {
+        let cfg = MilliSortConfig {
+            cores,
+            total_keys: 4096,
+            reduction_factor: 4,
+            seed: opts.seed,
+            ..Default::default()
+        };
+        let r = run_millisort(&cfg, opts.compute.build()?);
+        t.row(vec![
+            cores.to_string(),
+            f(r.runtime().as_us_f64()),
+            r.validation.ok().to_string(),
+        ]);
+    }
+    t.note("paper: 61 µs @64 cores -> 400 µs @256 cores (poor scaling)");
+    Ok(t)
+}
+
+/// Fig 10: MilliSort runtime vs reduction factor (128 cores, 4,096 keys).
+pub fn fig10(opts: &RunOptions) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 10 — MilliSort runtime vs reduction factor (128 cores, 4,096 keys)",
+        &["reduction_factor", "runtime_us", "correct"],
+    );
+    for rf in [2usize, 4, 8, 16, 32] {
+        let cfg = MilliSortConfig {
+            cores: 128,
+            total_keys: 4096,
+            reduction_factor: rf,
+            seed: opts.seed,
+            ..Default::default()
+        };
+        let r = run_millisort(&cfg, opts.compute.build()?);
+        t.row(vec![
+            rf.to_string(),
+            f(r.runtime().as_us_f64()),
+            r.validation.ok().to_string(),
+        ]);
+    }
+    t.note("paper: larger incast => slower (each pivot sorter processes more)");
+    Ok(t)
+}
+
+fn nanosort_cfg(opts: &RunOptions) -> NanoSortConfig {
+    NanoSortConfig { seed: opts.seed, ..Default::default() }
+}
+
+/// Fig 11: NanoSort vs bucket count — runtime (a) and traffic (b)
+/// (4,096 cores, 32 keys/core).
+pub fn fig11(opts: &RunOptions) -> Result<Vec<Table>> {
+    let nodes = if opts.quick { 256 } else { 4096 };
+    let mut a = Table::new(
+        format!("Fig 11a — NanoSort runtime vs buckets ({nodes} cores, 32 keys/core)"),
+        &["buckets", "runtime_us", "correct"],
+    );
+    let mut b_t = Table::new(
+        format!("Fig 11b — network traffic vs buckets ({nodes} cores, 32 keys/core)"),
+        &["buckets", "msgs_sent", "msgs_delivered", "wire_MB"],
+    );
+    for b in [4usize, 8, 16] {
+        // nodes must be b^r: 4096 = 4^6 = 8^4 = 16^3 (quick: 256 = 4^4 = 16^2).
+        if (nodes as f64).log(b as f64).fract() > 1e-9 {
+            continue;
+        }
+        let mut cfg = nanosort_cfg(opts);
+        cfg.nodes = nodes;
+        cfg.keys_per_node = 32;
+        cfg.buckets = b;
+        cfg.median_incast = b;
+        let r = run_nanosort(&cfg, opts.compute.build()?);
+        a.row(vec![
+            b.to_string(),
+            f(r.runtime().as_us_f64()),
+            r.validation.ok().to_string(),
+        ]);
+        b_t.row(vec![
+            b.to_string(),
+            r.summary.net.msgs_sent.to_string(),
+            r.summary.net.msgs_delivered.to_string(),
+            f(r.summary.net.wire_bytes as f64 / 1e6),
+        ]);
+    }
+    a.note("paper: 4/8/16 buckets perform similarly despite different traffic");
+    Ok(vec![a, b_t])
+}
+
+/// Fig 12: NanoSort runtime vs total keys (4,096 cores).
+pub fn fig12(opts: &RunOptions) -> Result<Table> {
+    let nodes = if opts.quick { 256 } else { 4096 };
+    let mut t = Table::new(
+        format!("Fig 12 — NanoSort runtime vs keys ({nodes} cores, 16 buckets)"),
+        &["total_keys", "keys_per_core", "runtime_us", "correct"],
+    );
+    for kpn in [4usize, 8, 16, 32, 64] {
+        let mut cfg = nanosort_cfg(opts);
+        cfg.nodes = nodes;
+        cfg.keys_per_node = kpn;
+        let r = run_nanosort(&cfg, opts.compute.build()?);
+        t.row(vec![
+            (nodes * kpn).to_string(),
+            kpn.to_string(),
+            f(r.runtime().as_us_f64()),
+            r.validation.ok().to_string(),
+        ]);
+    }
+    t.note("paper: runtime grows ~linearly with keys per core");
+    Ok(t)
+}
+
+/// Fig 13: final bucket skew vs keys per core (4,096 cores).
+pub fn fig13(opts: &RunOptions) -> Result<Table> {
+    let nodes = if opts.quick { 256 } else { 4096 };
+    let mut t = Table::new(
+        format!("Fig 13 — final skew vs keys per core ({nodes} cores, 16 buckets)"),
+        &["keys_per_core", "skew_max_over_mean"],
+    );
+    for kpn in [4usize, 8, 16, 32, 64] {
+        let mut cfg = nanosort_cfg(opts);
+        cfg.nodes = nodes;
+        cfg.keys_per_node = kpn;
+        let r = run_nanosort(&cfg, opts.compute.build()?);
+        t.row(vec![kpn.to_string(), f(r.skew)]);
+    }
+    t.note("paper: more keys/core => better pivot visibility => less skew");
+    Ok(t)
+}
+
+/// Fig 14: effect of injected p99 tail latency (256 cores, 32 keys/core).
+pub fn fig14(opts: &RunOptions) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 14 — runtime vs injected p99 latency (256 cores, 16 buckets, 32 keys/core)",
+        &["p99_extra_ns", "runtime_us", "slowdown"],
+    );
+    let mut base_us = 0.0;
+    for extra in [0u64, 500, 1000, 2000, 4000] {
+        let mut cfg = nanosort_cfg(opts);
+        cfg.nodes = 256;
+        cfg.keys_per_node = 32;
+        cfg.net.tail_prob = (1, 100);
+        cfg.net.tail_extra_ns = extra;
+        let r = run_nanosort(&cfg, opts.compute.build()?);
+        let us = r.runtime().as_us_f64();
+        if extra == 0 {
+            base_us = us;
+        }
+        t.row(vec![extra.to_string(), f(us), f(us / base_us)]);
+    }
+    t.note("paper: 4,000 ns p99 doubles runtime (26 µs -> 53 µs); tails matter");
+    t.note("deviation: paper says 8 buckets/256 cores, but 256 is not a power of 8; we use b=16 (256 = 16^2)");
+    Ok(t)
+}
+
+/// Fig 15: effect of switch latency (64 cores, 16 keys/core) —
+/// runtime (a) and idle fraction (b).
+pub fn fig15(opts: &RunOptions) -> Result<Vec<Table>> {
+    let mut a = Table::new(
+        "Fig 15a — NanoSort runtime vs switch latency (64 cores, 16 keys/core, 8 buckets)",
+        &["switch_ns", "runtime_us"],
+    );
+    let mut b = Table::new(
+        "Fig 15b — idle time vs switch latency",
+        &["switch_ns", "mean_idle_us", "idle_fraction"],
+    );
+    for sw in [50u64, 100, 263, 500, 1000] {
+        let mut cfg = nanosort_cfg(opts);
+        cfg.nodes = 64;
+        cfg.keys_per_node = 16;
+        cfg.buckets = 8;
+        cfg.median_incast = 8;
+        cfg.net.switch_latency_ns = sw;
+        let r = run_nanosort(&cfg, opts.compute.build()?);
+        let makespan = r.runtime().as_us_f64();
+        let idle: f64 = r
+            .summary
+            .node_stats
+            .iter()
+            .map(|s| s.total_idle().as_us_f64())
+            .sum::<f64>()
+            / r.summary.node_stats.len() as f64;
+        a.row(vec![sw.to_string(), f(makespan)]);
+        b.row(vec![sw.to_string(), f(idle), f(idle / makespan)]);
+    }
+    a.note("paper: runtime rises with switch latency; cores spend the extra time idle");
+    Ok(vec![a, b])
+}
+
+/// §6.2.3 multicast experiment: 4,096 cores with and without multicast.
+pub fn fig_multicast(opts: &RunOptions) -> Result<Table> {
+    let nodes = if opts.quick { 256 } else { 4096 };
+    let mut t = Table::new(
+        format!("§6.2.3 — multicast support on/off ({nodes} cores, 16 keys/core)"),
+        &["multicast", "runtime_us", "msgs_sent", "sends_saved_pct"],
+    );
+    let mut base_msgs = 0u64;
+    for mcast in [false, true] {
+        let mut cfg = nanosort_cfg(opts);
+        cfg.nodes = nodes;
+        cfg.net.multicast = mcast;
+        let r = run_nanosort(&cfg, opts.compute.build()?);
+        if !mcast {
+            base_msgs = r.summary.net.msgs_sent;
+        }
+        let saved = if mcast && base_msgs > 0 {
+            100.0 * (base_msgs - r.summary.net.msgs_sent) as f64 / base_msgs as f64
+        } else {
+            0.0
+        };
+        t.row(vec![
+            mcast.to_string(),
+            f(r.runtime().as_us_f64()),
+            r.summary.net.msgs_sent.to_string(),
+            f(saved),
+        ]);
+    }
+    t.note("paper: 96 µs -> 40 µs (2.4x), 18% fewer messages sent");
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> RunOptions {
+        RunOptions { quick: true, ..Default::default() }
+    }
+
+    #[test]
+    fn fig4_has_sweet_spot_shape() {
+        let t = fig4(&quick());
+        let times: Vec<f64> = t.rows.iter().map(|r| r[1].parse().unwrap()).collect();
+        // Middle incasts beat both extremes.
+        let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(best < times[0] && best < *times.last().unwrap());
+        assert!(t.rows.iter().all(|r| r[2] == "true"));
+    }
+
+    #[test]
+    fn fig5_fractions_sum_to_one() {
+        let t = fig5(&quick());
+        for col in 1..4 {
+            let s: f64 = t.rows.iter().map(|r| r[col].parse::<f64>().unwrap()).sum();
+            // Cells are rounded to 4 decimals; allow rounding slack.
+            assert!((s - 1.0).abs() < 1e-3, "col {col} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn fig9_runtime_grows_with_cores() {
+        let t = fig9(&quick()).unwrap();
+        let times: Vec<f64> = t.rows.iter().map(|r| r[1].parse().unwrap()).collect();
+        assert!(times.last().unwrap() > times.first().unwrap());
+    }
+
+    #[test]
+    fn fig14_tail_hurts() {
+        let t = fig14(&quick()).unwrap();
+        let slow: f64 = t.rows.last().unwrap()[2].parse().unwrap();
+        assert!(slow > 1.1, "4,000 ns p99 slowdown = {slow}");
+    }
+
+    #[test]
+    fn fig15_switch_latency_hurts() {
+        let t = fig15(&quick()).unwrap();
+        let a = &t[0];
+        let first: f64 = a.rows.first().unwrap()[1].parse().unwrap();
+        let last: f64 = a.rows.last().unwrap()[1].parse().unwrap();
+        assert!(last > first);
+    }
+
+    #[test]
+    fn multicast_helps() {
+        let t = fig_multicast(&quick()).unwrap();
+        let off: f64 = t.rows[0][1].parse().unwrap();
+        let on: f64 = t.rows[1][1].parse().unwrap();
+        assert!(on < off, "on={on} off={off}");
+        let saved: f64 = t.rows[1][3].parse().unwrap();
+        assert!(saved > 0.0);
+    }
+}

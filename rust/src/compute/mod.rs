@@ -1,0 +1,55 @@
+//! Node-local data plane.
+//!
+//! The simulator's *timing* comes from [`crate::cpu::CoreModel`]; the
+//! *data* transformations (keys actually moving and getting sorted) go
+//! through a [`LocalCompute`] implementation:
+//!
+//! - [`NativeCompute`] — pure Rust; the oracle and the fast default for
+//!   huge sweeps.
+//! - [`XlaCompute`] — the paper-mandated three-layer path: each operation
+//!   executes an AOT-compiled artifact (Pallas kernel → JAX → HLO text →
+//!   PJRT) through [`crate::runtime::XlaEngine`]. Shapes are padded up to
+//!   the nearest compiled variant with `u64::MAX` sentinels.
+//!
+//! Both implementations are cross-checked against each other in tests.
+
+mod native;
+mod xla_compute;
+
+pub use native::NativeCompute;
+pub use xla_compute::XlaCompute;
+
+/// Key-space data operations a simulated core performs.
+///
+/// Keys must be `< u64::MAX` (the padding sentinel); the GraySort
+/// generator guarantees this.
+///
+/// Not `Send`/`Sync`: the PJRT client handle inside [`XlaCompute`] is
+/// single-threaded. Parallel sweeps construct one compute per thread.
+pub trait LocalCompute {
+    /// Sort a block of keys ascending.
+    fn sort(&self, keys: &mut Vec<u64>);
+
+    /// Minimum of a non-empty slice.
+    fn min(&self, vals: &[u64]) -> u64;
+
+    /// Bucket index of each key against `pivots` (sorted, len = b-1):
+    /// bucket = |{i : key >= pivots[i]}| in `[0, b)`.
+    fn bucketize(&self, keys: &[u64], pivots: &[u64]) -> Vec<u32>;
+
+    /// Element-wise lower median across rows (all rows same length).
+    fn median_combine(&self, rows: &[Vec<u64>]) -> Vec<u64>;
+
+    /// Implementation name (for reports).
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use crate::sim::SplitMix64;
+
+    pub fn rand_keys(seed: u64, n: usize) -> Vec<u64> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n).map(|_| rng.next_u64() % (u64::MAX - 1)).collect()
+    }
+}

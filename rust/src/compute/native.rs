@@ -1,0 +1,85 @@
+//! Pure-Rust data plane: the oracle implementation of [`LocalCompute`].
+
+use super::LocalCompute;
+
+/// Straightforward Rust implementations (pdqsort, linear scans).
+#[derive(Debug, Clone, Default)]
+pub struct NativeCompute;
+
+impl LocalCompute for NativeCompute {
+    fn sort(&self, keys: &mut Vec<u64>) {
+        keys.sort_unstable();
+    }
+
+    fn min(&self, vals: &[u64]) -> u64 {
+        *vals.iter().min().expect("min of empty slice")
+    }
+
+    fn bucketize(&self, keys: &[u64], pivots: &[u64]) -> Vec<u32> {
+        debug_assert!(pivots.windows(2).all(|w| w[0] <= w[1]));
+        keys.iter()
+            .map(|&k| pivots.partition_point(|&p| p <= k) as u32)
+            .collect()
+    }
+
+    fn median_combine(&self, rows: &[Vec<u64>]) -> Vec<u64> {
+        let m = rows.len();
+        assert!(m > 0);
+        let p = rows[0].len();
+        let mut out = Vec::with_capacity(p);
+        let mut col = Vec::with_capacity(m);
+        for j in 0..p {
+            col.clear();
+            col.extend(rows.iter().map(|r| r[j]));
+            col.sort_unstable();
+            out.push(col[(m - 1) / 2]); // lower median
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::test_support::rand_keys;
+
+    #[test]
+    fn sort_sorts() {
+        let nc = NativeCompute;
+        let mut keys = rand_keys(1, 100);
+        let mut expect = keys.clone();
+        expect.sort_unstable();
+        nc.sort(&mut keys);
+        assert_eq!(keys, expect);
+    }
+
+    #[test]
+    fn bucketize_matches_definition() {
+        let nc = NativeCompute;
+        let pivots = vec![10u64, 20, 30];
+        let keys = vec![0u64, 10, 15, 20, 30, 31, 9, 29];
+        // key == pivot goes right (side='right' in the jnp oracle).
+        assert_eq!(nc.bucketize(&keys, &pivots), vec![0, 1, 1, 2, 3, 3, 0, 2]);
+    }
+
+    #[test]
+    fn median_combine_lower_median() {
+        let nc = NativeCompute;
+        let rows = vec![vec![1u64, 100], vec![2, 200], vec![3, 300], vec![4, 400]];
+        // even m: lower median = element (m-1)/2 = index 1
+        assert_eq!(nc.median_combine(&rows), vec![2, 200]);
+        let rows5 = vec![vec![5u64], vec![1], vec![3], vec![2], vec![4]];
+        assert_eq!(nc.median_combine(&rows5), vec![3]);
+    }
+
+    #[test]
+    fn min_works() {
+        let nc = NativeCompute;
+        assert_eq!(nc.min(&[5, 2, 9]), 2);
+        assert_eq!(nc.min(&[7]), 7);
+    }
+}

@@ -1,0 +1,299 @@
+//! The three-layer data plane: every operation executes an AOT-compiled
+//! XLA artifact (Pallas kernel → JAX → HLO text → PJRT).
+//!
+//! Artifacts are compiled for a fixed menu of static shapes (see
+//! `python/compile/aot.py`); inputs are padded up to the nearest variant
+//! with `u64::MAX` sentinels (which sort to the end / bucketize out of
+//! range and are discarded). Shapes with no compiled variant fall back to
+//! [`NativeCompute`] and are counted, so a report can state exactly how
+//! much of the data plane ran through XLA.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::runtime::XlaEngine;
+
+use super::{LocalCompute, NativeCompute};
+
+/// Sentinel used to pad blocks up to a compiled shape.
+const PAD: u64 = u64::MAX;
+
+/// b=1 sort variants compiled by aot.py, ascending.
+const SORT_SIZES: [usize; 5] = [16, 32, 64, 128, 256];
+/// b=1 merge_min variants.
+const MIN_SIZES: [usize; 7] = [2, 4, 8, 16, 32, 64, 128];
+/// b=1 bucketize variants per pivot count.
+const BUCKETIZE_SIZES_P15: [usize; 3] = [16, 32, 64];
+const BUCKETIZE_SIZES_P7: [usize; 1] = [32];
+const BUCKETIZE_SIZES_P3: [usize; 1] = [32];
+/// median_combine variants (m, p).
+const MEDIAN_SHAPES: [(usize, usize); 8] =
+    [(2, 15), (4, 15), (8, 15), (16, 15), (4, 7), (8, 7), (8, 3), (4, 3)];
+
+/// Call counters for transparency in reports.
+#[derive(Debug, Default)]
+pub struct XlaCounters {
+    pub xla_calls: AtomicU64,
+    pub native_fallbacks: AtomicU64,
+}
+
+/// XLA-backed [`LocalCompute`].
+pub struct XlaCompute {
+    engine: Arc<XlaEngine>,
+    native: NativeCompute,
+    pub counters: XlaCounters,
+}
+
+impl XlaCompute {
+    pub fn new(engine: Arc<XlaEngine>) -> Self {
+        XlaCompute { engine, native: NativeCompute, counters: XlaCounters::default() }
+    }
+
+    /// Open the default artifacts directory.
+    pub fn open_default() -> Result<Self> {
+        Ok(Self::new(Arc::new(XlaEngine::open_default()?)))
+    }
+
+    pub fn engine(&self) -> &Arc<XlaEngine> {
+        &self.engine
+    }
+
+    fn bump_xla(&self) {
+        self.counters.xla_calls.fetch_add(1, Ordering::Relaxed);
+    }
+    fn bump_fallback(&self) {
+        self.counters.native_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fraction of data-plane calls that executed through XLA.
+    pub fn xla_fraction(&self) -> f64 {
+        let x = self.counters.xla_calls.load(Ordering::Relaxed) as f64;
+        let f = self.counters.native_fallbacks.load(Ordering::Relaxed) as f64;
+        if x + f == 0.0 {
+            1.0
+        } else {
+            x / (x + f)
+        }
+    }
+
+    fn sort_padded(&self, keys: &[u64], variant: usize) -> Result<Vec<u64>> {
+        debug_assert!(keys.len() <= variant);
+        debug_assert!(keys.iter().all(|&k| k < PAD), "keys must be < u64::MAX");
+        let mut buf = keys.to_vec();
+        buf.resize(variant, PAD);
+        let art = self.engine.load(&format!("sort_block_b1_n{variant}"))?;
+        let mut out = art.run_u64(&[&buf])?;
+        let mut sorted = out.swap_remove(0);
+        sorted.truncate(keys.len());
+        Ok(sorted)
+    }
+
+    fn min_padded(&self, vals: &[u64], variant: usize) -> Result<u64> {
+        let mut buf = vals.to_vec();
+        buf.resize(variant, PAD);
+        let art = self.engine.load(&format!("merge_min_block_b1_n{variant}"))?;
+        let out = art.run_u64(&[&buf])?;
+        Ok(out[0][0])
+    }
+
+    fn bucketize_padded(
+        &self,
+        keys: &[u64],
+        pivots: &[u64],
+        variant: usize,
+    ) -> Result<Vec<u32>> {
+        let p = pivots.len();
+        let mut buf = keys.to_vec();
+        buf.resize(variant, PAD);
+        let art = self
+            .engine
+            .load(&format!("bucketize_block_b1_n{variant}_p{p}"))?;
+        let out = art.run_mixed(&[&buf, pivots])?;
+        Ok(out[0].as_i32()[..keys.len()].iter().map(|&v| v as u32).collect())
+    }
+}
+
+fn pick_variant(sizes: &[usize], n: usize) -> Option<usize> {
+    sizes.iter().copied().find(|&s| s >= n)
+}
+
+impl LocalCompute for XlaCompute {
+    fn sort(&self, keys: &mut Vec<u64>) {
+        let n = keys.len();
+        if n <= 1 {
+            return;
+        }
+        if let Some(variant) = pick_variant(&SORT_SIZES, n) {
+            match self.sort_padded(keys, variant) {
+                Ok(sorted) => {
+                    *keys = sorted;
+                    self.bump_xla();
+                    return;
+                }
+                Err(e) => panic!("xla sort failed: {e:#}"),
+            }
+        }
+        // Oversize block: sort 256-key runs through the kernel, then do a
+        // k-way merge natively (the hot inner loops still ran through XLA).
+        let max = *SORT_SIZES.last().unwrap();
+        let mut runs: Vec<Vec<u64>> = Vec::new();
+        for chunk in keys.chunks(max) {
+            runs.push(self.sort_padded(chunk, max).expect("xla sort chunk"));
+            self.bump_xla();
+        }
+        let mut merged = Vec::with_capacity(n);
+        let mut cursors = vec![0usize; runs.len()];
+        for _ in 0..n {
+            let (ri, _) = runs
+                .iter()
+                .enumerate()
+                .filter(|(i, r)| cursors[*i] < r.len())
+                .min_by_key(|(i, r)| r[cursors[*i]])
+                .expect("non-empty run");
+            merged.push(runs[ri][cursors[ri]]);
+            cursors[ri] += 1;
+        }
+        *keys = merged;
+    }
+
+    fn min(&self, vals: &[u64]) -> u64 {
+        assert!(!vals.is_empty());
+        if vals.len() == 1 {
+            return vals[0];
+        }
+        let max = *MIN_SIZES.last().unwrap();
+        if let Some(variant) = pick_variant(&MIN_SIZES, vals.len()) {
+            self.bump_xla();
+            return self.min_padded(vals, variant).expect("xla min");
+        }
+        // Chunk, reduce each through the kernel, combine the chunk minima.
+        let minima: Vec<u64> = vals
+            .chunks(max)
+            .map(|c| {
+                self.bump_xla();
+                self.min_padded(c, max).expect("xla min chunk")
+            })
+            .collect();
+        self.min(&minima)
+    }
+
+    fn bucketize(&self, keys: &[u64], pivots: &[u64]) -> Vec<u32> {
+        let sizes: &[usize] = match pivots.len() {
+            15 => &BUCKETIZE_SIZES_P15,
+            7 => &BUCKETIZE_SIZES_P7,
+            3 => &BUCKETIZE_SIZES_P3,
+            _ => {
+                self.bump_fallback();
+                return self.native.bucketize(keys, pivots);
+            }
+        };
+        let max = *sizes.last().unwrap();
+        let mut out = Vec::with_capacity(keys.len());
+        for chunk in keys.chunks(max) {
+            let variant = pick_variant(sizes, chunk.len()).unwrap();
+            out.extend(self.bucketize_padded(chunk, pivots, variant).expect("xla bucketize"));
+            self.bump_xla();
+        }
+        out
+    }
+
+    fn median_combine(&self, rows: &[Vec<u64>]) -> Vec<u64> {
+        let m = rows.len();
+        let p = rows.first().map(|r| r.len()).unwrap_or(0);
+        if !MEDIAN_SHAPES.contains(&(m, p)) {
+            self.bump_fallback();
+            return self.native.median_combine(rows);
+        }
+        let flat: Vec<u64> = rows.iter().flatten().copied().collect();
+        let art = self
+            .engine
+            .load(&format!("median_combine_m{m}_p{p}"))
+            .expect("median artifact");
+        let out = art.run_u64(&[&flat]).expect("xla median_combine");
+        self.bump_xla();
+        out.into_iter().next().unwrap()
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::test_support::rand_keys;
+
+    fn engine_or_skip() -> Option<XlaCompute> {
+        match XlaCompute::open_default() {
+            Ok(x) => Some(x),
+            Err(e) => {
+                eprintln!("skipping XLA tests (artifacts not built?): {e:#}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn xla_sort_matches_native() {
+        let Some(x) = engine_or_skip() else { return };
+        let native = NativeCompute;
+        for n in [1usize, 2, 5, 16, 17, 40, 64, 100, 256, 300, 700] {
+            let mut a = rand_keys(n as u64, n);
+            let mut b = a.clone();
+            x.sort(&mut a);
+            native.sort(&mut b);
+            assert_eq!(a, b, "n={n}");
+        }
+        assert!(x.xla_fraction() > 0.99);
+    }
+
+    #[test]
+    fn xla_min_matches_native() {
+        let Some(x) = engine_or_skip() else { return };
+        for n in [1usize, 2, 3, 8, 100, 129, 400] {
+            let vals = rand_keys(7 + n as u64, n);
+            assert_eq!(x.min(&vals), NativeCompute.min(&vals), "n={n}");
+        }
+    }
+
+    #[test]
+    fn xla_bucketize_matches_native() {
+        let Some(x) = engine_or_skip() else { return };
+        let native = NativeCompute;
+        for &p in &[3usize, 7, 15] {
+            let mut pivots = rand_keys(p as u64, p);
+            pivots.sort_unstable();
+            for n in [1usize, 16, 33, 64, 65, 200] {
+                let keys = rand_keys((n * p) as u64, n);
+                assert_eq!(
+                    x.bucketize(&keys, &pivots),
+                    native.bucketize(&keys, &pivots),
+                    "n={n} p={p}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn xla_median_combine_matches_native() {
+        let Some(x) = engine_or_skip() else { return };
+        let native = NativeCompute;
+        for &(m, p) in &MEDIAN_SHAPES {
+            let rows: Vec<Vec<u64>> = (0..m)
+                .map(|i| {
+                    let mut r = rand_keys((m * p + i) as u64, p);
+                    r.sort_unstable();
+                    r
+                })
+                .collect();
+            assert_eq!(x.median_combine(&rows), native.median_combine(&rows), "m={m} p={p}");
+        }
+        // Un-compiled shape falls back to native.
+        let rows = vec![vec![1u64, 2], vec![3, 4], vec![5, 6]];
+        assert_eq!(x.median_combine(&rows), native.median_combine(&rows));
+        assert!(x.counters.native_fallbacks.load(Ordering::Relaxed) >= 1);
+    }
+}

@@ -1,0 +1,157 @@
+//! L3 coordinator: run configuration, data-plane selection, and report
+//! rendering shared by the CLI (`repro`), the examples, and the benches.
+
+mod report;
+
+pub use report::{f, Table};
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::compute::{LocalCompute, NativeCompute, XlaCompute};
+
+/// Which data plane executes node-local compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ComputeChoice {
+    /// Pure-Rust oracle (fast; default for large sweeps).
+    #[default]
+    Native,
+    /// The three-layer path: Pallas -> JAX -> HLO text -> PJRT.
+    Xla,
+}
+
+impl ComputeChoice {
+    /// Construct the data plane. XLA requires `make artifacts` to have run.
+    pub fn build(self) -> Result<Rc<dyn LocalCompute>> {
+        Ok(match self {
+            ComputeChoice::Native => Rc::new(NativeCompute),
+            ComputeChoice::Xla => Rc::new(XlaCompute::open_default()?),
+        })
+    }
+}
+
+/// Options shared by every figure/benchmark entry point.
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    pub compute: ComputeChoice,
+    pub seed: u64,
+    /// Repetitions for runs that report averages (headline does 10).
+    pub runs: usize,
+    /// Shrink the heaviest experiments (CI-sized sweeps).
+    pub quick: bool,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions { compute: ComputeChoice::Native, seed: 1, runs: 1, quick: false }
+    }
+}
+
+/// Minimal CLI argument cursor (the offline registry has no clap; see
+/// DESIGN.md "Dependency substitutions").
+pub struct Args {
+    items: Vec<String>,
+}
+
+impl Args {
+    pub fn from_env() -> Self {
+        Args { items: std::env::args().skip(1).collect() }
+    }
+
+    pub fn from_vec(items: Vec<String>) -> Self {
+        Args { items }
+    }
+
+    /// Remove and return the first positional (non-flag) argument.
+    pub fn positional(&mut self) -> Option<String> {
+        let idx = self.items.iter().position(|a| !a.starts_with("--"))?;
+        Some(self.items.remove(idx))
+    }
+
+    /// True if `--name` is present (consumes it).
+    pub fn flag(&mut self, name: &str) -> bool {
+        let want = format!("--{name}");
+        if let Some(idx) = self.items.iter().position(|a| *a == want) {
+            self.items.remove(idx);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Value of `--name <value>` or `--name=<value>` (consumes both).
+    pub fn value(&mut self, name: &str) -> Option<String> {
+        let want = format!("--{name}");
+        let prefix = format!("--{name}=");
+        if let Some(idx) = self.items.iter().position(|a| *a == want) {
+            self.items.remove(idx);
+            if idx < self.items.len() {
+                return Some(self.items.remove(idx));
+            }
+            return None;
+        }
+        if let Some(idx) = self.items.iter().position(|a| a.starts_with(&prefix)) {
+            let item = self.items.remove(idx);
+            return Some(item[prefix.len()..].to_string());
+        }
+        None
+    }
+
+    /// Parse `--name <n>` as a number.
+    pub fn num<T: std::str::FromStr>(&mut self, name: &str) -> Option<T> {
+        self.value(name).and_then(|v| v.parse().ok())
+    }
+
+    /// Remaining unconsumed arguments (for error reporting).
+    pub fn rest(&self) -> &[String] {
+        &self.items
+    }
+
+    /// Standard options block shared by subcommands.
+    pub fn run_options(&mut self) -> RunOptions {
+        RunOptions {
+            compute: if self.flag("xla") { ComputeChoice::Xla } else { ComputeChoice::Native },
+            seed: self.num("seed").unwrap_or(1),
+            runs: self.num("runs").unwrap_or(1),
+            quick: self.flag("quick"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::from_vec(s.split_whitespace().map(str::to_string).collect())
+    }
+
+    #[test]
+    fn parses_positionals_and_flags() {
+        let mut a = args("fig 9 --xla --seed 7 --runs=3");
+        assert_eq!(a.positional().as_deref(), Some("fig"));
+        assert_eq!(a.positional().as_deref(), Some("9"));
+        let opts = a.run_options();
+        assert_eq!(opts.compute, ComputeChoice::Xla);
+        assert_eq!(opts.seed, 7);
+        assert_eq!(opts.runs, 3);
+        assert!(!opts.quick);
+        assert!(a.rest().is_empty());
+    }
+
+    #[test]
+    fn missing_values_default() {
+        let mut a = args("fig 4");
+        a.positional();
+        a.positional();
+        let opts = a.run_options();
+        assert_eq!(opts.compute, ComputeChoice::Native);
+        assert_eq!(opts.seed, 1);
+    }
+
+    #[test]
+    fn native_compute_builds() {
+        assert!(ComputeChoice::Native.build().is_ok());
+    }
+}

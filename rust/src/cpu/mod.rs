@@ -1,0 +1,15 @@
+//! Cycle-calibrated model of the simulated nanoPU endpoint: the 3.2 GHz
+//! in-order Rocket core ([`CoreModel`]) and its cache hierarchy
+//! ([`CacheModel`]). All timing constants trace to a paper measurement
+//! (DESIGN.md §6); calibration tests pin them.
+
+mod cache;
+mod rocket;
+
+pub use cache::CacheModel;
+pub use rocket::{CoreModel, Temp};
+
+/// Table 1 of the paper: median wire-to-wire loopback latency (ns) of the
+/// three end-host network stacks it compares. Used by `repro fig table1`.
+pub const TABLE1_LATENCIES_NS: [(&str, u64); 3] =
+    [("eRPC", 850), ("NeBuLa", 100), ("nanoPU", 69)];

@@ -1,0 +1,232 @@
+//! Cycle cost model of the 3.2 GHz in-order RISC-V Rocket core (paper §5.1)
+//! and the nanoPU register-file network interface (paper §2.1, Figs 6/7).
+//!
+//! Every constant is calibrated against a published measurement; the tests
+//! at the bottom pin each anchor point so the calibration cannot drift.
+//! See DESIGN.md §6 for the anchor table.
+
+use super::cache::CacheModel;
+use crate::sim::Time;
+
+/// Cost model for node-local operations. All methods return *cycles*;
+/// convert with [`Time::from_cycles`].
+#[derive(Debug, Clone)]
+pub struct CoreModel {
+    pub cache: CacheModel,
+    /// Cycles per element-comparison step of the local sort
+    /// (n·log2(n) model). Calibrated: 1,024 keys ≈ 30 µs cold (Fig 8).
+    pub sort_cycles_per_cmp: f64,
+    /// Cycles per 8-byte word for a streaming scan (min/sum). Fig 1:
+    /// "scan 1K 8B words in L1 cache" < 1 µs => ~3 cycles/word.
+    pub scan_cycles_per_word: u64,
+    /// Fixed cycles to receive one message through the nanoPU RX register
+    /// interface (Fig 6: 64×16 B messages ≈ 400 ns => 20 cycles each).
+    pub rx_fixed_cycles: u64,
+    /// Additional RX cycles per 8-byte payload word.
+    pub rx_word_cycles: u64,
+    /// Fixed cycles to send one message (Fig 7; slightly cheaper than RX).
+    pub tx_fixed_cycles: u64,
+    /// Additional TX cycles per 8-byte payload word.
+    pub tx_word_cycles: u64,
+    /// Fixed per-task dispatch overhead (thread wakeup via the hardware
+    /// scheduler; the nanoPU makes this tiny).
+    pub task_dispatch_cycles: u64,
+}
+
+impl Default for CoreModel {
+    fn default() -> Self {
+        CoreModel {
+            cache: CacheModel::default(),
+            sort_cycles_per_cmp: 9.4,
+            scan_cycles_per_word: 3,
+            rx_fixed_cycles: 16,
+            rx_word_cycles: 2,
+            // Calibrated jointly with RX against Fig 1's "118 8-byte
+            // loopback nanoRequests per µs": rx(8B)+tx(8B) = 27 cycles.
+            tx_fixed_cycles: 7,
+            tx_word_cycles: 2,
+            task_dispatch_cycles: 10,
+        }
+    }
+}
+
+/// Cache temperature of an operation's input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Temp {
+    /// Input already resident in L1 (typical nanoTask working set).
+    Warm,
+    /// Input must stream in from DRAM (the paper clears caches in Figs 2/8).
+    Cold,
+}
+
+impl CoreModel {
+    /// Cycles to comparison-sort `n` 8-byte keys locally.
+    ///
+    /// In-cache cost is `sort_cycles_per_cmp · n·log2(n)`; beyond L1 the
+    /// merge passes re-stream the working set (cache model), and a cold
+    /// start pays compulsory misses — reproducing the Fig 8 knee.
+    pub fn sort_cycles(&self, n: u64, temp: Temp) -> u64 {
+        if n <= 1 {
+            return self.task_dispatch_cycles;
+        }
+        let logn = (64 - (n - 1).leading_zeros()) as u64; // ceil(log2 n)
+        let cmp = (self.sort_cycles_per_cmp * (n * logn) as f64).ceil() as u64;
+        let bytes = n * 8;
+        let mut extra = 0;
+        if temp == Temp::Cold {
+            extra += self.cache.cold_stream_cycles(bytes);
+        }
+        // Each doubling of the working set beyond L1 adds one re-streamed
+        // pass that no longer hits L1.
+        let mut ws = bytes;
+        while ws > self.cache.l1_bytes {
+            extra += self.cache.repass_cycles(ws);
+            ws /= 2;
+        }
+        cmp + extra + self.task_dispatch_cycles
+    }
+
+    /// Cycles to scan `n` 8-byte values keeping a running minimum (Fig 2).
+    pub fn scan_min_cycles(&self, n: u64, temp: Temp) -> u64 {
+        let bytes = n * 8;
+        let mut cycles = self.scan_cycles_per_word * n + self.task_dispatch_cycles;
+        if temp == Temp::Cold || bytes > self.cache.l1_bytes {
+            cycles += self.cache.cold_stream_cycles(bytes);
+        }
+        cycles
+    }
+
+    /// Cycles to merge `k` already-received values into a running min
+    /// (MergeMin's per-level reduce: registers + L1 only).
+    pub fn merge_cycles(&self, k: u64) -> u64 {
+        self.scan_cycles_per_word * k + self.task_dispatch_cycles
+    }
+
+    /// Cycles to compute bucket ids of `n` keys against `p` pivots
+    /// (branch-free compare-sum, matching the L1 bucketize kernel).
+    pub fn bucketize_cycles(&self, n: u64, p: u64) -> u64 {
+        // One compare+add per (key, pivot) pair, 1 cycle each when
+        // L1-resident, plus loop overhead.
+        n * p + 2 * n + self.task_dispatch_cycles
+    }
+
+    /// Cycles for the element-wise median of `m` pivot vectors of length
+    /// `p` (median-tree aggregation step).
+    pub fn median_combine_cycles(&self, m: u64, p: u64) -> u64 {
+        // Insertion into a tiny sorted buffer per column: ~m^2/4 + m per
+        // column; all register/L1 resident.
+        p * (m * m / 4 + m) + self.task_dispatch_cycles
+    }
+
+    /// Cycles to receive one message with `payload_bytes` of payload
+    /// through the two-register interface.
+    pub fn rx_cycles(&self, payload_bytes: u64) -> u64 {
+        self.rx_fixed_cycles + self.rx_word_cycles * payload_bytes.div_ceil(8)
+    }
+
+    /// Cycles to send one message with `payload_bytes` of payload.
+    pub fn tx_cycles(&self, payload_bytes: u64) -> u64 {
+        self.tx_fixed_cycles + self.tx_word_cycles * payload_bytes.div_ceil(8)
+    }
+
+    /// Convenience: `Time` versions.
+    pub fn rx_time(&self, payload_bytes: u64) -> Time {
+        Time::from_cycles(self.rx_cycles(payload_bytes))
+    }
+    pub fn tx_time(&self, payload_bytes: u64) -> Time {
+        Time::from_cycles(self.tx_cycles(payload_bytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn us(cycles: u64) -> f64 {
+        cycles as f64 / 3200.0 // cycles @3.2GHz -> µs
+    }
+
+    /// Fig 8 anchor: sorting 1,024 keys cold takes over 30 µs.
+    #[test]
+    fn anchor_fig8_sort_1k_cold() {
+        let m = CoreModel::default();
+        let t = us(m.sort_cycles(1024, Temp::Cold));
+        assert!((28.0..36.0).contains(&t), "sort(1024) cold = {t} µs");
+    }
+
+    /// Fig 1 anchor: sorting 40 keys (warm) completes within 1 µs.
+    #[test]
+    fn anchor_fig1_sort_40_warm() {
+        let m = CoreModel::default();
+        let t = us(m.sort_cycles(40, Temp::Warm));
+        assert!(t < 1.0, "sort(40) warm = {t} µs");
+        // ... and 64 keys is still ~1 µs (paper §6.2.1: "at most 64 keys").
+        assert!(us(m.sort_cycles(64, Temp::Warm)) < 1.3);
+    }
+
+    /// Fig 2 anchor: min of 8,192 values cold ≈ 18 µs.
+    #[test]
+    fn anchor_fig2_min_8k_cold() {
+        let m = CoreModel::default();
+        let t = us(m.scan_min_cycles(8192, Temp::Cold));
+        assert!((16.0..20.0).contains(&t), "min(8192) cold = {t} µs");
+    }
+
+    /// Fig 1 anchor: scan 1K 8-byte words in L1 < 1 µs.
+    #[test]
+    fn anchor_fig1_scan_1k_warm() {
+        let m = CoreModel::default();
+        let t = us(m.scan_min_cycles(1024, Temp::Warm));
+        assert!(t < 1.0, "scan(1024) warm = {t} µs");
+    }
+
+    /// Fig 6 anchors: one 16 B message ≈ 8 ns; 64 messages ≈ 400 ns.
+    #[test]
+    fn anchor_fig6_rx() {
+        let m = CoreModel::default();
+        let one = Time::from_cycles(m.rx_cycles(16)).as_ns_f64();
+        assert!((5.0..9.0).contains(&one), "rx(16B) = {one} ns");
+        let sixty_four = Time::from_cycles(64 * m.rx_cycles(16)).as_ns_f64();
+        assert!((350.0..450.0).contains(&sixty_four), "rx 64 msgs = {sixty_four} ns");
+    }
+
+    /// Fig 1 anchor: 118 8-byte loopback nanoRequests per µs => RX+TX of an
+    /// 8 B message must fit in ~27 cycles.
+    #[test]
+    fn anchor_fig1_loopback_rate() {
+        let m = CoreModel::default();
+        let per_req = m.rx_cycles(8) + m.tx_cycles(8);
+        let reqs_per_us = 3200 / per_req;
+        assert!((90..150).contains(&reqs_per_us), "loopback rate {reqs_per_us}/µs");
+    }
+
+    #[test]
+    fn sort_cost_monotonic_in_n() {
+        let m = CoreModel::default();
+        let mut prev = 0;
+        for n in [2u64, 16, 64, 256, 1024, 4096] {
+            let c = m.sort_cycles(n, Temp::Cold);
+            assert!(c > prev, "sort_cycles not monotonic at n={n}");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn cold_dominates_warm() {
+        let m = CoreModel::default();
+        for n in [64u64, 1024, 4096] {
+            assert!(m.sort_cycles(n, Temp::Cold) > m.sort_cycles(n, Temp::Warm));
+            assert!(m.scan_min_cycles(n, Temp::Cold) >= m.scan_min_cycles(n, Temp::Warm));
+        }
+    }
+
+    #[test]
+    fn small_op_costs_positive() {
+        let m = CoreModel::default();
+        assert!(m.sort_cycles(0, Temp::Warm) > 0);
+        assert!(m.sort_cycles(1, Temp::Warm) > 0);
+        assert!(m.merge_cycles(1) > 0);
+        assert!(m.bucketize_cycles(1, 1) > 0);
+        assert!(m.median_combine_cycles(2, 1) > 0);
+    }
+}

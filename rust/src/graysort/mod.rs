@@ -1,0 +1,15 @@
+//! GraySort 1M benchmark harness (paper §5.2 "Sort benchmark").
+//!
+//! The benchmark sorts fixed-size records; the paper deviates slightly from
+//! the 100 B GraySort spec and uses 104 B records — an 8 B key plus a 96 B
+//! value — so everything is 8-byte aligned for RISC-V. We model the same:
+//! keys are distinct `u64 < u64::MAX`, values are a deterministic 96 B
+//! function of the key (so value integrity can be validated without
+//! storing 96 MB of payload). The cluster is pre-loaded before the clock
+//! starts, exactly like MilliSort's setup.
+
+mod records;
+mod validate;
+
+pub use records::{value_of_key, KeyGen, Record, KEY_BYTES, RECORD_BYTES, VALUE_BYTES};
+pub use validate::{bucket_skew, validate_sorted_output, Throughput, ValidationReport};

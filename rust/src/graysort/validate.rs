@@ -1,0 +1,190 @@
+//! Output validation for the distributed sorts: global sortedness,
+//! permutation preservation, value integrity, bucket skew (Fig 13), and
+//! throughput accounting (Table 2).
+
+use crate::sim::Time;
+
+use super::records::{value_of_key, RECORD_BYTES};
+
+/// Result of validating a distributed sort's output.
+#[derive(Debug, Clone)]
+pub struct ValidationReport {
+    pub total_keys: usize,
+    pub globally_sorted: bool,
+    pub is_permutation: bool,
+    pub values_intact: bool,
+    /// Final keys per node (for skew reporting).
+    pub node_counts: Vec<usize>,
+}
+
+impl ValidationReport {
+    pub fn ok(&self) -> bool {
+        self.globally_sorted && self.is_permutation && self.values_intact
+    }
+}
+
+/// Validate the output of a distributed sort.
+///
+/// `outputs[node]` is the final (locally sorted) key list at each node, in
+/// node order; concatenated they must equal the sorted `input` multiset.
+/// `values[node]` (same shape) carries the first value word that traveled
+/// with each key, or `None` if the run did not shuffle values.
+pub fn validate_sorted_output(
+    input: &[u64],
+    outputs: &[Vec<u64>],
+    values: Option<&[Vec<u64>]>,
+) -> ValidationReport {
+    let node_counts: Vec<usize> = outputs.iter().map(|o| o.len()).collect();
+    let flat: Vec<u64> = outputs.iter().flatten().copied().collect();
+
+    let globally_sorted = flat.windows(2).all(|w| w[0] <= w[1]);
+
+    let mut want = input.to_vec();
+    want.sort_unstable();
+    let is_permutation = flat.len() == want.len() && {
+        let mut got = flat.clone();
+        got.sort_unstable();
+        got == want
+    };
+
+    let values_intact = match values {
+        None => true,
+        Some(vals) => outputs.iter().zip(vals).all(|(keys, vs)| {
+            keys.len() == vs.len()
+                && keys.iter().zip(vs).all(|(&k, &v)| value_of_key(k) == v)
+        }),
+    };
+
+    ValidationReport {
+        total_keys: flat.len(),
+        globally_sorted,
+        is_permutation,
+        values_intact,
+        node_counts,
+    }
+}
+
+/// Max/mean skew of final bucket sizes (Fig 13's metric: how unbalanced
+/// the final partitions are; 1.0 = perfectly balanced).
+pub fn bucket_skew(node_counts: &[usize]) -> f64 {
+    let non_empty: Vec<usize> = node_counts.to_vec();
+    if non_empty.is_empty() {
+        return 1.0;
+    }
+    let max = *non_empty.iter().max().unwrap() as f64;
+    let mean = non_empty.iter().sum::<usize>() as f64 / non_empty.len() as f64;
+    if mean == 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
+/// Table 2 throughput accounting.
+#[derive(Debug, Clone)]
+pub struct Throughput {
+    pub records: usize,
+    pub cores: usize,
+    pub runtime: Time,
+}
+
+impl Throughput {
+    /// Records per millisecond per core (Table 2's metric).
+    pub fn records_per_ms_per_core(&self) -> f64 {
+        let ms = self.runtime.as_ns_f64() / 1e6;
+        if ms == 0.0 {
+            return 0.0;
+        }
+        self.records as f64 / ms / self.cores as f64
+    }
+
+    /// Aggregate sort bandwidth in GB/s (records × 104 B / runtime).
+    pub fn gb_per_s(&self) -> f64 {
+        let s = self.runtime.as_ns_f64() / 1e9;
+        if s == 0.0 {
+            return 0.0;
+        }
+        (self.records as u64 * RECORD_BYTES) as f64 / 1e9 / s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepts_valid_output() {
+        let input = vec![5u64, 3, 9, 1, 7, 2];
+        let outputs = vec![vec![1u64, 2], vec![3, 5], vec![7, 9]];
+        let values: Vec<Vec<u64>> = outputs
+            .iter()
+            .map(|ks| ks.iter().map(|&k| value_of_key(k)).collect())
+            .collect();
+        let r = validate_sorted_output(&input, &outputs, Some(&values));
+        assert!(r.ok(), "{r:?}");
+        assert_eq!(r.total_keys, 6);
+        assert_eq!(r.node_counts, vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn rejects_unsorted() {
+        let input = vec![1u64, 2, 3];
+        let outputs = vec![vec![2u64], vec![1], vec![3]];
+        let r = validate_sorted_output(&input, &outputs, None);
+        assert!(!r.globally_sorted);
+        assert!(r.is_permutation);
+        assert!(!r.ok());
+    }
+
+    #[test]
+    fn rejects_lost_keys() {
+        let input = vec![1u64, 2, 3];
+        let outputs = vec![vec![1u64], vec![2]];
+        let r = validate_sorted_output(&input, &outputs, None);
+        assert!(!r.is_permutation);
+    }
+
+    #[test]
+    fn rejects_duplicated_keys() {
+        let input = vec![1u64, 2, 3];
+        let outputs = vec![vec![1u64, 2], vec![2, 3]];
+        let r = validate_sorted_output(&input, &outputs, None);
+        assert!(!r.is_permutation);
+    }
+
+    #[test]
+    fn rejects_corrupt_values() {
+        let input = vec![1u64, 2];
+        let outputs = vec![vec![1u64, 2]];
+        let values = vec![vec![value_of_key(1), value_of_key(2) ^ 1]];
+        let r = validate_sorted_output(&input, &outputs, Some(&values));
+        assert!(!r.values_intact);
+    }
+
+    #[test]
+    fn empty_nodes_allowed() {
+        let input = vec![4u64, 8];
+        let outputs = vec![vec![], vec![4u64, 8], vec![]];
+        let r = validate_sorted_output(&input, &outputs, None);
+        assert!(r.ok());
+    }
+
+    #[test]
+    fn skew_metric() {
+        assert!((bucket_skew(&[10, 10, 10, 10]) - 1.0).abs() < 1e-12);
+        assert!((bucket_skew(&[20, 10, 10, 0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_table2_shape() {
+        // Paper: NanoSort 1M records, 65,536 cores, 68 µs => 224 rec/ms/core.
+        let t = Throughput {
+            records: 1_000_000,
+            cores: 65_536,
+            runtime: Time::from_ns(68_000),
+        };
+        let tput = t.records_per_ms_per_core();
+        assert!((200.0..260.0).contains(&tput), "tput = {tput}");
+        assert!(t.gb_per_s() > 1000.0); // ~1.5 TB/s aggregate
+    }
+}

@@ -1,0 +1,37 @@
+//! # NanoSort — extreme-granularity distributed sorting (paper reproduction)
+//!
+//! Reproduction of *"From Sand to Flour: The Next Leap in Granular Computing
+//! with NanoSort"* (Jepsen, Ibanez, Valiant, McKeown; 2022).
+//!
+//! The paper sorts 1M keys in 68 µs on 65,536 cycle-simulated nanoPU cores.
+//! This crate rebuilds the full stack the paper depends on:
+//!
+//! - [`sim`] — deterministic discrete-event engine (virtual ns clock).
+//! - [`cpu`] — cycle-calibrated RISC-V Rocket cost model + cache hierarchy.
+//! - [`net`] — two-layer full-bisection fabric, reliable multicast, tail
+//!   latency injection (the paper's §5.1/§5.3 network).
+//! - [`nanopu`] — the nanoPU programming model: register-interface messages,
+//!   software reorder buffer, fire-and-forget sends (§5.2).
+//! - [`compute`] — node-local data plane: [`compute::NativeCompute`] (pure
+//!   Rust oracle) and [`compute::XlaCompute`] (the three-layer path: Pallas →
+//!   JAX → HLO text → PJRT, loaded by [`runtime::XlaEngine`]).
+//! - [`algo`] — NanoSort (the paper's contribution), MilliSort (the
+//!   baseline), MergeMin (the §3.1 design-space probe).
+//! - [`graysort`] — GraySort 1M benchmark harness + output validation.
+//! - [`coordinator`] — config, drivers, and figure-style reports.
+//! - [`benchfig`] — regenerates every table and figure in the paper's
+//!   evaluation (see DESIGN.md §4 for the index).
+//!
+//! Quickstart: `cargo run --release --example quickstart`.
+
+pub mod algo;
+pub mod benchfig;
+pub mod compute;
+pub mod coordinator;
+pub mod cpu;
+pub mod graysort;
+pub mod nanopu;
+pub mod net;
+pub mod runtime;
+pub mod sim;
+pub mod stats;

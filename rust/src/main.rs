@@ -1,0 +1,221 @@
+//! `repro` — the NanoSort reproduction CLI.
+//!
+//! ```text
+//! repro fig <id|all> [--xla] [--seed N] [--runs N] [--quick] [--csv]
+//! repro run nanosort  [--nodes N] [--kpn K] [--buckets B] [--incast F]
+//!                     [--values] [--no-multicast] [--xla] [--seed N]
+//! repro run millisort [--cores N] [--keys K] [--rf R] [--xla] [--seed N]
+//! repro run mergemin  [--cores N] [--vpc V] [--incast K] [--xla] [--seed N]
+//! repro artifacts     # list loaded XLA artifacts
+//! repro list          # list figure ids
+//! ```
+
+
+use anyhow::{bail, Result};
+
+use nanosort::algo::mergemin::{run_mergemin, MergeMinConfig};
+use nanosort::algo::millisort::{run_millisort, MilliSortConfig};
+use nanosort::algo::nanosort::{run_nanosort, NanoSortConfig, PivotMode};
+use nanosort::algo::setalgebra::{run_setalgebra, SetAlgebraConfig};
+use nanosort::benchfig::{run_figure, ALL_FIGURES};
+use nanosort::coordinator::{f, Args};
+use nanosort::runtime::XlaEngine;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let mut args = Args::from_env();
+    match args.positional().as_deref() {
+        Some("fig") => cmd_fig(args),
+        Some("run") => cmd_run(args),
+        Some("artifacts") => cmd_artifacts(),
+        Some("list") => {
+            println!("figure ids: {}", ALL_FIGURES.join(", "));
+            Ok(())
+        }
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown command {cmd:?}\n");
+            }
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "repro — NanoSort reproduction CLI
+  repro fig <id|all> [--xla] [--seed N] [--runs N] [--quick] [--csv]
+  repro run nanosort  [--nodes N] [--kpn K] [--buckets B] [--incast F] [--values] [--no-multicast] [--xla]
+  repro run millisort [--cores N] [--keys K] [--rf R] [--xla]
+  repro run mergemin  [--cores N] [--vpc V] [--incast K] [--xla]
+  repro artifacts | repro list";
+
+fn cmd_fig(mut args: Args) -> Result<()> {
+    let id = args.positional().unwrap_or_else(|| "all".into());
+    let csv = args.flag("csv");
+    let opts = args.run_options();
+    ensure_consumed(&args)?;
+    let ids: Vec<&str> = if id == "all" {
+        ALL_FIGURES.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    for id in ids {
+        let start = std::time::Instant::now();
+        let tables = run_figure(id, &opts)?;
+        for t in &tables {
+            if csv {
+                println!("# {}\n{}", t.title, t.to_csv());
+            } else {
+                println!("{}", t.render());
+            }
+        }
+        eprintln!("[fig {id}: {:.2?}]", start.elapsed());
+    }
+    Ok(())
+}
+
+fn cmd_run(mut args: Args) -> Result<()> {
+    let which = args.positional().unwrap_or_default();
+    match which.as_str() {
+        "nanosort" => {
+            let nodes = args.num("nodes").unwrap_or(4096);
+            let kpn = args.num("kpn").unwrap_or(16);
+            let buckets = args.num("buckets").unwrap_or(16);
+            let incast = args.num("incast").unwrap_or(buckets);
+            let values = args.flag("values");
+            let no_mcast = args.flag("no-multicast");
+            let naive = args.flag("naive-pivots");
+            let opts = args.run_options();
+            ensure_consumed(&args)?;
+            let mut cfg = NanoSortConfig {
+                nodes,
+                keys_per_node: kpn,
+                buckets,
+                median_incast: incast,
+                shuffle_values: values,
+                pivot_mode: if naive { PivotMode::Naive } else { PivotMode::Paper },
+                seed: opts.seed,
+                ..Default::default()
+            };
+            cfg.net.multicast = !no_mcast;
+            let r = run_nanosort(&cfg, opts.compute.build()?);
+            println!(
+                "nanosort: nodes={nodes} keys={} buckets={buckets} incast={incast}",
+                cfg.total_keys()
+            );
+            println!(
+                "runtime = {:.2} µs | valid = {} | skew = {:.2} | msgs = {} | util = {:.1}%",
+                r.runtime().as_us_f64(),
+                r.validation.ok(),
+                r.skew,
+                r.summary.net.msgs_sent,
+                100.0 * r.summary.mean_utilization()
+            );
+            for l in &r.levels {
+                println!(
+                    "  stage {}: busy mean {} µs max {} µs | idle mean {} µs max {} µs",
+                    l.stage,
+                    f(l.mean_busy_us),
+                    f(l.max_busy_us),
+                    f(l.mean_idle_us),
+                    f(l.max_idle_us)
+                );
+            }
+            Ok(())
+        }
+        "millisort" => {
+            let cores = args.num("cores").unwrap_or(64);
+            let keys = args.num("keys").unwrap_or(4096);
+            let rf = args.num("rf").unwrap_or(4);
+            let opts = args.run_options();
+            ensure_consumed(&args)?;
+            let cfg = MilliSortConfig {
+                cores,
+                total_keys: keys,
+                reduction_factor: rf,
+                seed: opts.seed,
+                ..Default::default()
+            };
+            let r = run_millisort(&cfg, opts.compute.build()?);
+            println!(
+                "millisort: cores={cores} keys={keys} rf={rf}\nruntime = {:.2} µs | valid = {} | msgs = {}",
+                r.runtime().as_us_f64(),
+                r.validation.ok(),
+                r.summary.net.msgs_sent
+            );
+            Ok(())
+        }
+        "mergemin" => {
+            let cores = args.num("cores").unwrap_or(64);
+            let vpc = args.num("vpc").unwrap_or(128);
+            let incast = args.num("incast").unwrap_or(8);
+            let opts = args.run_options();
+            ensure_consumed(&args)?;
+            let cfg = MergeMinConfig {
+                cores,
+                values_per_core: vpc,
+                incast,
+                seed: opts.seed,
+                ..Default::default()
+            };
+            let r = run_mergemin(&cfg, opts.compute.build()?);
+            println!(
+                "mergemin: cores={cores} vpc={vpc} incast={incast}\nruntime = {:.0} ns | correct = {}",
+                r.summary.makespan.as_ns_f64(),
+                r.correct()
+            );
+            Ok(())
+        }
+        "setalgebra" => {
+            let cores = args.num("cores").unwrap_or(64);
+            let lists = args.num("lists").unwrap_or(4);
+            let incast = args.num("incast").unwrap_or(8);
+            let opts = args.run_options();
+            ensure_consumed(&args)?;
+            let cfg = SetAlgebraConfig {
+                cores,
+                lists,
+                incast,
+                seed: opts.seed,
+                ..Default::default()
+            };
+            let r = run_setalgebra(&cfg, opts.compute.build()?);
+            println!(
+                "setalgebra: cores={cores} lists={lists} incast={incast}\nruntime = {:.0} ns | |intersection| = {} | correct = {}",
+                r.summary.makespan.as_ns_f64(),
+                r.found,
+                r.correct()
+            );
+            Ok(())
+        }
+        other => bail!("unknown run target {other:?} (nanosort|millisort|mergemin|setalgebra)"),
+    }
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let engine = XlaEngine::open_default()?;
+    println!("platform: {}", engine.platform_name());
+    for spec in &engine.manifest().artifacts {
+        let ins: Vec<String> =
+            spec.inputs.iter().map(|t| format!("{}{:?}", t.dtype, t.shape)).collect();
+        let outs: Vec<String> =
+            spec.outputs.iter().map(|t| format!("{}{:?}", t.dtype, t.shape)).collect();
+        println!("  {:<32} {} -> {}", spec.name, ins.join(", "), outs.join(", "));
+    }
+    println!("{} artifacts", engine.manifest().artifacts.len());
+    Ok(())
+}
+
+fn ensure_consumed(args: &Args) -> Result<()> {
+    if !args.rest().is_empty() {
+        bail!("unrecognized arguments: {:?}", args.rest());
+    }
+    Ok(())
+}
+

@@ -1,0 +1,154 @@
+//! The nanoPU programming model (paper §2.1, §5.2).
+//!
+//! Node programs are event-driven state machines over the register-file
+//! message interface: [`Program::on_start`] fires once at t=0,
+//! [`Program::on_message`] per delivered message. All sends are
+//! fire-and-forget (§3.2 "asynchronous communication"); synchronization is
+//! built into the algorithms.
+//!
+//! Because cores do not progress in lockstep, a core may receive messages
+//! for a *future* algorithm step; the engine implements the paper's §5.2
+//! software **reorder buffer**: messages whose [`WireMsg::step`] exceeds
+//! the program's [`Program::step`] are buffered (paying RX + a store) and
+//! re-delivered when the program reaches that step.
+
+#[cfg(test)]
+mod tests;
+
+use crate::cpu::CoreModel;
+use crate::sim::{SplitMix64, Time};
+
+/// Node identifier (dense, `0..nodes`).
+pub type NodeId = usize;
+
+/// Multicast group identifier (registered with the engine before a run).
+pub type GroupId = usize;
+
+/// Wire-level view of an algorithm message.
+pub trait WireMsg: Clone {
+    /// Payload bytes on the wire (headers are added by the fabric).
+    fn wire_bytes(&self) -> u64;
+    /// Algorithm step this message belongs to (reorder-buffer key).
+    /// Messages are delivered to the program only when its current step
+    /// is >= this value.
+    fn step(&self) -> u32 {
+        0
+    }
+}
+
+/// A node program (one per simulated core).
+pub trait Program {
+    type Msg: WireMsg;
+
+    /// Invoked once at simulation start.
+    fn on_start(&mut self, ctx: &mut Ctx<Self::Msg>);
+
+    /// Invoked per delivered message (after reorder-buffer gating).
+    fn on_message(&mut self, ctx: &mut Ctx<Self::Msg>, src: NodeId, msg: Self::Msg);
+
+    /// The step the program is currently willing to accept (see
+    /// [`WireMsg::step`]).
+    fn step(&self) -> u32 {
+        0
+    }
+}
+
+/// One queued outbound operation recorded by a handler.
+pub(crate) enum SendOp<M> {
+    Unicast { dst: NodeId, msg: M },
+    Multicast { group: GroupId, msg: M },
+}
+
+/// Handler-side API: accumulates compute cycles and outbound messages;
+/// the engine turns them into timed events when the handler returns.
+///
+/// Timing semantics: within one handler invocation, compute and sends are
+/// sequential in call order — a `send` departs after all cycles charged
+/// *before* it (plus its own TX cost), exactly like straight-line code on
+/// the real core.
+pub struct Ctx<'a, M> {
+    pub(crate) node: NodeId,
+    pub(crate) core: &'a CoreModel,
+    pub(crate) rng: &'a mut SplitMix64,
+    /// Local time at handler entry (after queueing + RX charge).
+    pub(crate) entry: Time,
+    /// Cycles accumulated so far in this handler.
+    pub(crate) cycles: u64,
+    pub(crate) ops: Vec<(u64, SendOp<M>)>, // (cycles-offset at send, op)
+    pub(crate) stage: &'a mut u8,
+    pub(crate) finished: &'a mut bool,
+    pub(crate) mcast_supported: bool,
+}
+
+impl<'a, M: WireMsg> Ctx<'a, M> {
+    /// This node's id.
+    pub fn node(&self) -> NodeId {
+        self.node
+    }
+
+    /// Local time at handler entry.
+    pub fn now(&self) -> Time {
+        self.entry
+    }
+
+    /// The core cost model (for algorithms to price their own compute).
+    pub fn core(&self) -> &CoreModel {
+        self.core
+    }
+
+    /// Deterministic per-node RNG stream.
+    pub fn rng(&mut self) -> &mut SplitMix64 {
+        self.rng
+    }
+
+    /// Charge `cycles` of local compute.
+    pub fn compute(&mut self, cycles: u64) {
+        self.cycles += cycles;
+    }
+
+    /// Fire-and-forget unicast. TX cost is charged here; delivery time is
+    /// decided by the fabric.
+    pub fn send(&mut self, dst: NodeId, msg: M) {
+        self.cycles += self.core.tx_cycles(msg.wire_bytes());
+        self.ops.push((self.cycles, SendOp::Unicast { dst, msg }));
+    }
+
+    /// True if the fabric supports switch-replicated multicast (§5.3).
+    pub fn multicast_supported(&self) -> bool {
+        self.mcast_supported
+    }
+
+    /// Multicast to a registered group. Panics if unsupported — use
+    /// [`Ctx::broadcast`] to degrade gracefully.
+    pub fn multicast(&mut self, group: GroupId, msg: M) {
+        assert!(self.mcast_supported, "multicast not supported by fabric");
+        self.cycles += self.core.tx_cycles(msg.wire_bytes());
+        self.ops.push((self.cycles, SendOp::Multicast { group, msg }));
+    }
+
+    /// Send to every node in `members` (excluding self): one multicast if
+    /// the fabric supports it, otherwise a unicast loop — the exact
+    /// degradation measured by the paper's §6.2.3 multicast experiment.
+    pub fn broadcast(&mut self, group: GroupId, members: &[NodeId], msg: M) {
+        if self.mcast_supported {
+            self.multicast(group, msg);
+        } else {
+            for &dst in members {
+                if dst != self.node {
+                    self.send(dst, msg.clone());
+                }
+            }
+        }
+    }
+
+    /// Tag subsequent busy/idle time with an execution stage (Fig 16).
+    pub fn set_stage(&mut self, stage: u8) {
+        *self.stage = stage;
+    }
+
+    /// Mark this node's work complete (stats only; the run ends at global
+    /// quiescence).
+    pub fn finish(&mut self) {
+        *self.finished = true;
+    }
+}

@@ -1,0 +1,105 @@
+//! Unit tests for the nanoPU handler API (Ctx semantics).
+
+use super::*;
+use crate::sim::Time;
+
+#[derive(Clone)]
+struct M(u64);
+impl WireMsg for M {
+    fn wire_bytes(&self) -> u64 {
+        self.0
+    }
+}
+
+fn make_ctx<'a>(
+    core: &'a CoreModel,
+    rng: &'a mut SplitMix64,
+    stage: &'a mut u8,
+    finished: &'a mut bool,
+    mcast: bool,
+) -> Ctx<'a, M> {
+    Ctx {
+        node: 3,
+        core,
+        rng,
+        entry: Time::from_ns(100),
+        cycles: 0,
+        ops: Vec::new(),
+        stage,
+        finished,
+        mcast_supported: mcast,
+    }
+}
+
+#[test]
+fn send_charges_tx_and_orders_ops() {
+    let core = CoreModel::default();
+    let mut rng = SplitMix64::new(1);
+    let (mut stage, mut fin) = (0u8, false);
+    let mut ctx = make_ctx(&core, &mut rng, &mut stage, &mut fin, true);
+    ctx.compute(100);
+    ctx.send(1, M(16));
+    let after_first = ctx.cycles;
+    assert_eq!(after_first, 100 + core.tx_cycles(16));
+    ctx.send(2, M(16));
+    assert_eq!(ctx.cycles, after_first + core.tx_cycles(16));
+    // Ops carry their issue offsets in order.
+    assert_eq!(ctx.ops.len(), 2);
+    assert!(ctx.ops[0].0 < ctx.ops[1].0);
+}
+
+#[test]
+fn broadcast_degrades_to_unicast_without_mcast() {
+    let core = CoreModel::default();
+    let mut rng = SplitMix64::new(1);
+    let (mut stage, mut fin) = (0u8, false);
+    let mut ctx = make_ctx(&core, &mut rng, &mut stage, &mut fin, false);
+    assert!(!ctx.multicast_supported());
+    ctx.broadcast(0, &[1, 2, 3, 4], M(8));
+    // Excludes self (node 3): 3 unicasts.
+    assert_eq!(ctx.ops.len(), 3);
+    let tx3 = 3 * core.tx_cycles(8);
+    assert_eq!(ctx.cycles, tx3);
+}
+
+#[test]
+fn broadcast_uses_single_multicast_when_supported() {
+    let core = CoreModel::default();
+    let mut rng = SplitMix64::new(1);
+    let (mut stage, mut fin) = (0u8, false);
+    let mut ctx = make_ctx(&core, &mut rng, &mut stage, &mut fin, true);
+    ctx.broadcast(0, &[1, 2, 3, 4], M(8));
+    assert_eq!(ctx.ops.len(), 1);
+    assert_eq!(ctx.cycles, core.tx_cycles(8));
+}
+
+#[test]
+#[should_panic(expected = "multicast not supported")]
+fn multicast_panics_without_fabric_support() {
+    let core = CoreModel::default();
+    let mut rng = SplitMix64::new(1);
+    let (mut stage, mut fin) = (0u8, false);
+    let mut ctx = make_ctx(&core, &mut rng, &mut stage, &mut fin, false);
+    ctx.multicast(0, M(8));
+}
+
+#[test]
+fn stage_and_finish_propagate() {
+    let core = CoreModel::default();
+    let mut rng = SplitMix64::new(1);
+    let (mut stage, mut fin) = (0u8, false);
+    {
+        let mut ctx = make_ctx(&core, &mut rng, &mut stage, &mut fin, true);
+        ctx.set_stage(5);
+        ctx.finish();
+        assert_eq!(ctx.now(), Time::from_ns(100));
+        assert_eq!(ctx.node(), 3);
+    }
+    assert_eq!(stage, 5);
+    assert!(fin);
+}
+
+#[test]
+fn default_wire_msg_step_is_zero() {
+    assert_eq!(M(8).step(), 0);
+}

@@ -1,0 +1,9 @@
+//! Network substrate: the paper's §5.1 two-layer full-bisection fabric
+//! ([`Topology`]), per-message latency/contention/multicast model
+//! ([`Fabric`], [`NetConfig`]), and traffic accounting ([`NetStats`]).
+
+mod fabric;
+mod topology;
+
+pub use fabric::{Fabric, NetConfig, NetStats};
+pub use topology::{PathHops, Topology};

@@ -1,0 +1,97 @@
+//! Two-layer full-bisection topology (paper §5.1): each leaf switch has 64
+//! downlinks to nanoPU NICs and 64 uplinks to core (spine) switches.
+//!
+//! With full bisection the fabric core is non-blocking, so the latency of a
+//! path is fully determined by its hop count; contention is modeled at the
+//! endpoint links (see `fabric.rs`).
+
+/// Static description of the leaf/spine fabric.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// Total number of nanoPU cores (one NIC per core).
+    pub nodes: usize,
+    /// Downlinks per leaf switch (64 in the paper).
+    pub leaf_radix: usize,
+}
+
+/// Number of links and switches a message traverses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PathHops {
+    pub links: u64,
+    pub switches: u64,
+}
+
+impl Topology {
+    pub fn new(nodes: usize, leaf_radix: usize) -> Self {
+        assert!(nodes > 0 && leaf_radix > 0);
+        Topology { nodes, leaf_radix }
+    }
+
+    /// Paper default: 64-port leaves.
+    pub fn paper(nodes: usize) -> Self {
+        Self::new(nodes, 64)
+    }
+
+    /// Leaf switch that `node` hangs off.
+    pub fn leaf_of(&self, node: usize) -> usize {
+        node / self.leaf_radix
+    }
+
+    /// Number of leaf switches.
+    pub fn num_leaves(&self) -> usize {
+        self.nodes.div_ceil(self.leaf_radix)
+    }
+
+    /// Hop count between two NICs.
+    ///
+    /// - loopback: NIC-internal, no fabric hops;
+    /// - same leaf: NIC → leaf → NIC (2 links, 1 switch);
+    /// - cross leaf: NIC → leaf → spine → leaf → NIC (4 links, 3 switches).
+    pub fn hops(&self, src: usize, dst: usize) -> PathHops {
+        if src == dst {
+            PathHops { links: 0, switches: 0 }
+        } else if self.leaf_of(src) == self.leaf_of(dst) {
+            PathHops { links: 2, switches: 1 }
+        } else {
+            PathHops { links: 4, switches: 3 }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leaf_assignment() {
+        let t = Topology::paper(256);
+        assert_eq!(t.leaf_of(0), 0);
+        assert_eq!(t.leaf_of(63), 0);
+        assert_eq!(t.leaf_of(64), 1);
+        assert_eq!(t.num_leaves(), 4);
+    }
+
+    #[test]
+    fn ragged_last_leaf() {
+        let t = Topology::paper(100);
+        assert_eq!(t.num_leaves(), 2);
+        assert_eq!(t.leaf_of(99), 1);
+    }
+
+    #[test]
+    fn hop_counts() {
+        let t = Topology::paper(65_536);
+        assert_eq!(t.hops(5, 5), PathHops { links: 0, switches: 0 });
+        assert_eq!(t.hops(0, 63), PathHops { links: 2, switches: 1 });
+        assert_eq!(t.hops(0, 64), PathHops { links: 4, switches: 3 });
+        assert_eq!(t.hops(1000, 60_000), PathHops { links: 4, switches: 3 });
+    }
+
+    #[test]
+    fn hops_symmetric() {
+        let t = Topology::paper(4096);
+        for &(a, b) in &[(0usize, 1usize), (3, 700), (64, 127), (4000, 200)] {
+            assert_eq!(t.hops(a, b), t.hops(b, a));
+        }
+    }
+}

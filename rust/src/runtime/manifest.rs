@@ -1,0 +1,157 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust request path. `aot.py` writes `artifacts/manifest.tsv` (plus a
+//! human-readable `manifest.json` twin) describing every lowered entry
+//! point (name, shapes, dtypes, file); we parse the TSV here so executable
+//! lookup never guesses shapes. TSV instead of JSON because the offline
+//! build has no JSON dependency — the format is five tab-separated fields:
+//! `name  entry  file  inputs  outputs`, with tensor lists encoded as
+//! `dtype:dim,dim;dtype:dim`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One tensor's dtype + shape as recorded by the AOT compiler.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        let (dtype, dims) = s
+            .split_once(':')
+            .with_context(|| format!("tensor spec {s:?} missing ':'"))?;
+        let shape = if dims.is_empty() {
+            Vec::new()
+        } else {
+            dims.split(',')
+                .map(|d| d.parse::<usize>().with_context(|| format!("bad dim {d:?}")))
+                .collect::<Result<_>>()?
+        };
+        Ok(TensorSpec { dtype: dtype.to_string(), shape })
+    }
+}
+
+fn parse_tensor_list(s: &str) -> Result<Vec<TensorSpec>> {
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(';').map(TensorSpec::parse).collect()
+}
+
+/// One AOT-compiled entry point (one `.hlo.txt` file).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Unique artifact name, e.g. `sort_block_b1_n64`.
+    pub name: String,
+    /// The L2 entry point it was lowered from, e.g. `sort_block`.
+    pub entry: String,
+    /// File name relative to the artifacts directory.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed `manifest.tsv`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `manifest.tsv` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let mut lines = text.lines();
+        let header = lines.next().context("empty manifest")?;
+        if !header.contains("format=hlo-text") || !header.contains("key_dtype=u64") {
+            bail!("unsupported manifest header {header:?}");
+        }
+        let mut artifacts = Vec::new();
+        for (i, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            if fields.len() != 5 {
+                bail!("manifest line {} has {} fields, want 5", i + 2, fields.len());
+            }
+            artifacts.push(ArtifactSpec {
+                name: fields[0].to_string(),
+                entry: fields[1].to_string(),
+                file: fields[2].to_string(),
+                inputs: parse_tensor_list(fields[3])
+                    .with_context(|| format!("inputs of {}", fields[0]))?,
+                outputs: parse_tensor_list(fields[4])
+                    .with_context(|| format!("outputs of {}", fields[0]))?,
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Index artifacts by name.
+    pub fn by_name(&self) -> HashMap<&str, &ArtifactSpec> {
+        self.artifacts.iter().map(|a| (a.name.as_str(), a)).collect()
+    }
+
+    /// Resolve the on-disk path of an artifact.
+    pub fn path_of(&self, dir: &Path, spec: &ArtifactSpec) -> PathBuf {
+        dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_real_manifest() {
+        let dir = crate::runtime::default_artifacts_dir();
+        if !dir.join("manifest.tsv").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.artifacts.is_empty());
+        let idx = m.by_name();
+        let sort = idx.get("sort_block_b1_n64").expect("sort_block_b1_n64 present");
+        assert_eq!(sort.inputs[0].shape, vec![1, 64]);
+        assert_eq!(sort.outputs[0].shape, vec![1, 64]);
+        assert_eq!(sort.inputs[0].dtype, "uint64");
+        for a in &m.artifacts {
+            assert!(dir.join(&a.file).exists(), "missing artifact file {}", a.file);
+        }
+    }
+
+    #[test]
+    fn tensor_spec_parse() {
+        let t = TensorSpec::parse("uint64:4,16").unwrap();
+        assert_eq!(t.dtype, "uint64");
+        assert_eq!(t.shape, vec![4, 16]);
+        assert_eq!(t.elements(), 64);
+        let scalar = TensorSpec::parse("int32:").unwrap();
+        assert_eq!(scalar.shape, Vec::<usize>::new());
+        assert!(TensorSpec::parse("nocolon").is_err());
+    }
+
+    #[test]
+    fn tensor_list_parse() {
+        let l = parse_tensor_list("uint64:1,16;uint64:15").unwrap();
+        assert_eq!(l.len(), 2);
+        assert_eq!(l[1].shape, vec![15]);
+        assert!(parse_tensor_list("").unwrap().is_empty());
+    }
+}

@@ -1,0 +1,22 @@
+//! Runtime layer: load + execute AOT-compiled XLA artifacts via PJRT.
+//!
+//! `XlaEngine` (engine.rs) owns the PJRT CPU client and an executable cache;
+//! `Manifest` (manifest.rs) is the shape contract written by `aot.py`.
+//! This is the only module that touches the `xla` crate.
+
+mod engine;
+mod manifest;
+
+pub use engine::{LoadedArtifact, MixedOutput, XlaEngine};
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+
+use std::path::PathBuf;
+
+/// `$NANOSORT_ARTIFACTS` if set, else `<workspace>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("NANOSORT_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // CARGO_MANIFEST_DIR points at the workspace root (Cargo.toml lives there).
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

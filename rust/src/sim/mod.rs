@@ -1,0 +1,15 @@
+//! Deterministic discrete-event simulation engine.
+//!
+//! Replaces the paper's FireSim/Verilator cycle-exact RTL simulation
+//! (DESIGN.md §1, hardware substitution). [`engine::Engine`] drives node
+//! programs ([`crate::nanopu::Program`]) over the network fabric
+//! ([`crate::net::Fabric`]) with per-node busy/idle accounting on an exact
+//! integer time grid ([`Time`]).
+
+mod engine;
+mod rng;
+mod time;
+
+pub use engine::{Engine, NodeStats, RunSummary, MAX_STAGES};
+pub use rng::SplitMix64;
+pub use time::{Time, CLOCK_HZ, UNITS_PER_CYCLE, UNITS_PER_NS};

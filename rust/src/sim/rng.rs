@@ -1,0 +1,151 @@
+//! Deterministic RNG for the simulation (SplitMix64).
+//!
+//! Every run is a pure function of its seed: node programs draw from
+//! per-node streams derived from the run seed, so results are reproducible
+//! across machines and thread counts (the figure sweeps parallelize over
+//! *runs*, never within one).
+
+/// SplitMix64 — tiny, fast, high-quality 64-bit generator.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Derive a child stream (e.g. per node) that is independent of the
+    /// parent's future output.
+    pub fn derive(&self, stream: u64) -> SplitMix64 {
+        let mut base = SplitMix64::new(self.state ^ 0x9e37_79b9_7f4a_7c15u64.rotate_left(17));
+        let a = base.next_u64();
+        SplitMix64::new(a ^ stream.wrapping_mul(0xbf58_476d_1ce4_e5b9))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)` (Lemire's multiply-shift; bound > 0).
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform usize index in `[0, bound)`.
+    pub fn index(&mut self, bound: usize) -> usize {
+        self.next_below(bound as u64) as usize
+    }
+
+    /// True with probability `num/den`.
+    pub fn chance(&mut self, num: u64, den: u64) -> bool {
+        self.next_below(den) < num
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (k <= n), sorted.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        // Floyd's algorithm: O(k) expected, no O(n) scratch.
+        let mut chosen = std::collections::BTreeSet::new();
+        for j in (n - k)..n {
+            let t = self.index(j + 1);
+            if !chosen.insert(t) {
+                chosen.insert(j);
+            }
+        }
+        chosen.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn derive_streams_differ() {
+        let root = SplitMix64::new(7);
+        let mut s0 = root.derive(0);
+        let mut s1 = root.derive(1);
+        let a: Vec<u64> = (0..8).map(|_| s0.next_u64()).collect();
+        let b: Vec<u64> = (0..8).map(|_| s1.next_u64()).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn next_below_in_range_and_roughly_uniform() {
+        let mut r = SplitMix64::new(1);
+        let mut counts = [0usize; 10];
+        for _ in 0..10_000 {
+            let v = r.next_below(10);
+            assert!(v < 10);
+            counts[v as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((700..1300).contains(&c), "skewed bucket: {c}");
+        }
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_bounded() {
+        let mut r = SplitMix64::new(3);
+        for _ in 0..50 {
+            let s = r.sample_indices(20, 7);
+            assert_eq!(s.len(), 7);
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+            assert!(s.iter().all(|&i| i < 20));
+        }
+    }
+
+    #[test]
+    fn sample_indices_full_range() {
+        let mut r = SplitMix64::new(4);
+        let s = r.sample_indices(5, 5);
+        assert_eq!(s, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = SplitMix64::new(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chance_probability() {
+        let mut r = SplitMix64::new(11);
+        let hits = (0..40_000).filter(|_| r.chance(3, 8)).count();
+        let p = hits as f64 / 40_000.0;
+        assert!((p - 0.375).abs() < 0.02, "p={p}");
+    }
+}

@@ -1,0 +1,133 @@
+//! Virtual time for the cycle-calibrated simulation.
+//!
+//! The nanoPU target clock is 3.2 GHz (paper §5.1), i.e. one cycle is
+//! 0.3125 ns. To keep all arithmetic exact-integer we count time in units
+//! of 1/16 ns: one nanosecond is 16 units and one cycle is exactly 5.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// Units per nanosecond (1 unit = 62.5 ps).
+pub const UNITS_PER_NS: u64 = 16;
+/// Units per 3.2 GHz cycle (0.3125 ns * 16 = 5, exact).
+pub const UNITS_PER_CYCLE: u64 = 5;
+/// Target core clock, cycles per second (paper §5.1).
+pub const CLOCK_HZ: u64 = 3_200_000_000;
+
+/// A point in (or span of) virtual time. Ordered, copy, exact-integer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Time(pub u64);
+
+impl Time {
+    pub const ZERO: Time = Time(0);
+
+    /// From whole nanoseconds.
+    pub fn from_ns(ns: u64) -> Time {
+        Time(ns * UNITS_PER_NS)
+    }
+
+    /// From 3.2 GHz core cycles.
+    pub fn from_cycles(cycles: u64) -> Time {
+        Time(cycles * UNITS_PER_CYCLE)
+    }
+
+    /// Whole nanoseconds (truncating).
+    pub fn as_ns(self) -> u64 {
+        self.0 / UNITS_PER_NS
+    }
+
+    /// Fractional nanoseconds.
+    pub fn as_ns_f64(self) -> f64 {
+        self.0 as f64 / UNITS_PER_NS as f64
+    }
+
+    /// Fractional microseconds.
+    pub fn as_us_f64(self) -> f64 {
+        self.as_ns_f64() / 1000.0
+    }
+
+    /// Whole 3.2 GHz cycles (truncating).
+    pub fn as_cycles(self) -> u64 {
+        self.0 / UNITS_PER_CYCLE
+    }
+
+    pub fn max(self, other: Time) -> Time {
+        Time(self.0.max(other.0))
+    }
+
+    /// Saturating difference.
+    pub fn saturating_sub(self, other: Time) -> Time {
+        Time(self.0.saturating_sub(other.0))
+    }
+}
+
+impl Add for Time {
+    type Output = Time;
+    fn add(self, rhs: Time) -> Time {
+        Time(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Time {
+    fn add_assign(&mut self, rhs: Time) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for Time {
+    type Output = Time;
+    fn sub(self, rhs: Time) -> Time {
+        Time(self.0 - rhs.0)
+    }
+}
+
+impl fmt::Display for Time {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let ns = self.as_ns_f64();
+        if ns >= 1000.0 {
+            write!(f, "{:.3}us", ns / 1000.0)
+        } else {
+            write!(f, "{ns:.1}ns")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ns_cycle_grid_is_exact() {
+        assert_eq!(Time::from_ns(1).0, 16);
+        assert_eq!(Time::from_cycles(1).0, 5);
+        // 16 cycles == 5 ns exactly on the grid.
+        assert_eq!(Time::from_cycles(16), Time::from_ns(5));
+        assert_eq!(Time::from_cycles(3200).as_ns(), 1000);
+    }
+
+    #[test]
+    fn conversions_round_trip() {
+        let t = Time::from_ns(263);
+        assert_eq!(t.as_ns(), 263);
+        let c = Time::from_cycles(96_000); // 30us of cycles at 3.2GHz
+        assert_eq!(c.as_ns(), 30_000);
+        assert!((c.as_us_f64() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ordering_and_arith() {
+        let a = Time::from_ns(10);
+        let b = Time::from_ns(3);
+        assert!(a > b);
+        assert_eq!((a + b).as_ns(), 13);
+        assert_eq!((a - b).as_ns(), 7);
+        assert_eq!(b.saturating_sub(a), Time::ZERO);
+        assert_eq!(a.max(b), a);
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(format!("{}", Time::from_ns(43)), "43.0ns");
+        assert_eq!(format!("{}", Time::from_ns(68_000)), "68.000us");
+    }
+}

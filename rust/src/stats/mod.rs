@@ -1,0 +1,144 @@
+//! Small statistics toolkit for reports: summaries, percentiles, and
+//! fixed-width text histograms (Figs 13, 14, 16 report distributions).
+
+/// Summary statistics over a sample of f64 values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute from a sample (not required to be sorted). Panics on empty.
+    pub fn of(values: &[f64]) -> Summary {
+        assert!(!values.is_empty(), "summary of empty sample");
+        let mut v = values.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        let mean = v.iter().sum::<f64>() / n as f64;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: v[0],
+            p50: percentile_sorted(&v, 0.50),
+            p90: percentile_sorted(&v, 0.90),
+            p99: percentile_sorted(&v, 0.99),
+            max: v[n - 1],
+        }
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample, q in [0, 1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Fixed-bin histogram for terminal output.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn of(values: &[f64], bins: usize) -> Histogram {
+        assert!(bins > 0 && !values.is_empty());
+        let lo = values.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut counts = vec![0u64; bins];
+        let span = (hi - lo).max(f64::MIN_POSITIVE);
+        for &v in values {
+            let i = (((v - lo) / span) * bins as f64) as usize;
+            counts[i.min(bins - 1)] += 1;
+        }
+        Histogram { lo, hi, counts }
+    }
+
+    /// Render as rows of `low..high | ###### count`.
+    pub fn render(&self, width: usize) -> String {
+        let max = *self.counts.iter().max().unwrap_or(&1) as f64;
+        let bins = self.counts.len();
+        let step = (self.hi - self.lo) / bins as f64;
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let bar = "#".repeat(((c as f64 / max) * width as f64).round() as usize);
+            out.push_str(&format!(
+                "{:>10.2} .. {:>10.2} | {:<width$} {}\n",
+                self.lo + step * i as f64,
+                self.lo + step * (i + 1) as f64,
+                bar,
+                c,
+                width = width
+            ));
+        }
+        out
+    }
+}
+
+/// Render one aligned text table row (figure reports share this).
+pub fn table_row(cells: &[String], widths: &[usize]) -> String {
+    cells
+        .iter()
+        .zip(widths)
+        .map(|(c, w)| format!("{c:>w$}"))
+        .collect::<Vec<_>>()
+        .join("  ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn summary_std() {
+        let s = Summary::of(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.std - 2.0).abs() < 1e-12); // classic example
+    }
+
+    #[test]
+    fn percentiles_of_uniform() {
+        let v: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        assert_eq!(percentile_sorted(&v, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&v, 0.5), 50.0);
+        assert_eq!(percentile_sorted(&v, 0.99), 99.0);
+        assert_eq!(percentile_sorted(&v, 1.0), 100.0);
+    }
+
+    #[test]
+    fn histogram_counts_everything() {
+        let v = vec![0.0, 0.1, 0.5, 0.9, 1.0];
+        let h = Histogram::of(&v, 2);
+        assert_eq!(h.counts.iter().sum::<u64>(), 5);
+        // 0.5 lands exactly on the second bin's lower edge.
+        assert_eq!(h.counts, vec![2, 3]);
+        let text = h.render(10);
+        assert!(text.contains('#'));
+    }
+
+    #[test]
+    #[should_panic]
+    fn summary_empty_panics() {
+        Summary::of(&[]);
+    }
+}
