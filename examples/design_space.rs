@@ -2,22 +2,19 @@
 //!
 //! Sweeps the three coupled knobs the paper identifies — task size
 //! (keys/core), tree incast (width vs depth), and bucket count — and
-//! prints where the sweet spots fall on this substrate.
+//! prints where the sweet spots fall on this substrate. Every run goes
+//! through the unified `Scenario` API.
 //!
 //! ```sh
 //! cargo run --release --example design_space
 //! ```
 
-use std::rc::Rc;
-
-use nanosort::algo::mergemin::{run_mergemin, MergeMinConfig};
-use nanosort::algo::nanosort::{run_nanosort, NanoSortConfig};
-use nanosort::compute::NativeCompute;
+use nanosort::algo::mergemin::MergeMin;
+use nanosort::algo::nanosort::NanoSort;
 use nanosort::coordinator::Table;
+use nanosort::scenario::Scenario;
 
 fn main() -> anyhow::Result<()> {
-    let compute = Rc::new(NativeCompute);
-
     // Dial 1: MergeMin incast (Fig 4's trade-off, multiple fleet sizes).
     let mut t1 = Table::new(
         "MergeMin: incast sweet spot vs fleet size (128 values/core)",
@@ -26,15 +23,11 @@ fn main() -> anyhow::Result<()> {
     for cores in [64usize, 256, 1024] {
         let mut cells = vec![cores.to_string()];
         for incast in [2usize, 4, 8, 16, 64] {
-            let cfg = MergeMinConfig {
-                cores,
-                values_per_core: 128,
-                incast,
-                seed: 1,
-                ..Default::default()
-            };
-            let r = run_mergemin(&cfg, compute.clone());
-            assert!(r.correct());
+            let r = Scenario::new(MergeMin { values_per_core: 128, incast })
+                .nodes(cores)
+                .seed(1)
+                .run()?;
+            assert!(r.validation.ok());
             cells.push(format!("{:.0}ns", r.summary.makespan.as_ns_f64()));
         }
         t1.row(cells);
@@ -48,15 +41,10 @@ fn main() -> anyhow::Result<()> {
         &["cores", "keys_per_core", "runtime_us", "aggregate_core_us"],
     );
     for (nodes, kpn) in [(256usize, 256usize), (4096, 16), (65536, 1)] {
-        let cfg = NanoSortConfig {
-            nodes,
-            keys_per_node: kpn,
-            buckets: 16,
-            median_incast: 16,
-            seed: 5,
-            ..Default::default()
-        };
-        let r = run_nanosort(&cfg, compute.clone());
+        let r = Scenario::new(NanoSort { keys_per_node: kpn, ..Default::default() })
+            .nodes(nodes)
+            .seed(5)
+            .run()?;
         assert!(r.validation.ok());
         let us = r.runtime().as_us_f64();
         t2.row(vec![
@@ -75,15 +63,10 @@ fn main() -> anyhow::Result<()> {
         &["median_incast", "runtime_us"],
     );
     for f in [2usize, 4, 8, 16] {
-        let cfg = NanoSortConfig {
-            nodes: 4096,
-            keys_per_node: 16,
-            buckets: 16,
-            median_incast: f,
-            seed: 5,
-            ..Default::default()
-        };
-        let r = run_nanosort(&cfg, compute.clone());
+        let r = Scenario::new(NanoSort { median_incast: f, ..Default::default() })
+            .nodes(4096)
+            .seed(5)
+            .run()?;
         assert!(r.validation.ok());
         t3.row(vec![f.to_string(), format!("{:.2}", r.runtime().as_us_f64())]);
     }
@@ -95,20 +78,19 @@ fn main() -> anyhow::Result<()> {
         &["buckets", "depth", "runtime_us", "msgs_sent"],
     );
     for b in [4usize, 8, 16] {
-        let cfg = NanoSortConfig {
-            nodes: 4096,
+        let r = Scenario::new(NanoSort {
             keys_per_node: 32,
             buckets: b,
             median_incast: b,
-            seed: 5,
             ..Default::default()
-        };
-        let depth = cfg.depth();
-        let r = run_nanosort(&cfg, compute.clone());
+        })
+        .nodes(4096)
+        .seed(5)
+        .run()?;
         assert!(r.validation.ok());
         t4.row(vec![
             b.to_string(),
-            depth.to_string(),
+            r.metric_u64("depth").unwrap_or(0).to_string(),
             format!("{:.2}", r.runtime().as_us_f64()),
             r.summary.net.msgs_sent.to_string(),
         ]);

@@ -9,14 +9,18 @@
 //! 2. the full 65,536-core fleet with the native data plane (bit-identical
 //!    semantics, cross-checked in tests), 10 runs, mean/σ vs the paper.
 //!
+//! Both phases run the same `NanoSort` workload through the `Scenario`
+//! API — only the environment (fleet size, data plane, seed) changes.
+//!
 //! ```sh
 //! make artifacts && cargo run --release --example graysort_datacenter
 //! # faster: cargo run --release --example graysort_datacenter -- --quick
 //! ```
 
-use nanosort::algo::nanosort::{run_nanosort, NanoSortConfig};
+use nanosort::benchfig::{headline_workload, HEADLINE_KEYS_PER_NODE};
 use nanosort::coordinator::ComputeChoice;
 use nanosort::graysort::Throughput;
+use nanosort::scenario::Scenario;
 use nanosort::stats::Summary;
 
 fn main() -> anyhow::Result<()> {
@@ -27,22 +31,15 @@ fn main() -> anyhow::Result<()> {
     if !skip_xla {
         match ComputeChoice::Xla.build() {
             Ok(compute) => {
-                let cfg = NanoSortConfig {
-                    nodes: if quick { 256 } else { 4096 },
-                    keys_per_node: 16,
-                    buckets: 16,
-                    median_incast: 16,
-                    shuffle_values: true,
-                    seed: 7,
-                    ..Default::default()
-                };
-                println!(
-                    "[phase 1] XLA data plane: {} keys on {} cores ...",
-                    cfg.total_keys(),
-                    cfg.nodes
-                );
+                let nodes = if quick { 256 } else { 4096 };
+                let kpn = HEADLINE_KEYS_PER_NODE;
+                println!("[phase 1] XLA data plane: {} keys on {nodes} cores ...", nodes * kpn);
                 let t0 = std::time::Instant::now();
-                let r = run_nanosort(&cfg, compute);
+                let r = Scenario::new(headline_workload())
+                    .nodes(nodes)
+                    .seed(7)
+                    .compute_with(compute)
+                    .run()?;
                 println!(
                     "[phase 1] simulated {:.2} µs | valid={} | wall {:.1?}",
                     r.runtime().as_us_f64(),
@@ -61,21 +58,15 @@ fn main() -> anyhow::Result<()> {
     // Phase 2: the 65,536-core headline fleet.
     let nodes = if quick { 4096 } else { 65_536 };
     let runs = if quick { 3 } else { 10 };
-    let compute = ComputeChoice::Native.build()?;
-    println!("\n[phase 2] headline: 16 keys/core on {nodes} cores, {runs} runs");
+    let kpn = HEADLINE_KEYS_PER_NODE;
+    println!("\n[phase 2] headline: {kpn} keys/core on {nodes} cores, {runs} runs");
     let mut times = Vec::new();
     for run in 0..runs {
-        let cfg = NanoSortConfig {
-            nodes,
-            keys_per_node: 16,
-            buckets: 16,
-            median_incast: 16,
-            shuffle_values: true,
-            seed: 100 + run as u64,
-            ..Default::default()
-        };
         let t0 = std::time::Instant::now();
-        let r = run_nanosort(&cfg, compute.clone());
+        let r = Scenario::new(headline_workload())
+            .nodes(nodes)
+            .seed(100 + run as u64)
+            .run()?;
         assert!(r.validation.ok(), "run {run} failed validation");
         let us = r.runtime().as_us_f64();
         times.push(us);
@@ -83,19 +74,15 @@ fn main() -> anyhow::Result<()> {
             "  run {:>2}: {:>7.2} µs  (skew {:.2}, {} msgs, wall {:.1?})",
             run + 1,
             us,
-            r.skew,
+            r.metric_f64("skew").unwrap_or(1.0),
             r.summary.net.msgs_sent,
             t0.elapsed()
         );
         if run == 0 {
-            let tput = Throughput {
-                records: cfg.total_keys(),
-                cores: cfg.nodes,
-                runtime: r.runtime(),
-            };
+            let tput = Throughput { records: nodes * kpn, cores: nodes, runtime: r.runtime() };
             println!(
                 "  Table 2 row: {} cores | {:.0} µs | {:.0} records/ms/core | {:.2} GB/s aggregate",
-                cfg.nodes,
+                nodes,
                 us,
                 tput.records_per_ms_per_core(),
                 tput.gb_per_s()

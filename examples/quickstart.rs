@@ -1,14 +1,16 @@
 //! Quickstart: sort 4,096 keys across 256 simulated nanoPU cores with the
 //! full three-layer stack — node-local compute runs through the
 //! AOT-compiled Pallas/JAX artifacts via PJRT (`--native` falls back to
-//! the pure-Rust data plane if artifacts aren't built).
+//! the pure-Rust data plane if artifacts aren't built). The run goes
+//! through the unified `Scenario` API.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use nanosort::algo::nanosort::{run_nanosort, NanoSortConfig};
+use nanosort::algo::nanosort::NanoSort;
 use nanosort::coordinator::ComputeChoice;
+use nanosort::scenario::Scenario;
 
 fn main() -> anyhow::Result<()> {
     let native = std::env::args().any(|a| a == "--native");
@@ -23,33 +25,32 @@ fn main() -> anyhow::Result<()> {
     };
     println!("data plane: {}", compute.name());
 
-    let cfg = NanoSortConfig {
-        nodes: 256,
+    let workload = NanoSort {
         keys_per_node: 16,
         buckets: 16,
         median_incast: 16,
         shuffle_values: true, // full GraySort semantics: values travel too
-        seed: 42,
         ..Default::default()
     };
+    let nodes = 256;
     println!(
-        "sorting {} keys on {} cores ({} buckets, depth {})...",
-        cfg.total_keys(),
-        cfg.nodes,
-        cfg.buckets,
-        cfg.depth()
+        "sorting {} keys on {} cores ({} buckets)...",
+        nodes * workload.keys_per_node,
+        nodes,
+        workload.buckets
     );
 
-    let r = run_nanosort(&cfg, compute);
+    let r = Scenario::new(workload).nodes(nodes).seed(42).compute_with(compute).run()?;
 
+    let sort = r.validation.sort.as_ref().expect("nanosort validation");
     println!("simulated runtime : {:.2} µs", r.runtime().as_us_f64());
-    println!("globally sorted   : {}", r.validation.globally_sorted);
-    println!("permutation intact: {}", r.validation.is_permutation);
-    println!("values intact     : {}", r.validation.values_intact);
-    println!("final skew        : {:.2}", r.skew);
+    println!("globally sorted   : {}", sort.globally_sorted);
+    println!("permutation intact: {}", sort.is_permutation);
+    println!("values intact     : {}", sort.values_intact);
+    println!("final skew        : {:.2}", r.metric_f64("skew").unwrap_or(1.0));
     println!("messages sent     : {}", r.summary.net.msgs_sent);
     println!("mean utilization  : {:.1} %", 100.0 * r.summary.mean_utilization());
-    for l in &r.levels {
+    for l in &r.stages {
         println!(
             "  stage {}: busy {:.2} µs (mean) / idle {:.2} µs (mean)",
             l.stage, l.mean_busy_us, l.mean_idle_us

@@ -5,21 +5,24 @@
 //! p99 doubles NanoSort's runtime. This example sweeps both the injected
 //! extra latency and the injection probability, and also compares how the
 //! same tails hurt MilliSort (deeper dependency chains amplify tails).
+//! All runs go through the unified `Scenario` API: the tail knobs are
+//! environment (`NetConfig`) settings, not workload settings.
 //!
 //! ```sh
 //! cargo run --release --example tail_latency_study
 //! ```
 
-use std::rc::Rc;
-
-use nanosort::algo::millisort::{run_millisort, MilliSortConfig};
-use nanosort::algo::nanosort::{run_nanosort, NanoSortConfig};
-use nanosort::compute::NativeCompute;
+use nanosort::algo::millisort::MilliSort;
+use nanosort::algo::nanosort::NanoSort;
 use nanosort::coordinator::Table;
+use nanosort::net::NetConfig;
+use nanosort::scenario::Scenario;
+
+fn tail_net(prob: (u64, u64), extra_ns: u64) -> NetConfig {
+    NetConfig { tail_prob: prob, tail_extra_ns: extra_ns, ..NetConfig::default() }
+}
 
 fn main() -> anyhow::Result<()> {
-    let compute = Rc::new(NativeCompute);
-
     // Part 1: Fig 14 proper — NanoSort, 256 cores, sweep p99 extra.
     let mut t1 = Table::new(
         "NanoSort runtime vs injected p99 extra latency (256 cores, 32 keys/core)",
@@ -27,16 +30,15 @@ fn main() -> anyhow::Result<()> {
     );
     let mut base = 0.0;
     for extra in [0u64, 250, 500, 1000, 2000, 4000, 8000] {
-        let mut cfg = NanoSortConfig {
-            nodes: 256,
+        let r = Scenario::new(NanoSort {
             keys_per_node: 32,
             shuffle_values: true,
-            seed: 3,
             ..Default::default()
-        };
-        cfg.net.tail_prob = (1, 100);
-        cfg.net.tail_extra_ns = extra;
-        let r = run_nanosort(&cfg, compute.clone());
+        })
+        .nodes(256)
+        .net(tail_net((1, 100), extra))
+        .seed(3)
+        .run()?;
         assert!(r.validation.ok());
         let us = r.runtime().as_us_f64();
         if extra == 0 {
@@ -58,16 +60,15 @@ fn main() -> anyhow::Result<()> {
         &["tail_fraction", "runtime_us", "slowdown"],
     );
     for (num, den) in [(0u64, 100u64), (1, 1000), (1, 100), (5, 100), (10, 100)] {
-        let mut cfg = NanoSortConfig {
-            nodes: 256,
+        let r = Scenario::new(NanoSort {
             keys_per_node: 32,
             shuffle_values: true,
-            seed: 3,
             ..Default::default()
-        };
-        cfg.net.tail_prob = (num, den);
-        cfg.net.tail_extra_ns = 4000;
-        let r = run_nanosort(&cfg, compute.clone());
+        })
+        .nodes(256)
+        .net(tail_net((num, den), 4000))
+        .seed(3)
+        .run()?;
         let us = r.runtime().as_us_f64();
         t2.row(vec![
             format!("{:.3}", num as f64 / den as f64),
@@ -83,25 +84,17 @@ fn main() -> anyhow::Result<()> {
         &["p99_extra_ns", "nanosort_us", "millisort_us"],
     );
     for extra in [0u64, 2000, 4000] {
-        let mut ncfg = NanoSortConfig {
-            nodes: 256,
-            keys_per_node: 16,
-            seed: 3,
-            ..Default::default()
-        };
-        ncfg.net.tail_prob = (1, 100);
-        ncfg.net.tail_extra_ns = extra;
-        let nr = run_nanosort(&ncfg, compute.clone());
+        let nr = Scenario::new(NanoSort { keys_per_node: 16, ..Default::default() })
+            .nodes(256)
+            .net(tail_net((1, 100), extra))
+            .seed(3)
+            .run()?;
 
-        let mut mcfg = MilliSortConfig {
-            cores: 128,
-            total_keys: 4096,
-            seed: 3,
-            ..Default::default()
-        };
-        mcfg.net.tail_prob = (1, 100);
-        mcfg.net.tail_extra_ns = extra;
-        let mr = run_millisort(&mcfg, compute.clone());
+        let mr = Scenario::new(MilliSort::default())
+            .nodes(128)
+            .net(tail_net((1, 100), extra))
+            .seed(3)
+            .run()?;
         assert!(nr.validation.ok() && mr.validation.ok());
         t3.row(vec![
             extra.to_string(),

@@ -1,14 +1,12 @@
 //! MergeMin benchmarks (paper Figs 2/4): single-core scan cost model and
-//! the full incast sweep.
+//! the full incast sweep, driven through the `Scenario` API.
 
 #[path = "common.rs"]
 mod common;
 
-use std::rc::Rc;
-
 use common::{section, Bench};
-use nanosort::algo::mergemin::{run_mergemin, single_core_scan, MergeMinConfig};
-use nanosort::compute::NativeCompute;
+use nanosort::algo::mergemin::{single_core_scan, MergeMin};
+use nanosort::scenario::Scenario;
 
 fn main() {
     section("Fig 2 — single-core min scan (cost model evaluation)");
@@ -27,15 +25,14 @@ fn main() {
     }
 
     section("Fig 4 — MergeMin end-to-end per incast (64 cores, 128 v/core)");
-    let compute = Rc::new(NativeCompute);
     for incast in [1usize, 8, 64] {
-        let cfg = MergeMinConfig { incast, ..Default::default() };
-        let c2 = compute.clone();
         let mut sim_ns = 0.0;
         Bench::new(Box::leak(format!("mergemin/incast={incast}").into_boxed_str()))
             .samples(20)
             .run(|| {
-                let r = run_mergemin(&cfg, c2.clone());
+                let r = Scenario::new(MergeMin { incast, ..Default::default() })
+                    .run()
+                    .expect("mergemin scenario");
                 sim_ns = r.summary.makespan.as_ns_f64();
                 r
             });
@@ -44,10 +41,13 @@ fn main() {
 
     section("Scale — MergeMin at larger fleets (incast 8)");
     for cores in [256usize, 1024, 4096] {
-        let cfg = MergeMinConfig { cores, incast: 8, ..Default::default() };
-        let c2 = compute.clone();
         Bench::new(Box::leak(format!("mergemin/cores={cores}").into_boxed_str()))
             .samples(5)
-            .run(|| run_mergemin(&cfg, c2.clone()));
+            .run(|| {
+                Scenario::new(MergeMin::default())
+                    .nodes(cores)
+                    .run()
+                    .expect("mergemin scenario")
+            });
     }
 }

@@ -1,31 +1,30 @@
 //! End-to-end sorting benchmarks — one per paper table/figure that
 //! involves a full distributed sort. Reports both the *simulated* runtime
 //! (the paper's metric) and the *wall-clock* cost of producing it (the
-//! simulator's own speed, which the §Perf pass optimizes).
+//! simulator's own speed, which the §Perf pass optimizes). All runs go
+//! through the unified `Scenario` API.
 
 #[path = "common.rs"]
 mod common;
 
-use std::rc::Rc;
-
 use common::{section, Bench};
-use nanosort::algo::millisort::{run_millisort, MilliSortConfig};
-use nanosort::algo::nanosort::{run_nanosort, NanoSortConfig};
-use nanosort::compute::NativeCompute;
+use nanosort::algo::millisort::MilliSort;
+use nanosort::algo::nanosort::NanoSort;
+use nanosort::scenario::Scenario;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
-    let compute = Rc::new(NativeCompute);
 
     section("Fig 9 — MilliSort vs cores (4,096 keys, rf 4)");
     for cores in [16usize, 64, 256] {
-        let cfg = MilliSortConfig { cores, total_keys: 4096, ..Default::default() };
-        let c2 = compute.clone();
         let mut sim_us = 0.0;
         Bench::new(Box::leak(format!("millisort/cores={cores}").into_boxed_str()))
             .samples(5)
             .run(|| {
-                let r = run_millisort(&cfg, c2.clone());
+                let r = Scenario::new(MilliSort::default())
+                    .nodes(cores)
+                    .run()
+                    .expect("millisort scenario");
                 sim_us = r.runtime().as_us_f64();
                 r
             });
@@ -34,19 +33,19 @@ fn main() {
 
     section("Fig 11 — NanoSort vs buckets (4,096 cores, 32 keys/core)");
     for b in [4usize, 8, 16] {
-        let cfg = NanoSortConfig {
-            nodes: 4096,
-            keys_per_node: 32,
-            buckets: b,
-            median_incast: b,
-            ..Default::default()
-        };
-        let c2 = compute.clone();
         let mut sim_us = 0.0;
         Bench::new(Box::leak(format!("nanosort/buckets={b}").into_boxed_str()))
             .samples(3)
             .run(|| {
-                let r = run_nanosort(&cfg, c2.clone());
+                let r = Scenario::new(NanoSort {
+                    keys_per_node: 32,
+                    buckets: b,
+                    median_incast: b,
+                    ..Default::default()
+                })
+                .nodes(4096)
+                .run()
+                .expect("nanosort scenario");
                 sim_us = r.runtime().as_us_f64();
                 r
             });
@@ -55,13 +54,14 @@ fn main() {
 
     section("Fig 12 — NanoSort vs keys (4,096 cores)");
     for kpn in [4usize, 16, 64] {
-        let cfg = NanoSortConfig { nodes: 4096, keys_per_node: kpn, ..Default::default() };
-        let c2 = compute.clone();
         let mut sim_us = 0.0;
         Bench::new(Box::leak(format!("nanosort/kpn={kpn}").into_boxed_str()))
             .samples(3)
             .run(|| {
-                let r = run_nanosort(&cfg, c2.clone());
+                let r = Scenario::new(NanoSort { keys_per_node: kpn, ..Default::default() })
+                    .nodes(4096)
+                    .run()
+                    .expect("nanosort scenario");
                 sim_us = r.runtime().as_us_f64();
                 r
             });
@@ -70,16 +70,12 @@ fn main() {
 
     if !quick {
         section("§6.3 headline — 1M keys on 65,536 cores (1 sample)");
-        let cfg = NanoSortConfig {
-            nodes: 65_536,
-            keys_per_node: 16,
-            shuffle_values: true,
-            ..Default::default()
-        };
-        let c2 = compute.clone();
         let mut sim_us = 0.0;
         Bench::new("nanosort/headline-65536c-1M").samples(1).run(|| {
-            let r = run_nanosort(&cfg, c2.clone());
+            let r = Scenario::new(NanoSort { shuffle_values: true, ..Default::default() })
+                .nodes(65_536)
+                .run()
+                .expect("headline scenario");
             sim_us = r.runtime().as_us_f64();
             assert!(r.validation.ok());
             r

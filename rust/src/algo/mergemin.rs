@@ -8,11 +8,16 @@
 
 use std::rc::Rc;
 
+use anyhow::Result;
+
 use crate::compute::LocalCompute;
 use crate::cpu::{CoreModel, Temp};
 use crate::nanopu::{Ctx, NodeId, Program, WireMsg};
-use crate::net::{Fabric, NetConfig, Topology};
-use crate::sim::{Engine, RunSummary, SplitMix64, Time};
+use crate::net::NetConfig;
+use crate::scenario::{
+    Built, Finish, MetricValue, RunReport, Scenario, ScenarioEnv, Validation, Workload,
+};
+use crate::sim::{RunSummary, SplitMix64, Time};
 
 use super::tree::AggTree;
 
@@ -180,34 +185,88 @@ impl MergeMinResult {
     }
 }
 
-/// Build and run MergeMin; `compute` is the data plane (native or XLA).
+/// MergeMin as a [`Workload`]: the scenario supplies fleet size, network,
+/// data plane, and seed; these are the workload-specific dials.
+#[derive(Debug, Clone)]
+pub struct MergeMin {
+    pub values_per_core: usize,
+    /// Merge-tree incast (1 = chain).
+    pub incast: usize,
+}
+
+impl Default for MergeMin {
+    fn default() -> Self {
+        // Fig 4's setting: 128 values per core, incast 8.
+        MergeMin { values_per_core: 128, incast: 8 }
+    }
+}
+
+impl Workload for MergeMin {
+    type Prog = MergeMinNode;
+
+    fn name(&self) -> &'static str {
+        "mergemin"
+    }
+
+    fn default_nodes(&self) -> usize {
+        64
+    }
+
+    fn build(&self, env: &ScenarioEnv) -> Result<Built<MergeMinNode>> {
+        let mut rng = SplitMix64::new(env.seed ^ 0x6d65_7267_656d_696e);
+        let mut true_min = u64::MAX;
+        let result = Rc::new(std::cell::Cell::new(u64::MAX));
+        let programs: Vec<MergeMinNode> = (0..env.nodes)
+            .map(|id| {
+                let values: Vec<u64> = (0..self.values_per_core)
+                    .map(|_| rng.next_u64() % (u64::MAX - 1))
+                    .collect();
+                true_min = true_min.min(*values.iter().min().unwrap());
+                MergeMinNode {
+                    id,
+                    cfg_incast: self.incast,
+                    cores: env.nodes,
+                    values,
+                    compute: env.compute.clone(),
+                    current_min: u64::MAX,
+                    round: 0,
+                    got: 0,
+                    result: result.clone(),
+                }
+            })
+            .collect();
+        let finish: Finish = Box::new(move |env, summary| {
+            let found = result.get();
+            let validation = Validation::check(
+                found == true_min,
+                format!("found min {found} == true min {true_min}"),
+            );
+            RunReport::new("mergemin", env, summary, validation)
+                .with_metric("found_min", MetricValue::U64(found))
+                .with_metric("true_min", MetricValue::U64(true_min))
+        });
+        Ok(Built { programs, groups: Vec::new(), finish })
+    }
+}
+
+/// Deprecated entry point kept for compatibility; routes through
+/// [`Scenario`]. Prefer `Scenario::new(MergeMin {..})`.
 pub fn run_mergemin(cfg: &MergeMinConfig, compute: Rc<dyn LocalCompute>) -> MergeMinResult {
-    let mut rng = SplitMix64::new(cfg.seed ^ 0x6d65_7267_656d_696e);
-    let mut true_min = u64::MAX;
-    let result = Rc::new(std::cell::Cell::new(u64::MAX));
-    let programs: Vec<MergeMinNode> = (0..cfg.cores)
-        .map(|id| {
-            let values: Vec<u64> = (0..cfg.values_per_core)
-                .map(|_| rng.next_u64() % (u64::MAX - 1))
-                .collect();
-            true_min = true_min.min(*values.iter().min().unwrap());
-            MergeMinNode {
-                id,
-                cfg_incast: cfg.incast,
-                cores: cfg.cores,
-                values,
-                compute: compute.clone(),
-                current_min: u64::MAX,
-                round: 0,
-                got: 0,
-                result: result.clone(),
-            }
-        })
-        .collect();
-    let fabric = Fabric::new(Topology::paper(cfg.cores), cfg.net.clone(), cfg.seed);
-    let engine = Engine::new(programs, fabric, CoreModel::default(), cfg.seed);
-    let summary = engine.run();
-    MergeMinResult { summary, found_min: result.get(), true_min }
+    let report = Scenario::new(MergeMin {
+        values_per_core: cfg.values_per_core,
+        incast: cfg.incast,
+    })
+    .nodes(cfg.cores)
+    .net(cfg.net.clone())
+    .seed(cfg.seed)
+    .compute_with(compute)
+    .run()
+    .expect("mergemin scenario");
+    MergeMinResult {
+        found_min: report.metric_u64("found_min").unwrap_or(u64::MAX),
+        true_min: report.metric_u64("true_min").unwrap_or(0),
+        summary: report.summary,
+    }
 }
 
 /// Single-core scan time for Fig 2 (pure cost-model evaluation).

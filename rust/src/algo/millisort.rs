@@ -23,13 +23,16 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
+use anyhow::Result;
+
 use crate::algo::tree::AggTree;
 use crate::compute::LocalCompute;
-use crate::cpu::{CoreModel, Temp};
+use crate::cpu::Temp;
 use crate::graysort::{validate_sorted_output, KeyGen, ValidationReport};
 use crate::nanopu::{Ctx, NodeId, Program, WireMsg};
-use crate::net::{Fabric, NetConfig, Topology};
-use crate::sim::{Engine, RunSummary, Time};
+use crate::net::NetConfig;
+use crate::scenario::{Built, Finish, RunReport, Scenario, ScenarioEnv, Validation, Workload};
+use crate::sim::{RunSummary, Time};
 
 /// Cycles per splitter for a local rank lookup (binary search on the
 /// sorted local keys).
@@ -70,13 +73,6 @@ impl Default for MilliSortConfig {
             seed: 1,
             net: NetConfig::default(),
         }
-    }
-}
-
-impl MilliSortConfig {
-    fn rounds(&self) -> u32 {
-        self.probe_rounds
-            .unwrap_or_else(|| (usize::BITS - (self.total_keys - 1).leading_zeros()) + 2)
     }
 }
 
@@ -192,8 +188,10 @@ impl MilliSortNode {
         let tree = self.tree();
         // Expected children = all subtree children across rounds (the
         // whole subtree reports through this node).
-        let expected: usize =
-            (1..=tree.rounds()).filter(|&t| tree.aggregates_at(self.id, t)).map(|t| tree.expected(self.id, t)).sum();
+        let expected: usize = (1..=tree.rounds())
+            .filter(|&t| tree.aggregates_at(self.id, t))
+            .map(|t| tree.expected(self.id, t))
+            .sum();
         let entry = self
             .probe_pending
             .entry(round)
@@ -413,47 +411,104 @@ impl MilliSortResult {
     }
 }
 
-/// Build, run, and validate one MilliSort execution.
+/// MilliSort as a [`Workload`]: the scenario supplies fleet size,
+/// network, data plane, and seed; these are the workload-specific dials.
+#[derive(Debug, Clone)]
+pub struct MilliSort {
+    pub total_keys: usize,
+    /// Probe rounds; `None` = enough to bisect to ~single-key precision.
+    pub probe_rounds: Option<u32>,
+    /// Gather/scatter tree branching (Fig 10's knob).
+    pub reduction_factor: usize,
+}
+
+impl Default for MilliSort {
+    fn default() -> Self {
+        MilliSort { total_keys: 4096, probe_rounds: None, reduction_factor: 4 }
+    }
+}
+
+impl MilliSort {
+    fn rounds(&self) -> u32 {
+        self.probe_rounds
+            .unwrap_or_else(|| (usize::BITS - (self.total_keys - 1).leading_zeros()) + 2)
+    }
+}
+
+impl Workload for MilliSort {
+    type Prog = MilliSortNode;
+
+    fn name(&self) -> &'static str {
+        "millisort"
+    }
+
+    fn default_nodes(&self) -> usize {
+        64
+    }
+
+    fn build(&self, env: &ScenarioEnv) -> Result<Built<MilliSortNode>> {
+        anyhow::ensure!(
+            self.total_keys % env.nodes == 0,
+            "keys ({}) must divide across cores ({})",
+            self.total_keys,
+            env.nodes
+        );
+        let shared = Rc::new(MsShared {
+            cores: env.nodes,
+            reduction_factor: self.reduction_factor,
+            probe_rounds: self.rounds(),
+            outputs: RefCell::new(vec![Vec::new(); env.nodes]),
+        });
+        let mut keygen = KeyGen::new(env.seed);
+        let per_node = keygen.generate(self.total_keys, env.nodes);
+        let input: Vec<u64> = per_node.iter().flatten().copied().collect();
+
+        let programs: Vec<MilliSortNode> = (0..env.nodes)
+            .map(|id| MilliSortNode {
+                id,
+                shared: shared.clone(),
+                compute: env.compute.clone(),
+                step: STEP_PARTITION,
+                keys: per_node[id].clone(),
+                received_keys: Vec::new(),
+                lo: vec![0; env.nodes.saturating_sub(1)],
+                hi: vec![u64::MAX; env.nodes.saturating_sub(1)],
+                probe_pending: HashMap::new(),
+                probe_sent_own: HashMap::new(),
+                sent: 0,
+                received: 0,
+                ct_epoch: 0,
+                ct_round: 0,
+                ct_sum: (0, 0),
+                ct_pending: HashMap::new(),
+            })
+            .collect();
+
+        let finish: Finish = Box::new(move |env, summary| {
+            let outputs = shared.outputs.borrow();
+            let validation = validate_sorted_output(&input, &outputs, None);
+            RunReport::new("millisort", env, summary, Validation::from_sort(validation))
+        });
+        Ok(Built { programs, groups: Vec::new(), finish })
+    }
+}
+
+/// Deprecated entry point kept for compatibility; routes through
+/// [`Scenario`]. Prefer `Scenario::new(MilliSort {..})`.
 pub fn run_millisort(cfg: &MilliSortConfig, compute: Rc<dyn LocalCompute>) -> MilliSortResult {
-    assert!(cfg.total_keys % cfg.cores == 0, "keys must divide across cores");
-    let shared = Rc::new(MsShared {
-        cores: cfg.cores,
+    let report = Scenario::new(MilliSort {
+        total_keys: cfg.total_keys,
+        probe_rounds: cfg.probe_rounds,
         reduction_factor: cfg.reduction_factor,
-        probe_rounds: cfg.rounds(),
-        outputs: RefCell::new(vec![Vec::new(); cfg.cores]),
-    });
-    let mut keygen = KeyGen::new(cfg.seed);
-    let per_node = keygen.generate(cfg.total_keys, cfg.cores);
-    let input: Vec<u64> = per_node.iter().flatten().copied().collect();
-
-    let programs: Vec<MilliSortNode> = (0..cfg.cores)
-        .map(|id| MilliSortNode {
-            id,
-            shared: shared.clone(),
-            compute: compute.clone(),
-            step: STEP_PARTITION,
-            keys: per_node[id].clone(),
-            received_keys: Vec::new(),
-            lo: vec![0; cfg.cores.saturating_sub(1)],
-            hi: vec![u64::MAX; cfg.cores.saturating_sub(1)],
-            probe_pending: HashMap::new(),
-            probe_sent_own: HashMap::new(),
-            sent: 0,
-            received: 0,
-            ct_epoch: 0,
-            ct_round: 0,
-            ct_sum: (0, 0),
-            ct_pending: HashMap::new(),
-        })
-        .collect();
-
-    let fabric = Fabric::new(Topology::paper(cfg.cores), cfg.net.clone(), cfg.seed);
-    let engine = Engine::new(programs, fabric, CoreModel::default(), cfg.seed);
-    let summary = engine.run();
-
-    let outputs = shared.outputs.borrow();
-    let validation = validate_sorted_output(&input, &outputs, None);
-    MilliSortResult { summary, validation }
+    })
+    .nodes(cfg.cores)
+    .net(cfg.net.clone())
+    .seed(cfg.seed)
+    .compute_with(compute)
+    .run()
+    .expect("millisort scenario");
+    let validation = report.validation.sort.clone().expect("millisort sort validation");
+    MilliSortResult { summary: report.summary, validation }
 }
 
 #[cfg(test)]

@@ -3,7 +3,12 @@
 //! - [`nanosort`] — the paper's contribution (recursive pivot/shuffle sort);
 //! - [`millisort`] — the state-of-the-art baseline it compares against;
 //! - [`mergemin`] — the §3.1 design-space probe (incast vs depth);
+//! - [`setalgebra`] — distributed posting-list intersection (§3.2);
 //! - [`tree`] — shared k-ary aggregation-tree arithmetic.
+//!
+//! Each algorithm implements [`crate::scenario::Workload`] and runs
+//! through [`crate::scenario::Scenario`]; the `run_xxx(cfg, compute)`
+//! functions are deprecated compatibility shims over that API.
 
 pub mod mergemin;
 pub mod millisort;

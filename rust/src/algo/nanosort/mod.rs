@@ -21,5 +21,6 @@ mod node;
 pub mod pivot;
 
 pub use node::{
-    run_nanosort, LevelBreakdown, NanoSortConfig, NanoSortResult, NsMsg, PivotMode,
+    depth_of, run_nanosort, LevelBreakdown, NanoSort, NanoSortConfig, NanoSortResult, NsMsg,
+    PivotMode,
 };

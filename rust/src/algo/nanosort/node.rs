@@ -4,13 +4,22 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
+use anyhow::Result;
+
 use crate::algo::tree::AggTree;
 use crate::compute::LocalCompute;
-use crate::cpu::{CoreModel, Temp};
+use crate::cpu::Temp;
 use crate::graysort::{validate_sorted_output, value_of_key, KeyGen, ValidationReport};
 use crate::nanopu::{Ctx, GroupId, NodeId, Program, WireMsg};
-use crate::net::{Fabric, NetConfig, Topology};
-use crate::sim::{Engine, RunSummary, Time, MAX_STAGES};
+use crate::net::NetConfig;
+use crate::scenario::{
+    Built, Finish, MetricValue, RunReport, Scenario, ScenarioEnv, Validation, Workload,
+};
+use crate::sim::{RunSummary, Time, MAX_STAGES};
+
+/// Per-level stage summary (kept as an alias of the scenario layer's
+/// generalized breakdown; Fig 16 reads the same shape for every workload).
+pub use crate::scenario::StageBreakdown as LevelBreakdown;
 
 /// Cycles charged for the PivotSelect index arithmetic (the sort itself is
 /// priced separately).
@@ -71,23 +80,22 @@ impl Default for NanoSortConfig {
     }
 }
 
-impl NanoSortConfig {
-    /// Recursion depth r with nodes = buckets^r; panics if not a power.
-    pub fn depth(&self) -> u32 {
-        let mut r = 0;
-        let mut n: u128 = 1;
-        while n < self.nodes as u128 {
-            n *= self.buckets as u128;
-            r += 1;
-        }
-        assert_eq!(n, self.nodes as u128, "nodes must be buckets^r");
-        assert!(r >= 1, "need at least one level");
-        r
+/// Recursion depth r with `nodes = buckets^r`, or an error when the fleet
+/// size is not an exact power.
+pub fn depth_of(nodes: usize, buckets: usize) -> Result<u32> {
+    anyhow::ensure!(buckets >= 2, "need at least 2 buckets, got {buckets}");
+    let mut r = 0;
+    let mut n: u128 = 1;
+    while n < nodes as u128 {
+        n *= buckets as u128;
+        r += 1;
     }
-
-    pub fn total_keys(&self) -> usize {
-        self.nodes * self.keys_per_node
-    }
+    anyhow::ensure!(
+        n == nodes as u128,
+        "nodes ({nodes}) must be buckets^r for buckets = {buckets}"
+    );
+    anyhow::ensure!(r >= 1, "need at least one level (nodes = {nodes})");
+    Ok(r)
 }
 
 /// Wire messages. Step tags: level `l` uses `2l` for the pivot phase and
@@ -575,17 +583,6 @@ fn evenly_spaced_pivots(b: usize) -> Vec<u64> {
     (1..b).map(|i| (u64::MAX / b as u64) * i as u64).collect()
 }
 
-/// Per-level makespan contribution (Fig 16's stage breakdown comes from
-/// the engine's per-node stage accounting; this summarizes it).
-#[derive(Debug, Clone)]
-pub struct LevelBreakdown {
-    pub stage: usize,
-    pub mean_busy_us: f64,
-    pub mean_idle_us: f64,
-    pub max_busy_us: f64,
-    pub max_idle_us: f64,
-}
-
 /// Result of a NanoSort run.
 pub struct NanoSortResult {
     pub summary: RunSummary,
@@ -602,112 +599,167 @@ impl NanoSortResult {
     }
 }
 
-/// Build, run, and validate one NanoSort execution.
-pub fn run_nanosort(cfg: &NanoSortConfig, compute: Rc<dyn LocalCompute>) -> NanoSortResult {
-    let depth = cfg.depth();
-    let b = cfg.buckets;
+/// NanoSort as a [`Workload`]: the scenario supplies fleet size, network,
+/// data plane, and seed; these are the paper's §6.2.3 knobs.
+#[derive(Debug, Clone)]
+pub struct NanoSort {
+    /// Keys pre-loaded per core (paper headline: 16).
+    pub keys_per_node: usize,
+    /// Buckets per recursion level (fleet size must be `buckets^r`).
+    pub buckets: usize,
+    /// Median-tree (and count-tree) incast.
+    pub median_incast: usize,
+    /// Run the GraySort value-redistribution phase (§5.2).
+    pub shuffle_values: bool,
+    /// Pivot-proposal ablation (default: the paper's PivotSelect).
+    pub pivot_mode: PivotMode,
+}
 
-    // Multicast groups: one per (level, group index), level-major.
-    let mut group_offsets = Vec::with_capacity(depth as usize);
-    let mut off = 0usize;
-    for l in 0..depth {
-        group_offsets.push(off);
-        off += (b as u128).pow(l) as usize;
+impl Default for NanoSort {
+    fn default() -> Self {
+        NanoSort {
+            keys_per_node: 16,
+            buckets: 16,
+            median_incast: 16,
+            shuffle_values: false,
+            pivot_mode: PivotMode::Paper,
+        }
     }
-    let shared = Rc::new(Shared {
-        buckets: b,
-        depth,
+}
+
+impl Workload for NanoSort {
+    type Prog = NanoSortNode;
+
+    fn name(&self) -> &'static str {
+        "nanosort"
+    }
+
+    fn default_nodes(&self) -> usize {
+        256
+    }
+
+    fn build(&self, env: &ScenarioEnv) -> Result<Built<NanoSortNode>> {
+        let depth = depth_of(env.nodes, self.buckets)?;
+        let b = self.buckets;
+
+        // Multicast groups: one per (level, group index), level-major.
+        let mut group_offsets = Vec::with_capacity(depth as usize);
+        let mut off = 0usize;
+        for l in 0..depth {
+            group_offsets.push(off);
+            off += (b as u128).pow(l) as usize;
+        }
+        let shared = Rc::new(Shared {
+            buckets: b,
+            depth,
+            median_incast: self.median_incast,
+            shuffle_values: self.shuffle_values,
+            pivot_mode: self.pivot_mode,
+            group_offsets,
+            outputs: RefCell::new(Outputs {
+                final_keys: vec![Vec::new(); env.nodes],
+                final_values: vec![Vec::new(); env.nodes],
+                max_retry_epoch: 0,
+            }),
+        });
+
+        // Pre-load the cluster (paper §5.2: records loaded before the clock).
+        let mut keygen = KeyGen::new(env.seed);
+        let per_node = keygen.generate(env.nodes * self.keys_per_node, env.nodes);
+        let input: Vec<u64> = per_node.iter().flatten().copied().collect();
+
+        let programs: Vec<NanoSortNode> = (0..env.nodes)
+            .map(|id| {
+                let keys = per_node[id].clone();
+                let mut initial = keys.clone();
+                initial.sort_unstable();
+                NanoSortNode {
+                    id,
+                    shared: shared.clone(),
+                    compute: env.compute.clone(),
+                    level: 0,
+                    phase: Phase::PivotTree,
+                    step: 0,
+                    keys: Vec::new(),
+                    origins: Vec::new(),
+                    next_keys: keys,
+                    next_origins: vec![id as u32; self.keys_per_node],
+                    my_pivots: Vec::new(),
+                    mt_round: 0,
+                    mt_pending: HashMap::new(),
+                    sent_this_level: 0,
+                    received_next: 0,
+                    ct_epoch: 0,
+                    ct_round: 0,
+                    ct_sum: (0, 0),
+                    ct_pending: HashMap::new(),
+                    initial_keys: initial,
+                    values_by_slot: Vec::new(),
+                    values_received: 0,
+                }
+            })
+            .collect();
+
+        // Registration order must match `Shared::group_id` (level-major).
+        let mut groups = Vec::new();
+        for l in 0..depth {
+            let gsize = shared.group_size(l);
+            for gi in 0..env.nodes / gsize {
+                let base = gi * gsize;
+                groups.push((base..base + gsize).collect());
+            }
+        }
+
+        let shuffle_values = self.shuffle_values;
+        let finish: Finish = Box::new(move |env, summary| {
+            let outputs = shared.outputs.borrow();
+            let validation = validate_sorted_output(
+                &input,
+                &outputs.final_keys,
+                shuffle_values.then_some(outputs.final_values.as_slice()),
+            );
+            let skew = crate::graysort::bucket_skew(&validation.node_counts);
+            let max_retry_epoch = outputs.max_retry_epoch;
+            RunReport::new("nanosort", env, summary, Validation::from_sort(validation))
+                .with_metric("skew", MetricValue::F64(skew))
+                .with_metric("depth", MetricValue::U64(depth as u64))
+                .with_metric("max_retry_epoch", MetricValue::U64(max_retry_epoch as u64))
+        });
+        Ok(Built { programs, groups, finish })
+    }
+}
+
+impl From<RunReport> for NanoSortResult {
+    fn from(report: RunReport) -> Self {
+        let validation =
+            report.validation.sort.clone().expect("nanosort reports carry sort validation");
+        NanoSortResult {
+            skew: report.metric_f64("skew").unwrap_or(1.0),
+            max_retry_epoch: report.metric_u64("max_retry_epoch").unwrap_or(0) as u16,
+            levels: report.stages,
+            validation,
+            summary: report.summary,
+        }
+    }
+}
+
+/// Deprecated entry point kept for compatibility; routes through
+/// [`Scenario`]. Prefer `Scenario::new(NanoSort {..})`.
+pub fn run_nanosort(cfg: &NanoSortConfig, compute: Rc<dyn LocalCompute>) -> NanoSortResult {
+    let report = Scenario::new(NanoSort {
+        keys_per_node: cfg.keys_per_node,
+        buckets: cfg.buckets,
         median_incast: cfg.median_incast,
         shuffle_values: cfg.shuffle_values,
         pivot_mode: cfg.pivot_mode,
-        group_offsets,
-        outputs: RefCell::new(Outputs {
-            final_keys: vec![Vec::new(); cfg.nodes],
-            final_values: vec![Vec::new(); cfg.nodes],
-            max_retry_epoch: 0,
-        }),
-    });
-
-    // Pre-load the cluster (paper §5.2: records loaded before the clock).
-    let mut keygen = KeyGen::new(cfg.seed);
-    let per_node = keygen.generate(cfg.total_keys(), cfg.nodes);
-    let input: Vec<u64> = per_node.iter().flatten().copied().collect();
-
-    let programs: Vec<NanoSortNode> = (0..cfg.nodes)
-        .map(|id| {
-            let keys = per_node[id].clone();
-            let mut initial = keys.clone();
-            initial.sort_unstable();
-            NanoSortNode {
-                id,
-                shared: shared.clone(),
-                compute: compute.clone(),
-                level: 0,
-                phase: Phase::PivotTree,
-                step: 0,
-                keys: Vec::new(),
-                origins: Vec::new(),
-                next_keys: keys,
-                next_origins: vec![id as u32; cfg.keys_per_node],
-                my_pivots: Vec::new(),
-                mt_round: 0,
-                mt_pending: HashMap::new(),
-                sent_this_level: 0,
-                received_next: 0,
-                ct_epoch: 0,
-                ct_round: 0,
-                ct_sum: (0, 0),
-                ct_pending: HashMap::new(),
-                initial_keys: initial,
-                values_by_slot: Vec::new(),
-                values_received: 0,
-            }
-        })
-        .collect();
-
-    let fabric = Fabric::new(Topology::paper(cfg.nodes), cfg.net.clone(), cfg.seed);
-    let mut engine = Engine::new(programs, fabric, CoreModel::default(), cfg.seed);
-    for l in 0..depth {
-        let gsize = shared.group_size(l);
-        for gi in 0..cfg.nodes / gsize {
-            let base = gi * gsize;
-            engine.add_group((base..base + gsize).collect());
-        }
-    }
-    let summary = engine.run();
-
-    let outputs = shared.outputs.borrow();
-    let validation = validate_sorted_output(
-        &input,
-        &outputs.final_keys,
-        cfg.shuffle_values.then_some(outputs.final_values.as_slice()),
-    );
-    let skew = crate::graysort::bucket_skew(&validation.node_counts);
-
-    let levels = (0..=depth as usize)
-        .map(|stage| {
-            let busy: Vec<f64> = summary
-                .node_stats
-                .iter()
-                .map(|s| s.busy[stage.min(MAX_STAGES - 1)].as_us_f64())
-                .collect();
-            let idle: Vec<f64> = summary
-                .node_stats
-                .iter()
-                .map(|s| s.idle[stage.min(MAX_STAGES - 1)].as_us_f64())
-                .collect();
-            LevelBreakdown {
-                stage,
-                mean_busy_us: busy.iter().sum::<f64>() / busy.len() as f64,
-                mean_idle_us: idle.iter().sum::<f64>() / idle.len() as f64,
-                max_busy_us: busy.iter().cloned().fold(0.0, f64::max),
-                max_idle_us: idle.iter().cloned().fold(0.0, f64::max),
-            }
-        })
-        .collect();
-
-    let max_retry_epoch = outputs.max_retry_epoch;
-    NanoSortResult { summary, validation, skew, levels, max_retry_epoch }
+    })
+    .nodes(cfg.nodes)
+    .net(cfg.net.clone())
+    .seed(cfg.seed)
+    .compute_with(compute)
+    .run()
+    .expect("nanosort scenario");
+    NanoSortResult::from(report)
 }
 
 #[cfg(test)]

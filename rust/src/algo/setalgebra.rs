@@ -13,12 +13,16 @@
 
 use std::rc::Rc;
 
+use anyhow::Result;
+
 use crate::algo::tree::AggTree;
 use crate::compute::LocalCompute;
-use crate::cpu::CoreModel;
 use crate::nanopu::{Ctx, NodeId, Program, WireMsg};
-use crate::net::{Fabric, NetConfig, Topology};
-use crate::sim::{Engine, RunSummary, SplitMix64};
+use crate::net::NetConfig;
+use crate::scenario::{
+    Built, Finish, MetricValue, RunReport, Scenario, ScenarioEnv, Validation, Workload,
+};
+use crate::sim::{RunSummary, SplitMix64};
 
 /// Set-algebra workload configuration.
 #[derive(Debug, Clone)]
@@ -174,53 +178,114 @@ impl SetAlgebraResult {
     }
 }
 
-/// Generate shards + run the distributed intersection.
+/// Set algebra as a [`Workload`]: the scenario supplies fleet size,
+/// network, data plane, and seed; these are the workload-specific dials.
+#[derive(Debug, Clone)]
+pub struct SetAlgebra {
+    /// Posting lists per query (q-way intersection).
+    pub lists: usize,
+    /// Doc ids per list per core (local shard size).
+    pub ids_per_core: usize,
+    /// Probability (num/den) that a doc id appears in every list.
+    pub hit_prob: (u64, u64),
+    /// Reduce-tree incast.
+    pub incast: usize,
+}
+
+impl Default for SetAlgebra {
+    fn default() -> Self {
+        SetAlgebra { lists: 4, ids_per_core: 128, hit_prob: (1, 8), incast: 8 }
+    }
+}
+
+impl Workload for SetAlgebra {
+    type Prog = SetAlgebraNode;
+
+    fn name(&self) -> &'static str {
+        "setalgebra"
+    }
+
+    fn default_nodes(&self) -> usize {
+        64
+    }
+
+    fn build(&self, env: &ScenarioEnv) -> Result<Built<SetAlgebraNode>> {
+        let mut rng = SplitMix64::new(env.seed ^ 0x7365_7461_6c67);
+        let result = Rc::new(std::cell::Cell::new(u64::MAX));
+        let mut expected = 0u64;
+        let programs: Vec<SetAlgebraNode> = (0..env.nodes)
+            .map(|id| {
+                // Doc-id-range sharding: core c owns ids with high bits = c.
+                let base = (id as u64) << 32;
+                let mut shards: Vec<Vec<u64>> = vec![Vec::new(); self.lists];
+                for i in 0..self.ids_per_core {
+                    let id64 = base + i as u64;
+                    if rng.chance(self.hit_prob.0, self.hit_prob.1) {
+                        // Common doc: appears in every list.
+                        for s in shards.iter_mut() {
+                            s.push(id64);
+                        }
+                        expected += 1;
+                    } else {
+                        // Appears in a strict subset of lists.
+                        let skip = rng.index(self.lists);
+                        for (j, s) in shards.iter_mut().enumerate() {
+                            if j != skip {
+                                s.push(id64);
+                            }
+                        }
+                    }
+                }
+                SetAlgebraNode {
+                    id,
+                    cores: env.nodes,
+                    incast: self.incast,
+                    shards,
+                    _compute: env.compute.clone(),
+                    count: 0,
+                    round: 0,
+                    got: 0,
+                    result: result.clone(),
+                }
+            })
+            .collect();
+        let finish: Finish = Box::new(move |env, summary| {
+            let found = result.get();
+            let validation = Validation::check(
+                found == expected,
+                format!("intersection cardinality {found} == expected {expected}"),
+            );
+            RunReport::new("setalgebra", env, summary, validation)
+                .with_metric("found", MetricValue::U64(found))
+                .with_metric("expected", MetricValue::U64(expected))
+        });
+        Ok(Built { programs, groups: Vec::new(), finish })
+    }
+}
+
+/// Deprecated entry point kept for compatibility; routes through
+/// [`Scenario`]. Prefer `Scenario::new(SetAlgebra {..})`.
 pub fn run_setalgebra(
     cfg: &SetAlgebraConfig,
     compute: Rc<dyn LocalCompute>,
 ) -> SetAlgebraResult {
-    let mut rng = SplitMix64::new(cfg.seed ^ 0x7365_7461_6c67);
-    let result = Rc::new(std::cell::Cell::new(u64::MAX));
-    let mut expected = 0u64;
-    let programs: Vec<SetAlgebraNode> = (0..cfg.cores)
-        .map(|id| {
-            // Doc-id-range sharding: core c owns ids with high bits = c.
-            let base = (id as u64) << 32;
-            let mut shards: Vec<Vec<u64>> = vec![Vec::new(); cfg.lists];
-            for i in 0..cfg.ids_per_core {
-                let id64 = base + i as u64;
-                if rng.chance(cfg.hit_prob.0, cfg.hit_prob.1) {
-                    // Common doc: appears in every list.
-                    for s in shards.iter_mut() {
-                        s.push(id64);
-                    }
-                    expected += 1;
-                } else {
-                    // Appears in a strict subset of lists.
-                    let skip = rng.index(cfg.lists);
-                    for (j, s) in shards.iter_mut().enumerate() {
-                        if j != skip {
-                            s.push(id64);
-                        }
-                    }
-                }
-            }
-            SetAlgebraNode {
-                id,
-                cores: cfg.cores,
-                incast: cfg.incast,
-                shards,
-                _compute: compute.clone(),
-                count: 0,
-                round: 0,
-                got: 0,
-                result: result.clone(),
-            }
-        })
-        .collect();
-    let fabric = Fabric::new(Topology::paper(cfg.cores), cfg.net.clone(), cfg.seed);
-    let summary = Engine::new(programs, fabric, CoreModel::default(), cfg.seed).run();
-    SetAlgebraResult { summary, found: result.get(), expected }
+    let report = Scenario::new(SetAlgebra {
+        lists: cfg.lists,
+        ids_per_core: cfg.ids_per_core,
+        hit_prob: cfg.hit_prob,
+        incast: cfg.incast,
+    })
+    .nodes(cfg.cores)
+    .net(cfg.net.clone())
+    .seed(cfg.seed)
+    .compute_with(compute)
+    .run()
+    .expect("setalgebra scenario");
+    SetAlgebraResult {
+        found: report.metric_u64("found").unwrap_or(u64::MAX),
+        expected: report.metric_u64("expected").unwrap_or(0),
+        summary: report.summary,
+    }
 }
 
 #[cfg(test)]

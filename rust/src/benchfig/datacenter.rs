@@ -1,55 +1,67 @@
 //! Datacenter-scale experiments (§6.3): the 65,536-core / 1M-key headline,
 //! the Fig 16 execution breakdown, and Table 2's per-core efficiency
-//! comparison.
+//! comparison — all driven through the [`Scenario`] API.
 
-use crate::algo::nanosort::{run_nanosort, NanoSortConfig, NanoSortResult};
+use anyhow::Result;
+
+use crate::algo::nanosort::NanoSort;
 use crate::coordinator::{f, RunOptions, Table};
 use crate::graysort::Throughput;
+use crate::scenario::{RunReport, Scenario};
 use crate::sim::Time;
 use crate::stats::Summary;
 
-/// The paper's headline configuration: 65,536 cores, 1M keys (16 keys per
-/// node, 16 buckets), GraySort value redistribution included.
-pub fn headline_config(opts: &RunOptions) -> NanoSortConfig {
-    let nodes = if opts.quick { 4096 } else { 65_536 };
-    NanoSortConfig {
-        nodes,
-        keys_per_node: 16,
-        buckets: 16,
-        median_incast: 16,
+/// Keys per core in the headline configuration (1M total at 65,536 cores).
+pub const HEADLINE_KEYS_PER_NODE: usize = 16;
+
+/// The paper's headline workload: 16 keys per node, 16 buckets, GraySort
+/// value redistribution included.
+pub fn headline_workload() -> NanoSort {
+    NanoSort {
+        keys_per_node: HEADLINE_KEYS_PER_NODE,
         shuffle_values: true,
-        seed: opts.seed,
         ..Default::default()
     }
 }
 
-fn run_headline_once(opts: &RunOptions, seed: u64) -> NanoSortResult {
-    let mut cfg = headline_config(opts);
-    cfg.seed = seed;
-    run_nanosort(&cfg, opts.compute.build().expect("compute"))
+/// Headline fleet size: 65,536 cores (4,096 under `--quick`).
+pub fn headline_nodes(opts: &RunOptions) -> usize {
+    if opts.quick {
+        4096
+    } else {
+        65_536
+    }
+}
+
+fn run_headline_once(opts: &RunOptions, seed: u64) -> Result<RunReport> {
+    Scenario::new(headline_workload())
+        .nodes(headline_nodes(opts))
+        .compute(opts.compute)
+        .seed(seed)
+        .run()
 }
 
 /// §6.3 headline: repeat the 1M-key sort `opts.runs` times and summarize.
-pub fn headline(opts: &RunOptions) -> Table {
-    let cfg = headline_config(opts);
+pub fn headline(opts: &RunOptions) -> Result<Table> {
+    let nodes = headline_nodes(opts);
     let mut t = Table::new(
         format!(
             "§6.3 headline — NanoSort {} keys on {} cores ({} runs)",
-            cfg.total_keys(),
-            cfg.nodes,
+            nodes * HEADLINE_KEYS_PER_NODE,
+            nodes,
             opts.runs
         ),
         &["run", "runtime_us", "correct", "skew", "msgs_sent"],
     );
     let mut times = Vec::new();
     for i in 0..opts.runs.max(1) {
-        let r = run_headline_once(opts, opts.seed + i as u64);
+        let r = run_headline_once(opts, opts.seed + i as u64)?;
         times.push(r.runtime().as_us_f64());
         t.row(vec![
             (i + 1).to_string(),
             f(r.runtime().as_us_f64()),
             r.validation.ok().to_string(),
-            f(r.skew),
+            f(r.metric_f64("skew").unwrap_or(1.0)),
             r.summary.net.msgs_sent.to_string(),
         ]);
     }
@@ -59,16 +71,16 @@ pub fn headline(opts: &RunOptions) -> Table {
         s.mean, s.std, s.max, s.n
     ));
     t.note("paper: mean 68 µs (σ = 4.127 µs), all 10 runs < 78 µs");
-    t
+    Ok(t)
 }
 
 /// Fig 16: per-stage busy (a) and idle (b) distributions across cores.
-pub fn fig16(opts: &RunOptions) -> Vec<Table> {
-    let r = run_headline_once(opts, opts.seed);
-    let cfg = headline_config(opts);
-    let depth = cfg.depth() as usize;
+pub fn fig16(opts: &RunOptions) -> Result<Vec<Table>> {
+    let r = run_headline_once(opts, opts.seed)?;
+    let nodes = headline_nodes(opts);
+    let depth = r.metric_u64("depth").unwrap_or(0) as usize;
     let mut a = Table::new(
-        format!("Fig 16a — per-stage busy time across {} cores", cfg.nodes),
+        format!("Fig 16a — per-stage busy time across {nodes} cores"),
         &["stage", "mean_us", "p50_us", "p99_us", "max_us"],
     );
     let mut b = Table::new(
@@ -97,16 +109,16 @@ pub fn fig16(opts: &RunOptions) -> Vec<Table> {
         100.0 * r.summary.mean_utilization()
     ));
     a.note("paper: level 0 fastest/least variance; variance later is idle-time, not compute");
-    vec![a, b]
+    Ok(vec![a, b])
 }
 
 /// Table 2: per-core sorting efficiency vs published systems.
-pub fn table2(opts: &RunOptions) -> Table {
-    let r = run_headline_once(opts, opts.seed);
-    let cfg = headline_config(opts);
+pub fn table2(opts: &RunOptions) -> Result<Table> {
+    let r = run_headline_once(opts, opts.seed)?;
+    let nodes = headline_nodes(opts);
     let tput = Throughput {
-        records: cfg.total_keys(),
-        cores: cfg.nodes,
+        records: nodes * HEADLINE_KEYS_PER_NODE,
+        cores: nodes,
         runtime: r.runtime(),
     };
     let mut t = Table::new(
@@ -116,7 +128,7 @@ pub fn table2(opts: &RunOptions) -> Table {
     t.row(vec![
         "NanoSort (ours)".into(),
         "RISC-V Rocket @3.2GHz (sim)".into(),
-        cfg.nodes.to_string(),
+        nodes.to_string(),
         f(r.runtime().as_us_f64()),
         f(tput.records_per_ms_per_core()),
     ]);
@@ -151,12 +163,12 @@ pub fn table2(opts: &RunOptions) -> Table {
     ]);
     t.note("latency-vs-throughput trade-off: tight time budget costs per-core efficiency");
     t.note(format!("our aggregate bandwidth: {:.2} GB/s of 104 B records", tput.gb_per_s()));
-    t
+    Ok(t)
 }
 
 /// Convenience for examples: total runtime of a headline-size run.
-pub fn headline_runtime(opts: &RunOptions) -> Time {
-    run_headline_once(opts, opts.seed).runtime()
+pub fn headline_runtime(opts: &RunOptions) -> Result<Time> {
+    Ok(run_headline_once(opts, opts.seed)?.runtime())
 }
 
 #[cfg(test)]
@@ -166,14 +178,14 @@ mod tests {
     #[test]
     fn quick_headline_sorts() {
         let opts = RunOptions { quick: true, ..Default::default() };
-        let t = headline(&opts);
+        let t = headline(&opts).unwrap();
         assert!(t.rows.iter().all(|r| r[2] == "true"));
     }
 
     #[test]
     fn quick_fig16_stages_covered() {
         let opts = RunOptions { quick: true, ..Default::default() };
-        let tables = fig16(&opts);
+        let tables = fig16(&opts).unwrap();
         // quick config: 4096 = 16^3 -> stages 0..=3.
         assert_eq!(tables[0].rows.len(), 4);
         // Level 0 busy should have low variance relative to later stages
@@ -185,7 +197,7 @@ mod tests {
     #[test]
     fn quick_table2_has_our_row() {
         let opts = RunOptions { quick: true, ..Default::default() };
-        let t = table2(&opts);
+        let t = table2(&opts).unwrap();
         assert!(t.rows[0][0].contains("ours"));
         let tput: f64 = t.rows[0][4].parse().unwrap();
         assert!(tput > 0.0);

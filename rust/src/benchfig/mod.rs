@@ -11,7 +11,9 @@ mod datacenter;
 mod micro;
 mod sortfigs;
 
-pub use datacenter::{headline_config, headline_runtime};
+pub use datacenter::{
+    headline_nodes, headline_runtime, headline_workload, HEADLINE_KEYS_PER_NODE,
+};
 
 use anyhow::{bail, Result};
 
@@ -30,7 +32,7 @@ pub fn run_figure(id: &str, opts: &RunOptions) -> Result<Vec<Table>> {
         "1" => vec![micro::fig1()],
         "2" => vec![micro::fig2()],
         "3" => vec![micro::fig3()],
-        "4" => vec![sortfigs::fig4(opts)],
+        "4" => vec![sortfigs::fig4(opts)?],
         "5" => vec![sortfigs::fig5(opts)],
         "6" => vec![micro::fig6()],
         "7" => vec![micro::fig7()],
@@ -43,9 +45,9 @@ pub fn run_figure(id: &str, opts: &RunOptions) -> Result<Vec<Table>> {
         "14" => vec![sortfigs::fig14(opts)?],
         "15" => sortfigs::fig15(opts)?,
         "multicast" => vec![sortfigs::fig_multicast(opts)?],
-        "16" => datacenter::fig16(opts),
-        "headline" => vec![datacenter::headline(opts)],
-        "table2" => vec![datacenter::table2(opts)],
+        "16" => datacenter::fig16(opts)?,
+        "headline" => vec![datacenter::headline(opts)?],
+        "table2" => vec![datacenter::table2(opts)?],
         "ablation" => vec![sortfigs::fig_ablation(opts)?],
         other => bail!("unknown figure id {other:?}; ids: {}", ALL_FIGURES.join(", ")),
     })

@@ -1,16 +1,35 @@
 //! Simulation-driven figures: MergeMin (Fig 4), pivot strategies (Fig 5),
 //! MilliSort scaling (Figs 9/10), and the NanoSort knob/sensitivity studies
-//! (Figs 11-15 + the §6.2.3 multicast experiment).
+//! (Figs 11-15 + the §6.2.3 multicast experiment). Every simulated run
+//! goes through the [`Scenario`] API.
 
 use anyhow::Result;
 
-use crate::algo::mergemin::{run_mergemin, MergeMinConfig};
-use crate::algo::millisort::{run_millisort, MilliSortConfig};
+use crate::algo::mergemin::MergeMin;
+use crate::algo::millisort::MilliSort;
 use crate::algo::nanosort::{
     pivot::{expected_bucket_fractions, Strategy},
-    run_nanosort, NanoSortConfig, PivotMode,
+    NanoSort, PivotMode,
 };
 use crate::coordinator::{f, RunOptions, Table};
+use crate::net::NetConfig;
+use crate::scenario::{RunReport, Scenario};
+
+/// Run one NanoSort scenario with the standard option plumbing.
+fn nanosort_run(
+    opts: &RunOptions,
+    workload: NanoSort,
+    nodes: usize,
+    net: NetConfig,
+    seed: u64,
+) -> Result<RunReport> {
+    Scenario::new(workload)
+        .nodes(nodes)
+        .net(net)
+        .compute(opts.compute)
+        .seed(seed)
+        .run()
+}
 
 /// Ablation (extension): the §4.2 pivot correction measured end-to-end —
 /// PivotSelect vs naive uniform pivots, final skew and runtime per depth.
@@ -28,17 +47,16 @@ pub fn fig_ablation(opts: &RunOptions) -> Result<Table> {
             let mut rt_acc = 0.0;
             let mut depth = 0;
             for s in 0..runs {
-                let cfg = NanoSortConfig {
+                let r = nanosort_run(
+                    opts,
+                    NanoSort { pivot_mode: mode, ..Default::default() },
                     nodes,
-                    keys_per_node: 16,
-                    pivot_mode: mode,
-                    seed: opts.seed + s,
-                    ..Default::default()
-                };
-                depth = cfg.depth();
-                let r = run_nanosort(&cfg, opts.compute.build()?);
+                    NetConfig::default(),
+                    opts.seed + s,
+                )?;
                 assert!(r.validation.ok());
-                skew_acc += r.skew;
+                depth = r.metric_u64("depth").unwrap_or(0);
+                skew_acc += r.metric_f64("skew").unwrap_or(1.0);
                 rt_acc += r.runtime().as_us_f64();
             }
             t.row(vec![
@@ -55,26 +73,24 @@ pub fn fig_ablation(opts: &RunOptions) -> Result<Table> {
 }
 
 /// Fig 4: MergeMin runtime vs incast (64 cores, 128 values/core).
-pub fn fig4(opts: &RunOptions) -> Table {
+pub fn fig4(opts: &RunOptions) -> Result<Table> {
     let mut t = Table::new(
         "Fig 4 — MergeMin runtime vs incast (64 cores, 128 values/core)",
         &["incast", "runtime_ns", "correct"],
     );
     for incast in [1usize, 2, 4, 8, 16, 32, 64] {
-        let cfg = MergeMinConfig {
-            incast,
-            seed: opts.seed,
-            ..Default::default()
-        };
-        let r = run_mergemin(&cfg, opts.compute.build().expect("compute"));
+        let r = Scenario::new(MergeMin { incast, ..Default::default() })
+            .compute(opts.compute)
+            .seed(opts.seed)
+            .run()?;
         t.row(vec![
             incast.to_string(),
             f(r.summary.makespan.as_ns_f64()),
-            r.correct().to_string(),
+            r.validation.ok().to_string(),
         ]);
     }
     t.note("paper: sweet spot at incast 8 (~750 ns merge phase); extremes lose");
-    t
+    Ok(t)
 }
 
 /// Fig 5: expected bucket-size fractions for the three pivot strategies
@@ -110,14 +126,11 @@ pub fn fig9(opts: &RunOptions) -> Result<Table> {
     );
     let cores_list: &[usize] = if opts.quick { &[16, 64] } else { &[16, 32, 64, 128, 256] };
     for &cores in cores_list {
-        let cfg = MilliSortConfig {
-            cores,
-            total_keys: 4096,
-            reduction_factor: 4,
-            seed: opts.seed,
-            ..Default::default()
-        };
-        let r = run_millisort(&cfg, opts.compute.build()?);
+        let r = Scenario::new(MilliSort::default())
+            .nodes(cores)
+            .compute(opts.compute)
+            .seed(opts.seed)
+            .run()?;
         t.row(vec![
             cores.to_string(),
             f(r.runtime().as_us_f64()),
@@ -135,14 +148,11 @@ pub fn fig10(opts: &RunOptions) -> Result<Table> {
         &["reduction_factor", "runtime_us", "correct"],
     );
     for rf in [2usize, 4, 8, 16, 32] {
-        let cfg = MilliSortConfig {
-            cores: 128,
-            total_keys: 4096,
-            reduction_factor: rf,
-            seed: opts.seed,
-            ..Default::default()
-        };
-        let r = run_millisort(&cfg, opts.compute.build()?);
+        let r = Scenario::new(MilliSort { reduction_factor: rf, ..Default::default() })
+            .nodes(128)
+            .compute(opts.compute)
+            .seed(opts.seed)
+            .run()?;
         t.row(vec![
             rf.to_string(),
             f(r.runtime().as_us_f64()),
@@ -151,10 +161,6 @@ pub fn fig10(opts: &RunOptions) -> Result<Table> {
     }
     t.note("paper: larger incast => slower (each pivot sorter processes more)");
     Ok(t)
-}
-
-fn nanosort_cfg(opts: &RunOptions) -> NanoSortConfig {
-    NanoSortConfig { seed: opts.seed, ..Default::default() }
 }
 
 /// Fig 11: NanoSort vs bucket count — runtime (a) and traffic (b)
@@ -174,12 +180,13 @@ pub fn fig11(opts: &RunOptions) -> Result<Vec<Table>> {
         if (nodes as f64).log(b as f64).fract() > 1e-9 {
             continue;
         }
-        let mut cfg = nanosort_cfg(opts);
-        cfg.nodes = nodes;
-        cfg.keys_per_node = 32;
-        cfg.buckets = b;
-        cfg.median_incast = b;
-        let r = run_nanosort(&cfg, opts.compute.build()?);
+        let r = nanosort_run(
+            opts,
+            NanoSort { keys_per_node: 32, buckets: b, median_incast: b, ..Default::default() },
+            nodes,
+            NetConfig::default(),
+            opts.seed,
+        )?;
         a.row(vec![
             b.to_string(),
             f(r.runtime().as_us_f64()),
@@ -204,10 +211,13 @@ pub fn fig12(opts: &RunOptions) -> Result<Table> {
         &["total_keys", "keys_per_core", "runtime_us", "correct"],
     );
     for kpn in [4usize, 8, 16, 32, 64] {
-        let mut cfg = nanosort_cfg(opts);
-        cfg.nodes = nodes;
-        cfg.keys_per_node = kpn;
-        let r = run_nanosort(&cfg, opts.compute.build()?);
+        let r = nanosort_run(
+            opts,
+            NanoSort { keys_per_node: kpn, ..Default::default() },
+            nodes,
+            NetConfig::default(),
+            opts.seed,
+        )?;
         t.row(vec![
             (nodes * kpn).to_string(),
             kpn.to_string(),
@@ -227,11 +237,14 @@ pub fn fig13(opts: &RunOptions) -> Result<Table> {
         &["keys_per_core", "skew_max_over_mean"],
     );
     for kpn in [4usize, 8, 16, 32, 64] {
-        let mut cfg = nanosort_cfg(opts);
-        cfg.nodes = nodes;
-        cfg.keys_per_node = kpn;
-        let r = run_nanosort(&cfg, opts.compute.build()?);
-        t.row(vec![kpn.to_string(), f(r.skew)]);
+        let r = nanosort_run(
+            opts,
+            NanoSort { keys_per_node: kpn, ..Default::default() },
+            nodes,
+            NetConfig::default(),
+            opts.seed,
+        )?;
+        t.row(vec![kpn.to_string(), f(r.metric_f64("skew").unwrap_or(1.0))]);
     }
     t.note("paper: more keys/core => better pivot visibility => less skew");
     Ok(t)
@@ -245,12 +258,18 @@ pub fn fig14(opts: &RunOptions) -> Result<Table> {
     );
     let mut base_us = 0.0;
     for extra in [0u64, 500, 1000, 2000, 4000] {
-        let mut cfg = nanosort_cfg(opts);
-        cfg.nodes = 256;
-        cfg.keys_per_node = 32;
-        cfg.net.tail_prob = (1, 100);
-        cfg.net.tail_extra_ns = extra;
-        let r = run_nanosort(&cfg, opts.compute.build()?);
+        let net = NetConfig {
+            tail_prob: (1, 100),
+            tail_extra_ns: extra,
+            ..NetConfig::default()
+        };
+        let r = nanosort_run(
+            opts,
+            NanoSort { keys_per_node: 32, ..Default::default() },
+            256,
+            net,
+            opts.seed,
+        )?;
         let us = r.runtime().as_us_f64();
         if extra == 0 {
             base_us = us;
@@ -274,13 +293,14 @@ pub fn fig15(opts: &RunOptions) -> Result<Vec<Table>> {
         &["switch_ns", "mean_idle_us", "idle_fraction"],
     );
     for sw in [50u64, 100, 263, 500, 1000] {
-        let mut cfg = nanosort_cfg(opts);
-        cfg.nodes = 64;
-        cfg.keys_per_node = 16;
-        cfg.buckets = 8;
-        cfg.median_incast = 8;
-        cfg.net.switch_latency_ns = sw;
-        let r = run_nanosort(&cfg, opts.compute.build()?);
+        let net = NetConfig { switch_latency_ns: sw, ..NetConfig::default() };
+        let r = nanosort_run(
+            opts,
+            NanoSort { keys_per_node: 16, buckets: 8, median_incast: 8, ..Default::default() },
+            64,
+            net,
+            opts.seed,
+        )?;
         let makespan = r.runtime().as_us_f64();
         let idle: f64 = r
             .summary
@@ -305,10 +325,8 @@ pub fn fig_multicast(opts: &RunOptions) -> Result<Table> {
     );
     let mut base_msgs = 0u64;
     for mcast in [false, true] {
-        let mut cfg = nanosort_cfg(opts);
-        cfg.nodes = nodes;
-        cfg.net.multicast = mcast;
-        let r = run_nanosort(&cfg, opts.compute.build()?);
+        let net = NetConfig { multicast: mcast, ..NetConfig::default() };
+        let r = nanosort_run(opts, NanoSort::default(), nodes, net, opts.seed)?;
         if !mcast {
             base_msgs = r.summary.net.msgs_sent;
         }
@@ -338,7 +356,7 @@ mod tests {
 
     #[test]
     fn fig4_has_sweet_spot_shape() {
-        let t = fig4(&quick());
+        let t = fig4(&quick()).unwrap();
         let times: Vec<f64> = t.rows.iter().map(|r| r[1].parse().unwrap()).collect();
         // Middle incasts beat both extremes.
         let best = times.iter().cloned().fold(f64::INFINITY, f64::min);

@@ -7,7 +7,7 @@ pub use report::{f, Table};
 
 use std::rc::Rc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::compute::{LocalCompute, NativeCompute, XlaCompute};
 
@@ -80,6 +80,16 @@ impl Args {
         }
     }
 
+    /// Like [`Args::value`], but a trailing `--name` with no value is an
+    /// error instead of a silent `None` (used by the workload registry).
+    pub fn value_checked(&mut self, name: &str) -> Result<Option<String>> {
+        let want = format!("--{name}");
+        if self.items.last().map(|a| *a == want).unwrap_or(false) {
+            bail!("--{name} expects a value");
+        }
+        Ok(self.value(name))
+    }
+
     /// Value of `--name <value>` or `--name=<value>` (consumes both).
     pub fn value(&mut self, name: &str) -> Option<String> {
         let want = format!("--{name}");
@@ -103,19 +113,33 @@ impl Args {
         self.value(name).and_then(|v| v.parse().ok())
     }
 
+    /// Like [`Args::num`], but a dangling `--name` or a malformed number
+    /// is an error instead of a silent default.
+    pub fn num_checked<T: std::str::FromStr>(&mut self, name: &str) -> Result<Option<T>> {
+        match self.value_checked(name)? {
+            None => Ok(None),
+            Some(raw) => match raw.parse() {
+                Ok(v) => Ok(Some(v)),
+                Err(_) => bail!("--{name} expects a number, got {raw:?}"),
+            },
+        }
+    }
+
     /// Remaining unconsumed arguments (for error reporting).
     pub fn rest(&self) -> &[String] {
         &self.items
     }
 
-    /// Standard options block shared by subcommands.
-    pub fn run_options(&mut self) -> RunOptions {
-        RunOptions {
+    /// Standard options block shared by subcommands. Dangling or
+    /// malformed `--seed`/`--runs` values are errors, matching the
+    /// strictness of registry workload parameters.
+    pub fn run_options(&mut self) -> Result<RunOptions> {
+        Ok(RunOptions {
             compute: if self.flag("xla") { ComputeChoice::Xla } else { ComputeChoice::Native },
-            seed: self.num("seed").unwrap_or(1),
-            runs: self.num("runs").unwrap_or(1),
+            seed: self.num_checked("seed")?.unwrap_or(1),
+            runs: self.num_checked("runs")?.unwrap_or(1),
             quick: self.flag("quick"),
-        }
+        })
     }
 }
 
@@ -132,7 +156,7 @@ mod tests {
         let mut a = args("fig 9 --xla --seed 7 --runs=3");
         assert_eq!(a.positional().as_deref(), Some("fig"));
         assert_eq!(a.positional().as_deref(), Some("9"));
-        let opts = a.run_options();
+        let opts = a.run_options().unwrap();
         assert_eq!(opts.compute, ComputeChoice::Xla);
         assert_eq!(opts.seed, 7);
         assert_eq!(opts.runs, 3);
@@ -145,7 +169,7 @@ mod tests {
         let mut a = args("fig 4");
         a.positional();
         a.positional();
-        let opts = a.run_options();
+        let opts = a.run_options().unwrap();
         assert_eq!(opts.compute, ComputeChoice::Native);
         assert_eq!(opts.seed, 1);
     }
@@ -153,5 +177,76 @@ mod tests {
     #[test]
     fn native_compute_builds() {
         assert!(ComputeChoice::Native.build().is_ok());
+    }
+
+    #[test]
+    fn trailing_flag_with_no_value_is_silent_none_via_value() {
+        // `value` keeps the historical lenient behavior...
+        let mut a = args("run nanosort --seed");
+        a.positional();
+        a.positional();
+        assert_eq!(a.value("seed"), None);
+        assert!(a.rest().is_empty(), "the dangling flag is still consumed");
+    }
+
+    #[test]
+    fn trailing_flag_with_no_value_errors_via_value_checked() {
+        // ...while `value_checked` (the registry path) reports it.
+        let mut a = args("--seed");
+        let err = a.value_checked("seed").unwrap_err().to_string();
+        assert!(err.contains("--seed expects a value"), "{err}");
+    }
+
+    #[test]
+    fn value_checked_passes_through_normal_and_eq_forms() {
+        let mut a = args("--seed 7");
+        assert_eq!(a.value_checked("seed").unwrap().as_deref(), Some("7"));
+        let mut a = args("--seed=8");
+        assert_eq!(a.value_checked("seed").unwrap().as_deref(), Some("8"));
+        let mut a = args("--runs 3");
+        assert_eq!(a.value_checked("seed").unwrap(), None);
+        assert_eq!(a.rest(), ["--runs", "3"]);
+    }
+
+    #[test]
+    fn repeated_value_flags_consume_first_occurrence_only() {
+        let mut a = args("--seed 1 --seed 2");
+        assert_eq!(a.value("seed").as_deref(), Some("1"));
+        // The repeat is left behind and surfaces as an unconsumed error.
+        assert_eq!(a.rest(), ["--seed", "2"]);
+    }
+
+    #[test]
+    fn repeated_boolean_flags_surface_as_unconsumed() {
+        let mut a = args("fig 9 --xla --xla");
+        a.positional();
+        a.positional();
+        let opts = a.run_options().unwrap();
+        assert_eq!(opts.compute, ComputeChoice::Xla);
+        assert_eq!(a.rest(), ["--xla"]);
+    }
+
+    #[test]
+    fn malformed_numbers_fall_back_to_default_via_num() {
+        let mut a = args("--seed banana");
+        assert_eq!(a.num::<u64>("seed"), None);
+        assert!(a.rest().is_empty(), "flag and value both consumed");
+    }
+
+    #[test]
+    fn run_options_rejects_malformed_and_dangling_env_flags() {
+        let err = args("--seed banana").run_options().unwrap_err().to_string();
+        assert!(err.contains("--seed expects a number"), "{err}");
+        assert!(args("--runs").run_options().is_err());
+        let opts = args("--seed 9").run_options().unwrap();
+        assert_eq!(opts.seed, 9);
+    }
+
+    #[test]
+    fn positional_skips_flags() {
+        let mut a = args("--xla run");
+        assert_eq!(a.positional().as_deref(), Some("run"));
+        assert_eq!(a.rest(), ["--xla"]);
+        assert_eq!(a.positional(), None);
     }
 }

@@ -16,9 +16,18 @@
 //!   Rust oracle) and [`compute::XlaCompute`] (the three-layer path: Pallas →
 //!   JAX → HLO text → PJRT, loaded by [`runtime::XlaEngine`]).
 //! - [`algo`] — NanoSort (the paper's contribution), MilliSort (the
-//!   baseline), MergeMin (the §3.1 design-space probe).
+//!   baseline), MergeMin (the §3.1 design-space probe), set algebra (the
+//!   §3.2 nanoTask workload).
 //! - [`graysort`] — GraySort 1M benchmark harness + output validation.
-//! - [`coordinator`] — config, drivers, and figure-style reports.
+//! - [`coordinator`] — CLI argument cursor, data-plane selection, and
+//!   figure-style reports.
+//! - [`scenario`] — the unified run API: every algorithm is a
+//!   [`scenario::Workload`] executed through a [`scenario::Scenario`]
+//!   (fleet size, network, core model, data plane, seed) and reported as
+//!   a [`scenario::RunReport`]; [`scenario::registry`] maps workload
+//!   names to typed parameter descriptors for the data-driven CLI. The
+//!   per-algorithm `run_xxx(cfg, compute)` functions remain as deprecated
+//!   shims over this layer.
 //! - [`benchfig`] — regenerates every table and figure in the paper's
 //!   evaluation (see DESIGN.md §4 for the index).
 //!
@@ -33,5 +42,6 @@ pub mod graysort;
 pub mod nanopu;
 pub mod net;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod stats;

@@ -2,24 +2,30 @@
 //!
 //! ```text
 //! repro fig <id|all> [--xla] [--seed N] [--runs N] [--quick] [--csv]
-//! repro run nanosort  [--nodes N] [--kpn K] [--buckets B] [--incast F]
-//!                     [--values] [--no-multicast] [--xla] [--seed N]
-//! repro run millisort [--cores N] [--keys K] [--rf R] [--xla] [--seed N]
-//! repro run mergemin  [--cores N] [--vpc V] [--incast K] [--xla] [--seed N]
-//! repro artifacts     # list loaded XLA artifacts
-//! repro list          # list figure ids
+//! repro run nanosort   [--nodes N] [--kpn K] [--buckets B] [--incast F]
+//!                      [--values] [--naive-pivots] [--no-multicast] [--xla] [--seed N]
+//! repro run millisort  [--cores N] [--keys K] [--rf R] [--no-multicast] [--xla] [--seed N]
+//! repro run mergemin   [--cores N] [--vpc V] [--incast K] [--no-multicast] [--xla] [--seed N]
+//! repro run setalgebra [--cores N] [--lists Q] [--incast K] [--ids I]
+//!                      [--no-multicast] [--xla] [--seed N]
+//! repro artifacts      # list loaded XLA artifacts
+//! repro list           # list figure ids and registered workloads
 //! ```
-
+//!
+//! `repro run <name>` is registry-driven: the workload is looked up in
+//! [`nanosort::scenario::registry`], its typed parameter descriptors are
+//! parsed from the flags, and the run executes through one
+//! [`nanosort::scenario::Scenario`] code path shared by all workloads —
+//! adding a workload to the registry adds it here (and to the help text)
+//! with no CLI changes.
 
 use anyhow::{bail, Result};
 
-use nanosort::algo::mergemin::{run_mergemin, MergeMinConfig};
-use nanosort::algo::millisort::{run_millisort, MilliSortConfig};
-use nanosort::algo::nanosort::{run_nanosort, NanoSortConfig, PivotMode};
-use nanosort::algo::setalgebra::{run_setalgebra, SetAlgebraConfig};
 use nanosort::benchfig::{run_figure, ALL_FIGURES};
-use nanosort::coordinator::{f, Args};
+use nanosort::coordinator::Args;
+use nanosort::net::NetConfig;
 use nanosort::runtime::XlaEngine;
+use nanosort::scenario::{registry, Scenario};
 
 fn main() {
     if let Err(e) = real_main() {
@@ -36,29 +42,32 @@ fn real_main() -> Result<()> {
         Some("artifacts") => cmd_artifacts(),
         Some("list") => {
             println!("figure ids: {}", ALL_FIGURES.join(", "));
+            println!("workloads : {}", registry::names().join(", "));
             Ok(())
         }
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown command {cmd:?}\n");
             }
-            println!("{}", HELP);
+            println!("{}", help());
             Ok(())
         }
     }
 }
 
-const HELP: &str = "repro — NanoSort reproduction CLI
+fn help() -> String {
+    format!(
+        "repro — NanoSort reproduction CLI
   repro fig <id|all> [--xla] [--seed N] [--runs N] [--quick] [--csv]
-  repro run nanosort  [--nodes N] [--kpn K] [--buckets B] [--incast F] [--values] [--no-multicast] [--xla]
-  repro run millisort [--cores N] [--keys K] [--rf R] [--xla]
-  repro run mergemin  [--cores N] [--vpc V] [--incast K] [--xla]
-  repro artifacts | repro list";
+{}  repro artifacts | repro list",
+        registry::cli_help()
+    )
+}
 
 fn cmd_fig(mut args: Args) -> Result<()> {
     let id = args.positional().unwrap_or_else(|| "all".into());
     let csv = args.flag("csv");
-    let opts = args.run_options();
+    let opts = args.run_options()?;
     ensure_consumed(&args)?;
     let ids: Vec<&str> = if id == "all" {
         ALL_FIGURES.to_vec()
@@ -80,122 +89,27 @@ fn cmd_fig(mut args: Args) -> Result<()> {
     Ok(())
 }
 
+/// The single data-driven run path: registry lookup → parameter parse →
+/// workload construction → scenario execution → unified report.
 fn cmd_run(mut args: Args) -> Result<()> {
     let which = args.positional().unwrap_or_default();
-    match which.as_str() {
-        "nanosort" => {
-            let nodes = args.num("nodes").unwrap_or(4096);
-            let kpn = args.num("kpn").unwrap_or(16);
-            let buckets = args.num("buckets").unwrap_or(16);
-            let incast = args.num("incast").unwrap_or(buckets);
-            let values = args.flag("values");
-            let no_mcast = args.flag("no-multicast");
-            let naive = args.flag("naive-pivots");
-            let opts = args.run_options();
-            ensure_consumed(&args)?;
-            let mut cfg = NanoSortConfig {
-                nodes,
-                keys_per_node: kpn,
-                buckets,
-                median_incast: incast,
-                shuffle_values: values,
-                pivot_mode: if naive { PivotMode::Naive } else { PivotMode::Paper },
-                seed: opts.seed,
-                ..Default::default()
-            };
-            cfg.net.multicast = !no_mcast;
-            let r = run_nanosort(&cfg, opts.compute.build()?);
-            println!(
-                "nanosort: nodes={nodes} keys={} buckets={buckets} incast={incast}",
-                cfg.total_keys()
-            );
-            println!(
-                "runtime = {:.2} µs | valid = {} | skew = {:.2} | msgs = {} | util = {:.1}%",
-                r.runtime().as_us_f64(),
-                r.validation.ok(),
-                r.skew,
-                r.summary.net.msgs_sent,
-                100.0 * r.summary.mean_utilization()
-            );
-            for l in &r.levels {
-                println!(
-                    "  stage {}: busy mean {} µs max {} µs | idle mean {} µs max {} µs",
-                    l.stage,
-                    f(l.mean_busy_us),
-                    f(l.max_busy_us),
-                    f(l.mean_idle_us),
-                    f(l.max_idle_us)
-                );
-            }
-            Ok(())
-        }
-        "millisort" => {
-            let cores = args.num("cores").unwrap_or(64);
-            let keys = args.num("keys").unwrap_or(4096);
-            let rf = args.num("rf").unwrap_or(4);
-            let opts = args.run_options();
-            ensure_consumed(&args)?;
-            let cfg = MilliSortConfig {
-                cores,
-                total_keys: keys,
-                reduction_factor: rf,
-                seed: opts.seed,
-                ..Default::default()
-            };
-            let r = run_millisort(&cfg, opts.compute.build()?);
-            println!(
-                "millisort: cores={cores} keys={keys} rf={rf}\nruntime = {:.2} µs | valid = {} | msgs = {}",
-                r.runtime().as_us_f64(),
-                r.validation.ok(),
-                r.summary.net.msgs_sent
-            );
-            Ok(())
-        }
-        "mergemin" => {
-            let cores = args.num("cores").unwrap_or(64);
-            let vpc = args.num("vpc").unwrap_or(128);
-            let incast = args.num("incast").unwrap_or(8);
-            let opts = args.run_options();
-            ensure_consumed(&args)?;
-            let cfg = MergeMinConfig {
-                cores,
-                values_per_core: vpc,
-                incast,
-                seed: opts.seed,
-                ..Default::default()
-            };
-            let r = run_mergemin(&cfg, opts.compute.build()?);
-            println!(
-                "mergemin: cores={cores} vpc={vpc} incast={incast}\nruntime = {:.0} ns | correct = {}",
-                r.summary.makespan.as_ns_f64(),
-                r.correct()
-            );
-            Ok(())
-        }
-        "setalgebra" => {
-            let cores = args.num("cores").unwrap_or(64);
-            let lists = args.num("lists").unwrap_or(4);
-            let incast = args.num("incast").unwrap_or(8);
-            let opts = args.run_options();
-            ensure_consumed(&args)?;
-            let cfg = SetAlgebraConfig {
-                cores,
-                lists,
-                incast,
-                seed: opts.seed,
-                ..Default::default()
-            };
-            let r = run_setalgebra(&cfg, opts.compute.build()?);
-            println!(
-                "setalgebra: cores={cores} lists={lists} incast={incast}\nruntime = {:.0} ns | |intersection| = {} | correct = {}",
-                r.summary.makespan.as_ns_f64(),
-                r.found,
-                r.correct()
-            );
-            Ok(())
-        }
-        other => bail!("unknown run target {other:?} (nanosort|millisort|mergemin|setalgebra)"),
-    }
+    let spec = registry::find(&which)?;
+    let params = registry::parse_args(spec, &mut args)?;
+    let no_mcast = args.flag("no-multicast");
+    let opts = args.run_options()?;
+    ensure_consumed(&args)?;
+
+    let workload = (spec.build)(&params)?;
+    let nodes = params.u64(spec.nodes_param.name)? as usize;
+    let net = NetConfig { multicast: !no_mcast, ..NetConfig::default() };
+    let report = Scenario::from_dyn(workload)
+        .nodes(nodes)
+        .net(net)
+        .compute(opts.compute)
+        .seed(opts.seed)
+        .run()?;
+    print!("{}", report.render());
+    Ok(())
 }
 
 fn cmd_artifacts() -> Result<()> {
@@ -218,4 +132,3 @@ fn ensure_consumed(args: &Args) -> Result<()> {
     }
     Ok(())
 }
-

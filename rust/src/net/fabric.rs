@@ -136,7 +136,13 @@ impl Fabric {
 
     /// Inject one unicast message at `depart_ready` (the moment the sender
     /// core hands it to the NIC). Returns the delivery time at `dst`.
-    pub fn unicast(&mut self, src: usize, dst: usize, payload_bytes: u64, depart_ready: Time) -> Time {
+    pub fn unicast(
+        &mut self,
+        src: usize,
+        dst: usize,
+        payload_bytes: u64,
+        depart_ready: Time,
+    ) -> Time {
         let arrival = self.route(src, dst, payload_bytes, depart_ready, true);
         self.stats.msgs_sent += 1;
         arrival
@@ -171,7 +177,14 @@ impl Fabric {
     }
 
     /// Shared unicast path: egress serialization + propagation + ingress.
-    fn route(&mut self, src: usize, dst: usize, payload_bytes: u64, ready: Time, _count: bool) -> Time {
+    fn route(
+        &mut self,
+        src: usize,
+        dst: usize,
+        payload_bytes: u64,
+        ready: Time,
+        _count: bool,
+    ) -> Time {
         let ser = self.cfg.serialization(payload_bytes);
         let depart = ready.max(self.egress_free[src]);
         self.egress_free[src] = depart + ser;

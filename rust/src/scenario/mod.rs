@@ -1,0 +1,496 @@
+//! L3.5 scenario layer: one run API for every workload.
+//!
+//! The paper's thesis is that nanosecond-scale granularity pays off across
+//! *many* workloads — NanoSort, MilliSort, MergeMin, and set algebra are
+//! all instances of one pattern: partition the input, run event-driven
+//! node programs over the fabric, aggregate and validate the result. This
+//! module captures that pattern once:
+//!
+//! - [`Workload`] — what an algorithm must provide: input generation,
+//!   program construction, multicast-group registration, and result
+//!   extraction/validation (all inside [`Workload::build`]).
+//! - [`Scenario`] — the builder that owns every *environment* knob
+//!   (fleet size, [`NetConfig`], [`CoreModel`], data plane, seed) and the
+//!   single engine/fabric wiring path shared by the CLI, the figures, the
+//!   benches, and the examples.
+//! - [`RunReport`] — the unified outcome: makespan, per-stage busy/idle
+//!   breakdown, net stats, validation, and workload-specific metrics.
+//! - [`registry`] — the static name → [`WorkloadSpec`] table (typed
+//!   parameter descriptors) that drives `repro run <name>` from data.
+//!
+//! ```no_run
+//! use nanosort::algo::nanosort::NanoSort;
+//! use nanosort::scenario::Scenario;
+//!
+//! let report = Scenario::new(NanoSort::default())
+//!     .nodes(256)
+//!     .seed(42)
+//!     .run()
+//!     .unwrap();
+//! assert!(report.validation.ok());
+//! ```
+//!
+//! New scenarios (stragglers, skewed key distributions, failure injection,
+//! multi-job runs) are added as single self-contained [`Workload`] impls
+//! plus one [`registry`] entry — no CLI, figure, or engine changes.
+
+pub mod registry;
+
+pub use registry::{ParamKind, ParamSpec, WorkloadSpec};
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::compute::LocalCompute;
+use crate::coordinator::{f, ComputeChoice};
+use crate::cpu::CoreModel;
+use crate::graysort::ValidationReport;
+use crate::nanopu::{NodeId, Program};
+use crate::net::{Fabric, NetConfig, Topology};
+use crate::sim::{Engine, RunSummary, Time, MAX_STAGES};
+
+/// Everything the environment (not the workload) decides about a run.
+pub struct ScenarioEnv {
+    /// Fleet size (simulated cores).
+    pub nodes: usize,
+    /// Fabric configuration (latencies, bandwidth, multicast, tails).
+    pub net: NetConfig,
+    /// Endpoint core cost model.
+    pub core: CoreModel,
+    /// Node-local data plane.
+    pub compute: Rc<dyn LocalCompute>,
+    /// Master seed (input generation, fabric jitter, per-node RNG streams).
+    pub seed: u64,
+}
+
+/// Result-extraction hook: runs after quiescence with the engine summary.
+pub type Finish = Box<dyn FnOnce(&ScenarioEnv, RunSummary) -> RunReport>;
+
+/// Everything a workload hands the engine for one run.
+pub struct Built<P: Program> {
+    /// One program per node (`programs.len()` must equal `env.nodes`).
+    pub programs: Vec<P>,
+    /// Multicast groups, registered with the engine in order (index = id).
+    pub groups: Vec<Vec<NodeId>>,
+    /// Extracts the workload's outputs (validation, metrics) into the
+    /// unified report once the run completes.
+    pub finish: Finish,
+}
+
+/// A distributed workload runnable on the simulated nanoPU cluster.
+///
+/// Implementations own the *what* (input generation, node programs,
+/// validation); the [`Scenario`] owns the *where* (fleet size, network,
+/// core model, data plane, seed). `run_xxx(cfg, compute)` shims remain as
+/// deprecated entry points that route through this trait.
+pub trait Workload {
+    /// The node program type this workload runs.
+    type Prog: Program;
+
+    /// Registry/report name (e.g. `"nanosort"`).
+    fn name(&self) -> &'static str;
+
+    /// Fleet size used when the scenario does not set one.
+    fn default_nodes(&self) -> usize;
+
+    /// Generate inputs and construct one program per node, plus multicast
+    /// groups and the result-extraction hook.
+    fn build(&self, env: &ScenarioEnv) -> Result<Built<Self::Prog>>;
+}
+
+/// Object-safe view of a [`Workload`]; the blanket impl contains the one
+/// engine/fabric wiring path every run goes through.
+pub trait DynWorkload {
+    fn name(&self) -> &'static str;
+    fn default_nodes(&self) -> usize;
+    fn run_on(&self, env: &ScenarioEnv) -> Result<RunReport>;
+}
+
+impl<W: Workload> DynWorkload for W {
+    fn name(&self) -> &'static str {
+        Workload::name(self)
+    }
+
+    fn default_nodes(&self) -> usize {
+        Workload::default_nodes(self)
+    }
+
+    fn run_on(&self, env: &ScenarioEnv) -> Result<RunReport> {
+        let built = self.build(env)?;
+        anyhow::ensure!(
+            built.programs.len() == env.nodes,
+            "workload {} built {} programs for {} nodes",
+            Workload::name(self),
+            built.programs.len(),
+            env.nodes
+        );
+        let fabric = Fabric::new(Topology::paper(env.nodes), env.net.clone(), env.seed);
+        let mut engine = Engine::new(built.programs, fabric, env.core.clone(), env.seed);
+        for members in built.groups {
+            engine.add_group(members);
+        }
+        let summary = engine.run();
+        Ok((built.finish)(env, summary))
+    }
+}
+
+/// Which data plane a scenario runs on.
+enum ComputeSel {
+    Choice(ComputeChoice),
+    Instance(Rc<dyn LocalCompute>),
+}
+
+/// Builder for one simulated run:
+/// `Scenario::new(workload).nodes(n).net(..).seed(s).run()`.
+pub struct Scenario {
+    workload: Box<dyn DynWorkload>,
+    nodes: Option<usize>,
+    net: NetConfig,
+    core: CoreModel,
+    compute: ComputeSel,
+    seed: u64,
+}
+
+impl Scenario {
+    pub fn new(workload: impl Workload + 'static) -> Self {
+        Scenario::from_dyn(Box::new(workload))
+    }
+
+    /// Registry path: the workload arrives type-erased.
+    pub fn from_dyn(workload: Box<dyn DynWorkload>) -> Self {
+        Scenario {
+            workload,
+            nodes: None,
+            net: NetConfig::default(),
+            core: CoreModel::default(),
+            compute: ComputeSel::Choice(ComputeChoice::Native),
+            seed: 1,
+        }
+    }
+
+    /// Fleet size; defaults to [`Workload::default_nodes`].
+    pub fn nodes(mut self, n: usize) -> Self {
+        self.nodes = Some(n);
+        self
+    }
+
+    pub fn net(mut self, net: NetConfig) -> Self {
+        self.net = net;
+        self
+    }
+
+    pub fn core(mut self, core: CoreModel) -> Self {
+        self.core = core;
+        self
+    }
+
+    /// Select the data plane by kind (built lazily in [`Scenario::run`]).
+    pub fn compute(mut self, choice: ComputeChoice) -> Self {
+        self.compute = ComputeSel::Choice(choice);
+        self
+    }
+
+    /// Use an already-constructed data plane (shared across runs).
+    pub fn compute_with(mut self, plane: Rc<dyn LocalCompute>) -> Self {
+        self.compute = ComputeSel::Instance(plane);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Build the environment, run to quiescence, extract the report.
+    pub fn run(self) -> Result<RunReport> {
+        let nodes = self.nodes.unwrap_or_else(|| self.workload.default_nodes());
+        let compute = match self.compute {
+            ComputeSel::Choice(choice) => choice.build()?,
+            ComputeSel::Instance(plane) => plane,
+        };
+        let env = ScenarioEnv {
+            nodes,
+            net: self.net,
+            core: self.core,
+            compute,
+            seed: self.seed,
+        };
+        self.workload.run_on(&env)
+    }
+}
+
+/// Unified validation outcome. Sort workloads carry the full
+/// [`ValidationReport`]; scalar workloads carry a pass/fail check with a
+/// human-readable detail line.
+#[derive(Debug, Clone)]
+pub struct Validation {
+    pub passed: bool,
+    pub detail: String,
+    /// Present for workloads validated as distributed sorts.
+    pub sort: Option<ValidationReport>,
+}
+
+impl Validation {
+    pub fn check(passed: bool, detail: impl Into<String>) -> Self {
+        Validation { passed, detail: detail.into(), sort: None }
+    }
+
+    pub fn from_sort(report: ValidationReport) -> Self {
+        Validation {
+            passed: report.ok(),
+            detail: format!(
+                "sorted={} permutation={} values={}",
+                report.globally_sorted, report.is_permutation, report.values_intact
+            ),
+            sort: Some(report),
+        }
+    }
+
+    pub fn ok(&self) -> bool {
+        self.passed
+    }
+}
+
+/// Typed workload-specific report value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MetricValue {
+    U64(u64),
+    F64(f64),
+    Bool(bool),
+}
+
+impl std::fmt::Display for MetricValue {
+    fn fmt(&self, w: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MetricValue::U64(v) => write!(w, "{v}"),
+            MetricValue::F64(v) => write!(w, "{}", f(*v)),
+            MetricValue::Bool(v) => write!(w, "{v}"),
+        }
+    }
+}
+
+/// Named workload-specific metric (e.g. `skew`, `found_min`).
+#[derive(Debug, Clone)]
+pub struct Metric {
+    pub name: &'static str,
+    pub value: MetricValue,
+}
+
+/// Per-stage busy/idle summary across nodes (Fig 16's breakdown,
+/// generalized to every workload; stage = recursion level for NanoSort).
+#[derive(Debug, Clone)]
+pub struct StageBreakdown {
+    pub stage: usize,
+    pub mean_busy_us: f64,
+    pub mean_idle_us: f64,
+    pub max_busy_us: f64,
+    pub max_idle_us: f64,
+}
+
+/// Summarize the engine's per-node stage accounting: one row per stage,
+/// from 0 through the highest stage any node touched.
+pub fn stage_breakdown(summary: &RunSummary) -> Vec<StageBreakdown> {
+    let max_stage = (0..MAX_STAGES)
+        .rev()
+        .find(|&s| {
+            summary
+                .node_stats
+                .iter()
+                .any(|n| n.busy[s] > Time::ZERO || n.idle[s] > Time::ZERO)
+        })
+        .unwrap_or(0);
+    let n = summary.node_stats.len().max(1) as f64;
+    (0..=max_stage)
+        .map(|stage| {
+            let mut row = StageBreakdown {
+                stage,
+                mean_busy_us: 0.0,
+                mean_idle_us: 0.0,
+                max_busy_us: 0.0,
+                max_idle_us: 0.0,
+            };
+            for s in &summary.node_stats {
+                let busy = s.busy[stage].as_us_f64();
+                let idle = s.idle[stage].as_us_f64();
+                row.mean_busy_us += busy;
+                row.mean_idle_us += idle;
+                row.max_busy_us = row.max_busy_us.max(busy);
+                row.max_idle_us = row.max_idle_us.max(idle);
+            }
+            row.mean_busy_us /= n;
+            row.mean_idle_us /= n;
+            row
+        })
+        .collect()
+}
+
+/// Unified outcome of one scenario run, identical in shape across all
+/// workloads: makespan + net stats (in `summary`), per-stage busy/idle
+/// breakdown, validation, and named workload metrics.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub workload: &'static str,
+    pub nodes: usize,
+    pub seed: u64,
+    /// Data-plane name (`native` / `xla`).
+    pub compute: &'static str,
+    pub summary: RunSummary,
+    pub validation: Validation,
+    pub stages: Vec<StageBreakdown>,
+    pub metrics: Vec<Metric>,
+}
+
+impl RunReport {
+    /// Fill the common fields; workloads chain [`RunReport::with_metric`].
+    pub fn new(
+        workload: &'static str,
+        env: &ScenarioEnv,
+        summary: RunSummary,
+        validation: Validation,
+    ) -> Self {
+        let stages = stage_breakdown(&summary);
+        RunReport {
+            workload,
+            nodes: env.nodes,
+            seed: env.seed,
+            compute: env.compute.name(),
+            summary,
+            validation,
+            stages,
+            metrics: Vec::new(),
+        }
+    }
+
+    pub fn with_metric(mut self, name: &'static str, value: MetricValue) -> Self {
+        self.metrics.push(Metric { name, value });
+        self
+    }
+
+    /// Job completion time (latest busy-until across nodes).
+    pub fn runtime(&self) -> Time {
+        self.summary.makespan
+    }
+
+    pub fn metric(&self, name: &str) -> Option<MetricValue> {
+        self.metrics.iter().find(|m| m.name == name).map(|m| m.value)
+    }
+
+    pub fn metric_u64(&self, name: &str) -> Option<u64> {
+        match self.metric(name) {
+            Some(MetricValue::U64(v)) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn metric_f64(&self, name: &str) -> Option<f64> {
+        match self.metric(name) {
+            Some(MetricValue::F64(v)) => Some(v),
+            Some(MetricValue::U64(v)) => Some(v as f64),
+            _ => None,
+        }
+    }
+
+    /// Deterministic text rendering (the CLI's `repro run` output; also the
+    /// byte-for-byte artifact the determinism tests compare).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "{}: nodes={} seed={} compute={}\n",
+            self.workload, self.nodes, self.seed, self.compute
+        );
+        out += &format!(
+            "runtime = {:.2} µs ({:.0} ns) | valid = {} | msgs = {} | util = {:.1}%\n",
+            self.summary.makespan.as_us_f64(),
+            self.summary.makespan.as_ns_f64(),
+            self.validation.passed,
+            self.summary.net.msgs_sent,
+            100.0 * self.summary.mean_utilization()
+        );
+        if !self.validation.detail.is_empty() {
+            out += &format!("validation: {}\n", self.validation.detail);
+        }
+        for m in &self.metrics {
+            out += &format!("{} = {}\n", m.name, m.value);
+        }
+        for l in &self.stages {
+            out += &format!(
+                "  stage {}: busy mean {} µs max {} µs | idle mean {} µs max {} µs\n",
+                l.stage,
+                f(l.mean_busy_us),
+                f(l.max_busy_us),
+                f(l.mean_idle_us),
+                f(l.max_idle_us)
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::mergemin::MergeMin;
+    use crate::algo::nanosort::NanoSort;
+
+    #[test]
+    fn scenario_defaults_run_clean() {
+        let r = Scenario::new(MergeMin::default()).run().unwrap();
+        assert_eq!(r.workload, "mergemin");
+        assert_eq!(r.nodes, 64);
+        assert!(r.validation.ok(), "{}", r.validation.detail);
+        assert!(r.runtime() > Time::ZERO);
+        assert_eq!(r.compute, "native");
+    }
+
+    #[test]
+    fn scenario_knobs_apply() {
+        let net = NetConfig { multicast: false, ..NetConfig::default() };
+        let r = Scenario::new(NanoSort { keys_per_node: 8, ..Default::default() })
+            .nodes(16)
+            .net(net)
+            .seed(9)
+            .run()
+            .unwrap();
+        assert_eq!(r.nodes, 16);
+        assert_eq!(r.seed, 9);
+        assert!(r.validation.ok());
+        assert_eq!(r.summary.net.multicasts, 0);
+    }
+
+    #[test]
+    fn bad_fleet_size_is_an_error_not_a_panic() {
+        // 17 is not buckets^r for buckets=16.
+        let err = Scenario::new(NanoSort::default()).nodes(17).run();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn report_metrics_typed_accessors() {
+        let r = Scenario::new(MergeMin::default()).nodes(8).run().unwrap();
+        assert!(r.metric_u64("found_min").is_some());
+        assert_eq!(r.metric_u64("found_min"), r.metric_u64("true_min"));
+        assert!(r.metric("nope").is_none());
+        assert!(r.metric_f64("found_min").is_some(), "u64 metrics widen to f64");
+    }
+
+    #[test]
+    fn render_contains_the_load_bearing_lines() {
+        let r = Scenario::new(MergeMin::default()).nodes(8).run().unwrap();
+        let s = r.render();
+        assert!(s.contains("mergemin: nodes=8"));
+        assert!(s.contains("runtime = "));
+        assert!(s.contains("valid = true"));
+        assert!(s.contains("found_min = "));
+        assert!(s.contains("stage 0:"));
+    }
+
+    #[test]
+    fn stage_breakdown_covers_active_stages_only() {
+        // MergeMin never calls set_stage: exactly one stage row.
+        let r = Scenario::new(MergeMin::default()).nodes(8).run().unwrap();
+        assert_eq!(r.stages.len(), 1);
+        // NanoSort at 256 = 16^2 runs stages 0, 1, and the final stage 2.
+        let r = Scenario::new(NanoSort::default()).nodes(256).run().unwrap();
+        assert_eq!(r.stages.len(), 3);
+    }
+}

@@ -1,0 +1,451 @@
+//! Static workload registry: name → spec (typed parameter descriptors +
+//! constructor), so `repro run <name> --param value` is one data-driven
+//! code path and cross-workload tests can enumerate every scenario.
+//!
+//! Adding a workload = one [`Workload`] impl + one [`WorkloadSpec`] row
+//! here; the CLI, help text, and integration tests pick it up from data.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::algo::mergemin::MergeMin;
+use crate::algo::millisort::MilliSort;
+use crate::algo::nanosort::{NanoSort, PivotMode};
+use crate::algo::setalgebra::SetAlgebra;
+use crate::coordinator::Args;
+
+use super::DynWorkload;
+
+/// How a parameter parses from the CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    /// `--name <n>` — unsigned integer.
+    U64,
+    /// `--name` — boolean presence flag.
+    Flag,
+}
+
+/// Where a parameter's value comes from when the CLI omits it.
+#[derive(Debug, Clone, Copy)]
+pub enum ParamDefault {
+    U64(u64),
+    /// Follows the resolved value of an earlier parameter in the spec
+    /// (e.g. nanosort's `--incast` defaults to `--buckets`).
+    FromParam(&'static str),
+    /// Flags default to off.
+    False,
+}
+
+/// One typed parameter descriptor.
+pub struct ParamSpec {
+    pub name: &'static str,
+    pub kind: ParamKind,
+    pub default: ParamDefault,
+    pub help: &'static str,
+}
+
+/// A parsed parameter value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamValue {
+    U64(u64),
+    Flag(bool),
+}
+
+/// Resolved parameter values for one workload invocation.
+#[derive(Debug, Default, Clone)]
+pub struct ParamMap(HashMap<&'static str, ParamValue>);
+
+impl ParamMap {
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        match self.0.get(name) {
+            Some(ParamValue::U64(v)) => Ok(*v),
+            _ => bail!("missing numeric parameter {name:?}"),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        matches!(self.0.get(name), Some(ParamValue::Flag(true)))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.0.contains_key(name)
+    }
+
+    fn set(&mut self, name: &'static str, value: ParamValue) {
+        self.0.insert(name, value);
+    }
+}
+
+/// One registry row: everything the CLI and the tests need to construct
+/// and run a workload from strings.
+pub struct WorkloadSpec {
+    pub name: &'static str,
+    pub summary: &'static str,
+    /// The parameter that sets the fleet size (`--nodes` for nanosort,
+    /// `--cores` elsewhere) — routed to [`super::Scenario::nodes`].
+    pub nodes_param: ParamSpec,
+    pub params: &'static [ParamSpec],
+    /// Construct the workload from resolved parameters.
+    pub build: fn(&ParamMap) -> Result<Box<dyn DynWorkload>>,
+    /// CI-small parameter overrides for smoke/integration runs.
+    pub smoke: &'static [(&'static str, u64)],
+}
+
+impl WorkloadSpec {
+    /// All parameters, fleet-size first (the defaulting/resolution order).
+    pub fn all_params(&self) -> impl Iterator<Item = &ParamSpec> {
+        std::iter::once(&self.nodes_param).chain(self.params.iter())
+    }
+}
+
+/// Every workload this build can run, in paper order.
+pub static WORKLOADS: &[WorkloadSpec] = &[
+    WorkloadSpec {
+        name: "nanosort",
+        summary: "the paper's recursive pivot/shuffle sort (§4/§5)",
+        nodes_param: ParamSpec {
+            name: "nodes",
+            kind: ParamKind::U64,
+            default: ParamDefault::U64(4096),
+            help: "cores; must equal buckets^r",
+        },
+        params: &[
+            ParamSpec {
+                name: "kpn",
+                kind: ParamKind::U64,
+                default: ParamDefault::U64(16),
+                help: "keys pre-loaded per core",
+            },
+            ParamSpec {
+                name: "buckets",
+                kind: ParamKind::U64,
+                default: ParamDefault::U64(16),
+                help: "buckets per recursion level",
+            },
+            ParamSpec {
+                name: "incast",
+                kind: ParamKind::U64,
+                default: ParamDefault::FromParam("buckets"),
+                help: "median/count-tree incast",
+            },
+            ParamSpec {
+                name: "values",
+                kind: ParamKind::Flag,
+                default: ParamDefault::False,
+                help: "run the GraySort value-redistribution phase",
+            },
+            ParamSpec {
+                name: "naive-pivots",
+                kind: ParamKind::Flag,
+                default: ParamDefault::False,
+                help: "ablation: naive pivot proposals instead of PivotSelect",
+            },
+        ],
+        build: build_nanosort,
+        smoke: &[("nodes", 16), ("kpn", 8), ("buckets", 4)],
+    },
+    WorkloadSpec {
+        name: "millisort",
+        summary: "the MilliSort baseline re-hosted on the nanoPU substrate (§6.2.2)",
+        nodes_param: ParamSpec {
+            name: "cores",
+            kind: ParamKind::U64,
+            default: ParamDefault::U64(64),
+            help: "cores",
+        },
+        params: &[
+            ParamSpec {
+                name: "keys",
+                kind: ParamKind::U64,
+                default: ParamDefault::U64(4096),
+                help: "total keys; must divide evenly across cores",
+            },
+            ParamSpec {
+                name: "rf",
+                kind: ParamKind::U64,
+                default: ParamDefault::U64(4),
+                help: "gather/scatter reduction factor (Fig 10's knob)",
+            },
+        ],
+        build: build_millisort,
+        smoke: &[("cores", 8), ("keys", 128)],
+    },
+    WorkloadSpec {
+        name: "mergemin",
+        summary: "global-minimum merge tree, the §3.1 design-space probe",
+        nodes_param: ParamSpec {
+            name: "cores",
+            kind: ParamKind::U64,
+            default: ParamDefault::U64(64),
+            help: "cores",
+        },
+        params: &[
+            ParamSpec {
+                name: "vpc",
+                kind: ParamKind::U64,
+                default: ParamDefault::U64(128),
+                help: "values per core",
+            },
+            ParamSpec {
+                name: "incast",
+                kind: ParamKind::U64,
+                default: ParamDefault::U64(8),
+                help: "merge-tree incast (1 = chain)",
+            },
+        ],
+        build: build_mergemin,
+        smoke: &[("cores", 8), ("vpc", 16), ("incast", 4)],
+    },
+    WorkloadSpec {
+        name: "setalgebra",
+        summary: "distributed posting-list intersection (§3.2 web search)",
+        nodes_param: ParamSpec {
+            name: "cores",
+            kind: ParamKind::U64,
+            default: ParamDefault::U64(64),
+            help: "cores",
+        },
+        params: &[
+            ParamSpec {
+                name: "lists",
+                kind: ParamKind::U64,
+                default: ParamDefault::U64(4),
+                help: "posting lists per query (q-way intersection)",
+            },
+            ParamSpec {
+                name: "incast",
+                kind: ParamKind::U64,
+                default: ParamDefault::U64(8),
+                help: "reduce-tree incast",
+            },
+            ParamSpec {
+                name: "ids",
+                kind: ParamKind::U64,
+                default: ParamDefault::U64(128),
+                help: "doc ids per list per core",
+            },
+        ],
+        build: build_setalgebra,
+        smoke: &[("cores", 8), ("lists", 3), ("incast", 4), ("ids", 32)],
+    },
+];
+
+fn build_nanosort(p: &ParamMap) -> Result<Box<dyn DynWorkload>> {
+    Ok(Box::new(NanoSort {
+        keys_per_node: p.u64("kpn")? as usize,
+        buckets: p.u64("buckets")? as usize,
+        median_incast: p.u64("incast")? as usize,
+        shuffle_values: p.flag("values"),
+        pivot_mode: if p.flag("naive-pivots") { PivotMode::Naive } else { PivotMode::Paper },
+    }))
+}
+
+fn build_millisort(p: &ParamMap) -> Result<Box<dyn DynWorkload>> {
+    Ok(Box::new(MilliSort {
+        total_keys: p.u64("keys")? as usize,
+        reduction_factor: p.u64("rf")? as usize,
+        ..Default::default()
+    }))
+}
+
+fn build_mergemin(p: &ParamMap) -> Result<Box<dyn DynWorkload>> {
+    Ok(Box::new(MergeMin {
+        values_per_core: p.u64("vpc")? as usize,
+        incast: p.u64("incast")? as usize,
+    }))
+}
+
+fn build_setalgebra(p: &ParamMap) -> Result<Box<dyn DynWorkload>> {
+    Ok(Box::new(SetAlgebra {
+        lists: p.u64("lists")? as usize,
+        ids_per_core: p.u64("ids")? as usize,
+        incast: p.u64("incast")? as usize,
+        ..Default::default()
+    }))
+}
+
+/// Look a workload up by name.
+pub fn find(name: &str) -> Result<&'static WorkloadSpec> {
+    WORKLOADS.iter().find(|w| w.name == name).ok_or_else(|| {
+        anyhow!("unknown workload {name:?} (known: {})", names().join("|"))
+    })
+}
+
+/// All registered workload names, in registry order.
+pub fn names() -> Vec<&'static str> {
+    WORKLOADS.iter().map(|w| w.name).collect()
+}
+
+/// Consume this workload's parameters from CLI `args` and resolve
+/// defaults. Unrecognized arguments are left behind for the caller's
+/// unconsumed-argument check; malformed values are errors.
+pub fn parse_args(spec: &WorkloadSpec, args: &mut Args) -> Result<ParamMap> {
+    let mut map = ParamMap::default();
+    for p in spec.all_params() {
+        match p.kind {
+            ParamKind::U64 => {
+                if let Some(v) = args.num_checked::<u64>(p.name)? {
+                    map.set(p.name, ParamValue::U64(v));
+                }
+            }
+            ParamKind::Flag => {
+                if args.flag(p.name) {
+                    map.set(p.name, ParamValue::Flag(true));
+                }
+            }
+        }
+    }
+    resolve_defaults(spec, map)
+}
+
+/// Build a [`ParamMap`] from `(name, value)` pairs (tests, smoke runs),
+/// validating names against the spec and resolving defaults.
+pub fn params_from_pairs(
+    spec: &WorkloadSpec,
+    pairs: &[(&'static str, u64)],
+) -> Result<ParamMap> {
+    let mut map = ParamMap::default();
+    for (name, v) in pairs {
+        let p = spec
+            .all_params()
+            .find(|p| p.name == *name)
+            .ok_or_else(|| anyhow!("workload {} has no parameter {name:?}", spec.name))?;
+        ensure!(
+            p.kind == ParamKind::U64,
+            "parameter {name:?} of {} is a flag, not numeric",
+            spec.name
+        );
+        map.set(p.name, ParamValue::U64(*v));
+    }
+    resolve_defaults(spec, map)
+}
+
+fn resolve_defaults(spec: &WorkloadSpec, mut map: ParamMap) -> Result<ParamMap> {
+    for p in spec.all_params() {
+        if map.contains(p.name) {
+            continue;
+        }
+        let v = match p.default {
+            ParamDefault::U64(v) => ParamValue::U64(v),
+            ParamDefault::False => ParamValue::Flag(false),
+            ParamDefault::FromParam(other) => ParamValue::U64(
+                map.u64(other).with_context(|| {
+                    format!("default for --{} follows --{other}", p.name)
+                })?,
+            ),
+        };
+        map.set(p.name, v);
+    }
+    Ok(map)
+}
+
+/// One usage line per workload, generated from the descriptors (keeps the
+/// CLI help honest: a new registry row shows up here automatically).
+pub fn cli_help() -> String {
+    let mut out = String::new();
+    for w in WORKLOADS {
+        let mut line = format!("  repro run {:<11}", w.name);
+        line += &format!("[--{} N]", w.nodes_param.name);
+        for p in w.params {
+            match p.kind {
+                ParamKind::U64 => line += &format!(" [--{} N]", p.name),
+                ParamKind::Flag => line += &format!(" [--{}]", p.name),
+            }
+        }
+        line += " [--no-multicast] [--xla] [--seed N]";
+        out += &line;
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::from_vec(s.split_whitespace().map(str::to_string).collect())
+    }
+
+    #[test]
+    fn find_resolves_all_registered_names() {
+        for name in ["nanosort", "millisort", "mergemin", "setalgebra"] {
+            assert!(find(name).is_ok(), "{name}");
+        }
+    }
+
+    #[test]
+    fn find_unknown_lists_known_names() {
+        let err = find("bogosort").unwrap_err().to_string();
+        assert!(err.contains("unknown workload"), "{err}");
+        assert!(err.contains("nanosort") && err.contains("setalgebra"), "{err}");
+    }
+
+    #[test]
+    fn defaults_resolve_without_cli_args() {
+        let spec = find("nanosort").unwrap();
+        let p = parse_args(spec, &mut args("")).unwrap();
+        assert_eq!(p.u64("nodes").unwrap(), 4096);
+        assert_eq!(p.u64("kpn").unwrap(), 16);
+        assert_eq!(p.u64("incast").unwrap(), 16);
+        assert!(!p.flag("values"));
+    }
+
+    #[test]
+    fn incast_default_follows_buckets() {
+        let spec = find("nanosort").unwrap();
+        let p = parse_args(spec, &mut args("--buckets 4")).unwrap();
+        assert_eq!(p.u64("incast").unwrap(), 4, "FromParam default");
+        let p = parse_args(spec, &mut args("--buckets 4 --incast 2")).unwrap();
+        assert_eq!(p.u64("incast").unwrap(), 2, "explicit value wins");
+    }
+
+    #[test]
+    fn numeric_garbage_is_an_error() {
+        let spec = find("mergemin").unwrap();
+        let err = parse_args(spec, &mut args("--vpc banana")).unwrap_err();
+        assert!(err.to_string().contains("--vpc"), "{err}");
+    }
+
+    #[test]
+    fn trailing_valueless_param_is_an_error() {
+        let spec = find("mergemin").unwrap();
+        assert!(parse_args(spec, &mut args("--cores")).is_err());
+    }
+
+    #[test]
+    fn unknown_args_left_for_the_caller() {
+        let spec = find("mergemin").unwrap();
+        let mut a = args("--vpc 32 --warp-drive 9");
+        parse_args(spec, &mut a).unwrap();
+        assert_eq!(a.rest(), ["--warp-drive", "9"]);
+    }
+
+    #[test]
+    fn pairs_reject_unknown_and_flag_params() {
+        let spec = find("nanosort").unwrap();
+        assert!(params_from_pairs(spec, &[("nope", 1)]).is_err());
+        assert!(params_from_pairs(spec, &[("values", 1)]).is_err());
+        let p = params_from_pairs(spec, &[("nodes", 16), ("buckets", 4)]).unwrap();
+        assert_eq!(p.u64("incast").unwrap(), 4);
+    }
+
+    #[test]
+    fn every_smoke_spec_builds() {
+        for spec in WORKLOADS {
+            let p = params_from_pairs(spec, spec.smoke).unwrap();
+            (spec.build)(&p).unwrap_or_else(|e| panic!("{}: {e:#}", spec.name));
+        }
+    }
+
+    #[test]
+    fn help_mentions_every_workload_and_its_fleet_flag() {
+        let h = cli_help();
+        for w in WORKLOADS {
+            assert!(h.contains(w.name), "{}", w.name);
+            assert!(h.contains(&format!("[--{} N]", w.nodes_param.name)));
+        }
+        assert!(h.contains("[--values]"), "flags render without N");
+    }
+}

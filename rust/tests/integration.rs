@@ -75,7 +75,13 @@ fn millisort_through_xla() {
 #[test]
 fn mergemin_through_xla() {
     let Some(compute) = xla_or_skip() else { return };
-    let cfg = MergeMinConfig { cores: 32, values_per_core: 64, incast: 8, seed: 5, ..Default::default() };
+    let cfg = MergeMinConfig {
+        cores: 32,
+        values_per_core: 64,
+        incast: 8,
+        seed: 5,
+        ..Default::default()
+    };
     let r = run_mergemin(&cfg, compute);
     assert!(r.correct());
 }
@@ -153,6 +159,6 @@ fn cli_arg_plumbing() {
     assert_eq!(a.positional().as_deref(), Some("run"));
     assert_eq!(a.positional().as_deref(), Some("nanosort"));
     assert_eq!(a.num::<usize>("nodes"), Some(64));
-    let opts = a.run_options();
+    let opts = a.run_options().unwrap();
     assert_eq!(opts.compute, ComputeChoice::Xla);
 }

@@ -1,0 +1,189 @@
+//! Cross-workload integration tests for the `Scenario`/`Workload` API and
+//! the registry-driven CLI path: every registry entry runs at CI-small
+//! sizes, validates, and produces byte-for-byte deterministic reports.
+
+use std::rc::Rc;
+
+use nanosort::algo::mergemin::{run_mergemin, MergeMin, MergeMinConfig};
+use nanosort::algo::millisort::{run_millisort, MilliSortConfig};
+use nanosort::algo::nanosort::{run_nanosort, NanoSort, NanoSortConfig};
+use nanosort::algo::setalgebra::{run_setalgebra, SetAlgebraConfig};
+use nanosort::compute::NativeCompute;
+use nanosort::coordinator::Args;
+use nanosort::net::NetConfig;
+use nanosort::scenario::{registry, RunReport, Scenario};
+use nanosort::sim::Time;
+
+/// Run one registry entry at its CI-small smoke size.
+fn run_smoke(spec: &registry::WorkloadSpec, seed: u64) -> RunReport {
+    let params = registry::params_from_pairs(spec, spec.smoke)
+        .unwrap_or_else(|e| panic!("{}: smoke params: {e:#}", spec.name));
+    let workload =
+        (spec.build)(&params).unwrap_or_else(|e| panic!("{}: build: {e:#}", spec.name));
+    let nodes = params.u64(spec.nodes_param.name).unwrap() as usize;
+    Scenario::from_dyn(workload)
+        .nodes(nodes)
+        .seed(seed)
+        .run()
+        .unwrap_or_else(|e| panic!("{}: run: {e:#}", spec.name))
+}
+
+/// Every workload in the registry runs through `Scenario` and validates.
+#[test]
+fn every_registry_entry_runs_and_validates() {
+    assert!(registry::WORKLOADS.len() >= 4, "all four workloads registered");
+    for spec in registry::WORKLOADS {
+        let r = run_smoke(spec, 1);
+        assert_eq!(r.workload, spec.name, "report is tagged with the registry name");
+        assert!(r.validation.ok(), "{}: {}", spec.name, r.validation.detail);
+        assert!(r.runtime() > Time::ZERO, "{}", spec.name);
+        assert!(r.summary.net.msgs_sent > 0, "{}", spec.name);
+        assert!(!r.stages.is_empty(), "{}", spec.name);
+    }
+}
+
+/// Fixed seed => byte-for-byte identical `RunReport` rendering across two
+/// independent runs, for every workload.
+#[test]
+fn reports_are_byte_for_byte_deterministic() {
+    for spec in registry::WORKLOADS {
+        let a = run_smoke(spec, 7);
+        let b = run_smoke(spec, 7);
+        assert_eq!(a.render(), b.render(), "workload {}", spec.name);
+        assert_eq!(a.runtime(), b.runtime(), "workload {}", spec.name);
+        assert_eq!(
+            a.summary.net.msgs_sent, b.summary.net.msgs_sent,
+            "workload {}",
+            spec.name
+        );
+    }
+}
+
+/// The CLI parse path (`Args` -> registry descriptors -> workload) accepts
+/// the documented flags end to end.
+#[test]
+fn registry_cli_path_end_to_end() {
+    let spec = registry::find("nanosort").unwrap();
+    let mut args = Args::from_vec(
+        ["--nodes", "16", "--kpn", "8", "--buckets", "4", "--values"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    );
+    let params = registry::parse_args(spec, &mut args).unwrap();
+    assert!(args.rest().is_empty());
+    assert_eq!(params.u64("incast").unwrap(), 4, "incast follows buckets");
+    let workload = (spec.build)(&params).unwrap();
+    let report = Scenario::from_dyn(workload).nodes(16).seed(3).run().unwrap();
+    assert!(report.validation.ok());
+    assert!(
+        report.validation.sort.as_ref().unwrap().values_intact,
+        "--values runs the GraySort value phase"
+    );
+}
+
+#[test]
+fn unknown_workload_and_bad_params_error_cleanly() {
+    let err = registry::find("quantumsort").unwrap_err().to_string();
+    assert!(err.contains("unknown workload"), "{err}");
+    assert!(err.contains("mergemin"), "error lists known workloads: {err}");
+
+    let spec = registry::find("millisort").unwrap();
+    let mut args =
+        Args::from_vec(["--keys", "eleventy"].iter().map(|s| s.to_string()).collect());
+    assert!(registry::parse_args(spec, &mut args).is_err());
+}
+
+/// The deprecated `run_xxx` shims and the Scenario API are the same code
+/// path: identical simulated results for identical inputs.
+#[test]
+fn shims_agree_with_scenario_api() {
+    let shim = run_nanosort(
+        &NanoSortConfig {
+            nodes: 16,
+            keys_per_node: 8,
+            buckets: 4,
+            median_incast: 4,
+            seed: 11,
+            ..Default::default()
+        },
+        Rc::new(NativeCompute),
+    );
+    let api = Scenario::new(NanoSort {
+        keys_per_node: 8,
+        buckets: 4,
+        median_incast: 4,
+        ..Default::default()
+    })
+    .nodes(16)
+    .seed(11)
+    .run()
+    .unwrap();
+    assert_eq!(shim.runtime(), api.runtime());
+    assert_eq!(shim.summary.net.msgs_sent, api.summary.net.msgs_sent);
+    assert_eq!(
+        shim.validation.node_counts,
+        api.validation.sort.as_ref().unwrap().node_counts
+    );
+
+    let shim = run_mergemin(
+        &MergeMinConfig {
+            cores: 8,
+            values_per_core: 16,
+            incast: 4,
+            seed: 11,
+            ..Default::default()
+        },
+        Rc::new(NativeCompute),
+    );
+    let api = Scenario::new(MergeMin { values_per_core: 16, incast: 4 })
+        .nodes(8)
+        .seed(11)
+        .run()
+        .unwrap();
+    assert_eq!(shim.summary.makespan, api.summary.makespan);
+    assert_eq!(Some(shim.found_min), api.metric_u64("found_min"));
+}
+
+/// Scenario-level environment knobs reach the fabric for every workload.
+#[test]
+fn scenario_net_knobs_apply_across_workloads() {
+    for spec in registry::WORKLOADS {
+        let params = registry::params_from_pairs(spec, spec.smoke).unwrap();
+        let nodes = params.u64(spec.nodes_param.name).unwrap() as usize;
+        let slow = NetConfig { switch_latency_ns: 2000, ..NetConfig::default() };
+        let fast = Scenario::from_dyn((spec.build)(&params).unwrap())
+            .nodes(nodes)
+            .seed(2)
+            .run()
+            .unwrap();
+        let slowed = Scenario::from_dyn((spec.build)(&params).unwrap())
+            .nodes(nodes)
+            .net(slow)
+            .seed(2)
+            .run()
+            .unwrap();
+        assert!(
+            slowed.runtime() > fast.runtime(),
+            "{}: higher switch latency must slow the run",
+            spec.name
+        );
+    }
+}
+
+/// Legacy shims still validate on their own config types (compat guard).
+#[test]
+fn legacy_shims_still_validate() {
+    let native = || Rc::new(NativeCompute);
+    assert!(run_millisort(
+        &MilliSortConfig { cores: 8, total_keys: 128, seed: 5, ..Default::default() },
+        native()
+    )
+    .validation
+    .ok());
+    assert!(run_setalgebra(
+        &SetAlgebraConfig { cores: 8, lists: 3, seed: 5, ..Default::default() },
+        native()
+    )
+    .correct());
+}
