@@ -1,7 +1,6 @@
 //! The per-core NanoSort program and run driver.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
 use std::rc::Rc;
 
 use anyhow::Result;
@@ -10,7 +9,7 @@ use crate::algo::tree::AggTree;
 use crate::compute::LocalCompute;
 use crate::cpu::Temp;
 use crate::graysort::{validate_sorted_output, value_of_key, KeyGen, ValidationReport};
-use crate::nanopu::{Ctx, GroupId, NodeId, Program, WireMsg};
+use crate::nanopu::{Ctx, Group, GroupId, NodeId, Program, WireMsg};
 use crate::net::NetConfig;
 use crate::scenario::{
     Built, Finish, MetricValue, RunReport, Scenario, ScenarioEnv, Validation, Workload,
@@ -180,6 +179,17 @@ impl Shared {
     }
 }
 
+/// One pending count-tree aggregation cell (keyed by (epoch, round); at
+/// most a couple are live at a time).
+#[derive(Debug, Clone, Copy)]
+struct CtCell {
+    epoch: u16,
+    round: u32,
+    sent: u64,
+    received: u64,
+    got: usize,
+}
+
 /// Per-level phase of a node.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Phase {
@@ -210,7 +220,11 @@ pub struct NanoSortNode {
     // Median-tree state.
     my_pivots: Vec<u64>,
     mt_round: u32,
-    mt_pending: HashMap<u32, Vec<Vec<u64>>>,
+    /// Child pivot vectors received per round: `(round, pivots)` in
+    /// arrival order. Live entries are incast-bounded, so a flat vec
+    /// beats a HashMap (§Scale: two maps per node was 2 × 65,536 heap
+    /// tables at paper scale).
+    mt_pending: Vec<(u32, Vec<u64>)>,
 
     // Count-tree state.
     sent_this_level: u64,
@@ -219,7 +233,9 @@ pub struct NanoSortNode {
     ct_round: u32,
     /// Running (sent, received) sums folded so far this epoch.
     ct_sum: (u64, u64),
-    ct_pending: HashMap<(u16, u32), (u64, u64, usize)>,
+    /// Pending count-tree cells keyed by (epoch, round); same flat-vec
+    /// rationale as `mt_pending`.
+    ct_pending: Vec<CtCell>,
 
     // Value phase.
     initial_keys: Vec<u64>, // sorted, for origin-side validation
@@ -234,9 +250,11 @@ impl NanoSortNode {
     fn pos(&self) -> usize {
         self.id - self.shared.group_base(self.id, self.level)
     }
-    fn group_members(&self) -> Vec<NodeId> {
+    /// This node's group at the current level, as a contiguous id range
+    /// (never materialized as a list — §Scale).
+    fn group_range(&self) -> std::ops::Range<NodeId> {
         let base = self.shared.group_base(self.id, self.level);
-        (base..base + self.shared.group_size(self.level)).collect()
+        base..base + self.shared.group_size(self.level)
     }
 
     // ----------------------------------------------------------- level entry
@@ -311,11 +329,10 @@ impl NanoSortNode {
                 } else {
                     self.my_pivots.clone()
                 };
-                let members = self.group_members();
                 let gid = self.shared.group_id(self.id, self.level);
-                ctx.broadcast(
+                ctx.broadcast_to(
                     gid,
-                    &members,
+                    self.group_range(),
                     NsMsg::Pivots { level: self.level as u8, pivots: pivots.clone() },
                 );
                 // Root applies the pivots locally, too.
@@ -324,14 +341,21 @@ impl NanoSortNode {
             }
             if tree.aggregates_at(pos, next) {
                 let expect = tree.expected(pos, next);
-                let have = self.mt_pending.get(&next).map(|v| v.len()).unwrap_or(0);
+                let have = self.mt_pending.iter().filter(|(r, _)| *r == next).count();
                 if have < expect {
                     return; // wait for this round's children
                 }
                 // Combine: element-wise median over own + non-abstaining
                 // child vectors (paper: median-of-medians per position).
-                let mut vectors: Vec<Vec<u64>> =
-                    self.mt_pending.remove(&next).unwrap_or_default();
+                let mut vectors: Vec<Vec<u64>> = Vec::with_capacity(have + 1);
+                self.mt_pending.retain_mut(|(r, pivots)| {
+                    if *r == next {
+                        vectors.push(std::mem::take(pivots));
+                        false
+                    } else {
+                        true
+                    }
+                });
                 if !self.my_pivots.is_empty() {
                     vectors.push(self.my_pivots.clone());
                 }
@@ -407,26 +431,36 @@ impl NanoSortNode {
                     let mut out = self.shared.outputs.borrow_mut();
                     out.max_retry_epoch = out.max_retry_epoch.max(epoch);
                 }
-                let members = self.group_members();
                 let gid = self.shared.group_id(self.id, self.level);
-                ctx.broadcast(
+                ctx.broadcast_to(
                     gid,
-                    &members,
+                    self.group_range(),
                     NsMsg::Done { level: self.level as u8, epoch, complete },
                 );
                 self.handle_done(ctx, complete);
                 return;
             }
             if tree.aggregates_at(pos, next) {
-                let key = (epoch, next);
-                let (s, r, cnt) = self.ct_pending.get(&key).copied().unwrap_or((0, 0, 0));
+                let cell = self
+                    .ct_pending
+                    .iter()
+                    .position(|c| c.epoch == epoch && c.round == next);
+                let (s, r, cnt) = match cell {
+                    Some(i) => {
+                        let c = &self.ct_pending[i];
+                        (c.sent, c.received, c.got)
+                    }
+                    None => (0, 0, 0),
+                };
                 if cnt < tree.expected(pos, next) {
                     return; // wait for this round's children
                 }
                 ctx.compute(COUNT_FOLD_CYCLES * cnt as u64);
                 self.ct_sum.0 += s;
                 self.ct_sum.1 += r;
-                self.ct_pending.remove(&key);
+                if let Some(i) = cell {
+                    self.ct_pending.swap_remove(i);
+                }
                 self.ct_round = next;
             } else {
                 let base = self.shared.group_base(self.id, self.level);
@@ -537,7 +571,7 @@ impl Program for NanoSortNode {
     fn on_message(&mut self, ctx: &mut Ctx<NsMsg>, _src: NodeId, msg: NsMsg) {
         match msg {
             NsMsg::PivotUp { round, pivots, .. } => {
-                self.mt_pending.entry(round as u32).or_default().push(pivots);
+                self.mt_pending.push((round as u32, pivots));
                 self.advance_median_tree(ctx);
             }
             NsMsg::Pivots { pivots, .. } => {
@@ -552,10 +586,27 @@ impl Program for NanoSortNode {
                 self.received_next += 1;
             }
             NsMsg::CountUp { round, epoch, sent, received, .. } => {
-                let e = self.ct_pending.entry((epoch, round as u32)).or_insert((0, 0, 0));
-                e.0 += sent;
-                e.1 += received;
-                e.2 += 1;
+                let round = round as u32;
+                let cell = match self
+                    .ct_pending
+                    .iter_mut()
+                    .find(|c| c.epoch == epoch && c.round == round)
+                {
+                    Some(c) => c,
+                    None => {
+                        self.ct_pending.push(CtCell {
+                            epoch,
+                            round,
+                            sent: 0,
+                            received: 0,
+                            got: 0,
+                        });
+                        self.ct_pending.last_mut().expect("just pushed")
+                    }
+                };
+                cell.sent += sent;
+                cell.received += received;
+                cell.got += 1;
                 // Only advance if we're in this epoch (stale-epoch messages
                 // cannot exist by protocol, but be defensive).
                 if epoch == self.ct_epoch && self.phase == Phase::Shuffle {
@@ -686,13 +737,13 @@ impl Workload for NanoSort {
                     next_origins: vec![id as u32; self.keys_per_node],
                     my_pivots: Vec::new(),
                     mt_round: 0,
-                    mt_pending: HashMap::new(),
+                    mt_pending: Vec::new(),
                     sent_this_level: 0,
                     received_next: 0,
                     ct_epoch: 0,
                     ct_round: 0,
                     ct_sum: (0, 0),
-                    ct_pending: HashMap::new(),
+                    ct_pending: Vec::new(),
                     initial_keys: initial,
                     values_by_slot: Vec::new(),
                     values_received: 0,
@@ -701,12 +752,15 @@ impl Workload for NanoSort {
             .collect();
 
         // Registration order must match `Shared::group_id` (level-major).
-        let mut groups = Vec::new();
+        // Groups are contiguous id ranges, registered as such — at the
+        // paper scale that is 4,369 groups covering 262,144 member slots,
+        // which an explicit-list encoding would pay ~2 MB for (§Scale).
+        let mut groups: Vec<Group> = Vec::new();
         for l in 0..depth {
             let gsize = shared.group_size(l);
             for gi in 0..env.nodes / gsize {
                 let base = gi * gsize;
-                groups.push((base..base + gsize).collect());
+                groups.push((base..base + gsize).into());
             }
         }
 

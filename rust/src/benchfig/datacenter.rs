@@ -5,14 +5,16 @@
 use anyhow::Result;
 
 use crate::algo::nanosort::NanoSort;
+use crate::conformance::{self, Tier};
 use crate::coordinator::{f, RunOptions, Table};
 use crate::graysort::Throughput;
-use crate::scenario::{RunReport, Scenario};
+use crate::scenario::{registry, RunReport, Scenario};
 use crate::sim::Time;
 use crate::stats::Summary;
 
-/// Keys per core in the headline configuration (1M total at 65,536 cores).
-pub const HEADLINE_KEYS_PER_NODE: usize = 16;
+/// Keys per core in the headline configuration (1M total at 65,536
+/// cores) — the single definition lives in [`crate::conformance`].
+pub use crate::conformance::PAPER_KEYS_PER_NODE as HEADLINE_KEYS_PER_NODE;
 
 /// The paper's headline workload: 16 keys per node, 16 buckets, GraySort
 /// value redistribution included.
@@ -24,12 +26,13 @@ pub fn headline_workload() -> NanoSort {
     }
 }
 
-/// Headline fleet size: 65,536 cores (4,096 under `--quick`).
+/// Headline fleet size: 65,536 cores (4,096 under `--quick`) — the same
+/// shapes as the conformance `paper`/`mid` tiers.
 pub fn headline_nodes(opts: &RunOptions) -> usize {
     if opts.quick {
-        4096
+        conformance::MID_NODES
     } else {
-        65_536
+        conformance::PAPER_NODES
     }
 }
 
@@ -171,6 +174,50 @@ pub fn headline_runtime(opts: &RunOptions) -> Result<Time> {
     Ok(run_headline_once(opts, opts.seed)?.runtime())
 }
 
+/// `repro fig paperscale` — NanoSort's simulated runtime at each
+/// conformance scale tier, printed next to the paper's 68 µs headline.
+/// Under `--quick` only the smoke tier runs (mid and paper are sized
+/// for the release profile; see the conformance tiering policy).
+pub fn paperscale(opts: &RunOptions) -> Result<Table> {
+    let spec = registry::find("nanosort")?;
+    let tiers: &[Tier] = if opts.quick {
+        &[Tier::Smoke]
+    } else {
+        &[Tier::Smoke, Tier::Mid, Tier::Paper]
+    };
+    let mut t = Table::new(
+        "paperscale — NanoSort conformance tiers vs the paper headline",
+        &["tier", "nodes", "keys", "simulated_us", "paper_us", "vs_paper", "wall_s"],
+    );
+    for &tier in tiers {
+        let (r, wall) = conformance::run_tier(spec, tier, opts.compute)?;
+        anyhow::ensure!(
+            r.validation.ok(),
+            "tier {}: validation failed: {}",
+            tier.name(),
+            r.validation.detail
+        );
+        let keys =
+            r.validation.sort.as_ref().map(|s| s.total_keys).unwrap_or(0);
+        let us = r.runtime().as_us_f64();
+        t.row(vec![
+            tier.name().into(),
+            r.nodes.to_string(),
+            keys.to_string(),
+            f(us),
+            f(conformance::PAPER_RUNTIME_US),
+            format!("{:.2}x", us / conformance::PAPER_RUNTIME_US),
+            f(wall),
+        ]);
+    }
+    t.note("paper §6.3: 1M keys on 65,536 cores in 68 µs mean (σ = 4.127 µs)");
+    t.note("vs_paper compares each tier's simulated runtime to that headline figure");
+    if opts.quick {
+        t.note("--quick: smoke tier only; run `repro paper` for the full 65,536-core run");
+    }
+    Ok(t)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,6 +239,18 @@ mod tests {
         // (paper's observation): check p99/mean closer to 1 at level 0.
         let level0_mean: f64 = tables[0].rows[0][1].parse().unwrap();
         assert!(level0_mean > 0.0);
+    }
+
+    #[test]
+    fn quick_paperscale_reports_the_smoke_tier() {
+        let opts = RunOptions { quick: true, ..Default::default() };
+        let t = paperscale(&opts).unwrap();
+        assert_eq!(t.rows.len(), 1, "--quick runs the smoke tier only");
+        assert_eq!(t.rows[0][0], "smoke");
+        // Smoke is the registry tuple: 16 cores × 8 keys.
+        assert_eq!(t.rows[0][1], "16");
+        assert_eq!(t.rows[0][2], "128");
+        assert!(t.rows[0][5].ends_with('x'), "vs_paper ratio rendered");
     }
 
     #[test]

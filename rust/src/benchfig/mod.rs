@@ -19,10 +19,11 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::{RunOptions, Table};
 
-/// All figure/table ids in paper order.
+/// All figure/table ids in paper order (plus the conformance-tier
+/// `paperscale` summary).
 pub const ALL_FIGURES: &[&str] = &[
     "table1", "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "12", "13", "14",
-    "15", "multicast", "16", "headline", "table2", "ablation",
+    "15", "multicast", "16", "headline", "table2", "ablation", "paperscale",
 ];
 
 /// Run one figure/table by id; returns the report tables.
@@ -49,6 +50,7 @@ pub fn run_figure(id: &str, opts: &RunOptions) -> Result<Vec<Table>> {
         "headline" => vec![datacenter::headline(opts)?],
         "table2" => vec![datacenter::table2(opts)?],
         "ablation" => vec![sortfigs::fig_ablation(opts)?],
+        "paperscale" => vec![datacenter::paperscale(opts)?],
         other => bail!("unknown figure id {other:?}; ids: {}", ALL_FIGURES.join(", ")),
     })
 }

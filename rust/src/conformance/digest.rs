@@ -1,0 +1,147 @@
+//! Canonical digest of a [`RunReport`]: a flat, line-oriented JSON
+//! document capturing every *simulated* result a run produces — makespan
+//! (exact integer time units), event/message/byte counters, validation,
+//! workload metrics, and per-stage busy/idle sums.
+//!
+//! Design rules, so goldens diff cleanly and never flake:
+//! - one key per line → golden mismatches reduce to a line diff;
+//! - exact integers wherever the simulator is exact (time units, counts);
+//! - floats only for derived/display values, always fixed-precision
+//!   (`{:.6}`) — f64 arithmetic here is sums/divides, which IEEE 754
+//!   makes bit-identical across platforms.
+
+use crate::scenario::{MetricValue, RunReport};
+use crate::sim::Time;
+
+/// Escape a string for a JSON value (the digests only carry short ASCII
+/// detail lines, but be correct anyway).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render the canonical digest of `report` (tagged with the tier it ran
+/// at). The output is the exact byte content of a golden file.
+pub fn digest_json(report: &RunReport, tier: &str) -> String {
+    let mut lines: Vec<String> = Vec::new();
+    lines.push(format!("\"workload\": \"{}\"", esc(report.workload)));
+    lines.push(format!("\"tier\": \"{}\"", esc(tier)));
+    lines.push(format!("\"nodes\": {}", report.nodes));
+    lines.push(format!("\"seed\": {}", report.seed));
+    lines.push(format!("\"makespan_units\": {}", report.summary.makespan.0));
+    lines.push(format!("\"makespan_us\": \"{:.6}\"", report.summary.makespan.as_us_f64()));
+    lines.push(format!("\"events\": {}", report.summary.events));
+    let net = &report.summary.net;
+    lines.push(format!("\"msgs_sent\": {}", net.msgs_sent));
+    lines.push(format!("\"msgs_delivered\": {}", net.msgs_delivered));
+    lines.push(format!("\"payload_bytes\": {}", net.payload_bytes));
+    lines.push(format!("\"wire_bytes\": {}", net.wire_bytes));
+    lines.push(format!("\"multicasts\": {}", net.multicasts));
+    lines.push(format!("\"tail_hits\": {}", net.tail_hits));
+    lines.push(format!("\"validation_ok\": {}", report.validation.ok()));
+    lines.push(format!("\"validation\": \"{}\"", esc(&report.validation.detail)));
+    if let Some(sort) = &report.validation.sort {
+        lines.push(format!("\"total_keys\": {}", sort.total_keys));
+    }
+    for m in &report.metrics {
+        let value = match m.value {
+            MetricValue::U64(v) => format!("{v}"),
+            MetricValue::F64(v) => format!("\"{v:.6}\""),
+            MetricValue::Bool(v) => format!("{v}"),
+        };
+        lines.push(format!("\"metric.{}\": {}", esc(m.name), value));
+    }
+    // Per-stage busy/idle totals across nodes, in exact integer units.
+    for row in &report.stages {
+        let stage = row.stage;
+        let busy: Time =
+            Time(report.summary.node_stats.iter().map(|s| s.busy[stage].0).sum());
+        let idle: Time =
+            Time(report.summary.node_stats.iter().map(|s| s.idle[stage].0).sum());
+        lines.push(format!("\"stage{stage}_busy_units\": {}", busy.0));
+        lines.push(format!("\"stage{stage}_idle_units\": {}", idle.0));
+    }
+
+    let mut out = String::from("{\n");
+    let n = lines.len();
+    for (i, line) in lines.into_iter().enumerate() {
+        out.push_str("  ");
+        out.push_str(&line);
+        if i + 1 < n {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::mergemin::MergeMin;
+    use crate::algo::nanosort::NanoSort;
+    use crate::scenario::Scenario;
+
+    #[test]
+    fn digest_is_valid_flat_json_shape() {
+        let r = Scenario::new(MergeMin::default()).nodes(8).seed(5).run().unwrap();
+        let d = digest_json(&r, "smoke");
+        assert!(d.starts_with("{\n") && d.ends_with("}\n"));
+        assert!(d.contains("\"workload\": \"mergemin\""));
+        assert!(d.contains("\"tier\": \"smoke\""));
+        assert!(d.contains("\"makespan_units\": "));
+        assert!(d.contains("\"validation_ok\": true"));
+        assert!(d.contains("\"metric.found_min\": "));
+        assert!(d.contains("\"stage0_busy_units\": "));
+        // Every body line but the last ends with a comma.
+        let body: Vec<&str> = d.lines().collect();
+        for line in &body[1..body.len() - 2] {
+            assert!(line.ends_with(','), "{line}");
+        }
+        assert!(!body[body.len() - 2].ends_with(','));
+    }
+
+    #[test]
+    fn digest_is_deterministic_and_seed_sensitive() {
+        let run = |seed| {
+            Scenario::new(NanoSort { keys_per_node: 8, buckets: 4, median_incast: 4, ..Default::default() })
+                .nodes(16)
+                .seed(seed)
+                .run()
+                .unwrap()
+        };
+        let a = digest_json(&run(7), "smoke");
+        let b = digest_json(&run(7), "smoke");
+        let c = digest_json(&run(8), "smoke");
+        assert_eq!(a, b, "same seed, same digest");
+        assert_ne!(a, c, "digest must be sensitive to the seeded result");
+    }
+
+    #[test]
+    fn sort_workloads_record_total_keys() {
+        let r = Scenario::new(NanoSort { keys_per_node: 8, buckets: 4, median_incast: 4, ..Default::default() })
+            .nodes(16)
+            .seed(1)
+            .run()
+            .unwrap();
+        let d = digest_json(&r, "smoke");
+        assert!(d.contains("\"total_keys\": 128"), "{d}");
+    }
+
+    #[test]
+    fn escape_covers_quotes_and_control_chars() {
+        assert_eq!(esc("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(esc("x\ny"), "x\\ny");
+        assert_eq!(esc("\u{1}"), "\\u0001");
+    }
+}

@@ -1,0 +1,174 @@
+//! Golden-file comparison: checked-in canonical digests under
+//! `rust/conformance/golden/`, compared byte-for-byte with a line diff on
+//! mismatch and a bless path for intentional changes.
+//!
+//! Bless workflow:
+//! - a *missing* golden is created in place (first run on a fresh
+//!   checkout / newly added workload) and reported as `Blessed` — commit
+//!   the generated file to turn it into a regression gate;
+//! - an *intentional* change is accepted with `repro paper --bless` or
+//!   `BLESS_GOLDEN=1 cargo test -q --test conformance`;
+//! - anything else is a `Mismatch`, which the callers turn into a test
+//!   failure / non-zero exit with the diff below.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+/// Outcome of one golden comparison.
+#[derive(Debug)]
+pub enum GoldenOutcome {
+    /// Digest matches the checked-in golden byte-for-byte.
+    Matched,
+    /// Golden written (missing before, or bless requested).
+    Blessed { path: PathBuf, created: bool },
+    /// Seeded-result drift: the digest differs from the golden.
+    Mismatch { path: PathBuf, diff: String },
+}
+
+/// Directory holding the golden digests (anchored at the crate manifest
+/// so tests and the CLI agree regardless of working directory).
+pub fn golden_dir() -> PathBuf {
+    let root = match std::env::var_os("CARGO_MANIFEST_DIR") {
+        Some(d) => PathBuf::from(d),
+        None => PathBuf::from("."),
+    };
+    root.join("rust").join("conformance").join("golden")
+}
+
+/// True when the `BLESS_GOLDEN` env var requests blessing. Empty and
+/// `"0"` count as *unset* so a stale `BLESS_GOLDEN=0`/`BLESS_GOLDEN=`
+/// in the environment cannot silently disarm the drift gate.
+pub fn bless_requested_by_env() -> bool {
+    match std::env::var("BLESS_GOLDEN") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    }
+}
+
+/// Compare `actual` against the golden named `name` (file
+/// `<golden_dir>/<name>.json`). `bless` — or `BLESS_GOLDEN` set to a
+/// non-empty, non-`0` value — accepts the new digest by overwriting the
+/// file.
+pub fn check_golden(name: &str, actual: &str, bless: bool) -> Result<GoldenOutcome> {
+    let bless = bless || bless_requested_by_env();
+    let dir = golden_dir();
+    let path = dir.join(format!("{name}.json"));
+    if !path.exists() {
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        std::fs::write(&path, actual)
+            .with_context(|| format!("writing {}", path.display()))?;
+        return Ok(GoldenOutcome::Blessed { path, created: true });
+    }
+    let golden = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    if golden.trim_end() == actual.trim_end() {
+        return Ok(GoldenOutcome::Matched);
+    }
+    if bless {
+        std::fs::write(&path, actual)
+            .with_context(|| format!("writing {}", path.display()))?;
+        return Ok(GoldenOutcome::Blessed { path, created: false });
+    }
+    Ok(GoldenOutcome::Mismatch { path, diff: line_diff(&golden, actual) })
+}
+
+/// Line-oriented diff of two digests: every differing line rendered as
+/// `- golden` / `+ actual`, prefixed with its 1-based line number.
+pub fn line_diff(golden: &str, actual: &str) -> String {
+    let g: Vec<&str> = golden.trim_end().lines().collect();
+    let a: Vec<&str> = actual.trim_end().lines().collect();
+    let mut out = String::new();
+    for i in 0..g.len().max(a.len()) {
+        let gl = g.get(i).copied();
+        let al = a.get(i).copied();
+        if gl != al {
+            out.push_str(&format!("line {}:\n", i + 1));
+            if let Some(gl) = gl {
+                out.push_str(&format!("  - {gl}\n"));
+            }
+            if let Some(al) = al {
+                out.push_str(&format!("  + {al}\n"));
+            }
+        }
+    }
+    if out.is_empty() {
+        out.push_str("(no line-level difference; trailing whitespace only)\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_diff_pinpoints_changes() {
+        let d = line_diff("a\nb\nc\n", "a\nB\nc\n");
+        assert!(d.contains("line 2:"), "{d}");
+        assert!(d.contains("- b") && d.contains("+ B"), "{d}");
+        assert!(!d.contains("line 1:") && !d.contains("line 3:"), "{d}");
+    }
+
+    #[test]
+    fn line_diff_handles_length_mismatch() {
+        let d = line_diff("a\n", "a\nb\n");
+        assert!(d.contains("line 2:") && d.contains("+ b"), "{d}");
+        let d = line_diff("a\nb\n", "a\n");
+        assert!(d.contains("line 2:") && d.contains("- b"), "{d}");
+    }
+
+    #[test]
+    fn golden_dir_is_under_the_crate() {
+        let dir = golden_dir();
+        assert!(dir.ends_with("rust/conformance/golden"), "{}", dir.display());
+    }
+
+    /// Full cycle against a temp name (cleaned up afterwards): missing →
+    /// blessed/created, same → matched, changed → mismatch with diff,
+    /// bless → accepted.
+    #[test]
+    fn bless_env_contract() {
+        // Pure contract check of the parse rule (no env mutation — tests
+        // run multithreaded): unset/empty/"0" must not bless.
+        assert!(!bless_requested_by_env() || {
+            let v = std::env::var("BLESS_GOLDEN").unwrap_or_default();
+            !v.is_empty() && v != "0"
+        });
+    }
+
+    #[test]
+    fn check_golden_lifecycle() {
+        if bless_requested_by_env() {
+            return; // bless-everything runs can't observe a mismatch
+        }
+        let name = "zz_selftest_lifecycle";
+        let path = golden_dir().join(format!("{name}.json"));
+        let _ = std::fs::remove_file(&path);
+
+        match check_golden(name, "{\n  \"k\": 1\n}\n", false).unwrap() {
+            GoldenOutcome::Blessed { created: true, .. } => {}
+            other => panic!("expected created bless, got {other:?}"),
+        }
+        assert!(matches!(
+            check_golden(name, "{\n  \"k\": 1\n}\n", false).unwrap(),
+            GoldenOutcome::Matched
+        ));
+        match check_golden(name, "{\n  \"k\": 2\n}\n", false).unwrap() {
+            GoldenOutcome::Mismatch { diff, .. } => {
+                assert!(diff.contains("\"k\": 1") && diff.contains("\"k\": 2"), "{diff}");
+            }
+            other => panic!("expected mismatch, got {other:?}"),
+        }
+        match check_golden(name, "{\n  \"k\": 2\n}\n", true).unwrap() {
+            GoldenOutcome::Blessed { created: false, .. } => {}
+            other => panic!("expected bless, got {other:?}"),
+        }
+        assert!(matches!(
+            check_golden(name, "{\n  \"k\": 2\n}\n", false).unwrap(),
+            GoldenOutcome::Matched
+        ));
+        let _ = std::fs::remove_file(&path);
+    }
+}

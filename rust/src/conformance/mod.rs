@@ -1,0 +1,291 @@
+//! Conformance & regression harness: named scale tiers, canonical
+//! run-report digests, golden-file comparison, and `BENCH_*.json`
+//! perf-trajectory records.
+//!
+//! The paper's headline claim — 1M keys across 65,536 nanoPU cores in
+//! 68 µs — is a *configuration*, and this module makes configurations
+//! first-class: every registered workload can run at a named [`Tier`]
+//! (`smoke`/`mid`/`paper`) with a fixed seed, its [`RunReport`] collapses
+//! to a canonical JSON digest ([`digest`]), and the digest is compared
+//! against checked-in goldens under `rust/conformance/golden/`
+//! ([`golden`]). Any seeded-result drift — a timing change, a message-count
+//! change, a validation regression — fails the comparison with a line
+//! diff; intentional changes are re-blessed (`--bless` /
+//! `BLESS_GOLDEN=1`).
+//!
+//! Entry points: `repro paper [--tier T] [--bless]` (CLI),
+//! `repro fig paperscale` (figure), and `rust/tests/conformance.rs`
+//! (the CI gate, smoke tier).
+
+pub mod digest;
+pub mod golden;
+
+pub use digest::digest_json;
+pub use golden::{check_golden, golden_dir, GoldenOutcome};
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::ComputeChoice;
+use crate::scenario::registry::{self, WorkloadSpec};
+use crate::scenario::{RunReport, Scenario};
+
+/// The paper's headline runtime (mean over 10 runs, §6.3).
+pub const PAPER_RUNTIME_US: f64 = 68.0;
+/// The paper's headline fleet size.
+pub const PAPER_NODES: usize = 65_536;
+/// Keys per core in the headline configuration (re-exported by
+/// `benchfig` as `HEADLINE_KEYS_PER_NODE` — one definition for the
+/// headline shape, shared by the figure and the tier ladder).
+pub const PAPER_KEYS_PER_NODE: usize = 16;
+/// The paper's headline key count (16 per core × 65,536 cores = 1M).
+pub const PAPER_KEYS: usize = PAPER_NODES * PAPER_KEYS_PER_NODE;
+/// Mid-tier fleet size (the `--quick` headline scale).
+pub const MID_NODES: usize = 4096;
+
+/// Fixed seed for every conformance run: goldens are a function of
+/// (workload, tier, seed), and pinning the seed makes them a function of
+/// (workload, tier) alone.
+pub const CONFORMANCE_SEED: u64 = 0x00C0_FFEE;
+
+/// Named scale tier of a conformance run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// CI-small (the registry's per-workload smoke tuple; milliseconds).
+    Smoke,
+    /// The `--quick` figure scale (e.g. NanoSort at 4,096 cores; <1 s).
+    Mid,
+    /// The paper's published configuration (NanoSort: 65,536 cores ×
+    /// 1M keys with the GraySort value phase; seconds of wall-clock).
+    Paper,
+}
+
+impl Tier {
+    pub const ALL: [Tier; 3] = [Tier::Smoke, Tier::Mid, Tier::Paper];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Smoke => "smoke",
+            Tier::Mid => "mid",
+            Tier::Paper => "paper",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Tier> {
+        match s {
+            "smoke" => Ok(Tier::Smoke),
+            "mid" => Ok(Tier::Mid),
+            "paper" => Ok(Tier::Paper),
+            other => bail!("unknown tier {other:?} (known: smoke|mid|paper)"),
+        }
+    }
+}
+
+/// Parameter tuple for `spec` at `tier`. Smoke comes straight from the
+/// registry row; mid/paper are the scale-up ladders per workload (flag
+/// parameters use 0/1, see [`registry::params_from_pairs`]).
+pub fn tier_params(spec: &WorkloadSpec, tier: Tier) -> Vec<(&'static str, u64)> {
+    match tier {
+        Tier::Smoke => spec.smoke.to_vec(),
+        Tier::Mid => match spec.name {
+            // The `--quick` headline shape: 64 K keys, three levels.
+            "nanosort" => vec![
+                ("nodes", MID_NODES as u64),
+                ("kpn", PAPER_KEYS_PER_NODE as u64),
+                ("buckets", 16),
+                ("values", 1),
+            ],
+            "millisort" => vec![("cores", 128), ("keys", 8192)],
+            "mergemin" => vec![("cores", MID_NODES as u64), ("vpc", 16), ("incast", 16)],
+            "setalgebra" => vec![("cores", 256), ("ids", 128)],
+            _ => spec.smoke.to_vec(),
+        },
+        Tier::Paper => match spec.name {
+            // §6.3 headline: 1M keys / 65,536 cores, GraySort value phase.
+            "nanosort" => vec![
+                ("nodes", PAPER_NODES as u64),
+                ("kpn", PAPER_KEYS_PER_NODE as u64),
+                ("buckets", 16),
+                ("values", 1),
+            ],
+            "millisort" => vec![("cores", 256), ("keys", 32_768)],
+            // Fig 3's design-space probe at 1M values.
+            "mergemin" => vec![("cores", PAPER_NODES as u64), ("vpc", 16), ("incast", 16)],
+            "setalgebra" => vec![("cores", 4096), ("ids", 256)],
+            _ => spec.smoke.to_vec(),
+        },
+    }
+}
+
+/// Run `spec` at `tier` with the conformance seed through the one
+/// [`Scenario`] code path. Returns the report plus wall-clock seconds
+/// (the host-time half of the perf trajectory).
+pub fn run_tier(
+    spec: &WorkloadSpec,
+    tier: Tier,
+    compute: ComputeChoice,
+) -> Result<(RunReport, f64)> {
+    let params = registry::params_from_pairs(spec, &tier_params(spec, tier))
+        .with_context(|| format!("{} {} tier params", spec.name, tier.name()))?;
+    let workload = (spec.build)(&params)?;
+    let nodes = params.u64(spec.nodes_param.name)? as usize;
+    let start = std::time::Instant::now();
+    let report = Scenario::from_dyn(workload)
+        .nodes(nodes)
+        .compute(compute)
+        .seed(CONFORMANCE_SEED)
+        .run()?;
+    Ok((report, start.elapsed().as_secs_f64()))
+}
+
+/// One `BENCH_<workload>.json` record: the simulated result next to the
+/// wall-clock cost of producing it, so the perf trajectory across PRs is
+/// measurable on both axes.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub workload: String,
+    pub tier: &'static str,
+    pub nodes: usize,
+    pub keys: usize,
+    pub makespan_us: f64,
+    pub wall_clock_s: f64,
+    pub events: u64,
+    pub msgs_sent: u64,
+    pub validated: bool,
+}
+
+impl BenchRecord {
+    pub fn from_report(report: &RunReport, tier: Tier, wall_clock_s: f64) -> BenchRecord {
+        let keys = report
+            .validation
+            .sort
+            .as_ref()
+            .map(|s| s.total_keys)
+            .unwrap_or(0);
+        BenchRecord {
+            workload: report.workload.to_string(),
+            tier: tier.name(),
+            nodes: report.nodes,
+            keys,
+            makespan_us: report.runtime().as_us_f64(),
+            wall_clock_s,
+            events: report.summary.events,
+            msgs_sent: report.summary.net.msgs_sent,
+            validated: report.validation.ok(),
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"workload\": \"{}\",\n  \"tier\": \"{}\",\n  \"nodes\": {},\n  \
+             \"keys\": {},\n  \"makespan_us\": {:.3},\n  \"paper_makespan_us\": {:.1},\n  \
+             \"wall_clock_s\": {:.3},\n  \"events\": {},\n  \"msgs_sent\": {},\n  \
+             \"validated\": {}\n}}\n",
+            self.workload,
+            self.tier,
+            self.nodes,
+            self.keys,
+            self.makespan_us,
+            PAPER_RUNTIME_US,
+            self.wall_clock_s,
+            self.events,
+            self.msgs_sent,
+            self.validated
+        )
+    }
+}
+
+/// Where a bench record lands: the repo root (the crate manifest dir
+/// when cargo provides it, else the current directory). The paper tier
+/// owns the canonical `BENCH_<workload>.json` name — the cross-PR perf
+/// trajectory — while other tiers get `BENCH_<workload>_<tier>.json`,
+/// so a CI smoke run never overwrites a paper-tier record.
+pub fn bench_path(workload: &str, tier: &str) -> PathBuf {
+    let root = match std::env::var_os("CARGO_MANIFEST_DIR") {
+        Some(d) => PathBuf::from(d),
+        None => PathBuf::from("."),
+    };
+    if tier == Tier::Paper.name() {
+        root.join(format!("BENCH_{workload}.json"))
+    } else {
+        root.join(format!("BENCH_{workload}_{tier}.json"))
+    }
+}
+
+/// Write the bench record; returns the path written.
+pub fn write_bench(record: &BenchRecord) -> Result<PathBuf> {
+    let path = bench_path(&record.workload, record.tier);
+    std::fs::write(&path, record.to_json())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Time;
+
+    #[test]
+    fn tier_names_round_trip() {
+        for tier in Tier::ALL {
+            assert_eq!(Tier::parse(tier.name()).unwrap(), tier);
+        }
+        assert!(Tier::parse("galactic").is_err());
+    }
+
+    #[test]
+    fn tier_params_resolve_for_every_workload_and_tier() {
+        for spec in registry::WORKLOADS {
+            for tier in Tier::ALL {
+                let params =
+                    registry::params_from_pairs(spec, &tier_params(spec, tier))
+                        .unwrap_or_else(|e| panic!("{} {}: {e:#}", spec.name, tier.name()));
+                (spec.build)(&params)
+                    .unwrap_or_else(|e| panic!("{} {}: {e:#}", spec.name, tier.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn paper_tier_is_the_headline_configuration() {
+        let spec = registry::find("nanosort").unwrap();
+        let p = registry::params_from_pairs(spec, &tier_params(spec, Tier::Paper)).unwrap();
+        assert_eq!(p.u64("nodes").unwrap() as usize, PAPER_NODES);
+        let keys = p.u64("nodes").unwrap() * p.u64("kpn").unwrap();
+        assert_eq!(keys as usize, PAPER_KEYS, "1M keys");
+        assert!(p.flag("values"), "headline includes the GraySort value phase");
+    }
+
+    #[test]
+    fn smoke_tier_runs_and_digests() {
+        let spec = registry::find("mergemin").unwrap();
+        let (report, wall) =
+            run_tier(spec, Tier::Smoke, ComputeChoice::Native).unwrap();
+        assert!(report.validation.ok());
+        assert!(report.runtime() > Time::ZERO);
+        assert!(wall >= 0.0);
+        let record = BenchRecord::from_report(&report, Tier::Smoke, wall);
+        let json = record.to_json();
+        assert!(json.contains("\"workload\": \"mergemin\""));
+        assert!(json.contains("\"tier\": \"smoke\""));
+        assert!(json.contains("\"validated\": true"));
+    }
+
+    #[test]
+    fn bench_paths_are_tier_scoped_except_paper() {
+        assert!(bench_path("nanosort", "paper").ends_with("BENCH_nanosort.json"));
+        assert!(bench_path("nanosort", "smoke").ends_with("BENCH_nanosort_smoke.json"));
+        assert!(bench_path("mergemin", "mid").ends_with("BENCH_mergemin_mid.json"));
+    }
+
+    #[test]
+    fn bench_json_is_deterministic_modulo_wall_clock() {
+        let spec = registry::find("mergemin").unwrap();
+        let (a, _) = run_tier(spec, Tier::Smoke, ComputeChoice::Native).unwrap();
+        let (b, _) = run_tier(spec, Tier::Smoke, ComputeChoice::Native).unwrap();
+        let ra = BenchRecord::from_report(&a, Tier::Smoke, 0.0);
+        let rb = BenchRecord::from_report(&b, Tier::Smoke, 0.0);
+        assert_eq!(ra.to_json(), rb.to_json());
+    }
+}

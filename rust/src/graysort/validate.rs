@@ -66,13 +66,15 @@ pub fn validate_sorted_output(
 
 /// Max/mean skew of final bucket sizes (Fig 13's metric: how unbalanced
 /// the final partitions are; 1.0 = perfectly balanced).
+///
+/// Degenerate inputs are defined as perfectly balanced: an empty node
+/// list, a single node, and an all-empty cluster (mean 0) all yield 1.0.
 pub fn bucket_skew(node_counts: &[usize]) -> f64 {
-    let non_empty: Vec<usize> = node_counts.to_vec();
-    if non_empty.is_empty() {
+    if node_counts.is_empty() {
         return 1.0;
     }
-    let max = *non_empty.iter().max().unwrap() as f64;
-    let mean = non_empty.iter().sum::<usize>() as f64 / non_empty.len() as f64;
+    let max = *node_counts.iter().max().expect("non-empty") as f64;
+    let mean = node_counts.iter().sum::<usize>() as f64 / node_counts.len() as f64;
     if mean == 0.0 {
         1.0
     } else {
@@ -173,6 +175,29 @@ mod tests {
     fn skew_metric() {
         assert!((bucket_skew(&[10, 10, 10, 10]) - 1.0).abs() < 1e-12);
         assert!((bucket_skew(&[20, 10, 10, 0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skew_degenerate_inputs_are_balanced() {
+        // Empty node list, single node, and all-empty cluster: 1.0, never
+        // NaN/inf/panic.
+        assert_eq!(bucket_skew(&[]), 1.0);
+        assert_eq!(bucket_skew(&[5]), 1.0);
+        assert_eq!(bucket_skew(&[0]), 1.0);
+        assert_eq!(bucket_skew(&[0, 0, 0]), 1.0);
+    }
+
+    #[test]
+    fn validate_empty_input_and_outputs() {
+        // Zero-key sort: vacuously sorted and a (trivial) permutation.
+        let r = validate_sorted_output(&[], &[vec![], vec![]], None);
+        assert!(r.ok(), "{r:?}");
+        assert_eq!(r.total_keys, 0);
+        assert_eq!(r.node_counts, vec![0, 0]);
+        // And with an (empty) value check.
+        let vals: Vec<Vec<u64>> = vec![vec![], vec![]];
+        let r = validate_sorted_output(&[], &[vec![], vec![]], Some(&vals));
+        assert!(r.values_intact);
     }
 
     #[test]

@@ -28,14 +28,21 @@
 //!   names to typed parameter descriptors for the data-driven CLI. The
 //!   per-algorithm `run_xxx(cfg, compute)` functions remain as deprecated
 //!   shims over this layer.
+//! - [`conformance`] — scale tiers (`smoke`/`mid`/`paper`, up to the
+//!   65,536-core × 1M-key headline), canonical run-report digests,
+//!   golden-file regression comparison (`rust/conformance/golden/`), and
+//!   `BENCH_*.json` perf-trajectory records. Driven by `repro paper
+//!   [--tier T] [--bless]` and the `rust/tests/conformance.rs` CI gate.
 //! - [`benchfig`] — regenerates every table and figure in the paper's
-//!   evaluation (see DESIGN.md §4 for the index).
+//!   evaluation (see DESIGN.md §4 for the index), plus `paperscale`
+//!   (the simulated headline next to the paper's 68 µs, per tier).
 //!
 //! Quickstart: `cargo run --release --example quickstart`.
 
 pub mod algo;
 pub mod benchfig;
 pub mod compute;
+pub mod conformance;
 pub mod coordinator;
 pub mod cpu;
 pub mod graysort;

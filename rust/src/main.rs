@@ -8,6 +8,7 @@
 //! repro run mergemin   [--cores N] [--vpc V] [--incast K] [--no-multicast] [--xla] [--seed N]
 //! repro run setalgebra [--cores N] [--lists Q] [--incast K] [--ids I]
 //!                      [--no-multicast] [--xla] [--seed N]
+//! repro paper          [--tier smoke|mid|paper] [--bless] [--xla]
 //! repro artifacts      # list loaded XLA artifacts
 //! repro list           # list figure ids and registered workloads
 //! ```
@@ -18,11 +19,19 @@
 //! [`nanosort::scenario::Scenario`] code path shared by all workloads —
 //! adding a workload to the registry adds it here (and to the help text)
 //! with no CLI changes.
+//!
+//! `repro paper` is the conformance entry point: it runs NanoSort at a
+//! named scale tier (default: the paper's 65,536-core × 1M-key headline)
+//! with the fixed conformance seed, compares the canonical digest against
+//! the golden under `rust/conformance/golden/` (`--bless` accepts an
+//! intentional change; a missing golden is created), and writes
+//! `BENCH_nanosort.json` with the simulated makespan + wall-clock.
 
 use anyhow::{bail, Result};
 
 use nanosort::benchfig::{run_figure, ALL_FIGURES};
-use nanosort::coordinator::Args;
+use nanosort::conformance::{self, BenchRecord, GoldenOutcome, Tier};
+use nanosort::coordinator::{Args, ComputeChoice};
 use nanosort::net::NetConfig;
 use nanosort::runtime::XlaEngine;
 use nanosort::scenario::{registry, Scenario};
@@ -39,6 +48,7 @@ fn real_main() -> Result<()> {
     match args.positional().as_deref() {
         Some("fig") => cmd_fig(args),
         Some("run") => cmd_run(args),
+        Some("paper") => cmd_paper(args),
         Some("artifacts") => cmd_artifacts(),
         Some("list") => {
             println!("figure ids: {}", ALL_FIGURES.join(", "));
@@ -59,7 +69,8 @@ fn help() -> String {
     format!(
         "repro — NanoSort reproduction CLI
   repro fig <id|all> [--xla] [--seed N] [--runs N] [--quick] [--csv]
-{}  repro artifacts | repro list",
+{}  repro paper       [--tier smoke|mid|paper] [--bless] [--xla]
+  repro artifacts | repro list",
         registry::cli_help()
     )
 }
@@ -110,6 +121,73 @@ fn cmd_run(mut args: Args) -> Result<()> {
         .run()?;
     print!("{}", report.render());
     Ok(())
+}
+
+/// Conformance run at a named scale tier: fixed seed, golden comparison,
+/// `BENCH_nanosort.json` emission, and the paper-headline side-by-side.
+fn cmd_paper(mut args: Args) -> Result<()> {
+    let tier = match args.value_checked("tier")? {
+        Some(t) => Tier::parse(&t)?,
+        None => Tier::Paper,
+    };
+    let bless = args.flag("bless");
+    let xla = args.flag("xla");
+    let compute = if xla { ComputeChoice::Xla } else { ComputeChoice::Native };
+    ensure_consumed(&args)?;
+
+    let spec = registry::find("nanosort")?;
+    eprintln!(
+        "[conformance: nanosort @ {} tier, seed {:#x}]",
+        tier.name(),
+        conformance::CONFORMANCE_SEED
+    );
+    let (report, wall) = conformance::run_tier(spec, tier, compute)?;
+    print!("{}", report.render());
+    let us = report.runtime().as_us_f64();
+    println!(
+        "paper-scale: simulated {:.2} µs vs paper {:.0} µs ({:.2}x) | {} nodes | wall-clock {:.2} s",
+        us,
+        conformance::PAPER_RUNTIME_US,
+        us / conformance::PAPER_RUNTIME_US,
+        report.nodes,
+        wall
+    );
+    anyhow::ensure!(
+        report.validation.ok(),
+        "validation failed: {}",
+        report.validation.detail
+    );
+
+    let bench = conformance::write_bench(&BenchRecord::from_report(&report, tier, wall))?;
+    println!("bench record: {}", bench.display());
+
+    let digest = conformance::digest_json(&report, tier.name());
+    // Same name the test gate uses for (workload, tier); XLA runs get
+    // their own goldens — the data planes agree on results but a bless
+    // must never overwrite the native-pinned file with another plane's.
+    let name = format!("nanosort_{}{}", tier.name(), if xla { "_xla" } else { "" });
+    match conformance::check_golden(&name, &digest, bless)? {
+        GoldenOutcome::Matched => {
+            println!("golden: {name}.json matches");
+            Ok(())
+        }
+        GoldenOutcome::Blessed { path, created } => {
+            println!(
+                "golden: {} {} — commit it to pin this result",
+                if created { "created" } else { "re-blessed" },
+                path.display()
+            );
+            Ok(())
+        }
+        GoldenOutcome::Mismatch { path, diff } => {
+            bail!(
+                "seeded-result drift vs {}:\n{}\nre-run with --bless to accept an \
+                 intentional change",
+                path.display(),
+                diff
+            )
+        }
+    }
 }
 
 fn cmd_artifacts() -> Result<()> {

@@ -24,6 +24,67 @@ pub type NodeId = usize;
 /// Multicast group identifier (registered with the engine before a run).
 pub type GroupId = usize;
 
+/// Members of a multicast group.
+///
+/// NanoSort's groups are contiguous id ranges; at the paper scale
+/// (65,536 cores, 4,369 groups) storing them as explicit lists costs
+/// megabytes and a Vec allocation per group, so ranges are first-class.
+#[derive(Debug, Clone)]
+pub enum Group {
+    /// Contiguous node ids `start..end` (O(1) storage).
+    Range { start: NodeId, end: NodeId },
+    /// Explicit member list (for irregular groups).
+    List(Vec<NodeId>),
+}
+
+impl Group {
+    pub fn len(&self) -> usize {
+        match self {
+            Group::Range { start, end } => end.saturating_sub(*start),
+            Group::List(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn iter(&self) -> GroupIter<'_> {
+        match self {
+            Group::Range { start, end } => GroupIter::Range(*start..*end),
+            Group::List(v) => GroupIter::List(v.iter()),
+        }
+    }
+}
+
+impl From<Vec<NodeId>> for Group {
+    fn from(v: Vec<NodeId>) -> Group {
+        Group::List(v)
+    }
+}
+
+impl From<std::ops::Range<NodeId>> for Group {
+    fn from(r: std::ops::Range<NodeId>) -> Group {
+        Group::Range { start: r.start, end: r.end }
+    }
+}
+
+/// Iterator over a [`Group`]'s members (no allocation either way).
+pub enum GroupIter<'a> {
+    Range(std::ops::Range<NodeId>),
+    List(std::slice::Iter<'a, NodeId>),
+}
+
+impl Iterator for GroupIter<'_> {
+    type Item = NodeId;
+    fn next(&mut self) -> Option<NodeId> {
+        match self {
+            GroupIter::Range(r) => r.next(),
+            GroupIter::List(it) => it.next().copied(),
+        }
+    }
+}
+
 /// Wire-level view of an algorithm message.
 pub trait WireMsg: Clone {
     /// Payload bytes on the wire (headers are added by the fabric).
@@ -130,10 +191,22 @@ impl<'a, M: WireMsg> Ctx<'a, M> {
     /// the fabric supports it, otherwise a unicast loop — the exact
     /// degradation measured by the paper's §6.2.3 multicast experiment.
     pub fn broadcast(&mut self, group: GroupId, members: &[NodeId], msg: M) {
+        self.broadcast_to(group, members.iter().copied(), msg);
+    }
+
+    /// [`Ctx::broadcast`] over any member iterator (e.g. a contiguous id
+    /// range), so callers with range-shaped groups never materialize a
+    /// member list just to describe the degraded-unicast fallback.
+    pub fn broadcast_to(
+        &mut self,
+        group: GroupId,
+        members: impl IntoIterator<Item = NodeId>,
+        msg: M,
+    ) {
         if self.mcast_supported {
             self.multicast(group, msg);
         } else {
-            for &dst in members {
+            for dst in members {
                 if dst != self.node {
                     self.send(dst, msg.clone());
                 }

@@ -103,3 +103,39 @@ fn stage_and_finish_propagate() {
 fn default_wire_msg_step_is_zero() {
     assert_eq!(M(8).step(), 0);
 }
+
+#[test]
+fn group_range_and_list_agree() {
+    let range = Group::from(3..8);
+    let list = Group::from(vec![3usize, 4, 5, 6, 7]);
+    assert_eq!(range.len(), 5);
+    assert_eq!(list.len(), 5);
+    assert!(!range.is_empty());
+    assert!(Group::from(4..4).is_empty());
+    let from_range: Vec<NodeId> = range.iter().collect();
+    let from_list: Vec<NodeId> = list.iter().collect();
+    assert_eq!(from_range, from_list);
+}
+
+#[test]
+fn broadcast_to_range_degrades_to_unicast_without_mcast() {
+    let core = CoreModel::default();
+    let mut rng = SplitMix64::new(1);
+    let (mut stage, mut fin) = (0u8, false);
+    let mut ctx = make_ctx(&core, &mut rng, &mut stage, &mut fin, false);
+    // Range 0..6 includes self (node 3): 5 unicasts.
+    ctx.broadcast_to(0, 0..6, M(8));
+    assert_eq!(ctx.ops.len(), 5);
+    assert_eq!(ctx.cycles, 5 * core.tx_cycles(8));
+}
+
+#[test]
+fn broadcast_to_uses_single_multicast_when_supported() {
+    let core = CoreModel::default();
+    let mut rng = SplitMix64::new(1);
+    let (mut stage, mut fin) = (0u8, false);
+    let mut ctx = make_ctx(&core, &mut rng, &mut stage, &mut fin, true);
+    ctx.broadcast_to(0, 0..6, M(8));
+    assert_eq!(ctx.ops.len(), 1);
+    assert_eq!(ctx.cycles, core.tx_cycles(8));
+}

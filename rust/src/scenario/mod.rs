@@ -46,7 +46,7 @@ use crate::compute::LocalCompute;
 use crate::coordinator::{f, ComputeChoice};
 use crate::cpu::CoreModel;
 use crate::graysort::ValidationReport;
-use crate::nanopu::{NodeId, Program};
+use crate::nanopu::{Group, Program};
 use crate::net::{Fabric, NetConfig, Topology};
 use crate::sim::{Engine, RunSummary, Time, MAX_STAGES};
 
@@ -71,8 +71,9 @@ pub type Finish = Box<dyn FnOnce(&ScenarioEnv, RunSummary) -> RunReport>;
 pub struct Built<P: Program> {
     /// One program per node (`programs.len()` must equal `env.nodes`).
     pub programs: Vec<P>,
-    /// Multicast groups, registered with the engine in order (index = id).
-    pub groups: Vec<Vec<NodeId>>,
+    /// Multicast groups (member lists or id ranges), registered with the
+    /// engine in order (index = id).
+    pub groups: Vec<Group>,
     /// Extracts the workload's outputs (validation, metrics) into the
     /// unified report once the run completes.
     pub finish: Finish,

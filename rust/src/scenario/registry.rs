@@ -7,7 +7,7 @@
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, bail, ensure, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::algo::mergemin::MergeMin;
 use crate::algo::millisort::MilliSort;
@@ -299,8 +299,9 @@ pub fn parse_args(spec: &WorkloadSpec, args: &mut Args) -> Result<ParamMap> {
     resolve_defaults(spec, map)
 }
 
-/// Build a [`ParamMap`] from `(name, value)` pairs (tests, smoke runs),
-/// validating names against the spec and resolving defaults.
+/// Build a [`ParamMap`] from `(name, value)` pairs (tests, smoke and
+/// conformance-tier runs), validating names against the spec and
+/// resolving defaults. Flag parameters take 0/1 (any non-zero = set).
 pub fn params_from_pairs(
     spec: &WorkloadSpec,
     pairs: &[(&'static str, u64)],
@@ -311,12 +312,10 @@ pub fn params_from_pairs(
             .all_params()
             .find(|p| p.name == *name)
             .ok_or_else(|| anyhow!("workload {} has no parameter {name:?}", spec.name))?;
-        ensure!(
-            p.kind == ParamKind::U64,
-            "parameter {name:?} of {} is a flag, not numeric",
-            spec.name
-        );
-        map.set(p.name, ParamValue::U64(*v));
+        match p.kind {
+            ParamKind::U64 => map.set(p.name, ParamValue::U64(*v)),
+            ParamKind::Flag => map.set(p.name, ParamValue::Flag(*v != 0)),
+        }
     }
     resolve_defaults(spec, map)
 }
@@ -423,12 +422,17 @@ mod tests {
     }
 
     #[test]
-    fn pairs_reject_unknown_and_flag_params() {
+    fn pairs_reject_unknown_params_and_accept_flags() {
         let spec = find("nanosort").unwrap();
         assert!(params_from_pairs(spec, &[("nope", 1)]).is_err());
-        assert!(params_from_pairs(spec, &[("values", 1)]).is_err());
         let p = params_from_pairs(spec, &[("nodes", 16), ("buckets", 4)]).unwrap();
         assert_eq!(p.u64("incast").unwrap(), 4);
+        assert!(!p.flag("values"), "flags default off");
+        // Flags take 0/1 in pair form (conformance tiers use this).
+        let p = params_from_pairs(spec, &[("values", 1)]).unwrap();
+        assert!(p.flag("values"));
+        let p = params_from_pairs(spec, &[("values", 0)]).unwrap();
+        assert!(!p.flag("values"));
     }
 
     #[test]

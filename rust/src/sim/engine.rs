@@ -12,12 +12,19 @@
 //! their RX cost on arrival (the software reads them off the NIC) plus a
 //! small store, and are re-delivered (cheap pop) once the program reaches
 //! that step.
+//!
+//! §Scale: the paper-scale configuration (65,536 nodes × 1M keys) keeps
+//! ~1M events in flight. The layout is tuned for that: per-node hot state
+//! is a flat arena ([`HotNode`], 16 B/node) separate from cold program
+//! state, stats live in their own arena handed to [`RunSummary`] without
+//! a copy, multicast deliveries are injected through one reused scratch
+//! buffer, and the calendar queue backs its ring with a *sharded* far
+//! tier (bulk re-homed per window) instead of a global overflow heap.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::BTreeMap;
 
 use crate::cpu::CoreModel;
-use crate::nanopu::{Ctx, GroupId, NodeId, Program, SendOp, WireMsg};
+use crate::nanopu::{Ctx, Group, GroupId, NodeId, Program, SendOp, WireMsg};
 use crate::net::{Fabric, NetStats};
 
 use super::rng::SplitMix64;
@@ -31,7 +38,7 @@ const REORDER_POP_CYCLES: u64 = 6;
 pub const MAX_STAGES: usize = 16;
 
 /// Heap entry: 24 bytes. The payload lives in a slab (`EventSlab`) so the
-/// binary heap sifts small, cache-friendly elements — this is the
+/// calendar queue sifts small, cache-friendly elements — this is the
 /// simulator's top hot path (§Perf: `BinaryHeap::pop` was 64% of the
 /// headline run before this split).
 #[derive(PartialEq, Eq)]
@@ -52,16 +59,23 @@ impl Ord for Event {
     }
 }
 
-/// Calendar queue: a ring of per-4ns-window mini-heaps plus an overflow
-/// heap for events beyond the lookahead window.
+/// Calendar queue: a ring of per-4ns-window mini-heaps plus a sharded far
+/// tier for events beyond the lookahead window.
 ///
 /// §Perf: a single `BinaryHeap` over ~1M in-flight events spent >60% of
 /// the headline run in `pop` (20 sift levels of cache misses). Event
 /// *lookahead* (arrival − now) is bounded by propagation + endpoint-link
 /// queueing (µs-scale), so bucketing by coarse time keeps every touched
 /// mini-heap tiny and cache-resident; the cursor only moves forward.
-/// Ordering is exact: buckets partition time, and each mini-heap orders
-/// by `(at, seq)` — identical results to the global heap (tested).
+///
+/// §Scale: events beyond the ring window used to sit in one overflow
+/// `BinaryHeap`, re-homed one `pop` at a time (O(log n) each, and the
+/// heap grows unbounded under heavy tail injection). The far tier is now
+/// *sharded* by window index (`bucket >> ring_bits`): pushes append to
+/// their shard in O(1), and when the cursor crosses a window boundary the
+/// next shard is re-homed wholesale into the ring. Ordering is exact:
+/// shards and buckets partition time, and each mini-heap orders by
+/// `(at, seq)` — identical results to the global heap (tested).
 struct Bucket {
     /// Events of this bucket. When `sorted`, descending by `(at, seq)` so
     /// the next event pops from the back in O(1).
@@ -75,23 +89,31 @@ struct CalendarQueue {
     g_shift: u32,
     /// Ring size mask (ring.len() - 1).
     mask: u64,
+    /// log2 of the ring length — the aligned far-shard width.
+    ring_bits: u32,
     /// Absolute bucket index the cursor is on.
     cur: u64,
-    /// Events whose bucket is beyond the ring window.
-    overflow: BinaryHeap<Reverse<Event>>,
+    /// Far tier: aligned window index (bucket >> ring_bits) → its events,
+    /// in push order. Re-homed in bulk when the cursor enters the window.
+    far: BTreeMap<u64, Vec<Event>>,
+    /// Events currently resident in the ring (vs the far tier).
+    ring_count: usize,
     len: usize,
 }
 
 impl CalendarQueue {
     /// 2^16 buckets x 4 ns = 262 µs of lookahead window.
     fn new() -> Self {
-        let buckets = 1usize << 16;
+        let ring_bits = 16u32;
+        let buckets = 1usize << ring_bits;
         CalendarQueue {
             ring: (0..buckets).map(|_| Bucket { events: Vec::new(), sorted: true }).collect(),
             g_shift: 6,
             mask: (buckets - 1) as u64,
+            ring_bits,
             cur: 0,
-            overflow: BinaryHeap::new(),
+            far: BTreeMap::new(),
+            ring_count: 0,
             len: 0,
         }
     }
@@ -105,11 +127,27 @@ impl CalendarQueue {
         debug_assert!(b >= self.cur, "event scheduled in the past");
         self.len += 1;
         if b >= self.cur + self.ring.len() as u64 {
-            self.overflow.push(Reverse(ev));
+            self.far.entry(b >> self.ring_bits).or_default().push(ev);
         } else {
             let bucket = &mut self.ring[(b & self.mask) as usize];
             bucket.events.push(ev);
             bucket.sorted = false;
+            self.ring_count += 1;
+        }
+    }
+
+    /// Move one far shard's events into the ring. Only called once the
+    /// cursor has entered (or is jumping to) that aligned window, at which
+    /// point every shard event's bucket lies within the ring's lookahead.
+    fn rehome(&mut self, window: u64) {
+        let Some(events) = self.far.remove(&window) else { return };
+        for ev in events {
+            let b = self.bucket_of(ev.at);
+            debug_assert!(b >= self.cur && b < self.cur + self.ring.len() as u64);
+            let bucket = &mut self.ring[(b & self.mask) as usize];
+            bucket.events.push(ev);
+            bucket.sorted = false;
+            self.ring_count += 1;
         }
     }
 
@@ -118,19 +156,14 @@ impl CalendarQueue {
             return None;
         }
         loop {
-            // Re-home overflow events whose bucket has entered the window.
-            while let Some(Reverse(top)) = self.overflow.peek() {
-                let b = self.bucket_of(top.at);
-                if b < self.cur + self.ring.len() as u64 {
-                    let Some(Reverse(ev)) = self.overflow.pop() else { unreachable!() };
-                    let bucket = &mut self.ring[(b & self.mask) as usize];
-                    bucket.events.push(ev);
-                    bucket.sorted = false;
-                    self.len += 1; // moved, not new — compensated below
-                    self.len -= 1;
-                } else {
-                    break;
-                }
+            if self.ring_count == 0 {
+                // Everything left lives in the far tier: fast-forward the
+                // cursor to the first populated shard and re-home it
+                // wholesale (no bucket-by-bucket scanning across the gap).
+                let (&window, _) = self.far.iter().next().expect("len > 0 but no events");
+                self.cur = self.cur.max(window << self.ring_bits);
+                self.rehome(window);
+                continue;
             }
             let bucket = &mut self.ring[(self.cur & self.mask) as usize];
             if !bucket.events.is_empty() {
@@ -145,9 +178,15 @@ impl CalendarQueue {
                     bucket.sorted = true;
                 }
                 self.len -= 1;
+                self.ring_count -= 1;
                 return bucket.events.pop();
             }
             self.cur += 1;
+            if self.cur & self.mask == 0 {
+                // Entered a new aligned window: its far shard (if any) can
+                // now land in the ring before the cursor reaches it.
+                self.rehome(self.cur >> self.ring_bits);
+            }
         }
     }
 }
@@ -221,15 +260,24 @@ impl NodeStats {
     }
 }
 
-struct NodeSlot<P: Program> {
-    prog: P,
+/// Hot per-node scheduling state: everything the deliver/invoke path
+/// mutates on every event, packed into a flat 16 B/node arena so the top
+/// of the event loop touches one cache line per node instead of the full
+/// program + stats struct (§Scale).
+#[derive(Clone, Copy)]
+struct HotNode {
     busy_until: Time,
     stage: u8,
     finished: bool,
+}
+
+/// Cold per-node state: the program itself, its RNG stream, and the
+/// reorder buffer (touched only on delivery to *this* node).
+struct NodeSlot<P: Program> {
+    prog: P,
     rng: SplitMix64,
     /// Reorder buffer: (step, src, msg), kept in arrival order.
     held: Vec<(u32, NodeId, P::Msg)>,
-    stats: NodeStats,
 }
 
 /// Outcome of a completed run.
@@ -256,41 +304,44 @@ impl RunSummary {
     }
 }
 
-/// The engine: nodes + heap + fabric + core model.
+/// The engine: nodes + calendar queue + fabric + core model.
 pub struct Engine<P: Program> {
     nodes: Vec<NodeSlot<P>>,
+    /// Flat hot-state arena, indexed by node id (§Scale).
+    hot: Vec<HotNode>,
+    /// Flat stats arena, indexed by node id; handed to [`RunSummary`]
+    /// without a copy at the end of the run.
+    stats: Vec<NodeStats>,
     heap: CalendarQueue,
     slab: EventSlab<P::Msg>,
     fabric: Fabric,
     core: CoreModel,
-    groups: Vec<Vec<NodeId>>,
+    groups: Vec<Group>,
     seq: u64,
     events: u64,
     /// Scratch buffer for handler-emitted ops (reused across invokes —
     /// §Perf: one Vec alloc/free per delivered message otherwise).
     ops_scratch: Vec<(u64, SendOp<P::Msg>)>,
+    /// Scratch for multicast delivery batches (reused across multicasts —
+    /// §Scale: one Vec alloc per group send otherwise).
+    mcast_scratch: Vec<(usize, Time)>,
 }
 
 impl<P: Program> Engine<P> {
     /// Build an engine over `programs` (node id = index).
     pub fn new(programs: Vec<P>, fabric: Fabric, core: CoreModel, seed: u64) -> Self {
         assert_eq!(programs.len(), fabric.topo.nodes, "program count != topology nodes");
+        let n = programs.len();
         let root = SplitMix64::new(seed);
         let nodes = programs
             .into_iter()
             .enumerate()
-            .map(|(i, prog)| NodeSlot {
-                prog,
-                busy_until: Time::ZERO,
-                stage: 0,
-                finished: false,
-                rng: root.derive(i as u64),
-                held: Vec::new(),
-                stats: NodeStats::default(),
-            })
+            .map(|(i, prog)| NodeSlot { prog, rng: root.derive(i as u64), held: Vec::new() })
             .collect();
         Engine {
             nodes,
+            hot: vec![HotNode { busy_until: Time::ZERO, stage: 0, finished: false }; n],
+            stats: vec![NodeStats::default(); n],
             heap: CalendarQueue::new(),
             slab: EventSlab::new(),
             fabric,
@@ -299,12 +350,14 @@ impl<P: Program> Engine<P> {
             seq: 0,
             events: 0,
             ops_scratch: Vec::new(),
+            mcast_scratch: Vec::new(),
         }
     }
 
-    /// Register a multicast group; returns its id.
-    pub fn add_group(&mut self, members: Vec<NodeId>) -> GroupId {
-        self.groups.push(members);
+    /// Register a multicast group (a member list or an id range);
+    /// returns its id.
+    pub fn add_group(&mut self, members: impl Into<Group>) -> GroupId {
+        self.groups.push(members.into());
         self.groups.len() - 1
     }
 
@@ -325,16 +378,12 @@ impl<P: Program> Engine<P> {
             let (src, dst, msg) = self.slab.remove(ev.slot);
             self.deliver(ev.at, src, dst, msg);
         }
-        let makespan = self
-            .nodes
-            .iter()
-            .map(|n| n.stats.last_active)
-            .max()
-            .unwrap_or(Time::ZERO);
+        let makespan =
+            self.stats.iter().map(|s| s.last_active).max().unwrap_or(Time::ZERO);
         RunSummary {
             makespan,
             net: self.fabric.stats().clone(),
-            node_stats: self.nodes.into_iter().map(|n| n.stats).collect(),
+            node_stats: self.stats,
             events: self.events,
         }
     }
@@ -343,19 +392,20 @@ impl<P: Program> Engine<P> {
         let step = msg.step();
         if step > self.nodes[dst].prog.step() {
             // Future-step message: RX + store into the reorder buffer.
-            let slot = &mut self.nodes[dst];
-            let start = at.max(slot.busy_until);
-            let idle = start.saturating_sub(slot.busy_until);
-            let stage = slot.stage as usize;
-            slot.stats.idle[stage] += idle;
+            let hot = &mut self.hot[dst];
+            let st = &mut self.stats[dst];
+            let start = at.max(hot.busy_until);
+            let idle = start.saturating_sub(hot.busy_until);
+            let stage = hot.stage as usize;
+            st.idle[stage] += idle;
             let cost = Time::from_cycles(
                 self.core.rx_cycles(msg.wire_bytes()) + REORDER_STORE_CYCLES,
             );
-            slot.busy_until = start + cost;
-            slot.stats.busy[stage] += cost;
-            slot.stats.last_active = slot.busy_until;
-            slot.stats.msgs_in += 1;
-            slot.held.push((step, src, msg));
+            hot.busy_until = start + cost;
+            st.busy[stage] += cost;
+            st.last_active = hot.busy_until;
+            st.msgs_in += 1;
+            self.nodes[dst].held.push((step, src, msg));
             return;
         }
         self.invoke(dst, at, Some((src, msg, true)));
@@ -369,7 +419,7 @@ impl<P: Program> Engine<P> {
             let pos = self.nodes[id].held.iter().position(|(s, _, _)| *s <= cur);
             let Some(pos) = pos else { break };
             let (_, src, msg) = self.nodes[id].held.remove(pos);
-            let at = self.nodes[id].busy_until;
+            let at = self.hot[id].busy_until;
             self.invoke_held(id, at, src, msg);
         }
     }
@@ -377,10 +427,9 @@ impl<P: Program> Engine<P> {
     fn invoke_held(&mut self, id: NodeId, at: Time, src: NodeId, msg: P::Msg) {
         // Pop cost instead of RX (already read off the NIC at arrival).
         let resume = {
-            let slot = &mut self.nodes[id];
-            slot.busy_until =
-                at.max(slot.busy_until) + Time::from_cycles(REORDER_POP_CYCLES);
-            slot.busy_until
+            let hot = &mut self.hot[id];
+            hot.busy_until = at.max(hot.busy_until) + Time::from_cycles(REORDER_POP_CYCLES);
+            hot.busy_until
         };
         self.invoke(id, resume, Some((src, msg, false)));
     }
@@ -388,11 +437,13 @@ impl<P: Program> Engine<P> {
     /// Core of the model: run one handler and apply its effects.
     fn invoke(&mut self, id: NodeId, at: Time, input: Option<(NodeId, P::Msg, bool)>) {
         let slot = &mut self.nodes[id];
-        let start = at.max(slot.busy_until);
+        let hot = &mut self.hot[id];
+        let st = &mut self.stats[id];
+        let start = at.max(hot.busy_until);
         // Idle attribution: waiting between end of previous work and start.
-        let idle = start.saturating_sub(slot.busy_until);
+        let idle = start.saturating_sub(hot.busy_until);
         if input.is_some() {
-            slot.stats.idle[slot.stage as usize] += idle;
+            st.idle[hot.stage as usize] += idle;
         }
 
         let mut entry = start;
@@ -401,11 +452,11 @@ impl<P: Program> Engine<P> {
             if charge_rx {
                 entry += Time::from_cycles(self.core.rx_cycles(msg.wire_bytes()));
             }
-            slot.stats.msgs_in += 1;
+            st.msgs_in += 1;
         }
 
-        let mut stage = slot.stage;
-        let mut finished = slot.finished;
+        let mut stage = hot.stage;
+        let mut finished = hot.finished;
         debug_assert!(self.ops_scratch.is_empty());
         let mut ctx = Ctx {
             node: id,
@@ -429,15 +480,15 @@ impl<P: Program> Engine<P> {
 
         let end = entry + Time::from_cycles(cycles);
         let busy_span = end.saturating_sub(start);
-        slot.stats.busy[slot.stage as usize] += busy_span;
-        slot.stage = stage;
-        slot.finished = finished;
-        slot.stats.finished = finished;
-        slot.busy_until = end;
+        st.busy[hot.stage as usize] += busy_span;
+        hot.stage = stage;
+        hot.finished = finished;
+        st.finished = finished;
+        hot.busy_until = end;
         if busy_span > Time::ZERO || was_msg {
-            slot.stats.last_active = end;
+            st.last_active = end;
         }
-        slot.stats.msgs_out += ops.len() as u64;
+        st.msgs_out += ops.len() as u64;
 
         // Hand sends to the fabric at the local time they were issued.
         let mut ops = ops;
@@ -449,15 +500,25 @@ impl<P: Program> Engine<P> {
                     self.push_event(arr, id, dst, msg);
                 }
                 SendOp::Multicast { group, msg } => {
-                    let members = std::mem::take(&mut self.groups[group]);
-                    let deliveries =
-                        self.fabric.multicast(id, &members, msg.wire_bytes(), ready);
-                    self.groups[group] = members;
-                    for (dst, arr) in deliveries {
+                    // Batched injection: the fabric computes every member's
+                    // delivery time into one reused scratch buffer (no Vec
+                    // per group send), then events are pushed in bulk.
+                    let mut deliveries = std::mem::take(&mut self.mcast_scratch);
+                    debug_assert!(deliveries.is_empty());
+                    self.fabric.multicast_into(
+                        id,
+                        self.groups[group].iter(),
+                        msg.wire_bytes(),
+                        ready,
+                        &mut deliveries,
+                    );
+                    for &(dst, arr) in &deliveries {
                         if dst != id {
                             self.push_event(arr, id, dst, msg.clone());
                         }
                     }
+                    deliveries.clear();
+                    self.mcast_scratch = deliveries;
                 }
             }
         }
@@ -575,6 +636,63 @@ mod tests {
         assert!(busy_ns > 100.0, "busy = {busy_ns}");
     }
 
+    /// Group-broadcast program: node 0 multicasts to a range group; every
+    /// member acks. Exercises `Group::Range` through the batched path.
+    #[derive(Clone)]
+    struct Bcast {
+        acks: u32,
+    }
+    impl Program for Bcast {
+        type Msg = Msg;
+        fn on_start(&mut self, ctx: &mut Ctx<Msg>) {
+            if ctx.node() == 0 {
+                ctx.multicast(0, Msg);
+            }
+        }
+        fn on_message(&mut self, ctx: &mut Ctx<Msg>, src: NodeId, _msg: Msg) {
+            if ctx.node() != 0 {
+                ctx.send(src, Msg);
+            } else {
+                self.acks += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn range_groups_deliver_to_every_member_once() {
+        let n = 16;
+        let progs: Vec<Bcast> = (0..n).map(|_| Bcast { acks: 0 }).collect();
+        let topo = Topology::paper(n);
+        let fabric = Fabric::new(topo, NetConfig::default(), 3);
+        let mut engine = Engine::new(progs, fabric, CoreModel::default(), 5);
+        let gid = engine.add_group(0..n);
+        assert_eq!(gid, 0);
+        let summary = engine.run();
+        // One multicast in, n-1 members deliver (self excluded), n-1 acks.
+        assert_eq!(summary.net.multicasts, 1);
+        assert_eq!(summary.node_stats[0].msgs_in, (n - 1) as u64);
+        for id in 1..n {
+            assert_eq!(summary.node_stats[id].msgs_in, 1, "node {id}");
+        }
+    }
+
+    #[test]
+    fn range_and_list_groups_are_equivalent() {
+        let n = 16;
+        let build = |members: Group| {
+            let progs: Vec<Bcast> = (0..n).map(|_| Bcast { acks: 0 }).collect();
+            let fabric = Fabric::new(Topology::paper(n), NetConfig::default(), 3);
+            let mut engine = Engine::new(progs, fabric, CoreModel::default(), 5);
+            engine.add_group(members);
+            engine.run()
+        };
+        let a = build(Group::from(0..n));
+        let b = build(Group::from((0..n).collect::<Vec<_>>()));
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.net.msgs_delivered, b.net.msgs_delivered);
+    }
+
     /// Reorder program: node 1 expects step-0 then step-1 messages, but
     /// node 0 sends the step-1 message *first*.
     #[derive(Clone)]
@@ -636,5 +754,53 @@ mod tests {
         let summary = e.run();
         assert_eq!(summary.makespan, Time::ZERO);
         assert_eq!(summary.events, 0);
+    }
+
+    /// The sharded far tier must order exactly like one global heap, for
+    /// events scattered across many ring windows (far beyond the 262 µs
+    /// lookahead) interleaved with near events.
+    #[test]
+    fn calendar_far_tier_orders_exactly() {
+        let mut q = CalendarQueue::new();
+        let window_units: u64 = 64 << 16; // one full ring span in time units
+        let mut rng = SplitMix64::new(0xCA1);
+        let mut expect: Vec<(u64, u64)> = Vec::new();
+        let mut seq = 0u64;
+        // Phase 1: events spread over ~40 windows, pushed in random order.
+        for _ in 0..5_000 {
+            let at = rng.next_below(40 * window_units);
+            seq += 1;
+            q.push(Event { at: Time(at), seq, slot: 0 });
+            expect.push((at, seq));
+        }
+        expect.sort_unstable();
+        let mut popped = Vec::new();
+        // Interleave: drain half, then push more events *ahead of the
+        // cursor* (as the fabric does — positive latency), drain the rest.
+        for _ in 0..2_500 {
+            let ev = q.pop().unwrap();
+            popped.push((ev.at.0, ev.seq));
+        }
+        let now = popped.last().unwrap().0;
+        let mut late: Vec<(u64, u64)> = Vec::new();
+        for _ in 0..2_500 {
+            let at = now + rng.next_below(45 * window_units);
+            seq += 1;
+            q.push(Event { at: Time(at), seq, slot: 0 });
+            late.push((at, seq));
+        }
+        while let Some(ev) = q.pop() {
+            popped.push((ev.at.0, ev.seq));
+        }
+        assert_eq!(popped.len(), 7_500);
+        // Every pop must be totally ordered by (at, seq).
+        assert!(popped.windows(2).all(|w| w[0] < w[1]), "pops out of order");
+        // And the multiset must be exactly what was pushed.
+        let mut all = expect;
+        all.extend(late);
+        all.sort_unstable();
+        let mut got = popped;
+        got.sort_unstable();
+        assert_eq!(got, all);
     }
 }

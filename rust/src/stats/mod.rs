@@ -15,9 +15,25 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Compute from a sample (not required to be sorted). Panics on empty.
+    /// Compute from a sample (not required to be sorted).
+    ///
+    /// Degenerate inputs are well-defined instead of panicking: an empty
+    /// sample yields `n = 0` with every statistic NaN (checkable via
+    /// [`Summary::is_empty`]), and a single-element sample yields that
+    /// element for every order statistic with `std = 0`.
     pub fn of(values: &[f64]) -> Summary {
-        assert!(!values.is_empty(), "summary of empty sample");
+        if values.is_empty() {
+            return Summary {
+                n: 0,
+                mean: f64::NAN,
+                std: f64::NAN,
+                min: f64::NAN,
+                p50: f64::NAN,
+                p90: f64::NAN,
+                p99: f64::NAN,
+                max: f64::NAN,
+            };
+        }
         let mut v = values.to_vec();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let n = v.len();
@@ -34,11 +50,19 @@ impl Summary {
             max: v[n - 1],
         }
     }
+
+    /// True when computed from an empty sample (all statistics NaN).
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
 }
 
 /// Nearest-rank percentile of an ascending-sorted sample, q in [0, 1].
+/// An empty sample has no percentiles: returns NaN instead of panicking.
 pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty());
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
     let rank = (q * (sorted.len() - 1) as f64).round() as usize;
     sorted[rank.min(sorted.len() - 1)]
 }
@@ -137,8 +161,36 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn summary_empty_panics() {
-        Summary::of(&[]);
+    fn summary_empty_is_nan_not_panic() {
+        let s = Summary::of(&[]);
+        assert!(s.is_empty());
+        assert_eq!(s.n, 0);
+        for v in [s.mean, s.std, s.min, s.p50, s.p90, s.p99, s.max] {
+            assert!(v.is_nan(), "empty-sample statistics are NaN, got {v}");
+        }
+    }
+
+    #[test]
+    fn summary_single_element() {
+        let s = Summary::of(&[7.5]);
+        assert_eq!(s.n, 1);
+        assert!(!s.is_empty());
+        assert_eq!(s.std, 0.0);
+        for v in [s.mean, s.min, s.p50, s.p90, s.p99, s.max] {
+            assert_eq!(v, 7.5);
+        }
+    }
+
+    #[test]
+    fn percentile_of_empty_is_nan() {
+        assert!(percentile_sorted(&[], 0.5).is_nan());
+        assert!(percentile_sorted(&[], 0.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_of_single_element_is_that_element() {
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile_sorted(&[3.25], q), 3.25);
+        }
     }
 }

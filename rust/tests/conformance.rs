@@ -1,0 +1,115 @@
+//! Golden-report conformance gate: one seeded smoke-tier run per
+//! registered workload, digested canonically and compared against the
+//! checked-in goldens under `rust/conformance/golden/`.
+//!
+//! - A missing golden (fresh workload, fresh checkout) is created and
+//!   reported — commit it to pin the result.
+//! - Any seeded-result drift fails with a line diff. Intentional changes
+//!   are accepted with `BLESS_GOLDEN=1 cargo test -q --test conformance`.
+//! - Because this iterates the registry, adding a workload without a
+//!   passing smoke config — or without a committed golden — shows up in
+//!   CI automatically.
+
+use nanosort::conformance::{self, GoldenOutcome, Tier};
+use nanosort::coordinator::ComputeChoice;
+use nanosort::scenario::registry;
+use nanosort::sim::Time;
+
+/// Every registry smoke config must be executable: build from the
+/// spec's smoke tuple, run through `Scenario`, and validate. A workload
+/// registered with a broken (or absent) smoke tuple fails here.
+#[test]
+fn every_registry_smoke_config_runs_and_validates() {
+    assert!(registry::WORKLOADS.len() >= 4, "all four workloads registered");
+    for spec in registry::WORKLOADS {
+        assert!(
+            !spec.smoke.is_empty(),
+            "{}: workloads must declare a CI-small smoke tuple",
+            spec.name
+        );
+        let (report, _) = conformance::run_tier(spec, Tier::Smoke, ComputeChoice::Native)
+            .unwrap_or_else(|e| panic!("{}: smoke run: {e:#}", spec.name));
+        assert!(
+            report.validation.ok(),
+            "{}: smoke validation failed: {}",
+            spec.name,
+            report.validation.detail
+        );
+        assert!(report.runtime() > Time::ZERO, "{}", spec.name);
+        assert!(report.summary.events > 0, "{}", spec.name);
+    }
+}
+
+/// The golden snapshot gate: seeded smoke digests for all four workloads
+/// vs `rust/conformance/golden/<workload>.json`.
+#[test]
+fn golden_digests_match_for_every_workload() {
+    let mut blessed = Vec::new();
+    for spec in registry::WORKLOADS {
+        let (report, _) = conformance::run_tier(spec, Tier::Smoke, ComputeChoice::Native)
+            .unwrap_or_else(|e| panic!("{}: smoke run: {e:#}", spec.name));
+        let digest = conformance::digest_json(&report, Tier::Smoke.name());
+        // One name per (workload, tier), shared with `repro paper`:
+        // blessing either path updates the same file.
+        let name = format!("{}_{}", spec.name, Tier::Smoke.name());
+        match conformance::check_golden(&name, &digest, false)
+            .unwrap_or_else(|e| panic!("{}: golden io: {e:#}", spec.name))
+        {
+            GoldenOutcome::Matched => {}
+            GoldenOutcome::Blessed { path, created } => {
+                eprintln!(
+                    "golden {}: {} {} — commit it to pin this result",
+                    spec.name,
+                    if created { "created" } else { "re-blessed" },
+                    path.display()
+                );
+                blessed.push(spec.name);
+            }
+            GoldenOutcome::Mismatch { path, diff } => panic!(
+                "{}: seeded-result drift vs {}:\n{}\naccept intentional changes with \
+                 BLESS_GOLDEN=1 cargo test -q --test conformance (or `repro paper --bless` \
+                 for the paper-command goldens)",
+                spec.name,
+                path.display(),
+                diff
+            ),
+        }
+    }
+    if !blessed.is_empty() {
+        eprintln!("note: goldens written for {blessed:?}; they gate from the next run on");
+    }
+}
+
+/// The digest itself must be a pure function of the seeded run — if this
+/// flakes, golden comparisons are meaningless.
+#[test]
+fn digests_are_deterministic_per_workload() {
+    for spec in registry::WORKLOADS {
+        let (a, _) =
+            conformance::run_tier(spec, Tier::Smoke, ComputeChoice::Native).unwrap();
+        let (b, _) =
+            conformance::run_tier(spec, Tier::Smoke, ComputeChoice::Native).unwrap();
+        assert_eq!(
+            conformance::digest_json(&a, "smoke"),
+            conformance::digest_json(&b, "smoke"),
+            "{}: digest not deterministic",
+            spec.name
+        );
+    }
+}
+
+/// Mid tier stays runnable (the paper tier is covered by `repro paper`;
+/// at 65,536 cores it is too heavy for `cargo test`). Ignored by default:
+/// 4,096 cores × 64 K keys is sized for the release profile, and CI runs
+/// this suite with `--release -- --include-ignored`.
+#[test]
+#[ignore = "release-profile scale test; CI runs it via --include-ignored"]
+fn mid_tier_validates_for_nanosort() {
+    let spec = registry::find("nanosort").unwrap();
+    let (report, _) = conformance::run_tier(spec, Tier::Mid, ComputeChoice::Native).unwrap();
+    assert!(report.validation.ok(), "{}", report.validation.detail);
+    assert_eq!(report.nodes, 4096);
+    let sort = report.validation.sort.as_ref().unwrap();
+    assert_eq!(sort.total_keys, 65_536);
+    assert!(sort.values_intact, "mid tier runs the GraySort value phase");
+}
