@@ -214,11 +214,16 @@ impl Workload for MergeMin {
 
     fn build(&self, env: &ScenarioEnv) -> Result<Built<MergeMinNode>> {
         let mut rng = SplitMix64::new(env.seed ^ 0x6d65_7267_656d_696e);
+        // MergeMin's input is local load, so the scenario's input
+        // distribution shapes *per-core value counts* (`Uniform` keeps
+        // every core at `values_per_core`, byte-identical to the
+        // pre-perturbation stream).
+        let counts = env.perturb.dist.per_core_counts(self.values_per_core, env.nodes);
         let mut true_min = u64::MAX;
         let result = Rc::new(std::cell::Cell::new(u64::MAX));
         let programs: Vec<MergeMinNode> = (0..env.nodes)
             .map(|id| {
-                let values: Vec<u64> = (0..self.values_per_core)
+                let values: Vec<u64> = (0..counts[id])
                     .map(|_| rng.next_u64() % (u64::MAX - 1))
                     .collect();
                 true_min = true_min.min(*values.iter().min().unwrap());

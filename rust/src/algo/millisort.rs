@@ -28,7 +28,7 @@ use anyhow::Result;
 use crate::algo::tree::AggTree;
 use crate::compute::LocalCompute;
 use crate::cpu::Temp;
-use crate::graysort::{validate_sorted_output, KeyGen, ValidationReport};
+use crate::graysort::{validate_sorted_output, ValidationReport};
 use crate::nanopu::{Ctx, NodeId, Program, WireMsg};
 use crate::net::NetConfig;
 use crate::scenario::{Built, Finish, RunReport, Scenario, ScenarioEnv, Validation, Workload};
@@ -459,8 +459,9 @@ impl Workload for MilliSort {
             probe_rounds: self.rounds(),
             outputs: RefCell::new(vec![Vec::new(); env.nodes]),
         });
-        let mut keygen = KeyGen::new(env.seed);
-        let per_node = keygen.generate(self.total_keys, env.nodes);
+        // Key values come from the scenario's input distribution
+        // (`Uniform` = the exact pre-perturbation KeyGen path).
+        let per_node = env.perturb.dist.partitioned_keys(env.seed, self.total_keys, env.nodes);
         let input: Vec<u64> = per_node.iter().flatten().copied().collect();
 
         let programs: Vec<MilliSortNode> = (0..env.nodes)

@@ -8,7 +8,7 @@ use anyhow::Result;
 use crate::algo::tree::AggTree;
 use crate::compute::LocalCompute;
 use crate::cpu::Temp;
-use crate::graysort::{validate_sorted_output, value_of_key, KeyGen, ValidationReport};
+use crate::graysort::{validate_sorted_output, value_of_key, ValidationReport};
 use crate::nanopu::{Ctx, Group, GroupId, NodeId, Program, WireMsg};
 use crate::net::NetConfig;
 use crate::scenario::{
@@ -549,8 +549,19 @@ impl NanoSortNode {
 
     fn handle_value_resp(&mut self, ctx: &mut Ctx<NsMsg>, key: u64, value: u64) {
         ctx.compute(KEY_APPEND_CYCLES);
-        if let Ok(slot) = self.keys.binary_search(&key) {
-            self.values_by_slot[slot] = value;
+        // Skewed distributions produce duplicate keys; duplicates share
+        // one deterministic value, so the first response fills the whole
+        // equal range and later ones are O(1) no-ops (host-time guard:
+        // per-response range fills would be O(R^2) in the duplicate
+        // count; a slot already holding `value` means the range is done —
+        // and if `value` happens to equal the 0 initializer, skipping
+        // still leaves every slot correct).
+        let lo = self.keys.partition_point(|&k| k < key);
+        if self.values_by_slot[lo] != value {
+            let hi = self.keys.partition_point(|&k| k <= key);
+            for slot in lo..hi {
+                self.values_by_slot[slot] = value;
+            }
         }
         self.values_received += 1;
         if self.values_received == self.keys.len() {
@@ -714,9 +725,14 @@ impl Workload for NanoSort {
             }),
         });
 
-        // Pre-load the cluster (paper §5.2: records loaded before the clock).
-        let mut keygen = KeyGen::new(env.seed);
-        let per_node = keygen.generate(env.nodes * self.keys_per_node, env.nodes);
+        // Pre-load the cluster (paper §5.2: records loaded before the
+        // clock). The key values come from the scenario's input
+        // distribution; `Uniform` (the default) is the exact GraySort
+        // KeyGen path the goldens pin.
+        let per_node = env
+            .perturb
+            .dist
+            .partitioned_keys(env.seed, env.nodes * self.keys_per_node, env.nodes);
         let input: Vec<u64> = per_node.iter().flatten().copied().collect();
 
         let programs: Vec<NanoSortNode> = (0..env.nodes)
@@ -733,8 +749,8 @@ impl Workload for NanoSort {
                     step: 0,
                     keys: Vec::new(),
                     origins: Vec::new(),
+                    next_origins: vec![id as u32; keys.len()],
                     next_keys: keys,
-                    next_origins: vec![id as u32; self.keys_per_node],
                     my_pivots: Vec::new(),
                     mt_round: 0,
                     mt_pending: Vec::new(),
@@ -938,6 +954,32 @@ mod tests {
                 "nodes={nodes} b={b} kpn={kpn}: {:?}",
                 r.validation
             );
+        }
+    }
+
+    /// Every input distribution — including the duplicate-heavy ones —
+    /// must still produce a correct sort, with the value phase intact
+    /// (duplicate keys share one deterministic value).
+    #[test]
+    fn sorts_under_every_key_distribution() {
+        use crate::perturb::KeyDistribution;
+        for d in KeyDistribution::ALL {
+            let r = Scenario::new(NanoSort {
+                keys_per_node: 8,
+                buckets: 4,
+                median_incast: 4,
+                shuffle_values: true,
+                ..Default::default()
+            })
+            .nodes(16)
+            .dist(d)
+            .seed(11)
+            .run()
+            .unwrap();
+            assert!(r.validation.ok(), "{}: {}", d.name(), r.validation.detail);
+            let v = r.validation.sort.as_ref().unwrap();
+            assert_eq!(v.total_keys, 128, "{}", d.name());
+            assert!(v.values_intact, "{}", d.name());
         }
     }
 

@@ -211,6 +211,11 @@ impl Workload for SetAlgebra {
 
     fn build(&self, env: &ScenarioEnv) -> Result<Built<SetAlgebraNode>> {
         let mut rng = SplitMix64::new(env.seed ^ 0x7365_7461_6c67);
+        // Set algebra's input is local posting-list shards, so the
+        // scenario's input distribution shapes *per-core shard sizes*
+        // (`Uniform` keeps every core at `ids_per_core`, byte-identical
+        // to the pre-perturbation stream).
+        let counts = env.perturb.dist.per_core_counts(self.ids_per_core, env.nodes);
         let result = Rc::new(std::cell::Cell::new(u64::MAX));
         let mut expected = 0u64;
         let programs: Vec<SetAlgebraNode> = (0..env.nodes)
@@ -218,7 +223,7 @@ impl Workload for SetAlgebra {
                 // Doc-id-range sharding: core c owns ids with high bits = c.
                 let base = (id as u64) << 32;
                 let mut shards: Vec<Vec<u64>> = vec![Vec::new(); self.lists];
-                for i in 0..self.ids_per_core {
+                for i in 0..counts[id] {
                     let id64 = base + i as u64;
                     if rng.chance(self.hit_prob.0, self.hit_prob.1) {
                         // Common doc: appears in every list.

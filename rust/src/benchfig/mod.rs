@@ -20,10 +20,12 @@ use anyhow::{bail, Result};
 use crate::coordinator::{RunOptions, Table};
 
 /// All figure/table ids in paper order (plus the conformance-tier
-/// `paperscale` summary).
+/// `paperscale` summary and the sweep-driven `skewsweep`/`tailsweep`
+/// sensitivity studies).
 pub const ALL_FIGURES: &[&str] = &[
     "table1", "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "12", "13", "14",
-    "15", "multicast", "16", "headline", "table2", "ablation", "paperscale",
+    "15", "multicast", "16", "headline", "table2", "ablation", "paperscale", "skewsweep",
+    "tailsweep",
 ];
 
 /// Run one figure/table by id; returns the report tables.
@@ -51,6 +53,8 @@ pub fn run_figure(id: &str, opts: &RunOptions) -> Result<Vec<Table>> {
         "table2" => vec![datacenter::table2(opts)?],
         "ablation" => vec![sortfigs::fig_ablation(opts)?],
         "paperscale" => vec![datacenter::paperscale(opts)?],
+        "skewsweep" => vec![crate::perturb::sweep::skew_sweep_figure(opts)?],
+        "tailsweep" => vec![crate::perturb::sweep::tail_sweep_figure(opts)?],
         other => bail!("unknown figure id {other:?}; ids: {}", ALL_FIGURES.join(", ")),
     })
 }
@@ -64,7 +68,7 @@ mod tests {
     #[test]
     fn cheap_figures_render() {
         let opts = RunOptions { quick: true, ..Default::default() };
-        for id in ["table1", "1", "2", "3", "4", "6", "7", "8"] {
+        for id in ["table1", "1", "2", "3", "4", "6", "7", "8", "skewsweep", "tailsweep"] {
             let tables = run_figure(id, &opts).unwrap();
             assert!(!tables.is_empty(), "{id}");
             for t in &tables {

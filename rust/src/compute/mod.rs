@@ -12,6 +12,12 @@
 //!   the nearest compiled variant with `u64::MAX` sentinels.
 //!
 //! Both implementations are cross-checked against each other in tests.
+//!
+//! Timing note: data-plane calls are timing-neutral — every operation's
+//! cost is charged through [`crate::cpu::CoreModel`] by the node program,
+//! and the engine scales those cycle charges per node for straggler cores
+//! (the perturbation layer's slowdown factor, see [`crate::perturb`]), so
+//! the same kernel output is produced regardless of which cores straggle.
 
 mod native;
 mod xla_compute;

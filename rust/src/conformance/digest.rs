@@ -14,8 +14,9 @@ use crate::scenario::{MetricValue, RunReport};
 use crate::sim::Time;
 
 /// Escape a string for a JSON value (the digests only carry short ASCII
-/// detail lines, but be correct anyway).
-fn esc(s: &str) -> String {
+/// detail lines, but be correct anyway). Shared with the sweep driver's
+/// line-JSON records.
+pub(crate) fn esc(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {
@@ -47,6 +48,7 @@ pub fn digest_json(report: &RunReport, tier: &str) -> String {
     lines.push(format!("\"wire_bytes\": {}", net.wire_bytes));
     lines.push(format!("\"multicasts\": {}", net.multicasts));
     lines.push(format!("\"tail_hits\": {}", net.tail_hits));
+    lines.push(format!("\"retransmits\": {}", net.retransmits));
     lines.push(format!("\"validation_ok\": {}", report.validation.ok()));
     lines.push(format!("\"validation\": \"{}\"", esc(&report.validation.detail)));
     if let Some(sort) = &report.validation.sort {
@@ -101,6 +103,7 @@ mod tests {
         assert!(d.contains("\"tier\": \"smoke\""));
         assert!(d.contains("\"makespan_units\": "));
         assert!(d.contains("\"validation_ok\": true"));
+        assert!(d.contains("\"retransmits\": 0"), "lossless runs pin zero retransmits");
         assert!(d.contains("\"metric.found_min\": "));
         assert!(d.contains("\"stage0_busy_units\": "));
         // Every body line but the last ends with a comma.

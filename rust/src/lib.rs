@@ -33,9 +33,17 @@
 //!   golden-file regression comparison (`rust/conformance/golden/`), and
 //!   `BENCH_*.json` perf-trajectory records. Driven by `repro paper
 //!   [--tier T] [--bless]` and the `rust/tests/conformance.rs` CI gate.
+//! - [`perturb`] — the perturbation layer: input skew
+//!   ([`perturb::KeyDistribution`]: uniform/zipfian/sorted/few-distinct/
+//!   adversarial), packet loss with timeout + retransmit, core
+//!   oversubscription (spine busy-until registers), and straggler cores —
+//!   all default-off and bit-identical when off — plus the deterministic
+//!   grid driver behind `repro sweep <workload> --axis <param>=a,b,c`
+//!   ([`perturb::sweep`]).
 //! - [`benchfig`] — regenerates every table and figure in the paper's
 //!   evaluation (see DESIGN.md §4 for the index), plus `paperscale`
-//!   (the simulated headline next to the paper's 68 µs, per tier).
+//!   (the simulated headline next to the paper's 68 µs, per tier) and the
+//!   sweep-driven `skewsweep`/`tailsweep` sensitivity studies.
 //!
 //! Quickstart: `cargo run --release --example quickstart`.
 
@@ -48,6 +56,7 @@ pub mod cpu;
 pub mod graysort;
 pub mod nanopu;
 pub mod net;
+pub mod perturb;
 pub mod runtime;
 pub mod scenario;
 pub mod sim;

@@ -2,12 +2,11 @@
 //!
 //! ```text
 //! repro fig <id|all> [--xla] [--seed N] [--runs N] [--quick] [--csv]
-//! repro run nanosort   [--nodes N] [--kpn K] [--buckets B] [--incast F]
-//!                      [--values] [--naive-pivots] [--no-multicast] [--xla] [--seed N]
-//! repro run millisort  [--cores N] [--keys K] [--rf R] [--no-multicast] [--xla] [--seed N]
-//! repro run mergemin   [--cores N] [--vpc V] [--incast K] [--no-multicast] [--xla] [--seed N]
-//! repro run setalgebra [--cores N] [--lists Q] [--incast K] [--ids I]
-//!                      [--no-multicast] [--xla] [--seed N]
+//! repro run <workload> [--<param> ...] [--skew D] [--loss N] [--oversub F]
+//!                      [--stragglers N] [--no-multicast] [--xla] [--seed N]
+//! repro run <workload> --help   # full parameter-descriptor listing
+//! repro sweep <workload> [--tier smoke|mid|paper] --axis <param>=a,b,c
+//!                      [--axis ...] [--xla] [--seed N]
 //! repro paper          [--tier smoke|mid|paper] [--bless] [--xla]
 //! repro artifacts      # list loaded XLA artifacts
 //! repro list           # list figure ids and registered workloads
@@ -18,7 +17,14 @@
 //! parsed from the flags, and the run executes through one
 //! [`nanosort::scenario::Scenario`] code path shared by all workloads —
 //! adding a workload to the registry adds it here (and to the help text)
-//! with no CLI changes.
+//! with no CLI changes. Environment knobs ([`nanosort::perturb`]) apply
+//! to every workload: input skew, packet loss + retransmit, core
+//! oversubscription, stragglers.
+//!
+//! `repro sweep` runs the cartesian product of `--axis` values over the
+//! workload's conformance-tier base configuration (conformance seed, so
+//! every cell is deterministic), prints one JSON line per cell plus a
+//! table comparing each cell against the unperturbed baseline.
 //!
 //! `repro paper` is the conformance entry point: it runs NanoSort at a
 //! named scale tier (default: the paper's 65,536-core × 1M-key headline)
@@ -33,6 +39,7 @@ use nanosort::benchfig::{run_figure, ALL_FIGURES};
 use nanosort::conformance::{self, BenchRecord, GoldenOutcome, Tier};
 use nanosort::coordinator::{Args, ComputeChoice};
 use nanosort::net::NetConfig;
+use nanosort::perturb::{self, sweep, Perturbations};
 use nanosort::runtime::XlaEngine;
 use nanosort::scenario::{registry, Scenario};
 
@@ -48,6 +55,7 @@ fn real_main() -> Result<()> {
     match args.positional().as_deref() {
         Some("fig") => cmd_fig(args),
         Some("run") => cmd_run(args),
+        Some("sweep") => cmd_sweep(args),
         Some("paper") => cmd_paper(args),
         Some("artifacts") => cmd_artifacts(),
         Some("list") => {
@@ -69,7 +77,8 @@ fn help() -> String {
     format!(
         "repro — NanoSort reproduction CLI
   repro fig <id|all> [--xla] [--seed N] [--runs N] [--quick] [--csv]
-{}  repro paper       [--tier smoke|mid|paper] [--bless] [--xla]
+{}  repro sweep <workload> [--tier smoke|mid|paper] --axis <param>=a,b,c [--axis ...] [--xla] [--seed N]
+  repro paper       [--tier smoke|mid|paper] [--bless] [--xla]
   repro artifacts | repro list",
         registry::cli_help()
     )
@@ -102,24 +111,78 @@ fn cmd_fig(mut args: Args) -> Result<()> {
 
 /// The single data-driven run path: registry lookup → parameter parse →
 /// workload construction → scenario execution → unified report.
+/// `--help` after the workload name prints the typed parameter
+/// descriptors instead of running.
 fn cmd_run(mut args: Args) -> Result<()> {
     let which = args.positional().unwrap_or_default();
     let spec = registry::find(&which)?;
+    if args.flag("help") {
+        print!("{}", registry::describe(spec));
+        return Ok(());
+    }
     let params = registry::parse_args(spec, &mut args)?;
     let no_mcast = args.flag("no-multicast");
+    // Environment knobs (perturbation layer): shared by every workload.
+    let mut net = NetConfig { multicast: !no_mcast, ..NetConfig::default() };
+    let mut knobs = Perturbations::default();
+    for &(name, _) in perturb::ENV_AXES {
+        if let Some(value) = args.value_checked(name)? {
+            perturb::apply_env_setting(name, &value, &mut net, &mut knobs)?;
+        }
+    }
     let opts = args.run_options()?;
     ensure_consumed(&args)?;
 
     let workload = (spec.build)(&params)?;
     let nodes = params.u64(spec.nodes_param.name)? as usize;
-    let net = NetConfig { multicast: !no_mcast, ..NetConfig::default() };
     let report = Scenario::from_dyn(workload)
         .nodes(nodes)
         .net(net)
+        .perturb(knobs)
         .compute(opts.compute)
         .seed(opts.seed)
         .run()?;
     print!("{}", report.render());
+    Ok(())
+}
+
+/// Deterministic perturbation sweep: cartesian product of `--axis`
+/// values over the workload's conformance-tier base configuration.
+/// Emits one JSON line per cell, then the baseline-comparison table.
+fn cmd_sweep(mut args: Args) -> Result<()> {
+    let which = args.positional().unwrap_or_default();
+    let spec = registry::find(&which)?;
+    let tier = match args.value_checked("tier")? {
+        Some(t) => Tier::parse(&t)?,
+        None => Tier::Smoke,
+    };
+    let mut axes = Vec::new();
+    while let Some(raw) = args.value_checked("axis")? {
+        axes.push(sweep::parse_axis(&raw)?);
+    }
+    anyhow::ensure!(
+        !axes.is_empty(),
+        "repro sweep needs at least one --axis <param>=a,b,c (try --axis skew=uniform,zipfian)"
+    );
+    let xla = args.flag("xla");
+    let seed = args.num_checked("seed")?.unwrap_or(conformance::CONFORMANCE_SEED);
+    ensure_consumed(&args)?;
+
+    let compute = if xla { ComputeChoice::Xla } else { ComputeChoice::Native };
+    eprintln!(
+        "[sweep: {} @ {} tier, seed {seed:#x}, {} ax{}]",
+        spec.name,
+        tier.name(),
+        axes.len(),
+        if axes.len() == 1 { "is" } else { "es" }
+    );
+    let start = std::time::Instant::now();
+    let outcome = sweep::run_sweep(spec, tier, &axes, compute, seed)?;
+    for line in outcome.json_lines() {
+        println!("{line}");
+    }
+    println!("{}", outcome.table.render());
+    eprintln!("[sweep: {} cells in {:.2?}]", outcome.cells.len(), start.elapsed());
     Ok(())
 }
 

@@ -37,6 +37,21 @@ pub struct NetConfig {
     pub tail_prob: (u64, u64),
     /// Extra latency for tail-affected messages, ns.
     pub tail_extra_ns: u64,
+    /// Per-delivery drop probability (numerator / denominator); default
+    /// `(0, 1)` = the paper's lossless links. Each lost transmission
+    /// attempt costs [`NetConfig::rto_ns`] at the sender before the
+    /// packet is retransmitted; drops are deterministic via the fabric's
+    /// seeded `SplitMix64` (and draw *nothing* from it when disabled, so
+    /// lossless runs stay bit-identical).
+    pub loss_prob: (u64, u64),
+    /// Retransmit timeout, ns (only relevant when `loss_prob` is on).
+    pub rto_ns: u64,
+    /// Core oversubscription factor. `0` (default) is the paper's §5.1
+    /// non-blocking full-bisection core; `f >= 1` gives the fabric only
+    /// `leaf_radix / f` spine paths, each a store-and-forward busy-until
+    /// register that cross-leaf packets contend for (deterministic
+    /// ECMP-style spine choice).
+    pub oversub: u64,
 }
 
 impl Default for NetConfig {
@@ -50,6 +65,9 @@ impl Default for NetConfig {
             multicast: true,
             tail_prob: (0, 100),
             tail_extra_ns: 0,
+            loss_prob: (0, 1),
+            rto_ns: 10_000,
+            oversub: 0,
         }
     }
 }
@@ -91,6 +109,9 @@ pub struct NetStats {
     pub tail_hits: u64,
     /// Multicast sends (subset of msgs_sent).
     pub multicasts: u64,
+    /// Transmission attempts lost and retransmitted (0 on lossless
+    /// fabrics). Delivered/byte counters count the final delivery only.
+    pub retransmits: u64,
 }
 
 /// The fabric: topology + config + endpoint-link occupancy + counters.
@@ -100,18 +121,26 @@ pub struct Fabric {
     stats: NetStats,
     egress_free: Vec<Time>,
     ingress_free: Vec<Time>,
+    /// Spine busy-until registers (empty unless `cfg.oversub > 0`).
+    spine_free: Vec<Time>,
     rng: SplitMix64,
 }
 
 impl Fabric {
     pub fn new(topo: Topology, cfg: NetConfig, seed: u64) -> Self {
         let n = topo.nodes;
+        let spines = if cfg.oversub > 0 {
+            (topo.leaf_radix as u64 / cfg.oversub).max(1) as usize
+        } else {
+            0
+        };
         Fabric {
             topo,
             cfg,
             stats: NetStats::default(),
             egress_free: vec![Time::ZERO; n],
             ingress_free: vec![Time::ZERO; n],
+            spine_free: vec![Time::ZERO; spines],
             rng: SplitMix64::new(seed ^ 0x6e65_745f_7461_696c),
         }
     }
@@ -212,9 +241,38 @@ impl Fabric {
         let prop = self.cfg.propagation(hops.links, hops.switches);
         let tail = self.tail_penalty();
         let ser = self.cfg.serialization(payload_bytes);
+        // Lossy link (perturbation, default off): each lost attempt costs
+        // one retransmit timeout at the sender before the packet goes
+        // back on the wire. Drops draw from the fabric RNG only when the
+        // knob is on, so lossless streams stay bit-identical. Capped at
+        // 64 consecutive losses (p <= loss^64) to bound pathological
+        // configurations.
+        let (ln, ld) = self.cfg.loss_prob;
+        let mut sent_at = on_wire;
+        if ln > 0 {
+            let mut attempts = 0;
+            while attempts < 64 && self.rng.chance(ln, ld) {
+                attempts += 1;
+                self.stats.retransmits += 1;
+                sent_at += Time::from_ns(self.cfg.rto_ns);
+            }
+        }
+        let mut at = sent_at + prop + tail;
+        // Oversubscribed core (perturbation, default off): cross-leaf
+        // packets contend for a reduced set of spine busy-until
+        // registers instead of the non-blocking full-bisection core.
+        if !self.spine_free.is_empty() && hops.switches >= 3 {
+            let s = ecmp_spine(src, dst, self.spine_free.len());
+            // The packet reaches the spine roughly halfway along the
+            // path; it occupies the spine for its serialization time.
+            let at_spine = sent_at + Time(prop.0 / 2);
+            let spine_start = at_spine.max(self.spine_free[s]);
+            self.spine_free[s] = spine_start + ser;
+            at += spine_start.saturating_sub(at_spine);
+        }
         // Store-and-forward on the destination downlink: the message can
         // only start occupying it once the link is free.
-        let start = (on_wire + prop + tail).max(self.ingress_free[dst]);
+        let start = at.max(self.ingress_free[dst]);
         let arrival = start + ser;
         self.ingress_free[dst] = arrival;
         self.stats.msgs_delivered += 1;
@@ -222,6 +280,14 @@ impl Fabric {
         self.stats.wire_bytes += payload_bytes + self.cfg.header_bytes;
         arrival
     }
+}
+
+/// Deterministic ECMP-style spine pick for a (src, dst) flow.
+fn ecmp_spine(src: usize, dst: usize, spines: usize) -> usize {
+    let mut h = (src as u64).wrapping_shl(32) ^ dst as u64;
+    h = (h ^ (h >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h = (h ^ (h >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    ((h ^ (h >> 31)) % spines as u64) as usize
 }
 
 #[cfg(test)]
@@ -381,6 +447,91 @@ mod tests {
             assert_eq!(s.msgs_delivered, msgs);
             assert_eq!(s.wire_bytes, s.payload_bytes + msgs * 24);
         }
+    }
+
+    #[test]
+    fn loss_injects_retransmit_delay_deterministically() {
+        let mk = || {
+            let mut cfg = NetConfig::default();
+            cfg.loss_prob = (2000, 10_000); // 20%
+            cfg.rto_ns = 5_000;
+            Fabric::new(Topology::paper(128), cfg, 9)
+        };
+        let run = |mut f: Fabric| -> (Vec<Time>, u64) {
+            let arrivals = (0..2_000)
+                .map(|i| f.unicast(i % 128, (i + 7) % 128, 64, Time::from_ns(i as u64)))
+                .collect();
+            (arrivals, f.stats().retransmits)
+        };
+        let (a, ra) = run(mk());
+        let (b, rb) = run(mk());
+        assert_eq!(a, b, "same seed + loss rate must replay identically");
+        assert_eq!(ra, rb);
+        // ~20% of 2,000 attempts lose at least once.
+        assert!((200..1000).contains(&(ra as usize)), "retransmits = {ra}");
+        // Retransmitted messages arrive an RTO multiple later.
+        let lossless = {
+            let mut f = fabric(128);
+            (0..2_000)
+                .map(|i| f.unicast(i % 128, (i + 7) % 128, 64, Time::from_ns(i as u64)))
+                .collect::<Vec<Time>>()
+        };
+        assert!(a.iter().zip(&lossless).all(|(x, y)| x >= y));
+        assert!(a.iter().zip(&lossless).any(|(x, y)| x > y));
+    }
+
+    #[test]
+    fn disabled_loss_draws_nothing_from_the_rng_stream() {
+        // Two fabrics, same seed, both with tail injection on; one also
+        // carries a loss config with numerator 0. If the loss gate drew
+        // from the RNG, the tail pattern (and arrivals) would diverge.
+        let mut tail_cfg = NetConfig::default();
+        tail_cfg.tail_prob = (1, 50);
+        tail_cfg.tail_extra_ns = 2_000;
+        let mut with_zero_loss = tail_cfg.clone();
+        with_zero_loss.loss_prob = (0, 10_000);
+        with_zero_loss.rto_ns = 99_999;
+        let run = |cfg: NetConfig| -> Vec<Time> {
+            let mut f = Fabric::new(Topology::paper(64), cfg, 5);
+            (0..500).map(|i| f.unicast(i % 64, (i + 3) % 64, 32, Time::from_ns(i as u64))).collect()
+        };
+        assert_eq!(run(tail_cfg), run(with_zero_loss));
+    }
+
+    #[test]
+    fn oversubscription_queues_cross_leaf_traffic() {
+        // 64-fold oversubscription leaves a single spine register: many
+        // simultaneous cross-leaf messages serialize through it.
+        let mut cfg = NetConfig::default();
+        cfg.oversub = 64;
+        let mut over = Fabric::new(Topology::paper(256), cfg, 1);
+        let mut full = fabric(256);
+        let arrivals =
+            |f: &mut Fabric| (0..64).map(|i| f.unicast(i, 128 + i, 256, Time::ZERO)).collect::<Vec<Time>>();
+        let a_over = arrivals(&mut over);
+        let a_full = arrivals(&mut full);
+        assert!(a_over.iter().zip(&a_full).all(|(o, f)| o >= f));
+        assert!(
+            a_over.last().unwrap() > a_full.last().unwrap(),
+            "spine contention must delay the tail of an incast burst"
+        );
+        // Same-leaf traffic never touches a spine.
+        let mut cfg = NetConfig::default();
+        cfg.oversub = 64;
+        let mut over = Fabric::new(Topology::paper(256), cfg, 1);
+        let mut full = fabric(256);
+        assert_eq!(over.unicast(0, 1, 64, Time::ZERO), full.unicast(0, 1, 64, Time::ZERO));
+    }
+
+    #[test]
+    fn oversub_one_approximates_full_bisection_for_disjoint_flows() {
+        // With the full spine count (oversub = 1) a single cross-leaf
+        // message sees no added queueing.
+        let mut cfg = NetConfig::default();
+        cfg.oversub = 1;
+        let mut f1 = Fabric::new(Topology::paper(256), cfg, 1);
+        let mut f0 = fabric(256);
+        assert_eq!(f1.unicast(0, 200, 64, Time::ZERO), f0.unicast(0, 200, 64, Time::ZERO));
     }
 
     #[test]

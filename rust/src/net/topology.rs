@@ -94,4 +94,50 @@ mod tests {
             assert_eq!(t.hops(a, b), t.hops(b, a));
         }
     }
+
+    /// Loopback is NIC-internal everywhere — including node 0, the exact
+    /// leaf boundary, and the last node of a ragged fleet.
+    #[test]
+    fn hops_loopback_everywhere() {
+        let t = Topology::paper(100);
+        for n in [0usize, 63, 64, 99] {
+            assert_eq!(t.hops(n, n), PathHops { links: 0, switches: 0 }, "node {n}");
+        }
+    }
+
+    /// The same-leaf/cross-leaf boundary sits exactly at `leaf_radix`:
+    /// 62→63 shares a leaf, 63→64 crosses, 64→65 shares the next leaf.
+    #[test]
+    fn hops_boundary_at_leaf_radix() {
+        let t = Topology::paper(128);
+        assert_eq!(t.hops(62, 63), PathHops { links: 2, switches: 1 });
+        assert_eq!(t.hops(63, 64), PathHops { links: 4, switches: 3 });
+        assert_eq!(t.hops(64, 65), PathHops { links: 2, switches: 1 });
+        assert_eq!(t.hops(0, 127), PathHops { links: 4, switches: 3 });
+    }
+
+    /// A ragged last leaf (fleet not a multiple of the radix) still
+    /// groups its members on one switch and crosses to every other leaf.
+    #[test]
+    fn hops_last_partial_leaf() {
+        let t = Topology::paper(100); // leaves: [0..64), [64..100)
+        assert_eq!(t.num_leaves(), 2);
+        assert_eq!(t.hops(64, 99), PathHops { links: 2, switches: 1 });
+        assert_eq!(t.hops(99, 0), PathHops { links: 4, switches: 3 });
+        // Single-node "leaf": 128 nodes + 1 straggler node on leaf 2.
+        let t = Topology::paper(129);
+        assert_eq!(t.num_leaves(), 3);
+        assert_eq!(t.leaf_of(128), 2);
+        assert_eq!(t.hops(128, 128), PathHops { links: 0, switches: 0 });
+        assert_eq!(t.hops(128, 127), PathHops { links: 4, switches: 3 });
+    }
+
+    /// Sub-radix fleets live on a single leaf: every non-loopback pair is
+    /// one switch away.
+    #[test]
+    fn hops_single_leaf_fleet() {
+        let t = Topology::paper(16);
+        assert_eq!(t.num_leaves(), 1);
+        assert_eq!(t.hops(0, 15), PathHops { links: 2, switches: 1 });
+    }
 }

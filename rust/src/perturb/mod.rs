@@ -1,0 +1,484 @@
+//! Perturbation layer: everything that bends a run away from the paper's
+//! happy path.
+//!
+//! The headline claim (1M keys in 68 µs on 65,536 cores) assumes a
+//! uniform key distribution, a non-blocking full-bisection core, lossless
+//! links, and homogeneous cores. Each assumption gets a knob here:
+//!
+//! - **Input skew** — [`KeyDistribution`] generalizes workload input
+//!   generation (uniform / zipfian / sorted / few-distinct /
+//!   adversarial-bucket). Key-space workloads (NanoSort, MilliSort) draw
+//!   their *key values* from the distribution; aggregation workloads
+//!   (MergeMin, set algebra) map it onto *per-core load* instead
+//!   ([`KeyDistribution::per_core_counts`]), so every registered workload
+//!   responds to the same `--skew` axis.
+//! - **Packet loss** — `NetConfig::loss_prob` + `NetConfig::rto_ns`
+//!   (see [`crate::net::NetConfig`]): each lost transmission attempt costs
+//!   one retransmit timeout before the packet goes back on the wire,
+//!   deterministically seeded through the fabric's `SplitMix64` stream.
+//! - **Core oversubscription** — `NetConfig::oversub`: instead of the
+//!   paper's non-blocking full-bisection core, cross-leaf packets contend
+//!   for `leaf_radix / oversub` spine busy-until registers.
+//! - **Stragglers** — [`StragglerConfig`]: a seeded subset of cores runs
+//!   all compute (RX, handler cycles, TX issue offsets) slower by an
+//!   integer factor, applied in the engine's cycle-to-time conversion.
+//!
+//! All knobs default **off** and are gated so the unperturbed event and
+//! RNG streams are bit-identical to a build without this module — the
+//! conformance goldens (`rust/conformance/golden/`) pin that.
+//!
+//! [`sweep`] is the grid driver behind `repro sweep <workload> --axis
+//! <param>=a,b,c`: it runs the cartesian product of axis values over the
+//! tier's base configuration, reuses the conformance digest machinery for
+//! per-cell determinism, and reports makespan/p99 against the unperturbed
+//! baseline.
+
+pub mod sweep;
+
+use anyhow::{bail, Result};
+
+use crate::graysort::KeyGen;
+use crate::sim::SplitMix64;
+
+/// Zipf exponent used by [`KeyDistribution::Zipfian`]. Deliberately on
+/// the aggressive side (YCSB uses 0.99) so the hot key's bucket is
+/// unambiguously overfull even at CI-small smoke shapes.
+pub const ZIPF_THETA: f64 = 1.2;
+
+/// Distinct values used by [`KeyDistribution::FewDistinct`].
+pub const FEW_DISTINCT_VALUES: usize = 16;
+
+const ZIPF_SALT: u64 = 0x7a69_7066_6b65_7973; // "zipfkeys"
+const RANK_SALT: u64 = 0x7261_6e6b_6d61_7073; // "rankmaps"
+const FEW_SALT: u64 = 0x6665_7764_6973_7431; // "fewdist1"
+const ADV_SALT: u64 = 0x6164_7662_7563_6b31; // "advbuck1"
+const SHUF_SALT: u64 = 0x7065_7274_7368_7566; // "pertshuf"
+
+/// How workload inputs are distributed across the key space (and, for
+/// aggregation workloads, across cores).
+///
+/// `Uniform` is byte-for-byte the pre-perturbation input path (the
+/// GraySort [`KeyGen`]); everything else models a named failure mode of
+/// bucket sorts at scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KeyDistribution {
+    /// Distinct uniform random keys — the paper's assumption.
+    #[default]
+    Uniform,
+    /// Zipf-popularity keys (θ = [`ZIPF_THETA`]): heavy duplication of a
+    /// few hot keys. Duplicates cannot be split by pivots, so the hot
+    /// key's final bucket is overfull — the classic skew that breaks
+    /// bucket sorts (PGX.D's motivating case).
+    Zipfian,
+    /// Globally pre-sorted input, assigned to cores in contiguous
+    /// chunks: per-node pivot proposals come from disjoint narrow
+    /// ranges, stressing the median-of-proposals correction.
+    Sorted,
+    /// Only [`FEW_DISTINCT_VALUES`] distinct key values: pivots cannot
+    /// subdivide beyond the value count, so at most that many final
+    /// buckets carry keys.
+    FewDistinct,
+    /// Half of all keys are one hot value — the adversarial bound for
+    /// any pivot-bucketed sort (one final bucket must hold ≥ half the
+    /// input).
+    AdversarialBucket,
+}
+
+impl KeyDistribution {
+    pub const ALL: [KeyDistribution; 5] = [
+        KeyDistribution::Uniform,
+        KeyDistribution::Zipfian,
+        KeyDistribution::Sorted,
+        KeyDistribution::FewDistinct,
+        KeyDistribution::AdversarialBucket,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KeyDistribution::Uniform => "uniform",
+            KeyDistribution::Zipfian => "zipfian",
+            KeyDistribution::Sorted => "sorted",
+            KeyDistribution::FewDistinct => "few-distinct",
+            KeyDistribution::AdversarialBucket => "adversarial",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<KeyDistribution> {
+        match s {
+            "uniform" => Ok(KeyDistribution::Uniform),
+            "zipfian" | "zipf" => Ok(KeyDistribution::Zipfian),
+            "sorted" => Ok(KeyDistribution::Sorted),
+            "few-distinct" | "fewdistinct" => Ok(KeyDistribution::FewDistinct),
+            "adversarial" | "adversarial-bucket" => Ok(KeyDistribution::AdversarialBucket),
+            other => bail!(
+                "unknown key distribution {other:?} (known: uniform|zipfian|sorted|\
+                 few-distinct|adversarial)"
+            ),
+        }
+    }
+
+    /// `total` keys split evenly across `cores` (total must divide), all
+    /// `< u64::MAX` (the XLA padding sentinel).
+    ///
+    /// The `Uniform` arm routes through the exact pre-perturbation
+    /// [`KeyGen`] path, so default-config runs stay bit-identical to the
+    /// committed goldens.
+    pub fn partitioned_keys(self, seed: u64, total: usize, cores: usize) -> Vec<Vec<u64>> {
+        assert!(cores > 0 && total % cores == 0, "keys must divide evenly across cores");
+        match self {
+            KeyDistribution::Uniform => KeyGen::new(seed).generate(total, cores),
+            KeyDistribution::Sorted => {
+                let mut keys = KeyGen::new(seed).distinct_keys(total);
+                keys.sort_unstable();
+                chunk(keys, cores)
+            }
+            KeyDistribution::Zipfian => chunk(zipf_keys(seed, total), cores),
+            KeyDistribution::FewDistinct => {
+                let k = FEW_DISTINCT_VALUES.min(total.max(1));
+                let pool = KeyGen::new(seed ^ FEW_SALT).distinct_keys(k);
+                let mut rng = SplitMix64::new(seed ^ FEW_SALT.rotate_left(7));
+                let keys = (0..total).map(|_| pool[rng.index(k)]).collect();
+                chunk(keys, cores)
+            }
+            KeyDistribution::AdversarialBucket => {
+                // `total - total/2` distinct keys, then `total/2` extra
+                // copies of the first one, shuffled so every core holds
+                // copies of the hot key.
+                let mut keys = KeyGen::new(seed ^ ADV_SALT).distinct_keys(total - total / 2);
+                let hot = keys[0];
+                keys.extend(std::iter::repeat(hot).take(total / 2));
+                SplitMix64::new(seed ^ SHUF_SALT).shuffle(&mut keys);
+                chunk(keys, cores)
+            }
+        }
+    }
+
+    /// Per-core element counts for workloads whose input is local load
+    /// rather than a shared key space (MergeMin values, set-algebra
+    /// shards). `Uniform` is every core at `base`; the other shapes
+    /// redistribute roughly `base × cores` elements unevenly (every core
+    /// keeps at least one element so reduction trees stay well-formed).
+    pub fn per_core_counts(self, base: usize, cores: usize) -> Vec<usize> {
+        assert!(cores > 0);
+        let base = base.max(1);
+        let total = base * cores;
+        match self {
+            KeyDistribution::Uniform => vec![base; cores],
+            KeyDistribution::Sorted => {
+                // Linear ramp, mean ≈ base.
+                (0..cores)
+                    .map(|c| (2 * base * (c + 1) / (cores + 1)).max(1))
+                    .collect()
+            }
+            KeyDistribution::Zipfian => {
+                let w: Vec<f64> =
+                    (0..cores).map(|c| 1.0 / ((c + 1) as f64).powf(ZIPF_THETA)).collect();
+                let sum: f64 = w.iter().sum();
+                w.iter().map(|x| ((total as f64 * x / sum) as usize).max(1)).collect()
+            }
+            KeyDistribution::FewDistinct => {
+                // All load on the first FEW_DISTINCT_VALUES cores.
+                let k = FEW_DISTINCT_VALUES.min(cores);
+                (0..cores).map(|c| if c < k { (total / k).max(1) } else { 1 }).collect()
+            }
+            KeyDistribution::AdversarialBucket => {
+                // One hot core carries half the cluster's load.
+                (0..cores).map(|c| if c == 0 { (total / 2).max(1) } else { base / 2 + 1 }).collect()
+            }
+        }
+    }
+}
+
+/// Zipf-popularity keys: ranks via the truncated inverse CDF
+/// (`P(rank ≤ r) = (r^(1-θ) - 1) / (U^(1-θ) - 1)`, θ = [`ZIPF_THETA`],
+/// universe `U = total`), each rank mapped to a fixed pseudo-random key so
+/// hot keys are scattered across the key space rather than clustered.
+fn zipf_keys(seed: u64, total: usize) -> Vec<u64> {
+    let u = total.max(2) as f64;
+    let e = 1.0 - ZIPF_THETA;
+    let norm = u.powf(e) - 1.0;
+    let mut rng = SplitMix64::new(seed ^ ZIPF_SALT);
+    (0..total)
+        .map(|_| {
+            let x = rng.next_f64();
+            let r = (norm * x + 1.0).powf(1.0 / e);
+            key_of_rank((r as u64).clamp(1, total as u64))
+        })
+        .collect()
+}
+
+/// Deterministic key value of a zipf rank (`< u64::MAX`).
+fn key_of_rank(rank: u64) -> u64 {
+    let k = SplitMix64::new(rank ^ RANK_SALT).next_u64();
+    if k == u64::MAX {
+        RANK_SALT
+    } else {
+        k
+    }
+}
+
+fn chunk(keys: Vec<u64>, cores: usize) -> Vec<Vec<u64>> {
+    let per = keys.len() / cores;
+    keys.chunks(per).map(|c| c.to_vec()).collect()
+}
+
+/// Straggler cores: `count` seeded-random cores run all compute slower by
+/// `factor` (applied in the engine's cycle-to-time conversion). Default
+/// off (`count = 0`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StragglerConfig {
+    /// Number of straggler cores (clamped to the fleet size).
+    pub count: usize,
+    /// Integer slowdown factor (1 = no effect).
+    pub factor: u32,
+}
+
+impl Default for StragglerConfig {
+    fn default() -> Self {
+        StragglerConfig { count: 0, factor: 4 }
+    }
+}
+
+impl StragglerConfig {
+    pub fn enabled(&self) -> bool {
+        self.count > 0 && self.factor > 1
+    }
+}
+
+/// The scenario-level perturbations (network knobs live on
+/// [`crate::net::NetConfig`] directly). Defaults are the unperturbed
+/// paper assumptions.
+#[derive(Debug, Clone, Default)]
+pub struct Perturbations {
+    /// Workload input distribution.
+    pub dist: KeyDistribution,
+    /// Straggler cores.
+    pub stragglers: StragglerConfig,
+}
+
+/// Environment axis names shared by `repro sweep --axis`, the `repro run`
+/// flags, and `repro run <name> --help`; every name not in a workload's
+/// registry descriptors must match one of these.
+pub const ENV_AXES: &[(&str, &str)] = &[
+    ("skew", "key distribution: uniform|zipfian|sorted|few-distinct|adversarial"),
+    ("loss", "packet loss per 10,000 deliveries (timeout + retransmit)"),
+    ("rto", "retransmit timeout in ns (used when loss > 0; default 10000)"),
+    ("tail", "extra ns injected on 1% of deliveries (Fig 14's knob)"),
+    ("oversub", "core oversubscription factor (0 = non-blocking full bisection)"),
+    ("stragglers", "number of straggler cores (slowed by straggler-factor)"),
+    ("straggler-factor", "straggler compute slowdown factor (default 4)"),
+];
+
+/// True when `name` is an environment knob rather than a workload
+/// parameter.
+pub fn is_env_axis(name: &str) -> bool {
+    ENV_AXES.iter().any(|(n, _)| *n == name)
+}
+
+/// Apply one environment knob (`name = value`) to the run's network
+/// config and perturbation set. Errors on unknown names or malformed
+/// values, so sweeps and CLI flags fail loudly instead of silently
+/// running the happy path.
+pub fn apply_env_setting(
+    name: &str,
+    value: &str,
+    net: &mut crate::net::NetConfig,
+    knobs: &mut Perturbations,
+) -> Result<()> {
+    fn num(name: &str, value: &str) -> Result<u64> {
+        value
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{name} expects a number, got {value:?}"))
+    }
+    match name {
+        "skew" => knobs.dist = KeyDistribution::parse(value)?,
+        "loss" => {
+            let n = num(name, value)?;
+            anyhow::ensure!(n < 10_000, "--loss is per 10,000 and must be < 10000");
+            net.loss_prob = (n, 10_000);
+        }
+        "rto" => net.rto_ns = num(name, value)?,
+        "tail" => {
+            let ns = num(name, value)?;
+            net.tail_extra_ns = ns;
+            // tail = 0 keeps the injection disabled so the fabric's RNG
+            // stream (and thus the digest) is baseline-identical.
+            net.tail_prob = if ns > 0 { (1, 100) } else { (0, 100) };
+        }
+        "oversub" => net.oversub = num(name, value)?,
+        "stragglers" => knobs.stragglers.count = num(name, value)? as usize,
+        "straggler-factor" => {
+            knobs.stragglers.factor = num(name, value)?.max(1) as u32;
+        }
+        other => {
+            let known: Vec<&str> = ENV_AXES.iter().map(|(n, _)| *n).collect();
+            bail!("unknown environment knob {other:?} (known: {})", known.join("|"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_parse_round_trip() {
+        for d in KeyDistribution::ALL {
+            assert_eq!(KeyDistribution::parse(d.name()).unwrap(), d);
+        }
+        assert!(KeyDistribution::parse("gaussian").is_err());
+        assert_eq!(
+            KeyDistribution::parse("adversarial-bucket").unwrap(),
+            KeyDistribution::AdversarialBucket
+        );
+    }
+
+    #[test]
+    fn uniform_is_bit_identical_to_keygen() {
+        let a = KeyDistribution::Uniform.partitioned_keys(7, 256, 16);
+        let b = KeyGen::new(7).generate(256, 16);
+        assert_eq!(a, b, "default distribution must not disturb goldens");
+    }
+
+    #[test]
+    fn every_distribution_partitions_evenly_and_avoids_sentinel() {
+        for d in KeyDistribution::ALL {
+            let parts = d.partitioned_keys(0xC0FFEE, 512, 32);
+            assert_eq!(parts.len(), 32, "{}", d.name());
+            assert!(parts.iter().all(|p| p.len() == 16), "{}", d.name());
+            assert!(
+                parts.iter().flatten().all(|&k| k < u64::MAX),
+                "{}: sentinel key produced",
+                d.name()
+            );
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_distribution() {
+        for d in KeyDistribution::ALL {
+            let a = d.partitioned_keys(42, 128, 8);
+            let b = d.partitioned_keys(42, 128, 8);
+            assert_eq!(a, b, "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn zipfian_duplicates_a_hot_key() {
+        let keys: Vec<u64> = KeyDistribution::Zipfian
+            .partitioned_keys(1, 512, 8)
+            .into_iter()
+            .flatten()
+            .collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        let mut best = 1;
+        let mut run = 1;
+        for w in sorted.windows(2) {
+            if w[0] == w[1] {
+                run += 1;
+                best = best.max(run);
+            } else {
+                run = 1;
+            }
+        }
+        // θ = 1.2 puts >10% of draws on rank 1.
+        assert!(best > 512 / 10, "hottest key appears {best} times");
+    }
+
+    #[test]
+    fn sorted_is_globally_sorted_across_cores() {
+        let parts = KeyDistribution::Sorted.partitioned_keys(3, 256, 16);
+        let flat: Vec<u64> = parts.into_iter().flatten().collect();
+        assert!(flat.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn few_distinct_bounds_the_value_count() {
+        let parts = KeyDistribution::FewDistinct.partitioned_keys(9, 1024, 32);
+        let mut vals: Vec<u64> = parts.into_iter().flatten().collect();
+        vals.sort_unstable();
+        vals.dedup();
+        assert!(vals.len() <= FEW_DISTINCT_VALUES, "{} distinct", vals.len());
+        assert!(vals.len() > 1);
+    }
+
+    #[test]
+    fn adversarial_hot_key_holds_half_the_input() {
+        let parts = KeyDistribution::AdversarialBucket.partitioned_keys(5, 256, 16);
+        let keys: Vec<u64> = parts.iter().flatten().copied().collect();
+        let mut counts = std::collections::HashMap::new();
+        for k in &keys {
+            *counts.entry(*k).or_insert(0usize) += 1;
+        }
+        let hot = counts.values().max().unwrap();
+        assert!(*hot > 128, "hot key count = {hot}");
+        // Shuffling spreads the hot key over many cores.
+        let cores_with_hot = parts
+            .iter()
+            .filter(|p| p.iter().any(|k| counts[k] > 128))
+            .count();
+        assert!(cores_with_hot > 8, "hot key on {cores_with_hot} cores");
+    }
+
+    #[test]
+    fn per_core_counts_shapes() {
+        let uni = KeyDistribution::Uniform.per_core_counts(128, 64);
+        assert_eq!(uni, vec![128; 64]);
+        for d in KeyDistribution::ALL {
+            let c = d.per_core_counts(128, 64);
+            assert_eq!(c.len(), 64, "{}", d.name());
+            assert!(c.iter().all(|&n| n >= 1), "{}: empty core", d.name());
+            let total: usize = c.iter().sum();
+            assert!(
+                total >= 64 && total <= 3 * 128 * 64,
+                "{}: total {total} out of range",
+                d.name()
+            );
+        }
+        let adv = KeyDistribution::AdversarialBucket.per_core_counts(128, 64);
+        assert!(adv[0] > 10 * adv[1], "hot core dominates");
+        let zipf = KeyDistribution::Zipfian.per_core_counts(128, 64);
+        assert!(zipf[0] > zipf[63]);
+    }
+
+    #[test]
+    fn env_settings_apply_and_reject_garbage() {
+        let mut net = crate::net::NetConfig::default();
+        let mut knobs = Perturbations::default();
+        apply_env_setting("skew", "zipfian", &mut net, &mut knobs).unwrap();
+        assert_eq!(knobs.dist, KeyDistribution::Zipfian);
+        apply_env_setting("loss", "100", &mut net, &mut knobs).unwrap();
+        assert_eq!(net.loss_prob, (100, 10_000));
+        apply_env_setting("tail", "4000", &mut net, &mut knobs).unwrap();
+        assert_eq!(net.tail_prob, (1, 100));
+        assert_eq!(net.tail_extra_ns, 4000);
+        apply_env_setting("tail", "0", &mut net, &mut knobs).unwrap();
+        assert_eq!(net.tail_prob, (0, 100), "tail=0 keeps the RNG stream untouched");
+        apply_env_setting("oversub", "8", &mut net, &mut knobs).unwrap();
+        assert_eq!(net.oversub, 8);
+        apply_env_setting("stragglers", "4", &mut net, &mut knobs).unwrap();
+        apply_env_setting("straggler-factor", "6", &mut net, &mut knobs).unwrap();
+        assert_eq!(knobs.stragglers, StragglerConfig { count: 4, factor: 6 });
+        assert!(knobs.stragglers.enabled());
+
+        assert!(apply_env_setting("loss", "10000", &mut net, &mut knobs).is_err());
+        assert!(apply_env_setting("loss", "banana", &mut net, &mut knobs).is_err());
+        assert!(apply_env_setting("warp", "9", &mut net, &mut knobs).is_err());
+    }
+
+    #[test]
+    fn env_axis_names_are_consistent() {
+        for &(name, _) in ENV_AXES {
+            assert!(is_env_axis(name));
+        }
+        assert!(!is_env_axis("kpn"));
+    }
+
+    #[test]
+    fn stragglers_default_off() {
+        assert!(!StragglerConfig::default().enabled());
+        assert!(!StragglerConfig { count: 3, factor: 1 }.enabled());
+    }
+}

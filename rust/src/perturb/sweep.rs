@@ -1,0 +1,457 @@
+//! Deterministic perturbation sweeps: the grid driver behind
+//! `repro sweep <workload> --axis <param>=a,b,c` and the named
+//! `skewsweep` / `tailsweep` figures.
+//!
+//! A sweep takes a workload's conformance-tier base configuration, runs
+//! the cartesian product of one or more axes over it, and reports every
+//! cell against the unperturbed baseline. An axis is either a registry
+//! workload parameter (`kpn=8,16`) or an environment knob
+//! ([`super::ENV_AXES`]: `skew`, `loss`, `tail`, `oversub`,
+//! `stragglers`, ...). Every cell:
+//!
+//! - runs through the one [`Scenario`] code path with the conformance
+//!   seed by default, so a cell is a pure function of
+//!   `(workload, tier, axis values, seed)`;
+//! - is digested by the conformance machinery ([`digest_json`]) and
+//!   fingerprinted (FNV-1a of the digest), so two runs of the same sweep
+//!   can be compared line-by-line for drift exactly like goldens;
+//! - must still *validate* — a perturbation may slow a run down
+//!   arbitrarily, but correctness regressions fail the sweep.
+//!
+//! Output is one JSON line per cell (machine-diffable trajectory) plus a
+//! rendered table with makespan, slowdown vs baseline, p99 per-node
+//! completion time, and the workload's bucket-skew metric.
+
+use anyhow::{bail, Context, Result};
+
+use crate::conformance::{self, digest_json, Tier};
+use crate::coordinator::{f, ComputeChoice, RunOptions, Table};
+use crate::net::NetConfig;
+use crate::scenario::registry::{self, ParamKind, WorkloadSpec};
+use crate::scenario::{RunReport, Scenario};
+use crate::stats::Summary;
+
+use super::{apply_env_setting, is_env_axis, KeyDistribution, Perturbations};
+use crate::conformance::digest::esc;
+
+/// One sweep axis: a parameter name and the values it takes.
+pub type Axis = (String, Vec<String>);
+
+/// Parse `name=v1,v2,...` into an [`Axis`].
+pub fn parse_axis(raw: &str) -> Result<Axis> {
+    let (name, values) = raw
+        .split_once('=')
+        .with_context(|| format!("--axis expects name=v1,v2,... (got {raw:?})"))?;
+    let values: Vec<String> =
+        values.split(',').filter(|v| !v.is_empty()).map(str::to_string).collect();
+    anyhow::ensure!(!name.is_empty() && !values.is_empty(), "--axis {raw:?} has no values");
+    Ok((name.to_string(), values))
+}
+
+/// One completed sweep cell.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    /// Axis assignments in axis order; empty for the baseline.
+    pub assignments: Vec<(String, String)>,
+    pub makespan_us: f64,
+    /// p99 of per-node completion times (`last_active`), µs.
+    pub p99_node_us: f64,
+    pub msgs_sent: u64,
+    pub retransmits: u64,
+    /// The workload's `skew` metric (bucket max/mean), if it reports one.
+    pub bucket_skew: Option<f64>,
+    pub validated: bool,
+    /// FNV-1a fingerprint of the cell's canonical conformance digest.
+    pub digest_fnv: u64,
+}
+
+impl SweepCell {
+    /// Human label: `baseline` or `skew=zipfian loss=100`.
+    pub fn label(&self) -> String {
+        if self.assignments.is_empty() {
+            "baseline".into()
+        } else {
+            self.assignments
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        }
+    }
+
+    /// One line of JSON (the sweep's machine-readable trajectory record).
+    pub fn json_line(&self, workload: &str, tier: &str, seed: u64) -> String {
+        let mut cell = String::from("{");
+        for (i, (k, v)) in self.assignments.iter().enumerate() {
+            if i > 0 {
+                cell.push(',');
+            }
+            cell += &format!("\"{}\": \"{}\"", esc(k), esc(v));
+        }
+        cell.push('}');
+        let skew = match self.bucket_skew {
+            Some(s) => format!(", \"bucket_skew\": \"{s:.6}\""),
+            None => String::new(),
+        };
+        format!(
+            "{{\"workload\": \"{}\", \"tier\": \"{}\", \"seed\": {}, \"cell\": {}, \
+             \"makespan_us\": \"{:.6}\", \"p99_node_us\": \"{:.6}\", \"msgs_sent\": {}, \
+             \"retransmits\": {}{}, \"validated\": {}, \"digest_fnv\": \"{:#018x}\"}}",
+            esc(workload),
+            esc(tier),
+            seed,
+            cell,
+            self.makespan_us,
+            self.p99_node_us,
+            self.msgs_sent,
+            self.retransmits,
+            skew,
+            self.validated,
+            self.digest_fnv
+        )
+    }
+}
+
+/// Outcome of one sweep: the baseline-first cell records and the
+/// rendered comparison table.
+pub struct SweepOutcome {
+    pub workload: &'static str,
+    pub tier: Tier,
+    pub seed: u64,
+    /// Baseline first, then grid cells in axis-major order.
+    pub cells: Vec<SweepCell>,
+    pub table: Table,
+}
+
+impl SweepOutcome {
+    /// All cells as JSON lines (baseline first).
+    pub fn json_lines(&self) -> Vec<String> {
+        self.cells
+            .iter()
+            .map(|c| c.json_line(self.workload, self.tier.name(), self.seed))
+            .collect()
+    }
+}
+
+/// Run the cartesian product of `axes` over `spec`'s `tier` base
+/// configuration. The unperturbed baseline always runs first; every cell
+/// must validate.
+pub fn run_sweep(
+    spec: &'static WorkloadSpec,
+    tier: Tier,
+    axes: &[Axis],
+    compute: ComputeChoice,
+    seed: u64,
+) -> Result<SweepOutcome> {
+    // Validate axis names up front so a typo fails before any run.
+    for (name, values) in axes {
+        anyhow::ensure!(!values.is_empty(), "axis {name:?} has no values");
+        let is_param = spec.all_params().any(|p| p.name == name.as_str());
+        if !is_param && !is_env_axis(name) {
+            let params: Vec<&str> = spec.all_params().map(|p| p.name).collect();
+            let env: Vec<&str> = super::ENV_AXES.iter().map(|(n, _)| *n).collect();
+            bail!(
+                "unknown sweep axis {name:?} for workload {} (workload params: {}; \
+                 environment knobs: {})",
+                spec.name,
+                params.join("|"),
+                env.join("|")
+            );
+        }
+    }
+    let cells_total: usize = axes.iter().map(|(_, v)| v.len()).product();
+    anyhow::ensure!(cells_total <= 4096, "sweep grid has {cells_total} cells (max 4096)");
+
+    let mut cells = Vec::with_capacity(cells_total + 1);
+    cells.push(run_cell(spec, tier, &[], compute, seed)?); // baseline
+    for idx in Grid::new(axes) {
+        let assignment: Vec<(String, String)> = idx
+            .iter()
+            .enumerate()
+            .map(|(a, &i)| (axes[a].0.clone(), axes[a].1[i].clone()))
+            .collect();
+        cells.push(run_cell(spec, tier, &assignment, compute, seed)?);
+    }
+
+    let table = render_table(spec.name, tier, &cells);
+    Ok(SweepOutcome { workload: spec.name, tier, seed, cells, table })
+}
+
+/// Run one cell: tier base params + axis overrides, one `Scenario`.
+fn run_cell(
+    spec: &'static WorkloadSpec,
+    tier: Tier,
+    assignment: &[(String, String)],
+    compute: ComputeChoice,
+    seed: u64,
+) -> Result<SweepCell> {
+    let mut pairs = conformance::tier_params(spec, tier);
+    let mut net = NetConfig::default();
+    let mut knobs = Perturbations::default();
+    for (name, value) in assignment {
+        if let Some(p) = spec.all_params().find(|p| p.name == name.as_str()) {
+            let v = match p.kind {
+                ParamKind::U64 => value
+                    .parse::<u64>()
+                    .with_context(|| format!("axis {name}={value}: expected a number"))?,
+                ParamKind::Flag => match value.as_str() {
+                    "1" | "true" | "on" => 1,
+                    "0" | "false" | "off" => 0,
+                    other => bail!("axis {name}={other}: flags take 0/1"),
+                },
+            };
+            pairs.retain(|(n, _)| *n != p.name);
+            pairs.push((p.name, v));
+        } else {
+            apply_env_setting(name, value, &mut net, &mut knobs)
+                .with_context(|| format!("axis {name}={value}"))?;
+        }
+    }
+
+    let params = registry::params_from_pairs(spec, &pairs)
+        .with_context(|| format!("{} {} cell params", spec.name, tier.name()))?;
+    let workload = (spec.build)(&params)?;
+    let nodes = params.u64(spec.nodes_param.name)? as usize;
+    let report = Scenario::from_dyn(workload)
+        .nodes(nodes)
+        .net(net)
+        .perturb(knobs)
+        .compute(compute)
+        .seed(seed)
+        .run()?;
+    anyhow::ensure!(
+        report.validation.ok(),
+        "{} {} cell [{}]: perturbed run failed validation: {}",
+        spec.name,
+        tier.name(),
+        assignment.iter().map(|(k, v)| format!("{k}={v}")).collect::<Vec<_>>().join(" "),
+        report.validation.detail
+    );
+    Ok(cell_of(assignment.to_vec(), &report, tier))
+}
+
+fn cell_of(assignments: Vec<(String, String)>, report: &RunReport, tier: Tier) -> SweepCell {
+    let completion: Vec<f64> =
+        report.summary.node_stats.iter().map(|s| s.last_active.as_us_f64()).collect();
+    SweepCell {
+        assignments,
+        makespan_us: report.runtime().as_us_f64(),
+        p99_node_us: Summary::of(&completion).p99,
+        msgs_sent: report.summary.net.msgs_sent,
+        retransmits: report.summary.net.retransmits,
+        bucket_skew: report.metric_f64("skew"),
+        validated: report.validation.ok(),
+        digest_fnv: fnv64(&digest_json(report, tier.name())),
+    }
+}
+
+fn render_table(workload: &str, tier: Tier, cells: &[SweepCell]) -> Table {
+    let mut t = Table::new(
+        format!("sweep — {workload} @ {} tier vs unperturbed baseline", tier.name()),
+        &["cell", "makespan_us", "vs_base", "p99_node_us", "bucket_skew", "retx", "valid"],
+    );
+    let base = cells.first().map(|c| c.makespan_us).unwrap_or(f64::NAN);
+    for c in cells {
+        t.row(vec![
+            c.label(),
+            f(c.makespan_us),
+            format!("{:.2}x", c.makespan_us / base),
+            f(c.p99_node_us),
+            c.bucket_skew.map(f).unwrap_or_else(|| "-".into()),
+            c.retransmits.to_string(),
+            c.validated.to_string(),
+        ]);
+    }
+    t.note("baseline = the tier's conformance configuration, no perturbations");
+    t.note("digest_fnv in the JSON lines fingerprints each cell's canonical digest");
+    t
+}
+
+/// Cartesian-product index iterator over axis value lists.
+struct Grid {
+    lens: Vec<usize>,
+    next: Option<Vec<usize>>,
+}
+
+impl Grid {
+    fn new(axes: &[Axis]) -> Grid {
+        let lens: Vec<usize> = axes.iter().map(|(_, v)| v.len()).collect();
+        let next =
+            if axes.is_empty() || lens.iter().any(|&l| l == 0) { None } else { Some(vec![0; lens.len()]) };
+        Grid { lens, next }
+    }
+}
+
+impl Iterator for Grid {
+    type Item = Vec<usize>;
+    fn next(&mut self) -> Option<Vec<usize>> {
+        let cur = self.next.clone()?;
+        // Odometer increment, last axis fastest.
+        let mut idx = cur.clone();
+        let mut done = true;
+        for a in (0..idx.len()).rev() {
+            idx[a] += 1;
+            if idx[a] < self.lens[a] {
+                done = false;
+                break;
+            }
+            idx[a] = 0;
+        }
+        self.next = if done { None } else { Some(idx) };
+        Some(cur)
+    }
+}
+
+/// FNV-1a over the digest bytes: a compact per-cell fingerprint for the
+/// line-JSON trajectory.
+fn fnv64(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Named figure: the skew-sensitivity study — NanoSort across every
+/// [`KeyDistribution`] (the PGX.D observation: input skew is what breaks
+/// bucket sorts at scale). Smoke tier under `--quick`, mid otherwise.
+pub fn skew_sweep_figure(opts: &RunOptions) -> Result<Table> {
+    let spec = registry::find("nanosort")?;
+    let tier = if opts.quick { Tier::Smoke } else { Tier::Mid };
+    let axes = vec![(
+        "skew".to_string(),
+        KeyDistribution::ALL.iter().map(|d| d.name().to_string()).collect(),
+    )];
+    let mut out = run_sweep(spec, tier, &axes, opts.compute, opts.seed)?;
+    out.table.note(
+        "skew study: zipfian/few-distinct/adversarial inputs vs the paper's uniform assumption",
+    );
+    Ok(out.table)
+}
+
+/// Named figure: the Fig 14-style tail-sensitivity study rebuilt on the
+/// sweep driver — injected p99 latency from 0 to 4,000 ns.
+pub fn tail_sweep_figure(opts: &RunOptions) -> Result<Table> {
+    let spec = registry::find("nanosort")?;
+    let tier = if opts.quick { Tier::Smoke } else { Tier::Mid };
+    let axes = vec![(
+        "tail".to_string(),
+        ["0", "500", "1000", "2000", "4000"].iter().map(|s| s.to_string()).collect(),
+    )];
+    let mut out = run_sweep(spec, tier, &axes, opts.compute, opts.seed)?;
+    out.table.note("Fig 14-style: paper sees 2x runtime at 4,000 ns injected p99");
+    Ok(out.table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conformance::CONFORMANCE_SEED;
+
+    #[test]
+    fn axis_parsing() {
+        let (name, values) = parse_axis("skew=uniform,zipfian").unwrap();
+        assert_eq!(name, "skew");
+        assert_eq!(values, ["uniform", "zipfian"]);
+        let (name, values) = parse_axis("kpn=8").unwrap();
+        assert_eq!((name.as_str(), values.len()), ("kpn", 1));
+        assert!(parse_axis("skew").is_err());
+        assert!(parse_axis("skew=").is_err());
+        assert!(parse_axis("=a,b").is_err());
+    }
+
+    #[test]
+    fn grid_is_the_cartesian_product() {
+        let axes: Vec<Axis> = vec![
+            ("a".into(), vec!["1".into(), "2".into()]),
+            ("b".into(), vec!["x".into(), "y".into(), "z".into()]),
+        ];
+        let idx: Vec<Vec<usize>> = Grid::new(&axes).collect();
+        assert_eq!(idx.len(), 6);
+        assert_eq!(idx[0], vec![0, 0]);
+        assert_eq!(idx[1], vec![0, 1]);
+        assert_eq!(idx[5], vec![1, 2]);
+        assert_eq!(Grid::new(&[]).count(), 0);
+    }
+
+    #[test]
+    fn unknown_axis_is_an_error() {
+        let spec = registry::find("nanosort").unwrap();
+        let axes = vec![("warp".to_string(), vec!["9".to_string()])];
+        let err = run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown sweep axis"), "{err}");
+        assert!(err.contains("skew"), "error lists env knobs: {err}");
+    }
+
+    #[test]
+    fn workload_param_axis_overrides_tier_base() {
+        let spec = registry::find("mergemin").unwrap();
+        let axes = vec![("incast".to_string(), vec!["2".to_string(), "8".to_string()])];
+        let out =
+            run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, CONFORMANCE_SEED)
+                .unwrap();
+        assert_eq!(out.cells.len(), 3, "baseline + 2 cells");
+        assert_eq!(out.cells[0].label(), "baseline");
+        assert_eq!(out.cells[1].label(), "incast=2");
+        // Different incast => different digest fingerprint.
+        assert_ne!(out.cells[1].digest_fnv, out.cells[2].digest_fnv);
+        assert!(out.cells.iter().all(|c| c.validated));
+        assert_eq!(out.table.rows.len(), 3);
+    }
+
+    /// The acceptance sweep: `repro sweep nanosort --axis
+    /// skew=uniform,zipfian` at smoke tier is deterministic and the
+    /// zipfian cell's bucket skew strictly exceeds the uniform cell's.
+    #[test]
+    fn skew_axis_zipfian_exceeds_uniform_and_replays_identically() {
+        let spec = registry::find("nanosort").unwrap();
+        let axes =
+            vec![("skew".to_string(), vec!["uniform".to_string(), "zipfian".to_string()])];
+        let run = || {
+            run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, CONFORMANCE_SEED)
+                .unwrap()
+        };
+        let a = run();
+        let uniform = a.cells[1].bucket_skew.expect("nanosort reports skew");
+        let zipfian = a.cells[2].bucket_skew.expect("nanosort reports skew");
+        assert!(
+            zipfian > uniform,
+            "zipfian bucket skew {zipfian} must exceed uniform {uniform}"
+        );
+        // The uniform cell is the baseline configuration spelled out.
+        assert_eq!(a.cells[0].digest_fnv, a.cells[1].digest_fnv);
+        // Determinism: a second sweep replays every fingerprint.
+        let b = run();
+        let fa: Vec<u64> = a.cells.iter().map(|c| c.digest_fnv).collect();
+        let fb: Vec<u64> = b.cells.iter().map(|c| c.digest_fnv).collect();
+        assert_eq!(fa, fb);
+        // And the JSON lines are stable, machine-diffable records.
+        assert_eq!(a.json_lines(), b.json_lines());
+        assert!(a.json_lines()[2].contains("\"skew\": \"zipfian\""));
+    }
+
+    #[test]
+    fn loss_axis_reports_retransmits_and_slows_the_run() {
+        let spec = registry::find("nanosort").unwrap();
+        let axes = vec![("loss".to_string(), vec!["2000".to_string()])];
+        let out =
+            run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, CONFORMANCE_SEED)
+                .unwrap();
+        let base = &out.cells[0];
+        let lossy = &out.cells[1];
+        assert_eq!(base.retransmits, 0);
+        assert!(lossy.retransmits > 0, "20% loss must retransmit");
+        assert!(lossy.makespan_us > base.makespan_us);
+        assert!(lossy.validated, "loss must not break correctness");
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        assert_eq!(fnv64(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64("a"), fnv64("a"));
+        assert_ne!(fnv64("a"), fnv64("b"));
+    }
+}

@@ -30,9 +30,12 @@
 //! assert!(report.validation.ok());
 //! ```
 //!
-//! New scenarios (stragglers, skewed key distributions, failure injection,
-//! multi-job runs) are added as single self-contained [`Workload`] impls
-//! plus one [`registry`] entry — no CLI, figure, or engine changes.
+//! Environment *perturbations* — input skew ([`crate::perturb::KeyDistribution`]),
+//! packet loss, core oversubscription, stragglers — are scenario knobs
+//! (`Scenario::perturb` / [`crate::net::NetConfig`]), swept in grids by
+//! `repro sweep` (see [`crate::perturb::sweep`]). New *workloads* are
+//! added as single self-contained [`Workload`] impls plus one
+//! [`registry`] entry — no CLI, figure, or engine changes.
 
 pub mod registry;
 
@@ -48,13 +51,18 @@ use crate::cpu::CoreModel;
 use crate::graysort::ValidationReport;
 use crate::nanopu::{Group, Program};
 use crate::net::{Fabric, NetConfig, Topology};
-use crate::sim::{Engine, RunSummary, Time, MAX_STAGES};
+use crate::perturb::{KeyDistribution, Perturbations};
+use crate::sim::{Engine, RunSummary, SplitMix64, Time, MAX_STAGES};
+
+/// Seed salt for the straggler-core selection stream.
+const STRAGGLER_SALT: u64 = 0x7374_7261_6767_6c65; // "straggle"
 
 /// Everything the environment (not the workload) decides about a run.
 pub struct ScenarioEnv {
     /// Fleet size (simulated cores).
     pub nodes: usize,
-    /// Fabric configuration (latencies, bandwidth, multicast, tails).
+    /// Fabric configuration (latencies, bandwidth, multicast, tails,
+    /// loss, oversubscription).
     pub net: NetConfig,
     /// Endpoint core cost model.
     pub core: CoreModel,
@@ -62,6 +70,10 @@ pub struct ScenarioEnv {
     pub compute: Rc<dyn LocalCompute>,
     /// Master seed (input generation, fabric jitter, per-node RNG streams).
     pub seed: u64,
+    /// Scenario-level perturbations: input [`KeyDistribution`] (read by
+    /// every workload's input path) and straggler cores (applied to the
+    /// engine). Defaults are the unperturbed paper assumptions.
+    pub perturb: Perturbations,
 }
 
 /// Result-extraction hook: runs after quiescence with the engine summary.
@@ -131,6 +143,16 @@ impl<W: Workload> DynWorkload for W {
         for members in built.groups {
             engine.add_group(members);
         }
+        // Straggler perturbation: a seeded subset of cores runs its
+        // compute slower (off by default — the selection stream is only
+        // created when the knob is on).
+        let st = env.perturb.stragglers;
+        if st.enabled() {
+            let mut rng = SplitMix64::new(env.seed ^ STRAGGLER_SALT);
+            for node in rng.sample_indices(env.nodes, st.count.min(env.nodes)) {
+                engine.slow_down(node, st.factor);
+            }
+        }
         let summary = engine.run();
         Ok((built.finish)(env, summary))
     }
@@ -144,6 +166,25 @@ enum ComputeSel {
 
 /// Builder for one simulated run:
 /// `Scenario::new(workload).nodes(n).net(..).seed(s).run()`.
+///
+/// # Examples
+///
+/// A seeded end-to-end run (this executes in the doctest suite):
+///
+/// ```
+/// use nanosort::algo::mergemin::MergeMin;
+/// use nanosort::scenario::Scenario;
+/// use nanosort::sim::Time;
+///
+/// let report = Scenario::new(MergeMin { values_per_core: 16, incast: 4 })
+///     .nodes(8)
+///     .seed(7)
+///     .run()
+///     .unwrap();
+/// assert!(report.validation.ok());
+/// assert!(report.runtime() > Time::ZERO);
+/// assert_eq!(report.metric_u64("found_min"), report.metric_u64("true_min"));
+/// ```
 pub struct Scenario {
     workload: Box<dyn DynWorkload>,
     nodes: Option<usize>,
@@ -151,6 +192,7 @@ pub struct Scenario {
     core: CoreModel,
     compute: ComputeSel,
     seed: u64,
+    perturb: Perturbations,
 }
 
 impl Scenario {
@@ -167,6 +209,7 @@ impl Scenario {
             core: CoreModel::default(),
             compute: ComputeSel::Choice(ComputeChoice::Native),
             seed: 1,
+            perturb: Perturbations::default(),
         }
     }
 
@@ -203,6 +246,25 @@ impl Scenario {
         self
     }
 
+    /// Set the full perturbation block (input distribution + stragglers).
+    pub fn perturb(mut self, perturb: Perturbations) -> Self {
+        self.perturb = perturb;
+        self
+    }
+
+    /// Convenience: set only the input [`KeyDistribution`].
+    pub fn dist(mut self, dist: KeyDistribution) -> Self {
+        self.perturb.dist = dist;
+        self
+    }
+
+    /// Convenience: mark `count` seeded-random cores as stragglers, each
+    /// `factor`× slower.
+    pub fn stragglers(mut self, count: usize, factor: u32) -> Self {
+        self.perturb.stragglers = crate::perturb::StragglerConfig { count, factor };
+        self
+    }
+
     /// Build the environment, run to quiescence, extract the report.
     pub fn run(self) -> Result<RunReport> {
         let nodes = self.nodes.unwrap_or_else(|| self.workload.default_nodes());
@@ -216,6 +278,7 @@ impl Scenario {
             core: self.core,
             compute,
             seed: self.seed,
+            perturb: self.perturb,
         };
         self.workload.run_on(&env)
     }

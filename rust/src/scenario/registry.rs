@@ -341,6 +341,7 @@ fn resolve_defaults(spec: &WorkloadSpec, mut map: ParamMap) -> Result<ParamMap> 
 
 /// One usage line per workload, generated from the descriptors (keeps the
 /// CLI help honest: a new registry row shows up here automatically).
+/// `repro run <name> --help` prints the full [`describe`] listing.
 pub fn cli_help() -> String {
     let mut out = String::new();
     for w in WORKLOADS {
@@ -352,10 +353,39 @@ pub fn cli_help() -> String {
                 ParamKind::Flag => line += &format!(" [--{}]", p.name),
             }
         }
-        line += " [--no-multicast] [--xla] [--seed N]";
+        line += " [--skew D] [--no-multicast] [--xla] [--seed N]";
         out += &line;
         out.push('\n');
     }
+    out += "  (`repro run <name> --help` prints every parameter descriptor)\n";
+    out
+}
+
+/// Full parameter-descriptor listing for one workload (the
+/// `repro run <name> --help` output): every typed registry descriptor
+/// with its help text and default, plus the environment knobs shared by
+/// all workloads.
+pub fn describe(spec: &WorkloadSpec) -> String {
+    let mut out = format!("{} — {}\n\nworkload parameters:\n", spec.name, spec.summary);
+    for p in spec.all_params() {
+        let arg = match p.kind {
+            ParamKind::U64 => format!("--{} <N>", p.name),
+            ParamKind::Flag => format!("--{}", p.name),
+        };
+        let default = match p.default {
+            ParamDefault::U64(v) => format!("default {v}"),
+            ParamDefault::FromParam(other) => format!("default follows --{other}"),
+            ParamDefault::False => "flag, default off".to_string(),
+        };
+        out += &format!("  {arg:<22} {} ({default})\n", p.help);
+    }
+    out += "\nenvironment knobs (every workload):\n";
+    for (name, help) in crate::perturb::ENV_AXES {
+        out += &format!("  {:<22} {help}\n", format!("--{name} <V>"));
+    }
+    out += "  --no-multicast         degrade group sends to unicast loops (§6.2.3)\n";
+    out += "  --xla                  run node-local compute on the XLA data plane\n";
+    out += "  --seed <N>             master seed (default 1)\n";
     out
 }
 
@@ -451,5 +481,29 @@ mod tests {
             assert!(h.contains(&format!("[--{} N]", w.nodes_param.name)));
         }
         assert!(h.contains("[--values]"), "flags render without N");
+        assert!(h.contains("[--skew D]"), "perturbation knob surfaced");
+        assert!(h.contains("--help"), "points at the descriptor listing");
+    }
+
+    #[test]
+    fn describe_prints_every_descriptor_with_help_and_default() {
+        for spec in WORKLOADS {
+            let d = describe(spec);
+            assert!(d.contains(spec.summary), "{}", spec.name);
+            for p in spec.all_params() {
+                assert!(d.contains(&format!("--{}", p.name)), "{}: --{}", spec.name, p.name);
+                assert!(d.contains(p.help), "{}: help for --{}", spec.name, p.name);
+            }
+        }
+        // Typed defaults render, including the FromParam chain.
+        let d = describe(find("nanosort").unwrap());
+        assert!(d.contains("default 4096"), "{d}");
+        assert!(d.contains("default follows --buckets"), "{d}");
+        assert!(d.contains("flag, default off"), "{d}");
+        // Environment knobs are listed for every workload.
+        for (name, _) in crate::perturb::ENV_AXES {
+            assert!(d.contains(&format!("--{name}")), "env knob --{name}");
+        }
+        assert!(d.contains("--no-multicast") && d.contains("--xla") && d.contains("--seed"));
     }
 }

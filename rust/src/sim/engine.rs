@@ -307,6 +307,10 @@ impl RunSummary {
 /// The engine: nodes + calendar queue + fabric + core model.
 pub struct Engine<P: Program> {
     nodes: Vec<NodeSlot<P>>,
+    /// Per-node compute slowdown factor (1 = nominal). Straggler cores
+    /// (perturbation layer) get a larger factor, applied to every
+    /// cycle-to-time conversion for that node.
+    slow: Vec<u32>,
     /// Flat hot-state arena, indexed by node id (§Scale).
     hot: Vec<HotNode>,
     /// Flat stats arena, indexed by node id; handed to [`RunSummary`]
@@ -340,6 +344,7 @@ impl<P: Program> Engine<P> {
             .collect();
         Engine {
             nodes,
+            slow: vec![1; n],
             hot: vec![HotNode { busy_until: Time::ZERO, stage: 0, finished: false }; n],
             stats: vec![NodeStats::default(); n],
             heap: CalendarQueue::new(),
@@ -363,6 +368,18 @@ impl<P: Program> Engine<P> {
 
     pub fn core(&self) -> &CoreModel {
         &self.core
+    }
+
+    /// Mark `node` as a straggler: all its compute (RX, handler cycles,
+    /// TX issue offsets) runs `factor`× slower. Factor 1 is exactly the
+    /// nominal path (the default for every node).
+    pub fn slow_down(&mut self, node: NodeId, factor: u32) {
+        self.slow[node] = factor.max(1);
+    }
+
+    /// Cycle-to-time conversion with the node's slowdown factor applied.
+    fn node_cycles(&self, id: NodeId, cycles: u64) -> Time {
+        Time::from_cycles(cycles * self.slow[id] as u64)
     }
 
     /// Run to quiescence; consumes the engine.
@@ -392,6 +409,7 @@ impl<P: Program> Engine<P> {
         let step = msg.step();
         if step > self.nodes[dst].prog.step() {
             // Future-step message: RX + store into the reorder buffer.
+            let sf = self.slow[dst] as u64;
             let hot = &mut self.hot[dst];
             let st = &mut self.stats[dst];
             let start = at.max(hot.busy_until);
@@ -399,7 +417,7 @@ impl<P: Program> Engine<P> {
             let stage = hot.stage as usize;
             st.idle[stage] += idle;
             let cost = Time::from_cycles(
-                self.core.rx_cycles(msg.wire_bytes()) + REORDER_STORE_CYCLES,
+                (self.core.rx_cycles(msg.wire_bytes()) + REORDER_STORE_CYCLES) * sf,
             );
             hot.busy_until = start + cost;
             st.busy[stage] += cost;
@@ -426,9 +444,10 @@ impl<P: Program> Engine<P> {
 
     fn invoke_held(&mut self, id: NodeId, at: Time, src: NodeId, msg: P::Msg) {
         // Pop cost instead of RX (already read off the NIC at arrival).
+        let pop = self.node_cycles(id, REORDER_POP_CYCLES);
         let resume = {
             let hot = &mut self.hot[id];
-            hot.busy_until = at.max(hot.busy_until) + Time::from_cycles(REORDER_POP_CYCLES);
+            hot.busy_until = at.max(hot.busy_until) + pop;
             hot.busy_until
         };
         self.invoke(id, resume, Some((src, msg, false)));
@@ -436,6 +455,7 @@ impl<P: Program> Engine<P> {
 
     /// Core of the model: run one handler and apply its effects.
     fn invoke(&mut self, id: NodeId, at: Time, input: Option<(NodeId, P::Msg, bool)>) {
+        let sf = self.slow[id] as u64;
         let slot = &mut self.nodes[id];
         let hot = &mut self.hot[id];
         let st = &mut self.stats[id];
@@ -450,7 +470,7 @@ impl<P: Program> Engine<P> {
         let charge_rx = matches!(&input, Some((_, _, true)));
         if let Some((_, msg, _)) = &input {
             if charge_rx {
-                entry += Time::from_cycles(self.core.rx_cycles(msg.wire_bytes()));
+                entry += Time::from_cycles(self.core.rx_cycles(msg.wire_bytes()) * sf);
             }
             st.msgs_in += 1;
         }
@@ -478,7 +498,7 @@ impl<P: Program> Engine<P> {
         let ops = std::mem::take(&mut ctx.ops);
         drop(ctx);
 
-        let end = entry + Time::from_cycles(cycles);
+        let end = entry + Time::from_cycles(cycles * sf);
         let busy_span = end.saturating_sub(start);
         st.busy[hot.stage as usize] += busy_span;
         hot.stage = stage;
@@ -493,7 +513,7 @@ impl<P: Program> Engine<P> {
         // Hand sends to the fabric at the local time they were issued.
         let mut ops = ops;
         for (cyc_offset, op) in ops.drain(..) {
-            let ready = entry + Time::from_cycles(cyc_offset);
+            let ready = entry + Time::from_cycles(cyc_offset * sf);
             match op {
                 SendOp::Unicast { dst, msg } => {
                     let arr = self.fabric.unicast(id, dst, msg.wire_bytes(), ready);
@@ -746,6 +766,31 @@ mod tests {
         // step-1 msg arrives first (buffered, +1 msg_in), then step-0 is
         // processed, then the buffered one is re-delivered (+1 msg_in).
         assert_eq!(s1.msgs_in, 3, "arrival + buffered redelivery accounting");
+    }
+
+    #[test]
+    fn straggler_slowdown_extends_makespan_and_factor_one_is_identity() {
+        let run = |slow: Option<(NodeId, u32)>| {
+            let mut e = tiny_engine(vec![Ping { remaining: 10 }, Ping { remaining: 10 }]);
+            if let Some((node, factor)) = slow {
+                e.slow_down(node, factor);
+            }
+            e.run()
+        };
+        let base = run(None);
+        let identity = run(Some((1, 1)));
+        assert_eq!(base.makespan, identity.makespan, "factor 1 must be exact");
+        assert_eq!(base.events, identity.events);
+        let slowed = run(Some((1, 8)));
+        assert!(
+            slowed.makespan > base.makespan,
+            "slowed {} !> base {}",
+            slowed.makespan.as_ns_f64(),
+            base.makespan.as_ns_f64()
+        );
+        // Determinism under slowdown.
+        let again = run(Some((1, 8)));
+        assert_eq!(slowed.makespan, again.makespan);
     }
 
     #[test]
