@@ -6,44 +6,20 @@
 //! an [`AggTree`] with the configured incast; `incast == 1` degenerates to
 //! the paper's "straight line" chain (Fig 3 left).
 
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::compute::LocalCompute;
 use crate::cpu::{CoreModel, Temp};
 use crate::nanopu::{Ctx, NodeId, Program, WireMsg};
-use crate::net::NetConfig;
 use crate::scenario::{
-    Built, Finish, MetricValue, RunReport, Scenario, ScenarioEnv, Validation, Workload,
+    Built, Finish, MetricValue, RunReport, ScenarioEnv, Validation, Workload,
 };
-use crate::sim::{RunSummary, SplitMix64, Time};
+use crate::sim::{SplitMix64, Time};
 
 use super::tree::AggTree;
-
-/// MergeMin configuration.
-#[derive(Debug, Clone)]
-pub struct MergeMinConfig {
-    pub cores: usize,
-    pub values_per_core: usize,
-    /// Merge-tree incast (1 = chain).
-    pub incast: usize,
-    pub seed: u64,
-    pub net: NetConfig,
-}
-
-impl Default for MergeMinConfig {
-    fn default() -> Self {
-        // Fig 4's setting: 64 cores, 128 values per core.
-        MergeMinConfig {
-            cores: 64,
-            values_per_core: 128,
-            incast: 8,
-            seed: 1,
-            net: NetConfig::default(),
-        }
-    }
-}
 
 /// Tree-round message carrying a partial minimum.
 #[derive(Debug, Clone)]
@@ -67,12 +43,13 @@ pub struct MergeMinNode {
     cfg_incast: usize,
     cores: usize,
     values: Vec<u64>,
-    compute: Rc<dyn LocalCompute>,
+    compute: Arc<dyn LocalCompute>,
     current_min: u64,
     round: u32,
     got: usize,
-    /// Root's final answer (for validation).
-    pub result: Rc<std::cell::Cell<u64>>,
+    /// Root's final answer (for validation). Atomic: only the root ever
+    /// stores it, but programs run on executor worker threads.
+    pub result: Arc<AtomicU64>,
 }
 
 impl MergeMinNode {
@@ -96,7 +73,7 @@ impl MergeMinNode {
             let next = self.round + 1;
             if next > rounds {
                 if self.id == 0 {
-                    self.result.set(self.current_min);
+                    self.result.store(self.current_min, Ordering::Relaxed);
                     ctx.finish();
                 }
                 return;
@@ -135,7 +112,7 @@ impl Program for MergeMinNode {
             // Straight line: the last core starts the relay.
             if self.id == self.cores - 1 {
                 if self.cores == 1 {
-                    self.result.set(self.current_min);
+                    self.result.store(self.current_min, Ordering::Relaxed);
                     ctx.finish();
                 } else {
                     // Chain relays always use round tag 1: every node
@@ -154,7 +131,7 @@ impl Program for MergeMinNode {
         self.current_min = self.compute.min(&[self.current_min, msg.value]);
         if self.is_chain() {
             if self.id == 0 {
-                self.result.set(self.current_min);
+                self.result.store(self.current_min, Ordering::Relaxed);
                 ctx.finish();
             } else {
                 ctx.send(self.id - 1, MinMsg { round: 1, value: self.current_min });
@@ -169,19 +146,6 @@ impl Program for MergeMinNode {
     fn step(&self) -> u32 {
         // Accept messages for the next round we are waiting on.
         self.round + 1
-    }
-}
-
-/// Outcome of a MergeMin run.
-pub struct MergeMinResult {
-    pub summary: RunSummary,
-    pub found_min: u64,
-    pub true_min: u64,
-}
-
-impl MergeMinResult {
-    pub fn correct(&self) -> bool {
-        self.found_min == self.true_min
     }
 }
 
@@ -220,7 +184,7 @@ impl Workload for MergeMin {
         // pre-perturbation stream).
         let counts = env.perturb.dist.per_core_counts(self.values_per_core, env.nodes);
         let mut true_min = u64::MAX;
-        let result = Rc::new(std::cell::Cell::new(u64::MAX));
+        let result = Arc::new(AtomicU64::new(u64::MAX));
         let programs: Vec<MergeMinNode> = (0..env.nodes)
             .map(|id| {
                 let values: Vec<u64> = (0..counts[id])
@@ -241,7 +205,7 @@ impl Workload for MergeMin {
             })
             .collect();
         let finish: Finish = Box::new(move |env, summary| {
-            let found = result.get();
+            let found = result.load(Ordering::Relaxed);
             let validation = Validation::check(
                 found == true_min,
                 format!("found min {found} == true min {true_min}"),
@@ -251,26 +215,6 @@ impl Workload for MergeMin {
                 .with_metric("true_min", MetricValue::U64(true_min))
         });
         Ok(Built { programs, groups: Vec::new(), finish })
-    }
-}
-
-/// Deprecated entry point kept for compatibility; routes through
-/// [`Scenario`]. Prefer `Scenario::new(MergeMin {..})`.
-pub fn run_mergemin(cfg: &MergeMinConfig, compute: Rc<dyn LocalCompute>) -> MergeMinResult {
-    let report = Scenario::new(MergeMin {
-        values_per_core: cfg.values_per_core,
-        incast: cfg.incast,
-    })
-    .nodes(cfg.cores)
-    .net(cfg.net.clone())
-    .seed(cfg.seed)
-    .compute_with(compute)
-    .run()
-    .expect("mergemin scenario");
-    MergeMinResult {
-        found_min: report.metric_u64("found_min").unwrap_or(u64::MAX),
-        true_min: report.metric_u64("true_min").unwrap_or(0),
-        summary: report.summary,
     }
 }
 
@@ -285,23 +229,25 @@ pub fn single_core_scan(values: usize) -> (Time, f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compute::NativeCompute;
+    use crate::scenario::{RunReport, Scenario};
 
-    fn run(cores: usize, vpc: usize, incast: usize) -> MergeMinResult {
-        let cfg = MergeMinConfig {
-            cores,
-            values_per_core: vpc,
-            incast,
-            ..Default::default()
-        };
-        run_mergemin(&cfg, Rc::new(NativeCompute))
+    fn run(cores: usize, vpc: usize, incast: usize) -> RunReport {
+        Scenario::new(MergeMin { values_per_core: vpc, incast })
+            .nodes(cores)
+            .run()
+            .expect("mergemin scenario")
+    }
+
+    fn mins(r: &RunReport) -> (u64, u64) {
+        (r.metric_u64("found_min").unwrap(), r.metric_u64("true_min").unwrap())
     }
 
     #[test]
     fn finds_min_across_incasts() {
         for incast in [1usize, 2, 4, 8, 16, 64] {
             let r = run(64, 16, incast);
-            assert!(r.correct(), "incast={incast}: {} != {}", r.found_min, r.true_min);
+            let (found, expect) = mins(&r);
+            assert!(r.validation.ok(), "incast={incast}: {found} != {expect}");
         }
     }
 
@@ -309,7 +255,7 @@ mod tests {
     fn finds_min_on_ragged_sizes() {
         for cores in [1usize, 2, 3, 7, 65, 100] {
             let r = run(cores, 8, 8);
-            assert!(r.correct(), "cores={cores}");
+            assert!(r.validation.ok(), "cores={cores}");
         }
     }
 
@@ -360,6 +306,6 @@ mod tests {
         let a = run(64, 32, 8);
         let b = run(64, 32, 8);
         assert_eq!(a.summary.makespan, b.summary.makespan);
-        assert_eq!(a.found_min, b.found_min);
+        assert_eq!(mins(&a).0, mins(&b).0);
     }
 }

@@ -19,20 +19,17 @@
 //!    partition), with count-tree termination detection (same scheme as
 //!    NanoSort), then sorts the received keys.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::algo::tree::AggTree;
 use crate::compute::LocalCompute;
 use crate::cpu::Temp;
-use crate::graysort::{validate_sorted_output, ValidationReport};
+use crate::graysort::validate_sorted_output;
 use crate::nanopu::{Ctx, NodeId, Program, WireMsg};
-use crate::net::NetConfig;
-use crate::scenario::{Built, Finish, RunReport, Scenario, ScenarioEnv, Validation, Workload};
-use crate::sim::{RunSummary, Time};
+use crate::scenario::{Built, Finish, RunReport, ScenarioEnv, Validation, Workload};
 
 /// Cycles per splitter for a local rank lookup (binary search on the
 /// sorted local keys).
@@ -46,36 +43,6 @@ const COUNT_FOLD_CYCLES: u64 = 6;
 /// Cycles to append a received key.
 const KEY_APPEND_CYCLES: u64 = 4;
 
-/// MilliSort configuration (Figs 9/10 sweep `cores` and
-/// `reduction_factor`).
-#[derive(Debug, Clone)]
-pub struct MilliSortConfig {
-    pub cores: usize,
-    pub total_keys: usize,
-    /// Probe rounds; `None` = `ceil(log2(total_keys)) + 2` (enough to
-    /// bisect every splitter to ~single-key precision on uniform keys).
-    pub probe_rounds: Option<u32>,
-    /// Gather/scatter tree branching ("incast" / pivot sorters per core,
-    /// Fig 10's knob).
-    pub reduction_factor: usize,
-    pub seed: u64,
-    pub net: NetConfig,
-}
-
-impl Default for MilliSortConfig {
-    fn default() -> Self {
-        // Fig 9's setting: 4,096 keys, incast 4.
-        MilliSortConfig {
-            cores: 64,
-            total_keys: 4096,
-            probe_rounds: None,
-            reduction_factor: 4,
-            seed: 1,
-            net: NetConfig::default(),
-        }
-    }
-}
-
 /// Protocol steps (reorder-buffer tags).
 const STEP_PARTITION: u32 = 0;
 const STEP_SHUFFLE: u32 = 1;
@@ -83,12 +50,14 @@ const STEP_DONE: u32 = 2;
 
 #[derive(Debug, Clone)]
 pub enum MsMsg {
-    /// Candidate splitters scattered down the tree (cores-1 words).
-    Probe { round: u16, candidates: Rc<Vec<u64>> },
+    /// Candidate splitters scattered down the tree (cores-1 words),
+    /// `Arc`-pooled so each scatter hop clones a pointer, not the list
+    /// (§Perf, [`WireMsg`] payload-pooling note).
+    Probe { round: u16, candidates: Arc<Vec<u64>> },
     /// Local/aggregated cumulative counts at the candidates (cores-1 words).
     Counts { round: u16, cum: Vec<u64> },
-    /// Final boundary list scattered down the tree.
-    Boundaries { boundaries: Rc<Vec<u64>> },
+    /// Final boundary list scattered down the tree (`Arc`-pooled).
+    Boundaries { boundaries: Arc<Vec<u64>> },
     /// One shuffled key.
     Key { key: u64, origin: u32 },
     /// Count-tree termination detection (same scheme as NanoSort).
@@ -122,13 +91,15 @@ struct MsShared {
     cores: usize,
     reduction_factor: usize,
     probe_rounds: u32,
-    outputs: RefCell<Vec<Vec<u64>>>,
+    /// Per-node output slots (`Mutex`: programs run on executor worker
+    /// threads; each node writes only its own slot).
+    outputs: Mutex<Vec<Vec<u64>>>,
 }
 
 pub struct MilliSortNode {
     id: NodeId,
-    shared: Rc<MsShared>,
-    compute: Rc<dyn LocalCompute>,
+    shared: Arc<MsShared>,
+    compute: Arc<dyn LocalCompute>,
 
     step: u32,
     keys: Vec<u64>,
@@ -235,11 +206,11 @@ impl MilliSortNode {
             }
         }
         if (round as u32) + 1 < self.shared.probe_rounds {
-            let next = Rc::new(self.current_candidates());
+            let next = Arc::new(self.current_candidates());
             self.scatter(ctx, || MsMsg::Probe { round: round + 1, candidates: next.clone() });
             self.probe_contribute(ctx, round + 1, &next);
         } else {
-            let boundaries = Rc::new(self.current_candidates());
+            let boundaries = Arc::new(self.current_candidates());
             self.scatter(ctx, || MsMsg::Boundaries { boundaries: boundaries.clone() });
             self.start_shuffle(ctx, &boundaries);
         }
@@ -331,7 +302,7 @@ impl MilliSortNode {
             ctx.compute(ctx.core().sort_cycles(n, Temp::Warm));
             let mut keys = std::mem::take(&mut self.received_keys);
             self.compute.sort(&mut keys);
-            self.shared.outputs.borrow_mut()[self.id] = keys;
+            self.shared.outputs.lock().expect("outputs lock")[self.id] = keys;
             ctx.finish();
         } else {
             self.ct_epoch += 1;
@@ -357,7 +328,7 @@ impl Program for MilliSortNode {
                 self.handle_done(ctx, true);
                 return;
             }
-            let candidates = Rc::new(self.current_candidates());
+            let candidates = Arc::new(self.current_candidates());
             self.scatter(ctx, || MsMsg::Probe { round: 0, candidates: candidates.clone() });
             self.probe_contribute(ctx, 0, &candidates);
         }
@@ -396,18 +367,6 @@ impl Program for MilliSortNode {
 
     fn step(&self) -> u32 {
         self.step
-    }
-}
-
-/// Result of a MilliSort run.
-pub struct MilliSortResult {
-    pub summary: RunSummary,
-    pub validation: ValidationReport,
-}
-
-impl MilliSortResult {
-    pub fn runtime(&self) -> Time {
-        self.summary.makespan
     }
 }
 
@@ -453,11 +412,11 @@ impl Workload for MilliSort {
             self.total_keys,
             env.nodes
         );
-        let shared = Rc::new(MsShared {
+        let shared = Arc::new(MsShared {
             cores: env.nodes,
             reduction_factor: self.reduction_factor,
             probe_rounds: self.rounds(),
-            outputs: RefCell::new(vec![Vec::new(); env.nodes]),
+            outputs: Mutex::new(vec![Vec::new(); env.nodes]),
         });
         // Key values come from the scenario's input distribution
         // (`Uniform` = the exact pre-perturbation KeyGen path).
@@ -486,7 +445,7 @@ impl Workload for MilliSort {
             .collect();
 
         let finish: Finish = Box::new(move |env, summary| {
-            let outputs = shared.outputs.borrow();
+            let outputs = shared.outputs.lock().expect("outputs lock");
             let validation = validate_sorted_output(&input, &outputs, None);
             RunReport::new("millisort", env, summary, Validation::from_sort(validation))
         });
@@ -494,37 +453,20 @@ impl Workload for MilliSort {
     }
 }
 
-/// Deprecated entry point kept for compatibility; routes through
-/// [`Scenario`]. Prefer `Scenario::new(MilliSort {..})`.
-pub fn run_millisort(cfg: &MilliSortConfig, compute: Rc<dyn LocalCompute>) -> MilliSortResult {
-    let report = Scenario::new(MilliSort {
-        total_keys: cfg.total_keys,
-        probe_rounds: cfg.probe_rounds,
-        reduction_factor: cfg.reduction_factor,
-    })
-    .nodes(cfg.cores)
-    .net(cfg.net.clone())
-    .seed(cfg.seed)
-    .compute_with(compute)
-    .run()
-    .expect("millisort scenario");
-    let validation = report.validation.sort.clone().expect("millisort sort validation");
-    MilliSortResult { summary: report.summary, validation }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compute::NativeCompute;
+    use crate::scenario::Scenario;
 
-    fn run(cores: usize, keys: usize, rf: usize) -> MilliSortResult {
-        let cfg = MilliSortConfig {
-            cores,
+    fn run(cores: usize, keys: usize, rf: usize) -> RunReport {
+        Scenario::new(MilliSort {
             total_keys: keys,
             reduction_factor: rf,
-            ..Default::default()
-        };
-        run_millisort(&cfg, Rc::new(NativeCompute))
+            probe_rounds: None,
+        })
+        .nodes(cores)
+        .run()
+        .expect("millisort scenario")
     }
 
     #[test]
@@ -579,7 +521,8 @@ mod tests {
     fn balanced_buckets_on_uniform_keys() {
         // The probing converges to near-balanced buckets for uniform keys.
         let r = run(64, 4096, 4);
-        let skew = crate::graysort::bucket_skew(&r.validation.node_counts);
+        let counts = &r.validation.sort.as_ref().expect("sort validation").node_counts;
+        let skew = crate::graysort::bucket_skew(counts);
         assert!(skew < 2.5, "skew = {skew}");
     }
 

@@ -7,8 +7,11 @@
 //! - [`tree`] — shared k-ary aggregation-tree arithmetic.
 //!
 //! Each algorithm implements [`crate::scenario::Workload`] and runs
-//! through [`crate::scenario::Scenario`]; the `run_xxx(cfg, compute)`
-//! functions are deprecated compatibility shims over that API.
+//! through [`crate::scenario::Scenario`] — the single engine/fabric
+//! wiring path (the deprecated `run_xxx(cfg, compute)` shims from the
+//! pre-Scenario era have been removed). Node programs are `Send`, so
+//! every workload runs unchanged on the sequential or the sharded
+//! executor backend ([`crate::sim::exec`]).
 
 pub mod mergemin;
 pub mod millisort;

@@ -20,7 +20,4 @@
 mod node;
 pub mod pivot;
 
-pub use node::{
-    depth_of, run_nanosort, LevelBreakdown, NanoSort, NanoSortConfig, NanoSortResult, NsMsg,
-    PivotMode,
-};
+pub use node::{depth_of, LevelBreakdown, NanoSort, NsMsg, PivotMode};

@@ -1,20 +1,18 @@
 //! The per-core NanoSort program and run driver.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::algo::tree::AggTree;
 use crate::compute::LocalCompute;
 use crate::cpu::Temp;
-use crate::graysort::{validate_sorted_output, value_of_key, ValidationReport};
+use crate::graysort::{validate_sorted_output, value_of_key};
 use crate::nanopu::{Ctx, Group, GroupId, NodeId, Program, WireMsg};
-use crate::net::NetConfig;
 use crate::scenario::{
-    Built, Finish, MetricValue, RunReport, Scenario, ScenarioEnv, Validation, Workload,
+    Built, Finish, MetricValue, RunReport, ScenarioEnv, Validation, Workload,
 };
-use crate::sim::{RunSummary, Time, MAX_STAGES};
+use crate::sim::MAX_STAGES;
 
 /// Per-level stage summary (kept as an alias of the scenario layer's
 /// generalized breakdown; Fig 16 reads the same shape for every workload).
@@ -45,40 +43,6 @@ pub enum PivotMode {
     Naive,
 }
 
-/// NanoSort configuration (the paper's "knobs", §6.2.3).
-#[derive(Debug, Clone)]
-pub struct NanoSortConfig {
-    /// Total cores; must equal `buckets ^ r` for some r >= 1.
-    pub nodes: usize,
-    /// Keys pre-loaded per core (paper headline: 16).
-    pub keys_per_node: usize,
-    /// Buckets per recursion level (paper headline: 16).
-    pub buckets: usize,
-    /// Median-tree (and count-tree) incast.
-    pub median_incast: usize,
-    /// Run the GraySort value-redistribution phase (§5.2).
-    pub shuffle_values: bool,
-    /// Pivot-proposal ablation (default: the paper's PivotSelect).
-    pub pivot_mode: PivotMode,
-    pub seed: u64,
-    pub net: NetConfig,
-}
-
-impl Default for NanoSortConfig {
-    fn default() -> Self {
-        NanoSortConfig {
-            nodes: 256,
-            keys_per_node: 16,
-            buckets: 16,
-            median_incast: 16,
-            shuffle_values: false,
-            pivot_mode: PivotMode::Paper,
-            seed: 1,
-            net: NetConfig::default(),
-        }
-    }
-}
-
 /// Recursion depth r with `nodes = buckets^r`, or an error when the fleet
 /// size is not an exact power.
 pub fn depth_of(nodes: usize, buckets: usize) -> Result<u32> {
@@ -104,8 +68,12 @@ pub fn depth_of(nodes: usize, buckets: usize) -> Result<u32> {
 pub enum NsMsg {
     /// Median-tree contribution (empty pivots = abstain: node had no keys).
     PivotUp { level: u8, round: u8, pivots: Vec<u64> },
-    /// Final pivots broadcast by the group root.
-    Pivots { level: u8, pivots: Vec<u64> },
+    /// Final pivots broadcast by the group root. The vector is shared
+    /// behind `Arc`: the engine clones the message once per multicast
+    /// member (65,536 at level 0 of the paper tier), and a pooled payload
+    /// turns each clone into a pointer bump instead of a buffer
+    /// allocation (§Perf, [`WireMsg`] payload-pooling note).
+    Pivots { level: u8, pivots: Arc<Vec<u64>> },
     /// One shuffled key (+ origin core, paper §5.2).
     Key { level: u8, key: u64, origin: u32 },
     /// Count-tree contribution for termination detection.
@@ -154,7 +122,11 @@ struct Shared {
     /// Engine multicast-group id offsets per level (groups are registered
     /// level-major, group-index-minor).
     group_offsets: Vec<usize>,
-    outputs: RefCell<Outputs>,
+    /// Cross-node result sink. A `Mutex` (not `RefCell`): node programs
+    /// run on executor worker threads. Writes are per-node slots plus a
+    /// commutative max, so contention is nil and results are
+    /// order-independent.
+    outputs: Mutex<Outputs>,
 }
 
 #[derive(Default)]
@@ -203,8 +175,8 @@ enum Phase {
 
 pub struct NanoSortNode {
     id: NodeId,
-    shared: Rc<Shared>,
-    compute: Rc<dyn LocalCompute>,
+    shared: Arc<Shared>,
+    compute: Arc<dyn LocalCompute>,
 
     level: u32,
     phase: Phase,
@@ -322,13 +294,13 @@ impl NanoSortNode {
             if next > rounds {
                 // Root holds the final pivots.
                 debug_assert_eq!(pos, 0);
-                let pivots = if self.my_pivots.is_empty() {
+                let pivots = Arc::new(if self.my_pivots.is_empty() {
                     // Entire group abstained (no keys anywhere): synthesize
                     // even pivots; routing is vacuous.
                     evenly_spaced_pivots(self.shared.buckets)
                 } else {
                     self.my_pivots.clone()
-                };
+                });
                 let gid = self.shared.group_id(self.id, self.level);
                 ctx.broadcast_to(
                     gid,
@@ -428,7 +400,7 @@ impl NanoSortNode {
                 // across epochs; `received` catches up as deliveries land.
                 let complete = self.ct_sum.0 == self.ct_sum.1;
                 if complete {
-                    let mut out = self.shared.outputs.borrow_mut();
+                    let mut out = self.shared.outputs.lock().expect("outputs lock");
                     out.max_retry_epoch = out.max_retry_epoch.max(epoch);
                 }
                 let gid = self.shared.group_id(self.id, self.level);
@@ -501,7 +473,8 @@ impl NanoSortNode {
         let n = self.keys.len() as u64;
         ctx.compute(ctx.core().sort_cycles(n, Temp::Warm));
         self.sort_keys_with_origins();
-        self.shared.outputs.borrow_mut().final_keys[self.id] = self.keys.clone();
+        self.shared.outputs.lock().expect("outputs lock").final_keys[self.id] =
+            self.keys.clone();
 
         if !self.shared.shuffle_values {
             ctx.finish();
@@ -511,7 +484,8 @@ impl NanoSortNode {
         self.values_by_slot = vec![0; self.keys.len()];
         self.values_received = 0;
         if self.keys.is_empty() {
-            self.shared.outputs.borrow_mut().final_values[self.id] = Vec::new();
+            self.shared.outputs.lock().expect("outputs lock").final_values[self.id] =
+                Vec::new();
             ctx.finish();
             return;
         }
@@ -565,7 +539,7 @@ impl NanoSortNode {
         }
         self.values_received += 1;
         if self.values_received == self.keys.len() {
-            self.shared.outputs.borrow_mut().final_values[self.id] =
+            self.shared.outputs.lock().expect("outputs lock").final_values[self.id] =
                 self.values_by_slot.clone();
             ctx.finish();
         }
@@ -645,22 +619,6 @@ fn evenly_spaced_pivots(b: usize) -> Vec<u64> {
     (1..b).map(|i| (u64::MAX / b as u64) * i as u64).collect()
 }
 
-/// Result of a NanoSort run.
-pub struct NanoSortResult {
-    pub summary: RunSummary,
-    pub validation: ValidationReport,
-    pub skew: f64,
-    pub levels: Vec<LevelBreakdown>,
-    /// Highest termination-detection epoch any group root needed.
-    pub max_retry_epoch: u16,
-}
-
-impl NanoSortResult {
-    pub fn runtime(&self) -> Time {
-        self.summary.makespan
-    }
-}
-
 /// NanoSort as a [`Workload`]: the scenario supplies fleet size, network,
 /// data plane, and seed; these are the paper's §6.2.3 knobs.
 #[derive(Debug, Clone)]
@@ -711,14 +669,14 @@ impl Workload for NanoSort {
             group_offsets.push(off);
             off += (b as u128).pow(l) as usize;
         }
-        let shared = Rc::new(Shared {
+        let shared = Arc::new(Shared {
             buckets: b,
             depth,
             median_incast: self.median_incast,
             shuffle_values: self.shuffle_values,
             pivot_mode: self.pivot_mode,
             group_offsets,
-            outputs: RefCell::new(Outputs {
+            outputs: Mutex::new(Outputs {
                 final_keys: vec![Vec::new(); env.nodes],
                 final_values: vec![Vec::new(); env.nodes],
                 max_retry_epoch: 0,
@@ -782,7 +740,7 @@ impl Workload for NanoSort {
 
         let shuffle_values = self.shuffle_values;
         let finish: Finish = Box::new(move |env, summary| {
-            let outputs = shared.outputs.borrow();
+            let outputs = shared.outputs.lock().expect("outputs lock");
             let validation = validate_sorted_output(
                 &input,
                 &outputs.final_keys,
@@ -799,63 +757,56 @@ impl Workload for NanoSort {
     }
 }
 
-impl From<RunReport> for NanoSortResult {
-    fn from(report: RunReport) -> Self {
-        let validation =
-            report.validation.sort.clone().expect("nanosort reports carry sort validation");
-        NanoSortResult {
-            skew: report.metric_f64("skew").unwrap_or(1.0),
-            max_retry_epoch: report.metric_u64("max_retry_epoch").unwrap_or(0) as u16,
-            levels: report.stages,
-            validation,
-            summary: report.summary,
-        }
-    }
-}
-
-/// Deprecated entry point kept for compatibility; routes through
-/// [`Scenario`]. Prefer `Scenario::new(NanoSort {..})`.
-pub fn run_nanosort(cfg: &NanoSortConfig, compute: Rc<dyn LocalCompute>) -> NanoSortResult {
-    let report = Scenario::new(NanoSort {
-        keys_per_node: cfg.keys_per_node,
-        buckets: cfg.buckets,
-        median_incast: cfg.median_incast,
-        shuffle_values: cfg.shuffle_values,
-        pivot_mode: cfg.pivot_mode,
-    })
-    .nodes(cfg.nodes)
-    .net(cfg.net.clone())
-    .seed(cfg.seed)
-    .compute_with(compute)
-    .run()
-    .expect("nanosort scenario");
-    NanoSortResult::from(report)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compute::NativeCompute;
+    use crate::graysort::ValidationReport;
+    use crate::net::NetConfig;
+    use crate::scenario::Scenario;
+    use crate::sim::Time;
 
-    fn cfg(nodes: usize, kpn: usize, b: usize) -> NanoSortConfig {
-        NanoSortConfig {
+    /// One seeded run through the Scenario API (the only run path since
+    /// the deprecated `run_nanosort` shim was removed).
+    struct Cfg {
+        nodes: usize,
+        workload: NanoSort,
+        net: NetConfig,
+        seed: u64,
+    }
+
+    fn cfg(nodes: usize, kpn: usize, b: usize) -> Cfg {
+        Cfg {
             nodes,
-            keys_per_node: kpn,
-            buckets: b,
-            median_incast: b,
-            ..Default::default()
+            workload: NanoSort {
+                keys_per_node: kpn,
+                buckets: b,
+                median_incast: b,
+                ..Default::default()
+            },
+            net: NetConfig::default(),
+            seed: 1,
         }
     }
 
-    fn run(c: &NanoSortConfig) -> NanoSortResult {
-        run_nanosort(c, Rc::new(NativeCompute))
+    fn run(c: &Cfg) -> RunReport {
+        Scenario::new(c.workload.clone())
+            .nodes(c.nodes)
+            .net(c.net.clone())
+            .seed(c.seed)
+            .run()
+            .expect("nanosort scenario")
+    }
+
+    fn sort_validation(r: &RunReport) -> &ValidationReport {
+        r.validation.sort.as_ref().expect("nanosort reports carry sort validation")
     }
 
     #[test]
     fn sorts_small_cluster() {
         let r = run(&cfg(16, 16, 16)); // one level
-        assert!(r.validation.ok(), "{:?}", r.validation);
-        assert_eq!(r.validation.total_keys, 256);
+        let v = sort_validation(&r);
+        assert!(v.ok(), "{v:?}");
+        assert_eq!(v.total_keys, 256);
     }
 
     #[test]
@@ -876,10 +827,11 @@ mod tests {
     #[test]
     fn sorts_with_value_phase() {
         let mut c = cfg(64, 8, 8);
-        c.shuffle_values = true;
+        c.workload.shuffle_values = true;
         let r = run(&c);
-        assert!(r.validation.ok(), "{:?}", r.validation);
-        assert!(r.validation.values_intact);
+        let v = sort_validation(&r);
+        assert!(v.ok(), "{v:?}");
+        assert!(v.values_intact);
     }
 
     #[test]
@@ -894,7 +846,7 @@ mod tests {
     fn multicast_reduces_sends_and_runtime() {
         let mut with = cfg(256, 16, 16);
         with.net.multicast = true;
-        let mut without = with.clone();
+        let mut without = cfg(256, 16, 16);
         without.net.multicast = false;
         let a = run(&with);
         let b = run(&without);
@@ -912,7 +864,7 @@ mod tests {
     fn median_incast_knob_works() {
         for f in [2usize, 4, 8, 16] {
             let mut c = cfg(256, 16, 16);
-            c.median_incast = f;
+            c.workload.median_incast = f;
             let r = run(&c);
             assert!(r.validation.ok(), "incast {f}");
         }
@@ -947,7 +899,7 @@ mod tests {
             let kpn = [4usize, 8, 16, 32][rng.index(4)];
             let mut c = cfg(nodes, kpn, b);
             c.seed = rng.next_u64();
-            c.shuffle_values = rng.chance(1, 2);
+            c.workload.shuffle_values = rng.chance(1, 2);
             let r = run(&c);
             assert!(
                 r.validation.ok(),
@@ -977,7 +929,7 @@ mod tests {
             .run()
             .unwrap();
             assert!(r.validation.ok(), "{}: {}", d.name(), r.validation.detail);
-            let v = r.validation.sort.as_ref().unwrap();
+            let v = sort_validation(&r);
             assert_eq!(v.total_keys, 128, "{}", d.name());
             assert!(v.values_intact, "{}", d.name());
         }
@@ -986,7 +938,8 @@ mod tests {
     #[test]
     fn skew_reported_reasonably() {
         let r = run(&cfg(256, 32, 16));
-        assert!(r.skew >= 1.0 && r.skew < 8.0, "skew = {}", r.skew);
+        let skew = r.metric_f64("skew").expect("nanosort reports skew");
+        assert!((1.0..8.0).contains(&skew), "skew = {skew}");
     }
 
     /// Stress the termination-detection retry path: injecting huge tail
@@ -998,16 +951,13 @@ mod tests {
         let mut c = cfg(256, 16, 16);
         c.net.tail_prob = (20, 100);
         c.net.tail_extra_ns = 20_000;
-        c.shuffle_values = true;
+        c.workload.shuffle_values = true;
         let r = run(&c);
         assert!(r.validation.ok(), "{:?}", r.validation);
         // With 20% of messages delayed 20 µs, at least one group root
         // should have needed a retry epoch.
-        assert!(
-            r.max_retry_epoch >= 1,
-            "expected retries under extreme tails (got epoch {})",
-            r.max_retry_epoch
-        );
+        let epoch = r.metric_u64("max_retry_epoch").unwrap();
+        assert!(epoch >= 1, "expected retries under extreme tails (got epoch {epoch})");
     }
 
     /// Without tail injection the first count-tree pass may or may not
@@ -1016,6 +966,6 @@ mod tests {
     fn retry_epoch_reported() {
         let r = run(&cfg(64, 8, 8));
         assert!(r.validation.ok());
-        assert!(r.max_retry_epoch < 100, "runaway retries");
+        assert!(r.metric_u64("max_retry_epoch").unwrap() < 100, "runaway retries");
     }
 }

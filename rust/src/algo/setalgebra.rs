@@ -11,49 +11,18 @@
 //!
 //! The incast knob exposes the same width/depth trade-off as Fig 4.
 
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::algo::tree::AggTree;
 use crate::compute::LocalCompute;
 use crate::nanopu::{Ctx, NodeId, Program, WireMsg};
-use crate::net::NetConfig;
 use crate::scenario::{
-    Built, Finish, MetricValue, RunReport, Scenario, ScenarioEnv, Validation, Workload,
+    Built, Finish, MetricValue, RunReport, ScenarioEnv, Validation, Workload,
 };
-use crate::sim::{RunSummary, SplitMix64};
-
-/// Set-algebra workload configuration.
-#[derive(Debug, Clone)]
-pub struct SetAlgebraConfig {
-    pub cores: usize,
-    /// Posting lists per query (q-way intersection).
-    pub lists: usize,
-    /// Doc ids per list per core (local shard size).
-    pub ids_per_core: usize,
-    /// Probability (num/den) that a doc id appears in every list —
-    /// controls result selectivity.
-    pub hit_prob: (u64, u64),
-    /// Reduce-tree incast.
-    pub incast: usize,
-    pub seed: u64,
-    pub net: NetConfig,
-}
-
-impl Default for SetAlgebraConfig {
-    fn default() -> Self {
-        SetAlgebraConfig {
-            cores: 64,
-            lists: 4,
-            ids_per_core: 128,
-            hit_prob: (1, 8),
-            incast: 8,
-            seed: 1,
-            net: NetConfig::default(),
-        }
-    }
-}
+use crate::sim::SplitMix64;
 
 #[derive(Debug, Clone)]
 pub struct CountMsg {
@@ -80,11 +49,12 @@ pub struct SetAlgebraNode {
     /// Data plane handle (the leapfrog intersection has no compiled XLA
     /// artifact yet, so this extension's data plane is native-only; kept
     /// so the API matches the other algorithms).
-    _compute: Rc<dyn LocalCompute>,
+    _compute: Arc<dyn LocalCompute>,
     count: u64,
     round: u32,
     got: usize,
-    pub result: Rc<std::cell::Cell<u64>>,
+    /// Root's final answer (atomic: programs run on executor threads).
+    pub result: Arc<AtomicU64>,
 }
 
 impl SetAlgebraNode {
@@ -116,7 +86,7 @@ impl SetAlgebraNode {
             let next = self.round + 1;
             if next > rounds {
                 if self.id == 0 {
-                    self.result.set(self.count);
+                    self.result.store(self.count, Ordering::Relaxed);
                     ctx.finish();
                 }
                 return;
@@ -146,7 +116,7 @@ impl Program for SetAlgebraNode {
     fn on_start(&mut self, ctx: &mut Ctx<CountMsg>) {
         self.count = self.intersect_local(ctx);
         if self.cores == 1 {
-            self.result.set(self.count);
+            self.result.store(self.count, Ordering::Relaxed);
             ctx.finish();
             return;
         }
@@ -162,19 +132,6 @@ impl Program for SetAlgebraNode {
 
     fn step(&self) -> u32 {
         self.round + 1
-    }
-}
-
-/// Run outcome (counts validated against a direct computation).
-pub struct SetAlgebraResult {
-    pub summary: RunSummary,
-    pub found: u64,
-    pub expected: u64,
-}
-
-impl SetAlgebraResult {
-    pub fn correct(&self) -> bool {
-        self.found == self.expected
     }
 }
 
@@ -216,7 +173,7 @@ impl Workload for SetAlgebra {
         // (`Uniform` keeps every core at `ids_per_core`, byte-identical
         // to the pre-perturbation stream).
         let counts = env.perturb.dist.per_core_counts(self.ids_per_core, env.nodes);
-        let result = Rc::new(std::cell::Cell::new(u64::MAX));
+        let result = Arc::new(AtomicU64::new(u64::MAX));
         let mut expected = 0u64;
         let programs: Vec<SetAlgebraNode> = (0..env.nodes)
             .map(|id| {
@@ -255,7 +212,7 @@ impl Workload for SetAlgebra {
             })
             .collect();
         let finish: Finish = Box::new(move |env, summary| {
-            let found = result.get();
+            let found = result.load(Ordering::Relaxed);
             let validation = Validation::check(
                 found == expected,
                 format!("intersection cardinality {found} == expected {expected}"),
@@ -268,46 +225,24 @@ impl Workload for SetAlgebra {
     }
 }
 
-/// Deprecated entry point kept for compatibility; routes through
-/// [`Scenario`]. Prefer `Scenario::new(SetAlgebra {..})`.
-pub fn run_setalgebra(
-    cfg: &SetAlgebraConfig,
-    compute: Rc<dyn LocalCompute>,
-) -> SetAlgebraResult {
-    let report = Scenario::new(SetAlgebra {
-        lists: cfg.lists,
-        ids_per_core: cfg.ids_per_core,
-        hit_prob: cfg.hit_prob,
-        incast: cfg.incast,
-    })
-    .nodes(cfg.cores)
-    .net(cfg.net.clone())
-    .seed(cfg.seed)
-    .compute_with(compute)
-    .run()
-    .expect("setalgebra scenario");
-    SetAlgebraResult {
-        found: report.metric_u64("found").unwrap_or(u64::MAX),
-        expected: report.metric_u64("expected").unwrap_or(0),
-        summary: report.summary,
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compute::NativeCompute;
+    use crate::scenario::{RunReport, Scenario};
 
-    fn run(cores: usize, lists: usize, incast: usize) -> SetAlgebraResult {
-        let cfg = SetAlgebraConfig { cores, lists, incast, ..Default::default() };
-        run_setalgebra(&cfg, Rc::new(NativeCompute))
+    fn run_cfg(workload: SetAlgebra, cores: usize) -> RunReport {
+        Scenario::new(workload).nodes(cores).run().expect("setalgebra scenario")
+    }
+
+    fn run(cores: usize, lists: usize, incast: usize) -> RunReport {
+        run_cfg(SetAlgebra { lists, incast, ..Default::default() }, cores)
     }
 
     #[test]
     fn intersects_correctly() {
         for cores in [1usize, 8, 64, 100] {
             let r = run(cores, 4, 8);
-            assert!(r.correct(), "cores={cores}: {} != {}", r.found, r.expected);
+            assert!(r.validation.ok(), "cores={cores}: {}", r.validation.detail);
         }
     }
 
@@ -315,7 +250,7 @@ mod tests {
     fn q_way_variants() {
         for lists in [2usize, 3, 4, 8] {
             let r = run(64, lists, 8);
-            assert!(r.correct(), "lists={lists}");
+            assert!(r.validation.ok(), "lists={lists}");
         }
     }
 
@@ -333,14 +268,8 @@ mod tests {
         // Fig 1: ~4 set-algebra intersections per µs on one core. One
         // local q=4 intersection over small (16-id) shards should cost
         // well under 1 µs of simulated core time.
-        let cfg = SetAlgebraConfig {
-            cores: 1,
-            lists: 4,
-            ids_per_core: 16,
-            ..Default::default()
-        };
-        let r = run_setalgebra(&cfg, Rc::new(NativeCompute));
-        assert!(r.correct());
+        let r = run_cfg(SetAlgebra { ids_per_core: 16, ..Default::default() }, 1);
+        assert!(r.validation.ok());
         let us = r.summary.makespan.as_us_f64();
         assert!(us < 0.25, "one 4-way intersection = {us} µs");
     }
@@ -349,7 +278,7 @@ mod tests {
     fn deterministic() {
         let a = run(64, 4, 8);
         let b = run(64, 4, 8);
-        assert_eq!(a.found, b.found);
+        assert_eq!(a.metric_u64("found"), b.metric_u64("found"));
         assert_eq!(a.summary.makespan, b.summary.makespan);
     }
 }

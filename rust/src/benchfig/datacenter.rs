@@ -190,7 +190,7 @@ pub fn paperscale(opts: &RunOptions) -> Result<Table> {
         &["tier", "nodes", "keys", "simulated_us", "paper_us", "vs_paper", "wall_s"],
     );
     for &tier in tiers {
-        let (r, wall) = conformance::run_tier(spec, tier, opts.compute)?;
+        let (r, wall) = conformance::run_tier(spec, tier, opts.compute, 1)?;
         anyhow::ensure!(
             r.validation.ok(),
             "tier {}: validation failed: {}",

@@ -30,9 +30,18 @@ pub use xla_compute::XlaCompute;
 /// Keys must be `< u64::MAX` (the padding sentinel); the GraySort
 /// generator guarantees this.
 ///
-/// Not `Send`/`Sync`: the PJRT client handle inside [`XlaCompute`] is
-/// single-threaded. Parallel sweeps construct one compute per thread.
-pub trait LocalCompute {
+/// `Send + Sync`: the parallel executor ([`crate::sim::exec`]) shares one
+/// data plane across shard worker threads through `Arc`. The operations
+/// are pure (same inputs → same outputs, no draw order), so concurrent
+/// use cannot perturb results. [`NativeCompute`] is trivially
+/// thread-safe. [`XlaCompute`] is *not* safe to drive from multiple
+/// threads — the real PJRT CPU client is single-threaded — so the
+/// scenario layer refuses to combine the XLA plane with a threaded
+/// executor ([`crate::scenario::Scenario::threads`] must stay 1), and
+/// the default build stubs the PJRT runtime out entirely (see
+/// [`crate::runtime`]; the bound is satisfiable there because the stub
+/// engine is never constructible).
+pub trait LocalCompute: Send + Sync {
     /// Sort a block of keys ascending.
     fn sort(&self, keys: &mut Vec<u64>);
 

@@ -119,12 +119,15 @@ pub fn tier_params(spec: &WorkloadSpec, tier: Tier) -> Vec<(&'static str, u64)> 
 }
 
 /// Run `spec` at `tier` with the conformance seed through the one
-/// [`Scenario`] code path. Returns the report plus wall-clock seconds
-/// (the host-time half of the perf trajectory).
+/// [`Scenario`] code path, on `threads` executor worker threads (`1` =
+/// sequential reference backend, `0` = all host cores; the digest is
+/// identical at every setting). Returns the report plus wall-clock
+/// seconds (the host-time half of the perf trajectory).
 pub fn run_tier(
     spec: &WorkloadSpec,
     tier: Tier,
     compute: ComputeChoice,
+    threads: usize,
 ) -> Result<(RunReport, f64)> {
     let params = registry::params_from_pairs(spec, &tier_params(spec, tier))
         .with_context(|| format!("{} {} tier params", spec.name, tier.name()))?;
@@ -135,13 +138,17 @@ pub fn run_tier(
         .nodes(nodes)
         .compute(compute)
         .seed(CONFORMANCE_SEED)
+        .threads(threads)
         .run()?;
     Ok((report, start.elapsed().as_secs_f64()))
 }
 
 /// One `BENCH_<workload>.json` record: the simulated result next to the
 /// wall-clock cost of producing it, so the perf trajectory across PRs is
-/// measurable on both axes.
+/// measurable on both axes. `wall_clock_s` is always the sequential
+/// (`threads = 1`) backend; when a parallel run was also measured,
+/// `threads`/`wall_clock_par_s` record it so the executor speedup is part
+/// of the trajectory too.
 #[derive(Debug, Clone)]
 pub struct BenchRecord {
     pub workload: String,
@@ -149,7 +156,11 @@ pub struct BenchRecord {
     pub nodes: usize,
     pub keys: usize,
     pub makespan_us: f64,
+    /// Sequential-backend wall clock (threads = 1).
     pub wall_clock_s: f64,
+    /// Parallel-backend measurement, when taken: (worker threads,
+    /// wall-clock seconds). The digest is identical by contract.
+    pub parallel: Option<(usize, f64)>,
     pub events: u64,
     pub msgs_sent: u64,
     pub validated: bool,
@@ -170,17 +181,32 @@ impl BenchRecord {
             keys,
             makespan_us: report.runtime().as_us_f64(),
             wall_clock_s,
+            parallel: None,
             events: report.summary.events,
             msgs_sent: report.summary.net.msgs_sent,
             validated: report.validation.ok(),
         }
     }
 
+    /// Attach a parallel-backend wall-clock measurement.
+    pub fn with_parallel(mut self, threads: usize, wall_clock_s: f64) -> BenchRecord {
+        self.parallel = Some((threads, wall_clock_s));
+        self
+    }
+
     pub fn to_json(&self) -> String {
+        let parallel = match self.parallel {
+            Some((threads, wall)) => format!(
+                "\n  \"threads\": {threads},\n  \"wall_clock_par_s\": {wall:.3},\n  \
+                 \"speedup\": {:.2},",
+                self.wall_clock_s / wall.max(1e-9)
+            ),
+            None => String::new(),
+        };
         format!(
             "{{\n  \"workload\": \"{}\",\n  \"tier\": \"{}\",\n  \"nodes\": {},\n  \
              \"keys\": {},\n  \"makespan_us\": {:.3},\n  \"paper_makespan_us\": {:.1},\n  \
-             \"wall_clock_s\": {:.3},\n  \"events\": {},\n  \"msgs_sent\": {},\n  \
+             \"wall_clock_s\": {:.3},{}\n  \"events\": {},\n  \"msgs_sent\": {},\n  \
              \"validated\": {}\n}}\n",
             self.workload,
             self.tier,
@@ -189,6 +215,7 @@ impl BenchRecord {
             self.makespan_us,
             PAPER_RUNTIME_US,
             self.wall_clock_s,
+            parallel,
             self.events,
             self.msgs_sent,
             self.validated
@@ -261,7 +288,7 @@ mod tests {
     fn smoke_tier_runs_and_digests() {
         let spec = registry::find("mergemin").unwrap();
         let (report, wall) =
-            run_tier(spec, Tier::Smoke, ComputeChoice::Native).unwrap();
+            run_tier(spec, Tier::Smoke, ComputeChoice::Native, 1).unwrap();
         assert!(report.validation.ok());
         assert!(report.runtime() > Time::ZERO);
         assert!(wall >= 0.0);
@@ -270,6 +297,31 @@ mod tests {
         assert!(json.contains("\"workload\": \"mergemin\""));
         assert!(json.contains("\"tier\": \"smoke\""));
         assert!(json.contains("\"validated\": true"));
+    }
+
+    #[test]
+    fn bench_record_carries_both_backend_wall_clocks() {
+        let spec = registry::find("mergemin").unwrap();
+        let (report, wall) = run_tier(spec, Tier::Smoke, ComputeChoice::Native, 1).unwrap();
+        let record = BenchRecord::from_report(&report, Tier::Smoke, wall);
+        assert!(!record.to_json().contains("wall_clock_par_s"), "seq-only record");
+        let both = record.with_parallel(4, 0.5);
+        let json = both.to_json();
+        assert!(json.contains("\"threads\": 4"), "{json}");
+        assert!(json.contains("\"wall_clock_par_s\": 0.500"), "{json}");
+        assert!(json.contains("\"speedup\": "), "{json}");
+    }
+
+    #[test]
+    fn run_tier_digest_is_thread_count_invariant() {
+        let spec = registry::find("nanosort").unwrap();
+        let (seq, _) = run_tier(spec, Tier::Smoke, ComputeChoice::Native, 1).unwrap();
+        let (par, _) = run_tier(spec, Tier::Smoke, ComputeChoice::Native, 4).unwrap();
+        assert_eq!(
+            digest_json(&seq, "smoke"),
+            digest_json(&par, "smoke"),
+            "conformance digests must not depend on the executor backend"
+        );
     }
 
     #[test]
@@ -282,8 +334,8 @@ mod tests {
     #[test]
     fn bench_json_is_deterministic_modulo_wall_clock() {
         let spec = registry::find("mergemin").unwrap();
-        let (a, _) = run_tier(spec, Tier::Smoke, ComputeChoice::Native).unwrap();
-        let (b, _) = run_tier(spec, Tier::Smoke, ComputeChoice::Native).unwrap();
+        let (a, _) = run_tier(spec, Tier::Smoke, ComputeChoice::Native, 1).unwrap();
+        let (b, _) = run_tier(spec, Tier::Smoke, ComputeChoice::Native, 1).unwrap();
         let ra = BenchRecord::from_report(&a, Tier::Smoke, 0.0);
         let rb = BenchRecord::from_report(&b, Tier::Smoke, 0.0);
         assert_eq!(ra.to_json(), rb.to_json());

@@ -5,7 +5,7 @@ mod report;
 
 pub use report::{f, Table};
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -22,11 +22,13 @@ pub enum ComputeChoice {
 }
 
 impl ComputeChoice {
-    /// Construct the data plane. XLA requires `make artifacts` to have run.
-    pub fn build(self) -> Result<Rc<dyn LocalCompute>> {
+    /// Construct the data plane (shared across executor shards via
+    /// `Arc` — see [`LocalCompute`]'s thread-safety contract). XLA
+    /// requires `make artifacts` to have run on a `pjrt`-featured build.
+    pub fn build(self) -> Result<Arc<dyn LocalCompute>> {
         Ok(match self {
-            ComputeChoice::Native => Rc::new(NativeCompute),
-            ComputeChoice::Xla => Rc::new(XlaCompute::open_default()?),
+            ComputeChoice::Native => Arc::new(NativeCompute),
+            ComputeChoice::Xla => Arc::new(XlaCompute::open_default()?),
         })
     }
 }

@@ -6,7 +6,13 @@
 //! The paper sorts 1M keys in 68 µs on 65,536 cycle-simulated nanoPU cores.
 //! This crate rebuilds the full stack the paper depends on:
 //!
-//! - [`sim`] — deterministic discrete-event engine (virtual ns clock).
+//! - [`sim`] — deterministic discrete-event engine (virtual ns clock)
+//!   with pluggable execution backends ([`sim::exec`]): the sequential
+//!   reference ([`sim::exec::SeqExecutor`]) and a deterministic sharded
+//!   backend ([`sim::exec::ParExecutor`]) that simulates the fleet
+//!   across host threads in conservative time windows — byte-identical
+//!   results at any thread count (DESIGN.md §7; `--threads` on every
+//!   CLI entry point).
 //! - [`cpu`] — cycle-calibrated RISC-V Rocket cost model + cache hierarchy.
 //! - [`net`] — two-layer full-bisection fabric, reliable multicast, tail
 //!   latency injection (the paper's §5.1/§5.3 network).
@@ -23,11 +29,10 @@
 //!   figure-style reports.
 //! - [`scenario`] — the unified run API: every algorithm is a
 //!   [`scenario::Workload`] executed through a [`scenario::Scenario`]
-//!   (fleet size, network, core model, data plane, seed) and reported as
-//!   a [`scenario::RunReport`]; [`scenario::registry`] maps workload
-//!   names to typed parameter descriptors for the data-driven CLI. The
-//!   per-algorithm `run_xxx(cfg, compute)` functions remain as deprecated
-//!   shims over this layer.
+//!   (fleet size, network, core model, data plane, seed, executor
+//!   threads) and reported as a [`scenario::RunReport`];
+//!   [`scenario::registry`] maps workload names to typed parameter
+//!   descriptors for the data-driven CLI.
 //! - [`conformance`] — scale tiers (`smoke`/`mid`/`paper`, up to the
 //!   65,536-core × 1M-key headline), canonical run-report digests,
 //!   golden-file regression comparison (`rust/conformance/golden/`), and

@@ -4,10 +4,12 @@
 //! repro fig <id|all> [--xla] [--seed N] [--runs N] [--quick] [--csv]
 //! repro run <workload> [--<param> ...] [--skew D] [--loss N] [--oversub F]
 //!                      [--stragglers N] [--no-multicast] [--xla] [--seed N]
+//!                      [--threads N]
 //! repro run <workload> --help   # full parameter-descriptor listing
 //! repro sweep <workload> [--tier smoke|mid|paper] --axis <param>=a,b,c
-//!                      [--axis ...] [--xla] [--seed N]
+//!                      [--axis ...] [--xla] [--seed N] [--threads N]
 //! repro paper          [--tier smoke|mid|paper] [--bless] [--xla]
+//!                      [--threads N]
 //! repro artifacts      # list loaded XLA artifacts
 //! repro list           # list figure ids and registered workloads
 //! ```
@@ -32,6 +34,15 @@
 //! the golden under `rust/conformance/golden/` (`--bless` accepts an
 //! intentional change; a missing golden is created), and writes
 //! `BENCH_nanosort.json` with the simulated makespan + wall-clock.
+//!
+//! `--threads N` (everywhere) picks the executor backend: `1` (default)
+//! is the sequential reference, `0` = all host cores, anything else
+//! shards the simulated fleet across that many worker threads —
+//! byte-identical results by the [`nanosort::sim::exec`] determinism
+//! contract. `repro paper --threads N` runs *both* backends, hard-fails
+//! on any digest divergence, and records both wall-clocks in the bench
+//! record. `repro sweep --threads N` additionally fans independent grid
+//! cells out across the worker pool.
 
 use anyhow::{bail, Result};
 
@@ -77,9 +88,10 @@ fn help() -> String {
     format!(
         "repro — NanoSort reproduction CLI
   repro fig <id|all> [--xla] [--seed N] [--runs N] [--quick] [--csv]
-{}  repro sweep <workload> [--tier smoke|mid|paper] --axis <param>=a,b,c [--axis ...] [--xla] [--seed N]
-  repro paper       [--tier smoke|mid|paper] [--bless] [--xla]
-  repro artifacts | repro list",
+{}  repro sweep <workload> [--tier smoke|mid|paper] --axis <param>=a,b,c [--axis ...] [--xla] [--seed N] [--threads N]
+  repro paper       [--tier smoke|mid|paper] [--bless] [--xla] [--threads N]
+  repro artifacts | repro list
+  (--threads N: executor worker threads; 1 = sequential, 0 = all cores; results are identical)",
         registry::cli_help()
     )
 }
@@ -130,6 +142,7 @@ fn cmd_run(mut args: Args) -> Result<()> {
             perturb::apply_env_setting(name, &value, &mut net, &mut knobs)?;
         }
     }
+    let threads = args.num_checked("threads")?.unwrap_or(1);
     let opts = args.run_options()?;
     ensure_consumed(&args)?;
 
@@ -141,6 +154,7 @@ fn cmd_run(mut args: Args) -> Result<()> {
         .perturb(knobs)
         .compute(opts.compute)
         .seed(opts.seed)
+        .threads(threads)
         .run()?;
     print!("{}", report.render());
     Ok(())
@@ -166,18 +180,21 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
     );
     let xla = args.flag("xla");
     let seed = args.num_checked("seed")?.unwrap_or(conformance::CONFORMANCE_SEED);
+    let threads = args.num_checked("threads")?.unwrap_or(1);
     ensure_consumed(&args)?;
 
     let compute = if xla { ComputeChoice::Xla } else { ComputeChoice::Native };
     eprintln!(
-        "[sweep: {} @ {} tier, seed {seed:#x}, {} ax{}]",
+        "[sweep: {} @ {} tier, seed {seed:#x}, {} ax{}, {} worker{}]",
         spec.name,
         tier.name(),
         axes.len(),
-        if axes.len() == 1 { "is" } else { "es" }
+        if axes.len() == 1 { "is" } else { "es" },
+        sweep::resolve_threads(threads),
+        if sweep::resolve_threads(threads) == 1 { "" } else { "s" }
     );
     let start = std::time::Instant::now();
-    let outcome = sweep::run_sweep(spec, tier, &axes, compute, seed)?;
+    let outcome = sweep::run_sweep(spec, tier, &axes, compute, seed, threads)?;
     for line in outcome.json_lines() {
         println!("{line}");
     }
@@ -188,6 +205,10 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
 
 /// Conformance run at a named scale tier: fixed seed, golden comparison,
 /// `BENCH_nanosort.json` emission, and the paper-headline side-by-side.
+/// With `--threads N` (N != 1) the tier runs on **both** backends — the
+/// sequential reference first, then the sharded executor — hard-failing
+/// on any digest divergence and recording both wall-clocks (the
+/// executor-speedup half of the perf trajectory).
 fn cmd_paper(mut args: Args) -> Result<()> {
     let tier = match args.value_checked("tier")? {
         Some(t) => Tier::parse(&t)?,
@@ -195,8 +216,18 @@ fn cmd_paper(mut args: Args) -> Result<()> {
     };
     let bless = args.flag("bless");
     let xla = args.flag("xla");
+    let threads: usize = args.num_checked("threads")?.unwrap_or(1);
     let compute = if xla { ComputeChoice::Xla } else { ComputeChoice::Native };
     ensure_consumed(&args)?;
+    // Fail fast, before the (potentially minutes-long) sequential tier
+    // run: the XLA plane drives a single-threaded PJRT client, so the
+    // parallel pass would be rejected by the scenario layer anyway.
+    anyhow::ensure!(
+        !(xla && threads != 1),
+        "--xla requires --threads 1 (the XLA data plane is single-threaded; \
+         native --threads N and xla --threads 1 still cross-check, since the \
+         executor backends are byte-identical)"
+    );
 
     let spec = registry::find("nanosort")?;
     eprintln!(
@@ -204,7 +235,7 @@ fn cmd_paper(mut args: Args) -> Result<()> {
         tier.name(),
         conformance::CONFORMANCE_SEED
     );
-    let (report, wall) = conformance::run_tier(spec, tier, compute)?;
+    let (report, wall) = conformance::run_tier(spec, tier, compute, 1)?;
     print!("{}", report.render());
     let us = report.runtime().as_us_f64();
     println!(
@@ -221,7 +252,25 @@ fn cmd_paper(mut args: Args) -> Result<()> {
         report.validation.detail
     );
 
-    let bench = conformance::write_bench(&BenchRecord::from_report(&report, tier, wall))?;
+    let mut record = BenchRecord::from_report(&report, tier, wall);
+    if threads != 1 {
+        let resolved = nanosort::sim::exec::resolve_threads(threads);
+        let (par_report, par_wall) = conformance::run_tier(spec, tier, compute, resolved)?;
+        let seq_digest = conformance::digest_json(&report, tier.name());
+        let par_digest = conformance::digest_json(&par_report, tier.name());
+        anyhow::ensure!(
+            seq_digest == par_digest,
+            "executor divergence: ParExecutor({resolved} threads) digest differs from \
+             SeqExecutor:\n{}",
+            nanosort::conformance::golden::line_diff(&seq_digest, &par_digest)
+        );
+        println!(
+            "executor: seq {wall:.2} s vs par[{resolved}] {par_wall:.2} s ({:.2}x speedup) | digests identical",
+            wall / par_wall.max(1e-9)
+        );
+        record = record.with_parallel(resolved, par_wall);
+    }
+    let bench = conformance::write_bench(&record)?;
     println!("bench record: {}", bench.display());
 
     let digest = conformance::digest_json(&report, tier.name());

@@ -86,7 +86,16 @@ impl Iterator for GroupIter<'_> {
 }
 
 /// Wire-level view of an algorithm message.
-pub trait WireMsg: Clone {
+///
+/// Messages are `Send` so node programs can run on any executor backend
+/// ([`crate::sim::exec`]), and `Clone` because multicast delivers one
+/// logical message to many members. §Perf: the engine clones a message
+/// once per multicast member, so bulky payloads (pivot vectors, splitter
+/// lists) should be pooled behind `Arc` — the clone is then a pointer
+/// bump instead of a per-member buffer allocation, which is what keeps
+/// the 65,536-member level-0 broadcasts off the allocator in the
+/// executor hot path.
+pub trait WireMsg: Clone + Send {
     /// Payload bytes on the wire (headers are added by the fabric).
     fn wire_bytes(&self) -> u64;
     /// Algorithm step this message belongs to (reorder-buffer key).

@@ -10,10 +10,42 @@
 //! With full bisection (paper §5.1) the core is non-blocking, so contention
 //! is modeled only at the endpoint links — source NIC egress and
 //! destination leaf-downlink ingress — each a simple busy-until register.
+//!
+//! # Two-phase message model (execution-backend contract)
+//!
+//! Since the pluggable-executor refactor (DESIGN.md §7) a message crosses
+//! the fabric in two phases so the simulation can be sharded across host
+//! threads without changing results:
+//!
+//! 1. **Sender side** ([`Fabric::send`] / [`Fabric::mcast_leg`], state in
+//!    [`TxLane`]): egress busy-until + serialization, the loss/RTO
+//!    retransmit schedule, and the tail draw. All randomness comes from a
+//!    **per-source-node `SplitMix64` stream** derived from the run seed —
+//!    never from a shared draw order — so a node's outbound schedule is a
+//!    pure function of (seed, node, its own send sequence). The result is
+//!    a [`Flight`]: the candidate arrival time before destination-side
+//!    contention, plus the tie-break key `(at, src, ctr)`.
+//! 2. **Destination side** ([`Fabric::admit`], state in [`RxLane`]):
+//!    oversubscribed-spine queueing and ingress store-and-forward, applied
+//!    when the destination pops flights in canonical `(at, src, ctr)`
+//!    order. Spine busy-until registers are keyed by **destination leaf**
+//!    (the spine→leaf downlink), so they are owned by whichever shard owns
+//!    that leaf.
+//!
+//! [`Fabric::min_latency`] is the conservative lookahead used by the
+//! parallel executor's time windows: no flight can arrive earlier than
+//! `ready + min_latency()` after the send that produced it.
+//!
+//! The classic `unicast`/`multicast` entry points remain for tests and
+//! micro-benches; they run both phases back to back on a fabric-owned
+//! lane pair covering every node.
 
 use crate::sim::{SplitMix64, Time};
 
 use super::topology::Topology;
+
+/// Seed salt for the per-source-node network RNG streams.
+const NET_SALT: u64 = 0x6e65_745f_7461_696c;
 
 /// All network knobs (defaults = paper §5.1 constants).
 #[derive(Debug, Clone)]
@@ -40,17 +72,17 @@ pub struct NetConfig {
     /// Per-delivery drop probability (numerator / denominator); default
     /// `(0, 1)` = the paper's lossless links. Each lost transmission
     /// attempt costs [`NetConfig::rto_ns`] at the sender before the
-    /// packet is retransmitted; drops are deterministic via the fabric's
-    /// seeded `SplitMix64` (and draw *nothing* from it when disabled, so
-    /// lossless runs stay bit-identical).
+    /// packet is retransmitted; drops are deterministic via the sender
+    /// node's seeded `SplitMix64` stream (and draw *nothing* from it when
+    /// disabled, so lossless runs stay bit-identical).
     pub loss_prob: (u64, u64),
     /// Retransmit timeout, ns (only relevant when `loss_prob` is on).
     pub rto_ns: u64,
     /// Core oversubscription factor. `0` (default) is the paper's §5.1
-    /// non-blocking full-bisection core; `f >= 1` gives the fabric only
-    /// `leaf_radix / f` spine paths, each a store-and-forward busy-until
-    /// register that cross-leaf packets contend for (deterministic
-    /// ECMP-style spine choice).
+    /// non-blocking full-bisection core; `f >= 1` gives each destination
+    /// leaf only `leaf_radix / f` spine downlinks, each a
+    /// store-and-forward busy-until register that cross-leaf packets into
+    /// that leaf contend for (deterministic ECMP-style spine choice).
     pub oversub: u64,
 }
 
@@ -91,10 +123,25 @@ impl NetConfig {
                 + switches * self.switch_latency_ns,
         )
     }
+
+    /// Spine downlink registers per destination leaf under this config
+    /// (`0` = non-blocking core, no spine state at all).
+    pub fn spines_per_leaf(&self, leaf_radix: usize) -> usize {
+        if self.oversub > 0 {
+            (leaf_radix as u64 / self.oversub).max(1) as usize
+        } else {
+            0
+        }
+    }
 }
 
 /// Traffic counters (Fig 11b and the §6.2.3 multicast experiment report
 /// message counts).
+///
+/// Sender-side events (sends, multicasts, tail hits, retransmits) are
+/// counted in phase 1; delivery counters in phase 2. Under the parallel
+/// executor each shard keeps its own `NetStats` and the engine merges
+/// them with [`NetStats::merge`] — all fields are order-independent sums.
 #[derive(Debug, Clone, Default)]
 pub struct NetStats {
     /// Messages injected by senders (a multicast counts once).
@@ -114,57 +161,208 @@ pub struct NetStats {
     pub retransmits: u64,
 }
 
-/// The fabric: topology + config + endpoint-link occupancy + counters.
+impl NetStats {
+    /// Fold another shard's counters into this one (commutative sums, so
+    /// the merge is deterministic in any order; the engine still merges
+    /// in canonical shard order).
+    pub fn merge(&mut self, other: &NetStats) {
+        self.msgs_sent += other.msgs_sent;
+        self.msgs_delivered += other.msgs_delivered;
+        self.payload_bytes += other.payload_bytes;
+        self.wire_bytes += other.wire_bytes;
+        self.tail_hits += other.tail_hits;
+        self.multicasts += other.multicasts;
+        self.retransmits += other.retransmits;
+    }
+}
+
+/// Sender-side fabric state for a contiguous node range: one egress
+/// busy-until register, one seeded RNG stream, and one send counter per
+/// node. Owned by the shard that runs those nodes' handlers.
+pub struct TxLane {
+    base: usize,
+    egress_free: Vec<Time>,
+    rng: Vec<SplitMix64>,
+    /// Per-source flight counter — the third component of the canonical
+    /// event key `(at, src, ctr)`.
+    ctr: Vec<u64>,
+}
+
+/// Destination-side fabric state for a contiguous node range: ingress
+/// busy-until per node plus the spine downlink registers of every leaf
+/// the range covers (the range must cover whole leaves when
+/// oversubscription is on — see [`Fabric::rx_lane`]).
+pub struct RxLane {
+    base: usize,
+    ingress_free: Vec<Time>,
+    /// First leaf covered by this lane.
+    leaf_base: usize,
+    /// Spine downlink registers per leaf (0 = non-blocking core).
+    spines_per_leaf: usize,
+    /// `spines_per_leaf` registers per covered leaf, leaf-major.
+    spine_free: Vec<Time>,
+}
+
+/// One in-flight message leg after the sender-side phase: the candidate
+/// arrival time (before destination contention), the canonical tie-break
+/// key, and the spine-entry time for oversubscribed cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Flight {
+    /// Candidate arrival at `dst` (propagation + tail + retransmits
+    /// applied; destination queueing not yet).
+    pub at: Time,
+    pub src: usize,
+    pub dst: usize,
+    /// Source-local flight sequence number (unique per `src`).
+    pub ctr: u64,
+    /// When the packet reaches the spine layer (used only when the core
+    /// is oversubscribed and the path crosses leaves).
+    pub spine_at: Time,
+    /// Whether the path crosses leaves (computed once on the send side;
+    /// admission reuses it instead of re-deriving the hop count).
+    pub cross_leaf: bool,
+}
+
+/// The fabric: topology + config + seed (immutable during a run), plus a
+/// fabric-owned lane pair covering every node for the classic
+/// immediate-admission API used by tests and micro-benches. The solo
+/// lanes are built lazily on first classic-API use — engine runs build
+/// their own per-shard lanes and must not pay O(nodes) for an unused
+/// pair (65,536 RNG derivations at the paper tier).
 pub struct Fabric {
     pub topo: Topology,
     pub cfg: NetConfig,
+    seed: u64,
     stats: NetStats,
-    egress_free: Vec<Time>,
-    ingress_free: Vec<Time>,
-    /// Spine busy-until registers (empty unless `cfg.oversub > 0`).
-    spine_free: Vec<Time>,
-    rng: SplitMix64,
+    solo: Option<Box<(TxLane, RxLane)>>,
 }
 
 impl Fabric {
     pub fn new(topo: Topology, cfg: NetConfig, seed: u64) -> Self {
-        let n = topo.nodes;
-        let spines = if cfg.oversub > 0 {
-            (topo.leaf_radix as u64 / cfg.oversub).max(1) as usize
-        } else {
-            0
-        };
-        Fabric {
-            topo,
-            cfg,
-            stats: NetStats::default(),
-            egress_free: vec![Time::ZERO; n],
-            ingress_free: vec![Time::ZERO; n],
-            spine_free: vec![Time::ZERO; spines],
-            rng: SplitMix64::new(seed ^ 0x6e65_745f_7461_696c),
+        Fabric { topo, cfg, seed, stats: NetStats::default(), solo: None }
+    }
+
+    /// Lane pair for the classic immediate-admission API, built on first
+    /// use.
+    fn solo_lanes(&mut self) -> (&Topology, &NetConfig, &mut NetStats, &mut TxLane, &mut RxLane) {
+        if self.solo.is_none() {
+            self.solo = Some(Box::new((
+                tx_lane_for(self.seed, 0..self.topo.nodes),
+                rx_lane_for(&self.topo, &self.cfg, 0..self.topo.nodes),
+            )));
         }
+        let Fabric { topo, cfg, stats, solo, .. } = self;
+        let (tx, rx) = &mut **solo.as_mut().expect("just built");
+        (topo, cfg, stats, tx, rx)
     }
 
     pub fn stats(&self) -> &NetStats {
         &self.stats
     }
 
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
     pub fn multicast_supported(&self) -> bool {
         self.cfg.multicast
     }
 
-    fn tail_penalty(&mut self) -> Time {
-        let (num, den) = self.cfg.tail_prob;
-        if num > 0 && self.rng.chance(num, den) {
-            self.stats.tail_hits += 1;
-            Time::from_ns(self.cfg.tail_extra_ns)
-        } else {
-            Time::ZERO
-        }
+    /// Conservative lower bound on `arrival − send-ready` over every
+    /// possible message: minimum serialization (empty payload) plus
+    /// loopback propagation (2×NIC overhead — the shortest path any
+    /// self-send can take). This is the safe lookahead for the parallel
+    /// executor's conservative time windows: an event processed at time
+    /// `t` can only schedule new events at `≥ t + min_latency()`.
+    ///
+    /// Degenerate configs (zero NIC overhead *and* zero header bytes) can
+    /// make this zero; the parallel executor then falls back to the
+    /// sequential backend (DESIGN.md §7).
+    pub fn min_latency(&self) -> Time {
+        self.cfg.serialization(0) + self.cfg.propagation(0, 0)
     }
 
+    /// Sender-side state for the nodes in `range` (engine/shard API).
+    pub fn tx_lane(&self, range: std::ops::Range<usize>) -> TxLane {
+        tx_lane_for(self.seed, range)
+    }
+
+    /// Destination-side state for the nodes in `range`. When the core is
+    /// oversubscribed the range must start on a leaf boundary (spine
+    /// downlink registers are per-leaf and must not straddle lanes).
+    pub fn rx_lane(&self, range: std::ops::Range<usize>) -> RxLane {
+        rx_lane_for(&self.topo, &self.cfg, range)
+    }
+
+    // ------------------------------------------------------- phase 1: send
+
+    /// Sender side of one unicast: egress busy-until + serialization,
+    /// then the per-source loss/RTO and tail draws and propagation.
+    /// Returns the [`Flight`] to admit at the destination.
+    pub fn send(
+        &self,
+        tx: &mut TxLane,
+        stats: &mut NetStats,
+        src: usize,
+        dst: usize,
+        payload_bytes: u64,
+        ready: Time,
+    ) -> Flight {
+        send_impl(&self.topo, &self.cfg, tx, stats, src, dst, payload_bytes, ready)
+    }
+
+    /// Sender side of a multicast: the packet serializes **once** onto
+    /// the source egress link (paper §5.3: switches cache + replicate).
+    /// Returns the on-wire time to feed every member's [`Fabric::mcast_leg`].
+    /// Panics if multicast is disabled — callers must degrade to unicast
+    /// loops themselves (that asymmetry is exactly the §6.2.3 experiment).
+    pub fn mcast_depart(
+        &self,
+        tx: &mut TxLane,
+        stats: &mut NetStats,
+        src: usize,
+        payload_bytes: u64,
+        ready: Time,
+    ) -> Time {
+        mcast_depart_impl(&self.cfg, tx, stats, src, payload_bytes, ready)
+    }
+
+    /// One member leg of a multicast (loss/tail drawn per member, in
+    /// member order, from the source stream).
+    pub fn mcast_leg(
+        &self,
+        tx: &mut TxLane,
+        stats: &mut NetStats,
+        src: usize,
+        dst: usize,
+        on_wire: Time,
+    ) -> Flight {
+        leg_impl(&self.topo, &self.cfg, tx, stats, src, dst, on_wire)
+    }
+
+    // ------------------------------------------------------ phase 2: admit
+
+    /// Destination side of one flight: oversubscribed-spine queueing (when
+    /// configured and the path crosses leaves) plus ingress
+    /// store-and-forward on the destination downlink. Flights **must** be
+    /// admitted in canonical `(at, src, ctr)` order per destination lane —
+    /// the executors' event queues guarantee it. Returns the delivery time.
+    pub fn admit(
+        &self,
+        rx: &mut RxLane,
+        stats: &mut NetStats,
+        flight: &Flight,
+        payload_bytes: u64,
+    ) -> Time {
+        admit_impl(&self.topo, &self.cfg, rx, stats, flight, payload_bytes)
+    }
+
+    // ------------------------------------- classic immediate-admission API
+
     /// Inject one unicast message at `depart_ready` (the moment the sender
-    /// core hands it to the NIC). Returns the delivery time at `dst`.
+    /// core hands it to the NIC) and admit it immediately. Returns the
+    /// delivery time at `dst`. Test/bench convenience: the executors use
+    /// the two-phase API and admit in canonical order instead.
     pub fn unicast(
         &mut self,
         src: usize,
@@ -172,16 +370,13 @@ impl Fabric {
         payload_bytes: u64,
         depart_ready: Time,
     ) -> Time {
-        let arrival = self.route(src, dst, payload_bytes, depart_ready, true);
-        self.stats.msgs_sent += 1;
-        arrival
+        let (topo, cfg, stats, tx, rx) = self.solo_lanes();
+        let flight = send_impl(topo, cfg, tx, stats, src, dst, payload_bytes, depart_ready);
+        admit_impl(topo, cfg, rx, stats, &flight, payload_bytes)
     }
 
-    /// Inject one multicast message to every node in `members` (paper §5.3:
-    /// switches cache + replicate, so the sender serializes once).
-    /// Returns per-member delivery times. Panics if multicast is disabled —
-    /// callers must degrade to unicast loops themselves (that asymmetry is
-    /// exactly the §6.2.3 experiment).
+    /// Inject one multicast message to every node in `members` and admit
+    /// each leg immediately. Returns per-member delivery times.
     pub fn multicast(
         &mut self,
         src: usize,
@@ -195,10 +390,9 @@ impl Fabric {
     }
 
     /// [`Fabric::multicast`] over any member iterator, appending the
-    /// per-member delivery times to `out` — the batched-injection path:
-    /// the engine reuses one scratch buffer across all group sends, and
-    /// range-shaped groups (§Scale: 65,536-member level-0 groups) stream
-    /// through without ever materializing a member list.
+    /// per-member delivery times to `out` — range-shaped groups (§Scale:
+    /// 65,536-member level-0 groups) stream through without ever
+    /// materializing a member list.
     pub fn multicast_into(
         &mut self,
         src: usize,
@@ -207,78 +401,168 @@ impl Fabric {
         depart_ready: Time,
         out: &mut Vec<(usize, Time)>,
     ) {
-        assert!(self.cfg.multicast, "multicast disabled in this fabric");
-        self.stats.msgs_sent += 1;
-        self.stats.multicasts += 1;
-        // Sender serializes the packet once onto its egress link.
-        let ser = self.cfg.serialization(payload_bytes);
-        let depart = depart_ready.max(self.egress_free[src]);
-        self.egress_free[src] = depart + ser;
+        let (topo, cfg, stats, tx, rx) = self.solo_lanes();
+        let on_wire = mcast_depart_impl(cfg, tx, stats, src, payload_bytes, depart_ready);
         for dst in members {
-            let t = self.deliver_leg(src, dst, payload_bytes, depart + ser);
+            let flight = leg_impl(topo, cfg, tx, stats, src, dst, on_wire);
+            let t = admit_impl(topo, cfg, rx, stats, &flight, payload_bytes);
             out.push((dst, t));
         }
     }
+}
 
-    /// Shared unicast path: egress serialization + propagation + ingress.
-    fn route(
-        &mut self,
-        src: usize,
-        dst: usize,
-        payload_bytes: u64,
-        ready: Time,
-        _count: bool,
-    ) -> Time {
-        let ser = self.cfg.serialization(payload_bytes);
-        let depart = ready.max(self.egress_free[src]);
-        self.egress_free[src] = depart + ser;
-        self.deliver_leg(src, dst, payload_bytes, depart + ser)
+#[allow(clippy::too_many_arguments)]
+fn send_impl(
+    topo: &Topology,
+    cfg: &NetConfig,
+    tx: &mut TxLane,
+    stats: &mut NetStats,
+    src: usize,
+    dst: usize,
+    payload_bytes: u64,
+    ready: Time,
+) -> Flight {
+    stats.msgs_sent += 1;
+    let ser = cfg.serialization(payload_bytes);
+    let slot = src - tx.base;
+    let depart = ready.max(tx.egress_free[slot]);
+    tx.egress_free[slot] = depart + ser;
+    leg_impl(topo, cfg, tx, stats, src, dst, depart + ser)
+}
+
+fn mcast_depart_impl(
+    cfg: &NetConfig,
+    tx: &mut TxLane,
+    stats: &mut NetStats,
+    src: usize,
+    payload_bytes: u64,
+    ready: Time,
+) -> Time {
+    assert!(cfg.multicast, "multicast disabled in this fabric");
+    stats.msgs_sent += 1;
+    stats.multicasts += 1;
+    let ser = cfg.serialization(payload_bytes);
+    let slot = src - tx.base;
+    let depart = ready.max(tx.egress_free[slot]);
+    tx.egress_free[slot] = depart + ser;
+    depart + ser
+}
+
+/// From "fully on the wire at src" to the candidate arrival at dst.
+fn leg_impl(
+    topo: &Topology,
+    cfg: &NetConfig,
+    tx: &mut TxLane,
+    stats: &mut NetStats,
+    src: usize,
+    dst: usize,
+    on_wire: Time,
+) -> Flight {
+    let slot = src - tx.base;
+    let hops = topo.hops(src, dst);
+    let prop = cfg.propagation(hops.links, hops.switches);
+    // Tail injection (perturbation, default off): drawn from the sender's
+    // stream so the pattern is a pure function of (seed, src, send
+    // sequence). Draws nothing when disabled.
+    let (tn, td) = cfg.tail_prob;
+    let tail = if tn > 0 && tx.rng[slot].chance(tn, td) {
+        stats.tail_hits += 1;
+        Time::from_ns(cfg.tail_extra_ns)
+    } else {
+        Time::ZERO
+    };
+    // Lossy link (perturbation, default off): each lost attempt costs one
+    // retransmit timeout at the sender before the packet goes back on the
+    // wire. Capped at 64 consecutive losses (p <= loss^64) to bound
+    // pathological configurations.
+    let (ln, ld) = cfg.loss_prob;
+    let mut sent_at = on_wire;
+    if ln > 0 {
+        let mut attempts = 0;
+        while attempts < 64 && tx.rng[slot].chance(ln, ld) {
+            attempts += 1;
+            stats.retransmits += 1;
+            sent_at += Time::from_ns(cfg.rto_ns);
+        }
     }
+    let ctr = tx.ctr[slot];
+    tx.ctr[slot] += 1;
+    Flight {
+        at: sent_at + prop + tail,
+        src,
+        dst,
+        ctr,
+        // The packet reaches the spine roughly halfway along the path.
+        spine_at: sent_at + Time(prop.0 / 2),
+        cross_leaf: hops.switches >= 3,
+    }
+}
 
-    /// From "fully on the wire at src" to delivered at dst.
-    fn deliver_leg(&mut self, src: usize, dst: usize, payload_bytes: u64, on_wire: Time) -> Time {
-        let hops = self.topo.hops(src, dst);
-        let prop = self.cfg.propagation(hops.links, hops.switches);
-        let tail = self.tail_penalty();
-        let ser = self.cfg.serialization(payload_bytes);
-        // Lossy link (perturbation, default off): each lost attempt costs
-        // one retransmit timeout at the sender before the packet goes
-        // back on the wire. Drops draw from the fabric RNG only when the
-        // knob is on, so lossless streams stay bit-identical. Capped at
-        // 64 consecutive losses (p <= loss^64) to bound pathological
-        // configurations.
-        let (ln, ld) = self.cfg.loss_prob;
-        let mut sent_at = on_wire;
-        if ln > 0 {
-            let mut attempts = 0;
-            while attempts < 64 && self.rng.chance(ln, ld) {
-                attempts += 1;
-                self.stats.retransmits += 1;
-                sent_at += Time::from_ns(self.cfg.rto_ns);
-            }
-        }
-        let mut at = sent_at + prop + tail;
-        // Oversubscribed core (perturbation, default off): cross-leaf
-        // packets contend for a reduced set of spine busy-until
+fn admit_impl(
+    topo: &Topology,
+    cfg: &NetConfig,
+    rx: &mut RxLane,
+    stats: &mut NetStats,
+    flight: &Flight,
+    payload_bytes: u64,
+) -> Time {
+    let ser = cfg.serialization(payload_bytes);
+    let mut at = flight.at;
+    if rx.spines_per_leaf > 0 && flight.cross_leaf {
+        // Oversubscribed core (perturbation, default off): packets into
+        // this leaf contend for its reduced set of spine downlink
         // registers instead of the non-blocking full-bisection core.
-        if !self.spine_free.is_empty() && hops.switches >= 3 {
-            let s = ecmp_spine(src, dst, self.spine_free.len());
-            // The packet reaches the spine roughly halfway along the
-            // path; it occupies the spine for its serialization time.
-            let at_spine = sent_at + Time(prop.0 / 2);
-            let spine_start = at_spine.max(self.spine_free[s]);
-            self.spine_free[s] = spine_start + ser;
-            at += spine_start.saturating_sub(at_spine);
-        }
-        // Store-and-forward on the destination downlink: the message can
-        // only start occupying it once the link is free.
-        let start = at.max(self.ingress_free[dst]);
-        let arrival = start + ser;
-        self.ingress_free[dst] = arrival;
-        self.stats.msgs_delivered += 1;
-        self.stats.payload_bytes += payload_bytes;
-        self.stats.wire_bytes += payload_bytes + self.cfg.header_bytes;
-        arrival
+        let leaf = topo.leaf_of(flight.dst);
+        let s = ecmp_spine(flight.src, flight.dst, rx.spines_per_leaf);
+        let reg = (leaf - rx.leaf_base) * rx.spines_per_leaf + s;
+        let spine_start = flight.spine_at.max(rx.spine_free[reg]);
+        rx.spine_free[reg] = spine_start + ser;
+        at += spine_start.saturating_sub(flight.spine_at);
+    }
+    // Store-and-forward on the destination downlink: the message can only
+    // start occupying it once the link is free.
+    let slot = flight.dst - rx.base;
+    let start = at.max(rx.ingress_free[slot]);
+    let arrival = start + ser;
+    rx.ingress_free[slot] = arrival;
+    stats.msgs_delivered += 1;
+    stats.payload_bytes += payload_bytes;
+    stats.wire_bytes += payload_bytes + cfg.header_bytes;
+    arrival
+}
+
+fn tx_lane_for(seed: u64, range: std::ops::Range<usize>) -> TxLane {
+    let n = range.len();
+    let root = SplitMix64::new(seed ^ NET_SALT);
+    // Per-node streams derived from the run seed and the absolute node
+    // id, so a node's draw sequence is identical under any sharding.
+    TxLane {
+        base: range.start,
+        egress_free: vec![Time::ZERO; n],
+        rng: range.map(|node| root.derive(node as u64)).collect(),
+        ctr: vec![0; n],
+    }
+}
+
+fn rx_lane_for(topo: &Topology, cfg: &NetConfig, range: std::ops::Range<usize>) -> RxLane {
+    let n = range.len();
+    let spines_per_leaf = cfg.spines_per_leaf(topo.leaf_radix);
+    let leaf_base = topo.leaf_of(range.start);
+    let leaves = if n == 0 {
+        0
+    } else {
+        assert!(
+            spines_per_leaf == 0 || range.start % topo.leaf_radix == 0,
+            "oversubscribed rx lanes must start on a leaf boundary"
+        );
+        topo.leaf_of(range.end - 1) - leaf_base + 1
+    };
+    RxLane {
+        base: range.start,
+        ingress_free: vec![Time::ZERO; n],
+        leaf_base,
+        spines_per_leaf,
+        spine_free: vec![Time::ZERO; leaves * spines_per_leaf],
     }
 }
 
@@ -322,6 +606,18 @@ mod tests {
     }
 
     #[test]
+    fn min_latency_is_loopback_plus_header_serialization() {
+        let f = fabric(64);
+        let cfg = NetConfig::default();
+        assert_eq!(f.min_latency(), cfg.serialization(0) + cfg.propagation(0, 0));
+        assert!(f.min_latency() > Time::ZERO, "default config has positive lookahead");
+        // Degenerate config: no NIC overhead, no header -> zero lookahead
+        // (the parallel executor must fall back to sequential).
+        let zero = NetConfig { nic_overhead_ns: 0, header_bytes: 0, ..NetConfig::default() };
+        assert_eq!(Fabric::new(Topology::paper(4), zero, 1).min_latency(), Time::ZERO);
+    }
+
+    #[test]
     fn same_leaf_vs_cross_leaf() {
         let mut f = fabric(256);
         let t_same = f.unicast(0, 1, 16, Time::ZERO);
@@ -356,6 +652,77 @@ mod tests {
         let gap = t2.saturating_sub(t1).as_ns_f64();
         let ser = NetConfig::default().serialization(1000).as_ns_f64();
         assert!((gap - ser).abs() < 1.0, "gap {gap} vs ser {ser}");
+    }
+
+    /// The two-phase lane API and the classic immediate-admission path
+    /// are the same physics: identical arrivals for the same sequence.
+    #[test]
+    fn lane_api_matches_solo_path() {
+        let legs: &[(usize, usize, u64)] =
+            &[(0, 1, 16), (2, 1, 104), (0, 200, 64), (5, 1, 8), (200, 0, 16)];
+        let mut solo = fabric(256);
+        let solo_arrivals: Vec<Time> = legs
+            .iter()
+            .enumerate()
+            .map(|(i, &(s, d, b))| solo.unicast(s, d, b, Time::from_ns(i as u64)))
+            .collect();
+
+        let f = fabric(256);
+        let mut tx = f.tx_lane(0..256);
+        let mut rx = f.rx_lane(0..256);
+        let mut stats = NetStats::default();
+        let lane_arrivals: Vec<Time> = legs
+            .iter()
+            .enumerate()
+            .map(|(i, &(s, d, b))| {
+                let flight = f.send(&mut tx, &mut stats, s, d, b, Time::from_ns(i as u64));
+                f.admit(&mut rx, &mut stats, &flight, b)
+            })
+            .collect();
+        assert_eq!(solo_arrivals, lane_arrivals);
+        assert_eq!(stats.msgs_sent, legs.len() as u64);
+        assert_eq!(stats.msgs_delivered, legs.len() as u64);
+    }
+
+    /// Per-source RNG streams and send counters: one node's flight
+    /// schedule is unaffected by what other nodes send in between — the
+    /// property that makes sharded execution deterministic.
+    #[test]
+    fn flights_of_one_source_are_interleaving_independent() {
+        let cfg = NetConfig {
+            tail_prob: (1, 4),
+            tail_extra_ns: 1_000,
+            loss_prob: (1, 4),
+            rto_ns: 2_000,
+            ..NetConfig::default()
+        };
+        let run = |interleave: bool| -> Vec<Flight> {
+            let f = Fabric::new(Topology::paper(128), cfg.clone(), 9);
+            let mut tx = f.tx_lane(0..128);
+            let mut stats = NetStats::default();
+            let mut flights = Vec::new();
+            for i in 0..50u64 {
+                if interleave {
+                    // Noise from another source between every send.
+                    f.send(&mut tx, &mut stats, 7, 9, 64, Time::from_ns(i));
+                }
+                flights.push(f.send(&mut tx, &mut stats, 3, 5, 32, Time::from_ns(i)));
+            }
+            flights
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn flight_ctr_is_a_per_source_sequence() {
+        let f = fabric(64);
+        let mut tx = f.tx_lane(0..64);
+        let mut stats = NetStats::default();
+        let a = f.send(&mut tx, &mut stats, 1, 2, 8, Time::ZERO);
+        let b = f.send(&mut tx, &mut stats, 1, 3, 8, Time::ZERO);
+        let c = f.send(&mut tx, &mut stats, 2, 3, 8, Time::ZERO);
+        assert_eq!((a.ctr, b.ctr), (0, 1), "per-source counter increments");
+        assert_eq!(c.ctr, 0, "other sources have their own counter");
     }
 
     #[test]
@@ -398,17 +765,18 @@ mod tests {
     #[test]
     #[should_panic(expected = "multicast disabled")]
     fn multicast_panics_when_disabled() {
-        let mut cfg = NetConfig::default();
-        cfg.multicast = false;
+        let cfg = NetConfig { multicast: false, ..NetConfig::default() };
         let mut f = Fabric::new(Topology::paper(64), cfg, 1);
         f.multicast(0, &[1, 2], 16, Time::ZERO);
     }
 
     #[test]
     fn tail_injection_rate() {
-        let mut cfg = NetConfig::default();
-        cfg.tail_prob = (1, 100);
-        cfg.tail_extra_ns = 4000;
+        let cfg = NetConfig {
+            tail_prob: (1, 100),
+            tail_extra_ns: 4000,
+            ..NetConfig::default()
+        };
         let mut f = Fabric::new(Topology::paper(64), cfg, 7);
         for i in 0..20_000 {
             f.unicast(i % 64, (i + 1) % 64, 16, Time::from_ns(i as u64));
@@ -419,18 +787,18 @@ mod tests {
 
     /// Property sweep: for random message sequences, every arrival is
     /// strictly after its hand-off (positive latency — the calendar queue
-    /// in sim/engine.rs relies on this), and counters conserve.
+    /// in sim/exec relies on this), and counters conserve.
     #[test]
     fn property_arrivals_after_ready_and_counters_conserve() {
         use crate::sim::SplitMix64;
         let mut rng = SplitMix64::new(0xFAB);
         for trial in 0..20 {
             let nodes = 2 + rng.index(500);
-            let mut cfg = NetConfig::default();
-            if rng.chance(1, 2) {
-                cfg.tail_prob = (1, 20);
-                cfg.tail_extra_ns = 1000;
-            }
+            let cfg = if rng.chance(1, 2) {
+                NetConfig { tail_prob: (1, 20), tail_extra_ns: 1000, ..NetConfig::default() }
+            } else {
+                NetConfig::default()
+            };
             let mut f = Fabric::new(Topology::paper(nodes), cfg, trial);
             let msgs = 200;
             let mut now = Time::ZERO;
@@ -441,6 +809,8 @@ mod tests {
                 let bytes = 8 + rng.next_below(200);
                 let arrival = f.unicast(src, dst, bytes, now);
                 assert!(arrival > now, "arrival {arrival} !> ready {now}");
+                // The lookahead contract: no arrival before ready + min_latency.
+                assert!(arrival >= now + f.min_latency(), "lookahead violated");
             }
             let s = f.stats();
             assert_eq!(s.msgs_sent, msgs);
@@ -452,9 +822,11 @@ mod tests {
     #[test]
     fn loss_injects_retransmit_delay_deterministically() {
         let mk = || {
-            let mut cfg = NetConfig::default();
-            cfg.loss_prob = (2000, 10_000); // 20%
-            cfg.rto_ns = 5_000;
+            let cfg = NetConfig {
+                loss_prob: (2000, 10_000), // 20%
+                rto_ns: 5_000,
+                ..NetConfig::default()
+            };
             Fabric::new(Topology::paper(128), cfg, 9)
         };
         let run = |mut f: Fabric| -> (Vec<Time>, u64) {
@@ -484,30 +856,37 @@ mod tests {
     fn disabled_loss_draws_nothing_from_the_rng_stream() {
         // Two fabrics, same seed, both with tail injection on; one also
         // carries a loss config with numerator 0. If the loss gate drew
-        // from the RNG, the tail pattern (and arrivals) would diverge.
-        let mut tail_cfg = NetConfig::default();
-        tail_cfg.tail_prob = (1, 50);
-        tail_cfg.tail_extra_ns = 2_000;
-        let mut with_zero_loss = tail_cfg.clone();
-        with_zero_loss.loss_prob = (0, 10_000);
-        with_zero_loss.rto_ns = 99_999;
+        // from the per-node streams, the tail pattern (and arrivals)
+        // would diverge.
+        let tail_cfg = NetConfig {
+            tail_prob: (1, 50),
+            tail_extra_ns: 2_000,
+            ..NetConfig::default()
+        };
+        let with_zero_loss = NetConfig {
+            loss_prob: (0, 10_000),
+            rto_ns: 99_999,
+            ..tail_cfg.clone()
+        };
         let run = |cfg: NetConfig| -> Vec<Time> {
             let mut f = Fabric::new(Topology::paper(64), cfg, 5);
-            (0..500).map(|i| f.unicast(i % 64, (i + 3) % 64, 32, Time::from_ns(i as u64))).collect()
+            (0..500)
+                .map(|i| f.unicast(i % 64, (i + 3) % 64, 32, Time::from_ns(i as u64)))
+                .collect()
         };
         assert_eq!(run(tail_cfg), run(with_zero_loss));
     }
 
     #[test]
     fn oversubscription_queues_cross_leaf_traffic() {
-        // 64-fold oversubscription leaves a single spine register: many
-        // simultaneous cross-leaf messages serialize through it.
-        let mut cfg = NetConfig::default();
-        cfg.oversub = 64;
-        let mut over = Fabric::new(Topology::paper(256), cfg, 1);
+        // 64-fold oversubscription leaves one spine downlink per leaf:
+        // an incast burst into one leaf serializes through it.
+        let cfg = NetConfig { oversub: 64, ..NetConfig::default() };
+        let mut over = Fabric::new(Topology::paper(256), cfg.clone(), 1);
         let mut full = fabric(256);
-        let arrivals =
-            |f: &mut Fabric| (0..64).map(|i| f.unicast(i, 128 + i, 256, Time::ZERO)).collect::<Vec<Time>>();
+        let arrivals = |f: &mut Fabric| {
+            (0..64).map(|i| f.unicast(i, 128 + i, 256, Time::ZERO)).collect::<Vec<Time>>()
+        };
         let a_over = arrivals(&mut over);
         let a_full = arrivals(&mut full);
         assert!(a_over.iter().zip(&a_full).all(|(o, f)| o >= f));
@@ -516,8 +895,6 @@ mod tests {
             "spine contention must delay the tail of an incast burst"
         );
         // Same-leaf traffic never touches a spine.
-        let mut cfg = NetConfig::default();
-        cfg.oversub = 64;
         let mut over = Fabric::new(Topology::paper(256), cfg, 1);
         let mut full = fabric(256);
         assert_eq!(over.unicast(0, 1, 64, Time::ZERO), full.unicast(0, 1, 64, Time::ZERO));
@@ -527,11 +904,18 @@ mod tests {
     fn oversub_one_approximates_full_bisection_for_disjoint_flows() {
         // With the full spine count (oversub = 1) a single cross-leaf
         // message sees no added queueing.
-        let mut cfg = NetConfig::default();
-        cfg.oversub = 1;
+        let cfg = NetConfig { oversub: 1, ..NetConfig::default() };
         let mut f1 = Fabric::new(Topology::paper(256), cfg, 1);
         let mut f0 = fabric(256);
         assert_eq!(f1.unicast(0, 200, 64, Time::ZERO), f0.unicast(0, 200, 64, Time::ZERO));
+    }
+
+    #[test]
+    #[should_panic(expected = "leaf boundary")]
+    fn oversubscribed_rx_lane_must_be_leaf_aligned() {
+        let cfg = NetConfig { oversub: 64, ..NetConfig::default() };
+        let f = Fabric::new(Topology::paper(256), cfg, 1);
+        let _ = f.rx_lane(10..20);
     }
 
     #[test]
@@ -544,5 +928,15 @@ mod tests {
         assert_eq!(s.msgs_delivered, 2);
         assert_eq!(s.payload_bytes, 120);
         assert_eq!(s.wire_bytes, 120 + 48);
+    }
+
+    #[test]
+    fn netstats_merge_is_field_wise_sum() {
+        let mut a = NetStats { msgs_sent: 1, msgs_delivered: 2, ..NetStats::default() };
+        let b = NetStats { msgs_sent: 10, retransmits: 3, ..NetStats::default() };
+        a.merge(&b);
+        assert_eq!(a.msgs_sent, 11);
+        assert_eq!(a.msgs_delivered, 2);
+        assert_eq!(a.retransmits, 3);
     }
 }

@@ -1,9 +1,13 @@
 //! Network substrate: the paper's §5.1 two-layer full-bisection fabric
 //! ([`Topology`]), per-message latency/contention/multicast model
 //! ([`Fabric`], [`NetConfig`]), and traffic accounting ([`NetStats`]).
+//!
+//! The fabric is split into a sender phase ([`TxLane`] → [`Flight`]) and
+//! a destination phase ([`RxLane`]) so executor backends can shard
+//! endpoint state by node range without changing results (DESIGN.md §7).
 
 mod fabric;
 mod topology;
 
-pub use fabric::{Fabric, NetConfig, NetStats};
+pub use fabric::{Fabric, Flight, NetConfig, NetStats, RxLane, TxLane};
 pub use topology::{PathHops, Topology};

@@ -133,15 +133,26 @@ impl SweepOutcome {
     }
 }
 
+/// Resolve the shared `--threads` convention (`0` = all host cores) —
+/// one definition for the whole crate, re-exported here for the sweep
+/// and CLI call sites.
+pub use crate::sim::exec::resolve_threads;
+
 /// Run the cartesian product of `axes` over `spec`'s `tier` base
-/// configuration. The unperturbed baseline always runs first; every cell
-/// must validate.
+/// configuration. The unperturbed baseline always runs first in the
+/// output; every cell must validate.
+///
+/// `threads` > 1 dispatches independent grid cells across a worker pool
+/// (each cell is a pure function of `(workload, tier, assignment, seed)`,
+/// so cell-level parallelism cannot change any result — the cells
+/// themselves run on the sequential backend). `0` = all host cores.
 pub fn run_sweep(
     spec: &'static WorkloadSpec,
     tier: Tier,
     axes: &[Axis],
     compute: ComputeChoice,
     seed: u64,
+    threads: usize,
 ) -> Result<SweepOutcome> {
     // Validate axis names up front so a typo fails before any run.
     for (name, values) in axes {
@@ -162,19 +173,67 @@ pub fn run_sweep(
     let cells_total: usize = axes.iter().map(|(_, v)| v.len()).product();
     anyhow::ensure!(cells_total <= 4096, "sweep grid has {cells_total} cells (max 4096)");
 
-    let mut cells = Vec::with_capacity(cells_total + 1);
-    cells.push(run_cell(spec, tier, &[], compute, seed)?); // baseline
+    // The work list: baseline first, then grid cells in axis-major order.
+    let mut assignments: Vec<Vec<(String, String)>> = Vec::with_capacity(cells_total + 1);
+    assignments.push(Vec::new());
     for idx in Grid::new(axes) {
-        let assignment: Vec<(String, String)> = idx
-            .iter()
-            .enumerate()
-            .map(|(a, &i)| (axes[a].0.clone(), axes[a].1[i].clone()))
-            .collect();
-        cells.push(run_cell(spec, tier, &assignment, compute, seed)?);
+        assignments.push(
+            idx.iter()
+                .enumerate()
+                .map(|(a, &i)| (axes[a].0.clone(), axes[a].1[i].clone()))
+                .collect(),
+        );
     }
+
+    let workers = resolve_threads(threads).min(assignments.len()).max(1);
+    let cells: Vec<SweepCell> = if workers <= 1 {
+        let mut cells = Vec::with_capacity(assignments.len());
+        for a in &assignments {
+            cells.push(run_cell(spec, tier, a, compute, seed)?);
+        }
+        cells
+    } else {
+        run_cells_pooled(spec, tier, &assignments, compute, seed, workers)?
+    };
 
     let table = render_table(spec.name, tier, &cells);
     Ok(SweepOutcome { workload: spec.name, tier, seed, cells, table })
+}
+
+/// Dispatch cells across `workers` threads via an atomic work queue;
+/// results land in their slot, so the output order (and every digest) is
+/// identical to the serial path. The first error (in cell order) wins.
+fn run_cells_pooled(
+    spec: &'static WorkloadSpec,
+    tier: Tier,
+    assignments: &[Vec<(String, String)>],
+    compute: ComputeChoice,
+    seed: u64,
+    workers: usize,
+) -> Result<Vec<SweepCell>> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    type CellSlot = Mutex<Option<Result<SweepCell>>>;
+    let next = AtomicUsize::new(0);
+    let slots: Vec<CellSlot> = assignments.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= assignments.len() {
+                    return;
+                }
+                let cell = run_cell(spec, tier, &assignments[i], compute, seed);
+                *slots[i].lock().expect("cell slot") = Some(cell);
+            });
+        }
+    });
+    let mut cells = Vec::with_capacity(assignments.len());
+    for slot in slots {
+        cells.push(slot.into_inner().expect("cell slot").expect("cell completed")?);
+    }
+    Ok(cells)
 }
 
 /// Run one cell: tier base params + axis overrides, one `Scenario`.
@@ -323,7 +382,7 @@ pub fn skew_sweep_figure(opts: &RunOptions) -> Result<Table> {
         "skew".to_string(),
         KeyDistribution::ALL.iter().map(|d| d.name().to_string()).collect(),
     )];
-    let mut out = run_sweep(spec, tier, &axes, opts.compute, opts.seed)?;
+    let mut out = run_sweep(spec, tier, &axes, opts.compute, opts.seed, 1)?;
     out.table.note(
         "skew study: zipfian/few-distinct/adversarial inputs vs the paper's uniform assumption",
     );
@@ -339,7 +398,7 @@ pub fn tail_sweep_figure(opts: &RunOptions) -> Result<Table> {
         "tail".to_string(),
         ["0", "500", "1000", "2000", "4000"].iter().map(|s| s.to_string()).collect(),
     )];
-    let mut out = run_sweep(spec, tier, &axes, opts.compute, opts.seed)?;
+    let mut out = run_sweep(spec, tier, &axes, opts.compute, opts.seed, 1)?;
     out.table.note("Fig 14-style: paper sees 2x runtime at 4,000 ns injected p99");
     Ok(out.table)
 }
@@ -379,7 +438,7 @@ mod tests {
     fn unknown_axis_is_an_error() {
         let spec = registry::find("nanosort").unwrap();
         let axes = vec![("warp".to_string(), vec!["9".to_string()])];
-        let err = run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, 1)
+        let err = run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, 1, 1)
             .unwrap_err()
             .to_string();
         assert!(err.contains("unknown sweep axis"), "{err}");
@@ -391,7 +450,7 @@ mod tests {
         let spec = registry::find("mergemin").unwrap();
         let axes = vec![("incast".to_string(), vec!["2".to_string(), "8".to_string()])];
         let out =
-            run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, CONFORMANCE_SEED)
+            run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, CONFORMANCE_SEED, 1)
                 .unwrap();
         assert_eq!(out.cells.len(), 3, "baseline + 2 cells");
         assert_eq!(out.cells[0].label(), "baseline");
@@ -411,7 +470,7 @@ mod tests {
         let axes =
             vec![("skew".to_string(), vec!["uniform".to_string(), "zipfian".to_string()])];
         let run = || {
-            run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, CONFORMANCE_SEED)
+            run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, CONFORMANCE_SEED, 1)
                 .unwrap()
         };
         let a = run();
@@ -433,12 +492,42 @@ mod tests {
         assert!(a.json_lines()[2].contains("\"skew\": \"zipfian\""));
     }
 
+    /// Cell-level parallelism is a pure scheduling choice: the pooled
+    /// sweep must reproduce the serial sweep's JSON lines byte for byte
+    /// (cells land in their slots regardless of completion order).
+    #[test]
+    fn pooled_sweep_matches_serial_byte_for_byte() {
+        let spec = registry::find("mergemin").unwrap();
+        let axes = vec![
+            ("incast".to_string(), vec!["2".into(), "4".into(), "8".into()]),
+            ("vpc".to_string(), vec!["8".into(), "16".into()]),
+        ];
+        let run = |threads| {
+            run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, CONFORMANCE_SEED, threads)
+                .unwrap()
+        };
+        let serial = run(1);
+        let pooled = run(4);
+        assert_eq!(serial.cells.len(), 7, "baseline + 3x2 grid");
+        assert_eq!(serial.json_lines(), pooled.json_lines());
+        assert_eq!(serial.table.render(), pooled.table.render());
+        // `0` = all host cores, same contract.
+        assert_eq!(run(0).json_lines(), serial.json_lines());
+    }
+
+    #[test]
+    fn resolve_threads_contract() {
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(7), 7);
+        assert!(resolve_threads(0) >= 1, "0 resolves to the host core count");
+    }
+
     #[test]
     fn loss_axis_reports_retransmits_and_slows_the_run() {
         let spec = registry::find("nanosort").unwrap();
         let axes = vec![("loss".to_string(), vec!["2000".to_string()])];
         let out =
-            run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, CONFORMANCE_SEED)
+            run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, CONFORMANCE_SEED, 1)
                 .unwrap();
         let base = &out.cells[0];
         let lossy = &out.cells[1];

@@ -10,9 +10,9 @@
 //!   program construction, multicast-group registration, and result
 //!   extraction/validation (all inside [`Workload::build`]).
 //! - [`Scenario`] — the builder that owns every *environment* knob
-//!   (fleet size, [`NetConfig`], [`CoreModel`], data plane, seed) and the
-//!   single engine/fabric wiring path shared by the CLI, the figures, the
-//!   benches, and the examples.
+//!   (fleet size, [`NetConfig`], [`CoreModel`], data plane, seed, worker
+//!   threads) and the single engine/fabric wiring path shared by the
+//!   CLI, the figures, the benches, and the examples.
 //! - [`RunReport`] — the unified outcome: makespan, per-stage busy/idle
 //!   breakdown, net stats, validation, and workload-specific metrics.
 //! - [`registry`] — the static name → [`WorkloadSpec`] table (typed
@@ -36,12 +36,17 @@
 //! `repro sweep` (see [`crate::perturb::sweep`]). New *workloads* are
 //! added as single self-contained [`Workload`] impls plus one
 //! [`registry`] entry — no CLI, figure, or engine changes.
+//!
+//! Execution backend: [`Scenario::threads`] picks how many host worker
+//! threads simulate the fleet (`1` = the sequential reference backend,
+//! `0` = all available cores). Results are byte-identical at every
+//! thread count — see [`crate::sim::exec`] for the determinism contract.
 
 pub mod registry;
 
 pub use registry::{ParamKind, ParamSpec, WorkloadSpec};
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -67,13 +72,16 @@ pub struct ScenarioEnv {
     /// Endpoint core cost model.
     pub core: CoreModel,
     /// Node-local data plane.
-    pub compute: Rc<dyn LocalCompute>,
+    pub compute: Arc<dyn LocalCompute>,
     /// Master seed (input generation, fabric jitter, per-node RNG streams).
     pub seed: u64,
     /// Scenario-level perturbations: input [`KeyDistribution`] (read by
     /// every workload's input path) and straggler cores (applied to the
     /// engine). Defaults are the unperturbed paper assumptions.
     pub perturb: Perturbations,
+    /// Host worker threads simulating the fleet (`1` = sequential
+    /// backend, `0` = all available cores). Never changes results.
+    pub threads: usize,
 }
 
 /// Result-extraction hook: runs after quiescence with the engine summary.
@@ -95,11 +103,12 @@ pub struct Built<P: Program> {
 ///
 /// Implementations own the *what* (input generation, node programs,
 /// validation); the [`Scenario`] owns the *where* (fleet size, network,
-/// core model, data plane, seed). `run_xxx(cfg, compute)` shims remain as
-/// deprecated entry points that route through this trait.
+/// core model, data plane, seed, executor threads).
 pub trait Workload {
-    /// The node program type this workload runs.
-    type Prog: Program;
+    /// The node program type this workload runs. `Send` so the fleet can
+    /// shard across the parallel backend's worker threads (messages are
+    /// `Send` by the [`crate::nanopu::WireMsg`] bound).
+    type Prog: Program + Send;
 
     /// Registry/report name (e.g. `"nanosort"`).
     fn name(&self) -> &'static str;
@@ -153,7 +162,7 @@ impl<W: Workload> DynWorkload for W {
                 engine.slow_down(node, st.factor);
             }
         }
-        let summary = engine.run();
+        let summary = engine.run_threads(env.threads);
         Ok((built.finish)(env, summary))
     }
 }
@@ -161,7 +170,7 @@ impl<W: Workload> DynWorkload for W {
 /// Which data plane a scenario runs on.
 enum ComputeSel {
     Choice(ComputeChoice),
-    Instance(Rc<dyn LocalCompute>),
+    Instance(Arc<dyn LocalCompute>),
 }
 
 /// Builder for one simulated run:
@@ -193,6 +202,7 @@ pub struct Scenario {
     compute: ComputeSel,
     seed: u64,
     perturb: Perturbations,
+    threads: usize,
 }
 
 impl Scenario {
@@ -210,6 +220,7 @@ impl Scenario {
             compute: ComputeSel::Choice(ComputeChoice::Native),
             seed: 1,
             perturb: Perturbations::default(),
+            threads: 1,
         }
     }
 
@@ -236,13 +247,22 @@ impl Scenario {
     }
 
     /// Use an already-constructed data plane (shared across runs).
-    pub fn compute_with(mut self, plane: Rc<dyn LocalCompute>) -> Self {
+    pub fn compute_with(mut self, plane: Arc<dyn LocalCompute>) -> Self {
         self.compute = ComputeSel::Instance(plane);
         self
     }
 
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Host worker threads simulating the fleet: `1` (default) runs the
+    /// sequential reference backend, `0` uses every available core, any
+    /// other value shards the fleet across that many threads. Results
+    /// are byte-identical at every setting ([`crate::sim::exec`]).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
         self
     }
 
@@ -272,6 +292,14 @@ impl Scenario {
             ComputeSel::Choice(choice) => choice.build()?,
             ComputeSel::Instance(plane) => plane,
         };
+        // The XLA data plane drives a single-threaded PJRT client; the
+        // sharded executor would call it from several worker threads.
+        anyhow::ensure!(
+            self.threads == 1 || compute.name() != "xla",
+            "the XLA data plane is single-threaded; run it with --threads 1 \
+             (the executor backends are byte-identical, so native --threads N \
+             and xla --threads 1 still cross-check)"
+        );
         let env = ScenarioEnv {
             nodes,
             net: self.net,
@@ -279,6 +307,7 @@ impl Scenario {
             compute,
             seed: self.seed,
             perturb: self.perturb,
+            threads: self.threads,
         };
         self.workload.run_on(&env)
     }

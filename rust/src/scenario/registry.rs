@@ -353,7 +353,7 @@ pub fn cli_help() -> String {
                 ParamKind::Flag => line += &format!(" [--{}]", p.name),
             }
         }
-        line += " [--skew D] [--no-multicast] [--xla] [--seed N]";
+        line += " [--skew D] [--no-multicast] [--xla] [--seed N] [--threads N]";
         out += &line;
         out.push('\n');
     }
@@ -386,6 +386,8 @@ pub fn describe(spec: &WorkloadSpec) -> String {
     out += "  --no-multicast         degrade group sends to unicast loops (§6.2.3)\n";
     out += "  --xla                  run node-local compute on the XLA data plane\n";
     out += "  --seed <N>             master seed (default 1)\n";
+    out += "  --threads <N>          executor worker threads (1 = sequential, 0 = all \
+            cores; identical results)\n";
     out
 }
 
@@ -482,6 +484,7 @@ mod tests {
         }
         assert!(h.contains("[--values]"), "flags render without N");
         assert!(h.contains("[--skew D]"), "perturbation knob surfaced");
+        assert!(h.contains("[--threads N]"), "executor knob surfaced");
         assert!(h.contains("--help"), "points at the descriptor listing");
     }
 
@@ -505,5 +508,6 @@ mod tests {
             assert!(d.contains(&format!("--{name}")), "env knob --{name}");
         }
         assert!(d.contains("--no-multicast") && d.contains("--xla") && d.contains("--seed"));
+        assert!(d.contains("--threads"), "executor knob in the descriptor listing");
     }
 }

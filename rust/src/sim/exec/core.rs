@@ -1,0 +1,913 @@
+//! The engine core shared by every executor backend: per-node hot/cold
+//! state, the calendar event queue, the reorder buffer, stats arenas, and
+//! the deliver/invoke machinery — everything below the scheduling policy.
+//!
+//! A [`Shard`] owns a contiguous node range plus that range's fabric
+//! endpoint state ([`TxLane`]/[`RxLane`]). The sequential backend runs one
+//! shard covering every node; the parallel backend runs one shard per
+//! worker thread. All cross-shard traffic travels as [`Transit`] values
+//! and every queue orders by the canonical key `(at, src, ctr)`, so the
+//! per-shard state machines are **identical under any sharding** — that
+//! is the determinism contract (DESIGN.md §7) the executor equivalence
+//! tests pin.
+
+use std::collections::BTreeMap;
+
+use crate::cpu::CoreModel;
+use crate::nanopu::{Ctx, Group, NodeId, Program, SendOp, WireMsg};
+use crate::net::{Fabric, Flight, NetStats, RxLane, TxLane};
+
+use super::super::rng::SplitMix64;
+use super::super::time::Time;
+
+/// Cycles to store one out-of-order message into the reorder buffer.
+const REORDER_STORE_CYCLES: u64 = 4;
+/// Cycles to pop one message out of the reorder buffer.
+const REORDER_POP_CYCLES: u64 = 6;
+/// Maximum number of stages tracked per node (Fig 16 breakdown).
+pub const MAX_STAGES: usize = 16;
+
+/// One in-flight message: the sender-side [`Flight`] plus the payload.
+/// `phantom` marks a multicast self-leg — it occupies the ingress link
+/// and counts as a delivery (the switch really replicates the packet
+/// back down) but never reaches the handler.
+pub(crate) struct Transit<M> {
+    pub flight: Flight,
+    pub phantom: bool,
+    pub msg: M,
+}
+
+/// Heap entry: the canonical ordering key `(at, src, ctr)` plus the slab
+/// slot of the payload. The payload lives in [`EventSlab`] so the
+/// calendar queue sifts small, cache-friendly elements — this is the
+/// simulator's top hot path (§Perf: `BinaryHeap::pop` was 64% of the
+/// headline run before this split).
+#[derive(PartialEq, Eq, Clone, Copy)]
+struct Event {
+    at: Time,
+    src: u32,
+    ctr: u64,
+    slot: u32,
+}
+
+impl Event {
+    fn key(&self) -> (Time, u32, u64) {
+        (self.at, self.src, self.ctr)
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key().cmp(&other.key())
+    }
+}
+
+/// Calendar queue: a ring of per-4ns-window mini-heaps plus a sharded far
+/// tier for events beyond the lookahead window.
+///
+/// §Perf: a single `BinaryHeap` over ~1M in-flight events spent >60% of
+/// the headline run in `pop` (20 sift levels of cache misses). Event
+/// *lookahead* (arrival − now) is bounded by propagation + endpoint-link
+/// queueing (µs-scale), so bucketing by coarse time keeps every touched
+/// mini-heap tiny and cache-resident; the cursor only moves forward.
+///
+/// §Scale: events beyond the ring window live in a far tier *sharded* by
+/// aligned window index (`bucket >> ring_bits`): pushes append to their
+/// shard in O(1), and when the cursor crosses a window boundary the next
+/// shard is re-homed wholesale into the ring. Ordering is exact: shards
+/// and buckets partition time, and each mini-heap orders by the canonical
+/// `(at, src, ctr)` key — identical results to one global heap (tested).
+///
+/// §Exec: [`CalendarQueue::pop_before`] bounds how far the cursor may
+/// advance, so the parallel executor can drain exactly one conservative
+/// time window and still accept later cross-shard pushes behind the next
+/// window boundary. [`CalendarQueue::peek_at`] reports the earliest event
+/// time without moving the cursor (cached; invalidated by pops).
+struct Bucket {
+    /// Events of this bucket. When `sorted`, descending by the canonical
+    /// key so the next event pops from the back in O(1).
+    events: Vec<Event>,
+    sorted: bool,
+}
+
+struct CalendarQueue {
+    ring: Vec<Bucket>,
+    /// log2 of time-units per bucket (6 => 64 units = 4 ns).
+    g_shift: u32,
+    /// Ring size mask (ring.len() - 1).
+    mask: u64,
+    /// log2 of the ring length — the aligned far-shard width.
+    ring_bits: u32,
+    /// Absolute bucket index the cursor is on.
+    cur: u64,
+    /// Far tier: aligned window index (bucket >> ring_bits) → its events,
+    /// in push order. Re-homed in bulk when the cursor enters the window.
+    far: BTreeMap<u64, Vec<Event>>,
+    /// Events currently resident in the ring (vs the far tier).
+    ring_count: usize,
+    len: usize,
+    /// Cached earliest event time (None = unknown, recompute on demand).
+    peek_cache: Option<Time>,
+}
+
+impl CalendarQueue {
+    /// 2^16 buckets x 4 ns = 262 µs of lookahead window.
+    fn new() -> Self {
+        let ring_bits = 16u32;
+        let buckets = 1usize << ring_bits;
+        CalendarQueue {
+            ring: (0..buckets).map(|_| Bucket { events: Vec::new(), sorted: true }).collect(),
+            g_shift: 6,
+            mask: (buckets - 1) as u64,
+            ring_bits,
+            cur: 0,
+            far: BTreeMap::new(),
+            ring_count: 0,
+            len: 0,
+            peek_cache: None,
+        }
+    }
+
+    fn bucket_of(&self, at: Time) -> u64 {
+        at.0 >> self.g_shift
+    }
+
+    fn push(&mut self, ev: Event) {
+        let b = self.bucket_of(ev.at);
+        debug_assert!(b >= self.cur, "event scheduled in the past");
+        self.len += 1;
+        if let Some(cache) = self.peek_cache {
+            self.peek_cache = Some(cache.min(ev.at));
+        }
+        if b >= self.cur + self.ring.len() as u64 {
+            self.far.entry(b >> self.ring_bits).or_default().push(ev);
+        } else {
+            let bucket = &mut self.ring[(b & self.mask) as usize];
+            bucket.events.push(ev);
+            bucket.sorted = false;
+            self.ring_count += 1;
+        }
+    }
+
+    /// Move one far shard's events into the ring. Only called once the
+    /// cursor has entered (or is jumping to) that aligned window, at which
+    /// point every shard event's bucket lies within the ring's lookahead.
+    fn rehome(&mut self, window: u64) {
+        let Some(events) = self.far.remove(&window) else { return };
+        for ev in events {
+            let b = self.bucket_of(ev.at);
+            debug_assert!(b >= self.cur && b < self.cur + self.ring.len() as u64);
+            let bucket = &mut self.ring[(b & self.mask) as usize];
+            bucket.events.push(ev);
+            bucket.sorted = false;
+            self.ring_count += 1;
+        }
+    }
+
+    /// Earliest event time in the queue, without advancing the cursor
+    /// (safe to call even when later out-of-window pushes are still
+    /// expected). O(1) when the cache is warm; otherwise a forward scan
+    /// from the cursor, amortized by the cursor's own monotone walk.
+    ///
+    /// The earliest *far* shard must be consulted too: once the cursor
+    /// has advanced into the aligned window *before* that shard, the
+    /// ring's bucket range overlaps the shard's — a ring bucket can hold
+    /// a later event than an un-rehomed far one, and reporting the ring
+    /// minimum alone would inflate the parallel executor's window bound
+    /// and break the conservative-window closure. (Re-homing is still
+    /// deferred to the cursor crossing: a shard's *late* events may not
+    /// fit the ring yet.)
+    fn peek_at(&mut self) -> Option<Time> {
+        if self.len == 0 {
+            return None;
+        }
+        if let Some(t) = self.peek_cache {
+            return Some(t);
+        }
+        let ring_min = if self.ring_count == 0 {
+            None
+        } else {
+            let mut i = self.cur;
+            loop {
+                let b = &self.ring[(i & self.mask) as usize];
+                if !b.events.is_empty() {
+                    break Some(
+                        b.events.iter().map(|e| e.at).min().expect("non-empty bucket"),
+                    );
+                }
+                i += 1;
+            }
+        };
+        // Later far shards have strictly larger buckets than the first,
+        // so only the first shard can compete; skip its O(len) scan when
+        // its window starts after the ring minimum's bucket.
+        let far_min = self.far.iter().next().and_then(|(&window, events)| {
+            let wstart = window << self.ring_bits;
+            if ring_min.is_some_and(|t| wstart > self.bucket_of(t)) {
+                None
+            } else {
+                events.iter().map(|e| e.at).min()
+            }
+        });
+        let t = match (ring_min, far_min) {
+            (Some(r), Some(f)) => r.min(f),
+            (Some(r), None) => r,
+            (None, Some(f)) => f,
+            (None, None) => unreachable!("len > 0 but no events"),
+        };
+        self.peek_cache = Some(t);
+        Some(t)
+    }
+
+    /// Pop the next event in canonical order, but only if its time is
+    /// `< bound`; the cursor never advances past `bound`'s bucket, so
+    /// events `>= bound` (the only kind a conservative window can still
+    /// produce) remain pushable. `Time(u64::MAX)` = unbounded (the
+    /// sequential backend's drain-to-quiescence).
+    fn pop_before(&mut self, bound: Time) -> Option<Event> {
+        if self.len == 0 || bound == Time::ZERO {
+            return None;
+        }
+        // Last bucket that can hold an event strictly before `bound`.
+        let limit = (bound.0 - 1) >> self.g_shift;
+        loop {
+            if self.ring_count == 0 {
+                if self.far.is_empty() {
+                    return None;
+                }
+                // Everything left lives in the far tier: fast-forward the
+                // cursor to the first populated shard and re-home it
+                // wholesale — unless that shard lies beyond the bound.
+                let (&window, _) = self.far.iter().next().expect("checked non-empty");
+                let wstart = window << self.ring_bits;
+                if wstart > limit {
+                    return None;
+                }
+                self.cur = self.cur.max(wstart);
+                self.rehome(window);
+                continue;
+            }
+            if self.cur > limit {
+                return None;
+            }
+            let bucket = &mut self.ring[(self.cur & self.mask) as usize];
+            if !bucket.events.is_empty() {
+                if !bucket.sorted {
+                    // Sort once per drain; a mid-drain insert re-sorts the
+                    // (small) remainder. Descending so pops come off the
+                    // back. Safe: inserts-while-draining always carry
+                    // `at` >= the last popped time (positive latency).
+                    bucket.events.sort_unstable_by(|a, b| b.key().cmp(&a.key()));
+                    bucket.sorted = true;
+                }
+                let next = bucket.events.last().expect("non-empty bucket");
+                if next.at >= bound {
+                    // Mid-bucket bound: the rest of this bucket belongs to
+                    // a later window. Leave the cursor here.
+                    return None;
+                }
+                self.len -= 1;
+                self.ring_count -= 1;
+                self.peek_cache = None;
+                return bucket.events.pop();
+            }
+            self.cur += 1;
+            if self.cur & self.mask == 0 {
+                // Entered a new aligned window: its far shard (if any) can
+                // now land in the ring before the cursor reaches it.
+                self.rehome(self.cur >> self.ring_bits);
+            }
+        }
+    }
+}
+
+/// Free-listed payload storage for in-flight transits (u32 slots keep the
+/// heap entry compact; in-flight counts are <= 2^32 by construction).
+struct EventSlab<M> {
+    payloads: Vec<Option<Transit<M>>>,
+    free: Vec<u32>,
+}
+
+impl<M> EventSlab<M> {
+    fn new() -> Self {
+        EventSlab { payloads: Vec::new(), free: Vec::new() }
+    }
+
+    fn insert(&mut self, t: Transit<M>) -> u32 {
+        if let Some(slot) = self.free.pop() {
+            self.payloads[slot as usize] = Some(t);
+            slot
+        } else {
+            self.payloads.push(Some(t));
+            (self.payloads.len() - 1) as u32
+        }
+    }
+
+    fn remove(&mut self, slot: u32) -> Transit<M> {
+        let t = self.payloads[slot as usize].take().expect("slot occupied");
+        self.free.push(slot);
+        t
+    }
+}
+
+/// Calendar queue + payload slab, keyed by the canonical `(at, src, ctr)`
+/// order. One per shard.
+pub(crate) struct EventQueue<M> {
+    cal: CalendarQueue,
+    slab: EventSlab<M>,
+}
+
+impl<M> EventQueue<M> {
+    pub fn new() -> Self {
+        EventQueue { cal: CalendarQueue::new(), slab: EventSlab::new() }
+    }
+
+    pub fn push(&mut self, t: Transit<M>) {
+        let ev = Event {
+            at: t.flight.at,
+            src: t.flight.src as u32,
+            ctr: t.flight.ctr,
+            slot: 0,
+        };
+        let slot = self.slab.insert(t);
+        self.cal.push(Event { slot, ..ev });
+    }
+
+    pub fn peek_at(&mut self) -> Option<Time> {
+        self.cal.peek_at()
+    }
+
+    pub fn pop_before(&mut self, bound: Time) -> Option<Transit<M>> {
+        self.cal.pop_before(bound).map(|ev| self.slab.remove(ev.slot))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cal.len == 0
+    }
+}
+
+/// Per-node accounting (drives Figs 15b and 16).
+#[derive(Debug, Clone)]
+pub struct NodeStats {
+    /// Busy time attributed to each stage.
+    pub busy: [Time; MAX_STAGES],
+    /// Idle (waiting-for-message) time attributed to each stage.
+    pub idle: [Time; MAX_STAGES],
+    /// Messages processed.
+    pub msgs_in: u64,
+    /// Messages sent.
+    pub msgs_out: u64,
+    /// Last time this node did any work.
+    pub last_active: Time,
+    /// Stage at which the node declared itself finished.
+    pub finished: bool,
+}
+
+impl Default for NodeStats {
+    fn default() -> Self {
+        NodeStats {
+            busy: [Time::ZERO; MAX_STAGES],
+            idle: [Time::ZERO; MAX_STAGES],
+            msgs_in: 0,
+            msgs_out: 0,
+            last_active: Time::ZERO,
+            finished: false,
+        }
+    }
+}
+
+impl NodeStats {
+    pub fn total_busy(&self) -> Time {
+        Time(self.busy.iter().map(|t| t.0).sum())
+    }
+    pub fn total_idle(&self) -> Time {
+        Time(self.idle.iter().map(|t| t.0).sum())
+    }
+}
+
+/// Hot per-node scheduling state: everything the deliver/invoke path
+/// mutates on every event, packed into a flat 16 B/node arena so the top
+/// of the event loop touches one cache line per node instead of the full
+/// program + stats struct (§Scale).
+#[derive(Clone, Copy)]
+struct HotNode {
+    busy_until: Time,
+    stage: u8,
+    finished: bool,
+}
+
+/// Cold per-node state: the program itself, its RNG stream, and the
+/// reorder buffer (touched only on delivery to *this* node).
+struct NodeSlot<P: Program> {
+    prog: P,
+    rng: SplitMix64,
+    /// Reorder buffer: (step, src, msg), kept in arrival order.
+    held: Vec<(u32, NodeId, P::Msg)>,
+}
+
+/// Outcome of a completed run.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    /// Latest busy-until across all nodes (the job completion time).
+    pub makespan: Time,
+    /// Per-node accounting.
+    pub node_stats: Vec<NodeStats>,
+    /// Fabric counters.
+    pub net: NetStats,
+    /// Total events processed (engine-level, for perf work).
+    pub events: u64,
+}
+
+impl RunSummary {
+    /// Mean busy fraction across nodes (busy / makespan).
+    pub fn mean_utilization(&self) -> f64 {
+        if self.makespan == Time::ZERO || self.node_stats.is_empty() {
+            return 0.0;
+        }
+        let total: f64 = self.node_stats.iter().map(|s| s.total_busy().0 as f64).sum();
+        total / (self.makespan.0 as f64 * self.node_stats.len() as f64)
+    }
+}
+
+/// Run-wide state shared read-only across shards.
+pub(crate) struct SharedCtx<'a> {
+    pub fabric: &'a Fabric,
+    pub core: &'a CoreModel,
+    pub groups: &'a [Group],
+}
+
+/// One executor shard: a contiguous node range with its programs, hot and
+/// stats arenas, event queue, and fabric endpoint lanes. Shards never
+/// touch each other's state; they communicate only through [`Transit`]s
+/// handed to the `emit` hook (and even that hook is unreachable in the
+/// single-shard sequential configuration).
+pub(crate) struct Shard<P: Program> {
+    pub range: std::ops::Range<usize>,
+    nodes: Vec<NodeSlot<P>>,
+    /// Per-node compute slowdown factor (1 = nominal; straggler
+    /// perturbation layer), applied to every cycle-to-time conversion.
+    slow: Vec<u32>,
+    /// Flat hot-state arena, indexed by node - range.start (§Scale).
+    hot: Vec<HotNode>,
+    /// Flat stats arena; handed to [`RunSummary`] without a copy.
+    pub stats: Vec<NodeStats>,
+    queue: EventQueue<P::Msg>,
+    tx: TxLane,
+    rx: RxLane,
+    pub net: NetStats,
+    pub events: u64,
+    /// Scratch buffer for handler-emitted ops (reused across invokes —
+    /// §Perf: one Vec alloc/free per delivered message otherwise).
+    ops_scratch: Vec<(u64, SendOp<P::Msg>)>,
+}
+
+impl<P: Program> Shard<P> {
+    /// Build one shard over `programs` for the absolute node range
+    /// `range` (`programs[i]` runs node `range.start + i`).
+    pub fn new(
+        range: std::ops::Range<usize>,
+        programs: Vec<P>,
+        slow: Vec<u32>,
+        fabric: &Fabric,
+        seed: u64,
+    ) -> Self {
+        assert_eq!(programs.len(), range.len());
+        assert_eq!(slow.len(), range.len());
+        let root = SplitMix64::new(seed);
+        let base = range.start;
+        let nodes = programs
+            .into_iter()
+            .enumerate()
+            .map(|(i, prog)| NodeSlot {
+                prog,
+                // Streams derive from the absolute node id, so they are
+                // identical under any sharding.
+                rng: root.derive((base + i) as u64),
+                held: Vec::new(),
+            })
+            .collect();
+        Shard {
+            nodes,
+            slow,
+            hot: vec![
+                HotNode { busy_until: Time::ZERO, stage: 0, finished: false };
+                range.len()
+            ],
+            stats: vec![NodeStats::default(); range.len()],
+            queue: EventQueue::new(),
+            tx: fabric.tx_lane(range.clone()),
+            rx: fabric.rx_lane(range.clone()),
+            net: NetStats::default(),
+            events: 0,
+            ops_scratch: Vec::new(),
+            range,
+        }
+    }
+
+    fn ix(&self, id: NodeId) -> usize {
+        debug_assert!(self.range.contains(&id));
+        id - self.range.start
+    }
+
+    fn owns(&self, id: usize) -> bool {
+        self.range.contains(&id)
+    }
+
+    /// Accept a transit produced by another shard.
+    pub fn push(&mut self, t: Transit<P::Msg>) {
+        debug_assert!(self.owns(t.flight.dst));
+        self.queue.push(t);
+    }
+
+    /// Earliest pending event time (for the window-bound computation).
+    pub fn peek_at(&mut self) -> Option<Time> {
+        self.queue.peek_at()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Fire every node's `on_start` at t=0, in node-id order (the cluster
+    /// is pre-loaded and triggered together, like the paper's benchmark
+    /// start).
+    pub fn start(&mut self, sx: &SharedCtx<'_>, emit: &mut impl FnMut(Transit<P::Msg>)) {
+        for id in self.range.clone() {
+            self.invoke(sx, id, Time::ZERO, None, emit);
+            self.drain_reorder(sx, id, emit);
+        }
+    }
+
+    /// Pop and process every queued transit with `at < bound`, in
+    /// canonical order. `Time(u64::MAX)` = run to quiescence.
+    pub fn run_window(
+        &mut self,
+        sx: &SharedCtx<'_>,
+        bound: Time,
+        emit: &mut impl FnMut(Transit<P::Msg>),
+    ) {
+        while let Some(t) = self.queue.pop_before(bound) {
+            self.events += 1;
+            // Destination-side fabric phase: spine + ingress queueing, in
+            // canonical order per destination.
+            let arrival =
+                sx.fabric.admit(&mut self.rx, &mut self.net, &t.flight, t.msg.wire_bytes());
+            if t.phantom {
+                continue; // multicast self-leg: delivered, never invoked
+            }
+            self.deliver(sx, arrival, t.flight.src, t.flight.dst, t.msg, emit);
+        }
+    }
+
+    fn deliver(
+        &mut self,
+        sx: &SharedCtx<'_>,
+        at: Time,
+        src: NodeId,
+        dst: NodeId,
+        msg: P::Msg,
+        emit: &mut impl FnMut(Transit<P::Msg>),
+    ) {
+        let i = self.ix(dst);
+        let step = msg.step();
+        if step > self.nodes[i].prog.step() {
+            // Future-step message: RX + store into the reorder buffer.
+            let sf = self.slow[i] as u64;
+            let hot = &mut self.hot[i];
+            let st = &mut self.stats[i];
+            let start = at.max(hot.busy_until);
+            let idle = start.saturating_sub(hot.busy_until);
+            let stage = hot.stage as usize;
+            st.idle[stage] += idle;
+            let cost = Time::from_cycles(
+                (sx.core.rx_cycles(msg.wire_bytes()) + REORDER_STORE_CYCLES) * sf,
+            );
+            hot.busy_until = start + cost;
+            st.busy[stage] += cost;
+            st.last_active = hot.busy_until;
+            st.msgs_in += 1;
+            self.nodes[i].held.push((step, src, msg));
+            return;
+        }
+        self.invoke(sx, dst, at, Some((src, msg, true)), emit);
+        self.drain_reorder(sx, dst, emit);
+    }
+
+    /// Re-deliver buffered messages whose step has become current.
+    fn drain_reorder(
+        &mut self,
+        sx: &SharedCtx<'_>,
+        id: NodeId,
+        emit: &mut impl FnMut(Transit<P::Msg>),
+    ) {
+        let i = self.ix(id);
+        loop {
+            let cur = self.nodes[i].prog.step();
+            let pos = self.nodes[i].held.iter().position(|(s, _, _)| *s <= cur);
+            let Some(pos) = pos else { break };
+            let (_, src, msg) = self.nodes[i].held.remove(pos);
+            let at = self.hot[i].busy_until;
+            self.invoke_held(sx, id, at, src, msg, emit);
+        }
+    }
+
+    fn invoke_held(
+        &mut self,
+        sx: &SharedCtx<'_>,
+        id: NodeId,
+        at: Time,
+        src: NodeId,
+        msg: P::Msg,
+        emit: &mut impl FnMut(Transit<P::Msg>),
+    ) {
+        let i = self.ix(id);
+        // Pop cost instead of RX (already read off the NIC at arrival).
+        let pop = Time::from_cycles(REORDER_POP_CYCLES * self.slow[i] as u64);
+        let resume = {
+            let hot = &mut self.hot[i];
+            hot.busy_until = at.max(hot.busy_until) + pop;
+            hot.busy_until
+        };
+        self.invoke(sx, id, resume, Some((src, msg, false)), emit);
+    }
+
+    /// Core of the model: run one handler and apply its effects.
+    fn invoke(
+        &mut self,
+        sx: &SharedCtx<'_>,
+        id: NodeId,
+        at: Time,
+        input: Option<(NodeId, P::Msg, bool)>,
+        emit: &mut impl FnMut(Transit<P::Msg>),
+    ) {
+        let i = self.ix(id);
+        let sf = self.slow[i] as u64;
+        let slot = &mut self.nodes[i];
+        let hot = &mut self.hot[i];
+        let st = &mut self.stats[i];
+        let start = at.max(hot.busy_until);
+        // Idle attribution: waiting between end of previous work and start.
+        let idle = start.saturating_sub(hot.busy_until);
+        if input.is_some() {
+            st.idle[hot.stage as usize] += idle;
+        }
+
+        let mut entry = start;
+        let charge_rx = matches!(&input, Some((_, _, true)));
+        if let Some((_, msg, _)) = &input {
+            if charge_rx {
+                entry += Time::from_cycles(sx.core.rx_cycles(msg.wire_bytes()) * sf);
+            }
+            st.msgs_in += 1;
+        }
+
+        let mut stage = hot.stage;
+        let mut finished = hot.finished;
+        debug_assert!(self.ops_scratch.is_empty());
+        let mut ctx = Ctx {
+            node: id,
+            core: sx.core,
+            rng: &mut slot.rng,
+            entry,
+            cycles: 0,
+            ops: std::mem::take(&mut self.ops_scratch),
+            stage: &mut stage,
+            finished: &mut finished,
+            mcast_supported: sx.fabric.multicast_supported(),
+        };
+        let was_msg = input.is_some();
+        match input {
+            Some((src, msg, _)) => slot.prog.on_message(&mut ctx, src, msg),
+            None => slot.prog.on_start(&mut ctx),
+        }
+        let cycles = ctx.cycles;
+        let ops = std::mem::take(&mut ctx.ops);
+        drop(ctx);
+
+        let end = entry + Time::from_cycles(cycles * sf);
+        let busy_span = end.saturating_sub(start);
+        st.busy[hot.stage as usize] += busy_span;
+        hot.stage = stage;
+        hot.finished = finished;
+        st.finished = finished;
+        hot.busy_until = end;
+        if busy_span > Time::ZERO || was_msg {
+            st.last_active = end;
+        }
+        st.msgs_out += ops.len() as u64;
+
+        // Hand sends to the fabric at the local time they were issued.
+        let mut ops = ops;
+        for (cyc_offset, op) in ops.drain(..) {
+            let ready = entry + Time::from_cycles(cyc_offset * sf);
+            match op {
+                SendOp::Unicast { dst, msg } => {
+                    let flight = sx.fabric.send(
+                        &mut self.tx,
+                        &mut self.net,
+                        id,
+                        dst,
+                        msg.wire_bytes(),
+                        ready,
+                    );
+                    self.route(flight, false, msg, emit);
+                }
+                SendOp::Multicast { group, msg } => {
+                    // The packet serializes once at the sender; every
+                    // member gets its own leg (and the sender's own copy
+                    // travels as a phantom: it holds the downlink and
+                    // counts as delivered but is never invoked).
+                    let on_wire = sx.fabric.mcast_depart(
+                        &mut self.tx,
+                        &mut self.net,
+                        id,
+                        msg.wire_bytes(),
+                        ready,
+                    );
+                    for dst in sx.groups[group].iter() {
+                        let flight =
+                            sx.fabric.mcast_leg(&mut self.tx, &mut self.net, id, dst, on_wire);
+                        self.route(flight, dst == id, msg.clone(), emit);
+                    }
+                }
+            }
+        }
+        // Return the drained buffer to the scratch slot for reuse.
+        self.ops_scratch = ops;
+    }
+
+    /// Queue one flight locally or hand it to the cross-shard emitter.
+    fn route(
+        &mut self,
+        flight: Flight,
+        phantom: bool,
+        msg: P::Msg,
+        emit: &mut impl FnMut(Transit<P::Msg>),
+    ) {
+        let own = self.owns(flight.dst);
+        let t = Transit { flight, phantom, msg };
+        if own {
+            self.queue.push(t);
+        } else {
+            emit(t);
+        }
+    }
+}
+
+/// Merge completed shards (in ascending node order) into one summary.
+pub(crate) fn merge_shards<P: Program>(shards: Vec<Shard<P>>) -> RunSummary {
+    let mut node_stats = Vec::new();
+    let mut net = NetStats::default();
+    let mut events = 0;
+    for shard in shards {
+        debug_assert_eq!(shard.range.start, node_stats.len());
+        node_stats.extend(shard.stats);
+        net.merge(&shard.net);
+        events += shard.events;
+    }
+    let makespan = node_stats.iter().map(|s| s.last_active).max().unwrap_or(Time::ZERO);
+    RunSummary { makespan, node_stats, net, events }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(at: u64, src: u32, ctr: u64) -> Event {
+        Event { at: Time(at), src, ctr, slot: 0 }
+    }
+
+    /// The sharded far tier + bounded pop must order exactly like one
+    /// global heap, for events scattered across many ring windows (far
+    /// beyond the 262 µs lookahead) interleaved with near events.
+    #[test]
+    fn calendar_far_tier_orders_exactly() {
+        let mut q = CalendarQueue::new();
+        let window_units: u64 = 64 << 16; // one full ring span in time units
+        let mut rng = SplitMix64::new(0xCA1);
+        let mut expect: Vec<(u64, u32, u64)> = Vec::new();
+        let mut ctr = 0u64;
+        // Phase 1: events spread over ~40 windows, pushed in random order.
+        for _ in 0..5_000 {
+            let at = rng.next_below(40 * window_units);
+            let src = rng.index(64) as u32;
+            ctr += 1;
+            q.push(ev(at, src, ctr));
+            expect.push((at, src, ctr));
+        }
+        expect.sort_unstable();
+        let mut popped = Vec::new();
+        // Interleave: drain half, then push more events *ahead of the
+        // cursor* (as the fabric does — positive latency), drain the rest.
+        for _ in 0..2_500 {
+            let e = q.pop_before(Time(u64::MAX)).unwrap();
+            popped.push((e.at.0, e.src, e.ctr));
+        }
+        let now = popped.last().unwrap().0;
+        let mut late: Vec<(u64, u32, u64)> = Vec::new();
+        for _ in 0..2_500 {
+            let at = now + rng.next_below(45 * window_units);
+            let src = rng.index(64) as u32;
+            ctr += 1;
+            q.push(ev(at, src, ctr));
+            late.push((at, src, ctr));
+        }
+        while let Some(e) = q.pop_before(Time(u64::MAX)) {
+            popped.push((e.at.0, e.src, e.ctr));
+        }
+        assert_eq!(popped.len(), 7_500);
+        // Every pop must be totally ordered by (at, src, ctr).
+        assert!(popped.windows(2).all(|w| w[0] < w[1]), "pops out of order");
+        // And the multiset must be exactly what was pushed.
+        let mut all = expect;
+        all.extend(late);
+        all.sort_unstable();
+        let mut got = popped;
+        got.sort_unstable();
+        assert_eq!(got, all);
+    }
+
+    /// Bounded pops stop exactly at the bound (strictly-before contract)
+    /// and later pushes behind the *cursor's* high-water mark but ahead
+    /// of the bound still order correctly — the window-barrier edge case.
+    #[test]
+    fn calendar_bounded_pop_respects_windows() {
+        let mut q = CalendarQueue::new();
+        q.push(ev(10, 0, 0));
+        q.push(ev(500, 0, 1));
+        q.push(ev(10_000, 0, 2));
+        assert_eq!(q.peek_at(), Some(Time(10)));
+        // Window [0, 500): only the first event pops.
+        assert_eq!(q.pop_before(Time(500)).unwrap().at, Time(10));
+        assert!(q.pop_before(Time(500)).is_none());
+        // A cross-shard push lands between the windows.
+        q.push(ev(600, 3, 0));
+        assert_eq!(q.peek_at(), Some(Time(500)));
+        // Window [500, 10_000): both mid events pop, in order.
+        assert_eq!(q.pop_before(Time(10_000)).unwrap().at, Time(500));
+        assert_eq!(q.pop_before(Time(10_000)).unwrap().at, Time(600));
+        assert!(q.pop_before(Time(10_000)).is_none());
+        assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(10_000));
+        assert!(q.pop_before(Time(u64::MAX)).is_none());
+        assert_eq!(q.peek_at(), None);
+    }
+
+    /// Ties at one timestamp break by (src, ctr) — the canonical order is
+    /// processing-order independent.
+    #[test]
+    fn calendar_ties_break_by_src_then_ctr() {
+        let mut q = CalendarQueue::new();
+        q.push(ev(64, 2, 0));
+        q.push(ev(64, 0, 1));
+        q.push(ev(64, 0, 0));
+        q.push(ev(64, 1, 9));
+        let order: Vec<(u32, u64)> = std::iter::from_fn(|| q.pop_before(Time(u64::MAX)))
+            .map(|e| (e.src, e.ctr))
+            .collect();
+        assert_eq!(order, vec![(0, 0), (0, 1), (1, 9), (2, 0)]);
+    }
+
+    /// Regression: the ring's bucket range can overlap the earliest far
+    /// shard's window once the cursor has advanced, so `peek_at` must
+    /// consult both — an un-rehomed far event can be earlier than every
+    /// ring event, and reporting the ring minimum alone would inflate
+    /// the parallel executor's window bound.
+    #[test]
+    fn peek_sees_far_events_earlier_than_ring_events() {
+        let mut q = CalendarQueue::new();
+        let bucket_units = 64u64; // 1 << g_shift
+        // Event in bucket 40,000 — popping it advances the cursor there
+        // without crossing the 65,536-bucket window boundary (no rehome).
+        q.push(ev(40_000 * bucket_units, 0, 0));
+        // Far event (bucket 66,000, window 1): beyond the ring span while
+        // the cursor sits at 0, so it lands in the far tier.
+        q.push(ev(66_000 * bucket_units, 0, 1));
+        assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(40_000 * bucket_units));
+        // Ring now spans buckets [40,000, 105,536): this later event goes
+        // into the ring even though the earlier far event is still far.
+        q.push(ev(70_000 * bucket_units, 0, 2));
+        // The true minimum is the far event, not the ring one.
+        assert_eq!(q.peek_at(), Some(Time(66_000 * bucket_units)));
+        assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(66_000 * bucket_units));
+        assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(70_000 * bucket_units));
+        assert!(q.pop_before(Time(u64::MAX)).is_none());
+    }
+
+    /// peek_at never advances the cursor: a push earlier than a previous
+    /// peek result (but later than anything popped) must still surface.
+    #[test]
+    fn peek_does_not_commit_the_cursor() {
+        let mut q = CalendarQueue::new();
+        q.push(ev(100_000, 0, 0));
+        assert_eq!(q.peek_at(), Some(Time(100_000)));
+        q.push(ev(70, 0, 1));
+        assert_eq!(q.peek_at(), Some(Time(70)));
+        assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(70));
+        assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(100_000));
+    }
+}

@@ -1,0 +1,119 @@
+//! Pluggable execution backends for the discrete-event engine.
+//!
+//! The engine core (`core.rs`: event slab, calendar queue, hot-node
+//! arena, reorder buffer, stats arena) is decoupled from the *scheduling
+//! policy* behind the [`Executor`] trait, with two backends:
+//!
+//! - [`SeqExecutor`] — the reference semantics: one shard covering every
+//!   node, drained to quiescence on the calling thread.
+//! - [`ParExecutor`] — deterministic sharded simulation: nodes partition
+//!   into contiguous ranges (one worker thread each) that advance in
+//!   conservative time windows bounded by the fabric's minimum latency
+//!   ([`crate::net::Fabric::min_latency`]), exchange cross-shard sends at
+//!   window barriers, and merge per-shard stats in canonical node order.
+//!
+//! # Determinism contract (DESIGN.md §7)
+//!
+//! Both backends produce **byte-identical** [`RunSummary`]s (and thus
+//! identical `RunReport`s and conformance digests) for the same engine
+//! configuration, at any thread count, because:
+//!
+//! 1. every event orders by the canonical key `(arrival, src, per-source
+//!    send counter)` — no scheduling-order-dependent tie-breaks;
+//! 2. all randomness (per-node program streams, per-source loss/RTO and
+//!    tail draws) comes from streams derived from the run seed and an
+//!    absolute node id — never from a shared draw order;
+//! 3. destination-side contention (ingress store-and-forward, per-leaf
+//!    oversubscribed-spine registers) is resolved when the destination
+//!    pops the event, in canonical order, not when the sender issued it;
+//! 4. the window rule (`new events land ≥ one minimum-latency beyond the
+//!    window start`) closes each window's event set before it runs.
+//!
+//! `rust/tests/exec.rs` pins the contract across every workload, tier,
+//! and perturbation knob.
+
+pub(crate) mod core;
+mod par;
+mod seq;
+
+pub use self::core::{NodeStats, RunSummary, MAX_STAGES};
+
+use crate::cpu::CoreModel;
+use crate::nanopu::{Group, Program};
+use crate::net::Fabric;
+
+pub(crate) use seq::run_seq as run_seq_inner;
+
+/// Everything an executor needs to run one simulation: the node programs
+/// (index = node id), per-node slowdown factors, the fabric, the core
+/// cost model, the registered multicast groups, and the run seed.
+pub struct EngineParts<P: Program> {
+    pub programs: Vec<P>,
+    pub slow: Vec<u32>,
+    pub fabric: Fabric,
+    pub core: CoreModel,
+    pub groups: Vec<Group>,
+    pub seed: u64,
+}
+
+/// Resolve the crate-wide `--threads` convention: `0` means all
+/// available host cores (the single definition behind
+/// [`ParExecutor::resolved_threads`], the sweep pool, and the CLI).
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// A scheduling policy for the engine core. `P: Send` bounds the trait
+/// method so one trait serves both backends; the sequential path is also
+/// reachable without `Send` through [`crate::sim::Engine::run`].
+pub trait Executor {
+    /// Backend name (reports/diagnostics).
+    fn name(&self) -> &'static str;
+
+    /// Run `parts` to global quiescence.
+    fn run<P: Program + Send>(&self, parts: EngineParts<P>) -> RunSummary;
+}
+
+/// The exact reference semantics, single-threaded.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SeqExecutor;
+
+impl Executor for SeqExecutor {
+    fn name(&self) -> &'static str {
+        "seq"
+    }
+
+    fn run<P: Program + Send>(&self, parts: EngineParts<P>) -> RunSummary {
+        seq::run_seq(parts)
+    }
+}
+
+/// Deterministic sharded execution across `threads` worker threads
+/// (`0` = all available host cores). Falls back to the sequential
+/// backend when sharding cannot help (single effective shard, zero
+/// fabric lookahead).
+#[derive(Debug, Clone, Copy)]
+pub struct ParExecutor {
+    pub threads: usize,
+}
+
+impl ParExecutor {
+    /// Resolve the `0 = available_parallelism` convention.
+    pub fn resolved_threads(&self) -> usize {
+        resolve_threads(self.threads)
+    }
+}
+
+impl Executor for ParExecutor {
+    fn name(&self) -> &'static str {
+        "par"
+    }
+
+    fn run<P: Program + Send>(&self, parts: EngineParts<P>) -> RunSummary {
+        par::run_par(parts, self.resolved_threads())
+    }
+}

@@ -1,0 +1,270 @@
+//! The deterministic sharded backend: nodes are partitioned into
+//! contiguous ranges, one worker thread per shard, advancing together in
+//! conservative time windows bounded by the fabric's minimum latency.
+//!
+//! # Why this is byte-identical to the sequential backend
+//!
+//! Every piece of mutable run state is owned by exactly one shard —
+//! program/hot/stats arenas and the ingress/spine registers by the
+//! *destination* node's shard, egress registers, RNG streams, and send
+//! counters by the *source* node's shard. Shards only interact through
+//! [`Transit`] values ordered by the canonical `(at, src, ctr)` key, and
+//! the window rule guarantees a shard has **every** transit with
+//! `at < bound` in hand before it processes that window:
+//!
+//! - window `k` processes events in `[min_k, min_k + L)` where `L` is
+//!   [`crate::net::Fabric::min_latency`] and `min_k` the global earliest
+//!   pending event;
+//! - any event processed at `t ≥ min_k` can only produce transits with
+//!   `at ≥ t + L ≥ min_k + L` — i.e. beyond the current window — so the
+//!   window's event set is closed before it starts;
+//! - transits are exchanged at the barrier after each window, before the
+//!   next bound is computed.
+//!
+//! Per-shard state therefore evolves through exactly the same sequence of
+//! mutations as in the sequential backend (which is the same state
+//! machine restricted to one all-covering shard), and the final merge
+//! (node order, summed counters) is canonical. Stats/digest outputs match
+//! byte for byte — `rust/tests/exec.rs` pins this for every workload,
+//! tier, and perturbation knob.
+//!
+//! Fallbacks: a zero lookahead (degenerate fabric config), a single
+//! effective shard, or an oversubscribed fabric too small to split on a
+//! leaf boundary all degrade to [`super::seq::run_seq`] — same results,
+//! no windowing.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
+
+use crate::nanopu::Program;
+use crate::net::Fabric;
+
+use super::core::{merge_shards, RunSummary, Shard, SharedCtx, Transit};
+use super::seq::run_seq;
+use super::EngineParts;
+use crate::sim::Time;
+
+/// Sentinel bound meaning "no events anywhere: stop".
+const DONE: u64 = u64::MAX;
+
+/// Split `nodes` into up to `threads` contiguous shard ranges. When the
+/// core is oversubscribed the per-leaf spine registers force shard
+/// boundaries onto leaf boundaries; otherwise any node split works.
+pub(crate) fn shard_ranges(
+    nodes: usize,
+    leaf_radix: usize,
+    leaf_aligned: bool,
+    threads: usize,
+) -> Vec<std::ops::Range<usize>> {
+    if nodes == 0 {
+        return vec![0..0];
+    }
+    if leaf_aligned {
+        let leaves = nodes.div_ceil(leaf_radix);
+        let shards = threads.clamp(1, leaves);
+        (0..shards)
+            .map(|k| {
+                let lo = (k * leaves / shards) * leaf_radix;
+                let hi = (((k + 1) * leaves / shards) * leaf_radix).min(nodes);
+                lo..hi
+            })
+            .collect()
+    } else {
+        let shards = threads.clamp(1, nodes);
+        (0..shards).map(|k| k * nodes / shards..(k + 1) * nodes / shards).collect()
+    }
+}
+
+/// Window-barrier synchronization state shared by the workers.
+struct WindowSync<M> {
+    barrier: Barrier,
+    /// Per-shard earliest pending event time (u64::MAX = idle).
+    mins: Vec<AtomicU64>,
+    /// This round's exclusive window bound ([`DONE`] = quiescent).
+    bound: AtomicU64,
+    /// Per-destination-shard mailboxes, drained between windows.
+    inboxes: Vec<Mutex<Vec<Transit<M>>>>,
+}
+
+/// Run `parts` on `threads` worker threads (resolved and > 1), falling
+/// back to the sequential backend when sharding cannot help.
+pub fn run_par<P: Program + Send>(parts: EngineParts<P>, threads: usize) -> RunSummary {
+    let lookahead = parts.fabric.min_latency();
+    let leaf_aligned = parts.fabric.cfg.oversub > 0;
+    let ranges = shard_ranges(
+        parts.programs.len(),
+        parts.fabric.topo.leaf_radix,
+        leaf_aligned,
+        threads,
+    );
+    if ranges.len() <= 1 || lookahead == Time::ZERO {
+        // Zero lookahead (degenerate config) or nothing to split:
+        // conservative windows cannot make progress / cannot help.
+        return run_seq(parts);
+    }
+
+    let EngineParts { programs, slow, fabric, core, groups, seed } = parts;
+    let mut programs = programs;
+    let mut slow = slow;
+    // Carve the per-node vectors into shards, back to front so the
+    // splits are O(shards) rather than O(nodes · shards).
+    let mut shards: Vec<Shard<P>> = Vec::with_capacity(ranges.len());
+    for range in ranges.iter().rev() {
+        let progs = programs.split_off(range.start);
+        let slows = slow.split_off(range.start);
+        shards.push(Shard::new(range.clone(), progs, slows, &fabric, seed));
+    }
+    shards.reverse();
+
+    let sync = WindowSync {
+        barrier: Barrier::new(shards.len()),
+        mins: (0..shards.len()).map(|_| AtomicU64::new(u64::MAX)).collect(),
+        bound: AtomicU64::new(0),
+        inboxes: (0..shards.len()).map(|_| Mutex::new(Vec::new())).collect(),
+    };
+    let starts: Vec<usize> = ranges.iter().map(|r| r.start).collect();
+
+    let shards: Vec<Shard<P>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(idx, mut shard)| {
+                let sync = &sync;
+                let starts = &starts;
+                let fabric: &Fabric = &fabric;
+                let core = &core;
+                let groups = &groups;
+                scope.spawn(move || {
+                    let sx = SharedCtx { fabric, core, groups: groups.as_slice() };
+                    worker(&mut shard, idx, &sx, sync, starts, lookahead);
+                    shard
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+    });
+
+    merge_shards(shards)
+}
+
+/// Index of the shard owning `node` (ranges are contiguous + ascending).
+fn shard_of(starts: &[usize], node: usize) -> usize {
+    starts.partition_point(|&s| s <= node) - 1
+}
+
+fn worker<P: Program>(
+    shard: &mut Shard<P>,
+    idx: usize,
+    sx: &SharedCtx<'_>,
+    sync: &WindowSync<P::Msg>,
+    starts: &[usize],
+    lookahead: Time,
+) {
+    // Per-destination-shard outboxes, flushed under one short lock each
+    // at the end of every window.
+    let mut out: Vec<Vec<Transit<P::Msg>>> = (0..starts.len()).map(|_| Vec::new()).collect();
+
+    // Round 0: fire every on_start and exchange the initial transits.
+    {
+        let mut emit =
+            |t: Transit<P::Msg>| out[shard_of(starts, t.flight.dst)].push(t);
+        shard.start(sx, &mut emit);
+    }
+    flush(&mut out, sync, idx);
+    sync.barrier.wait();
+
+    loop {
+        // Merge inbound transits (canonical-order queues make the merge
+        // order irrelevant, but sort anyway so the insertion path is
+        // deterministic bucket by bucket).
+        let mut inbox = std::mem::take(&mut *sync.inboxes[idx].lock().expect("inbox"));
+        inbox.sort_unstable_by_key(|t| (t.flight.at, t.flight.src, t.flight.ctr));
+        for t in inbox {
+            shard.push(t);
+        }
+
+        // Publish the earliest pending event; the barrier leader turns
+        // the global minimum into this round's window bound.
+        let min = shard.peek_at().map(|t| t.0).unwrap_or(u64::MAX);
+        sync.mins[idx].store(min, Ordering::SeqCst);
+        if sync.barrier.wait().is_leader() {
+            let global = sync.mins.iter().map(|m| m.load(Ordering::SeqCst)).min().unwrap();
+            let bound = if global == u64::MAX {
+                DONE
+            } else {
+                global.saturating_add(lookahead.0)
+            };
+            sync.bound.store(bound, Ordering::SeqCst);
+        }
+        sync.barrier.wait();
+
+        let bound = sync.bound.load(Ordering::SeqCst);
+        if bound == DONE {
+            return;
+        }
+        {
+            let mut emit =
+                |t: Transit<P::Msg>| out[shard_of(starts, t.flight.dst)].push(t);
+            shard.run_window(sx, Time(bound), &mut emit);
+        }
+        flush(&mut out, sync, idx);
+        sync.barrier.wait();
+    }
+}
+
+/// Hand this window's cross-shard transits to their destination inboxes.
+fn flush<M>(out: &mut [Vec<Transit<M>>], sync: &WindowSync<M>, own: usize) {
+    for (j, buf) in out.iter_mut().enumerate() {
+        debug_assert!(j != own || buf.is_empty(), "own-shard transit routed via outbox");
+        if !buf.is_empty() {
+            sync.inboxes[j].lock().expect("inbox").append(buf);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_cover_exactly_and_in_order() {
+        for (nodes, threads, aligned) in
+            [(100usize, 3usize, false), (2, 8, false), (256, 4, true), (65_536, 12, true)]
+        {
+            let ranges = shard_ranges(nodes, 64, aligned, threads);
+            assert!(ranges.len() <= threads.max(1));
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, nodes);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "contiguous");
+            }
+            assert!(ranges.iter().all(|r| !r.is_empty()), "no empty shards after clamping");
+            if aligned {
+                assert!(ranges.iter().all(|r| r.start % 64 == 0), "leaf-aligned starts");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_ranges_clamp_to_fleet_and_leaves() {
+        // More threads than nodes: one node per shard.
+        assert_eq!(shard_ranges(2, 64, false, 16).len(), 2);
+        // Leaf-aligned: a 2-leaf fleet cannot use more than 2 shards.
+        assert_eq!(shard_ranges(100, 64, true, 16).len(), 2);
+        // Single-leaf oversubscribed fleet: one shard (the caller then
+        // falls back to the sequential backend).
+        assert_eq!(shard_ranges(16, 64, true, 8).len(), 1);
+        // Zero threads behaves like one.
+        assert_eq!(shard_ranges(10, 64, false, 0).len(), 1);
+    }
+
+    #[test]
+    fn shard_of_maps_nodes_to_their_range() {
+        let ranges = shard_ranges(100, 64, false, 3);
+        let starts: Vec<usize> = ranges.iter().map(|r| r.start).collect();
+        for (i, r) in ranges.iter().enumerate() {
+            assert_eq!(shard_of(&starts, r.start), i);
+            assert_eq!(shard_of(&starts, r.end - 1), i);
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! The sequential backend: one shard covering every node, drained to
+//! quiescence in canonical `(at, src, ctr)` order on the calling thread.
+//!
+//! This is the reference semantics — the parallel backend is defined (and
+//! tested) to be byte-identical to it.
+
+use crate::nanopu::Program;
+
+use super::core::{merge_shards, RunSummary, Shard, SharedCtx};
+use super::EngineParts;
+use crate::sim::Time;
+
+/// Run `parts` to quiescence sequentially.
+pub fn run_seq<P: Program>(parts: EngineParts<P>) -> RunSummary {
+    let EngineParts { programs, slow, fabric, core, groups, seed } = parts;
+    let n = programs.len();
+    let mut shard = Shard::new(0..n, programs, slow, &fabric, seed);
+    let sx = SharedCtx { fabric: &fabric, core: &core, groups: &groups };
+    // A single shard owns every node, so nothing can ever cross shards.
+    let mut no_emit = |_| unreachable!("single shard owns all nodes");
+    shard.start(&sx, &mut no_emit);
+    shard.run_window(&sx, Time(u64::MAX), &mut no_emit);
+    debug_assert!(shard.is_idle());
+    merge_shards(vec![shard])
+}

@@ -1,15 +1,20 @@
 //! Deterministic discrete-event simulation engine.
 //!
 //! Replaces the paper's FireSim/Verilator cycle-exact RTL simulation
-//! (DESIGN.md §1, hardware substitution). [`engine::Engine`] drives node
-//! programs ([`crate::nanopu::Program`]) over the network fabric
+//! (DESIGN.md §1, hardware substitution). [`Engine`] configures
+//! node programs ([`crate::nanopu::Program`]) over the network fabric
 //! ([`crate::net::Fabric`]) with per-node busy/idle accounting on an exact
-//! integer time grid ([`Time`]).
+//! integer time grid ([`Time`]); the event loop itself is a pluggable
+//! [`exec::Executor`] backend — sequential ([`exec::SeqExecutor`]) or
+//! deterministic sharded across host threads ([`exec::ParExecutor`]),
+//! byte-identical by construction (DESIGN.md §7).
 
 mod engine;
+pub mod exec;
 mod rng;
 mod time;
 
-pub use engine::{Engine, NodeStats, RunSummary, MAX_STAGES};
+pub use engine::Engine;
+pub use exec::{NodeStats, RunSummary, MAX_STAGES};
 pub use rng::SplitMix64;
 pub use time::{Time, CLOCK_HZ, UNITS_PER_CYCLE, UNITS_PER_NS};

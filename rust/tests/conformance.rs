@@ -27,7 +27,7 @@ fn every_registry_smoke_config_runs_and_validates() {
             "{}: workloads must declare a CI-small smoke tuple",
             spec.name
         );
-        let (report, _) = conformance::run_tier(spec, Tier::Smoke, ComputeChoice::Native)
+        let (report, _) = conformance::run_tier(spec, Tier::Smoke, ComputeChoice::Native, 1)
             .unwrap_or_else(|e| panic!("{}: smoke run: {e:#}", spec.name));
         assert!(
             report.validation.ok(),
@@ -46,7 +46,7 @@ fn every_registry_smoke_config_runs_and_validates() {
 fn golden_digests_match_for_every_workload() {
     let mut blessed = Vec::new();
     for spec in registry::WORKLOADS {
-        let (report, _) = conformance::run_tier(spec, Tier::Smoke, ComputeChoice::Native)
+        let (report, _) = conformance::run_tier(spec, Tier::Smoke, ComputeChoice::Native, 1)
             .unwrap_or_else(|e| panic!("{}: smoke run: {e:#}", spec.name));
         let digest = conformance::digest_json(&report, Tier::Smoke.name());
         // One name per (workload, tier), shared with `repro paper`:
@@ -86,9 +86,9 @@ fn golden_digests_match_for_every_workload() {
 fn digests_are_deterministic_per_workload() {
     for spec in registry::WORKLOADS {
         let (a, _) =
-            conformance::run_tier(spec, Tier::Smoke, ComputeChoice::Native).unwrap();
+            conformance::run_tier(spec, Tier::Smoke, ComputeChoice::Native, 1).unwrap();
         let (b, _) =
-            conformance::run_tier(spec, Tier::Smoke, ComputeChoice::Native).unwrap();
+            conformance::run_tier(spec, Tier::Smoke, ComputeChoice::Native, 1).unwrap();
         assert_eq!(
             conformance::digest_json(&a, "smoke"),
             conformance::digest_json(&b, "smoke"),
@@ -106,7 +106,7 @@ fn digests_are_deterministic_per_workload() {
 #[ignore = "release-profile scale test; CI runs it via --include-ignored"]
 fn mid_tier_validates_for_nanosort() {
     let spec = registry::find("nanosort").unwrap();
-    let (report, _) = conformance::run_tier(spec, Tier::Mid, ComputeChoice::Native).unwrap();
+    let (report, _) = conformance::run_tier(spec, Tier::Mid, ComputeChoice::Native, 1).unwrap();
     assert!(report.validation.ok(), "{}", report.validation.detail);
     assert_eq!(report.nodes, 4096);
     let sort = report.validation.sort.as_ref().unwrap();

@@ -1,0 +1,216 @@
+//! Executor equivalence suite: the determinism contract of the pluggable
+//! execution backends (`nanosort::sim::exec`), pinned end to end.
+//!
+//! For every workload, tier, and perturbation knob, `SeqExecutor`
+//! (threads = 1) and `ParExecutor` (threads > 1, and `0` = all cores)
+//! must produce **byte-identical** conformance digests — the same
+//! property `repro paper --threads N` gates on, and the reason the
+//! goldens and sweep fingerprints stay authoritative under parallel
+//! simulation. Window-barrier edge cases (zero lookahead, single-node
+//! shards, more threads than nodes/leaves) ride along.
+
+use nanosort::algo::nanosort::NanoSort;
+use nanosort::conformance::{digest_json, run_tier, Tier, CONFORMANCE_SEED};
+use nanosort::coordinator::ComputeChoice;
+use nanosort::net::NetConfig;
+use nanosort::perturb::{KeyDistribution, Perturbations, StragglerConfig};
+use nanosort::scenario::{registry, RunReport, Scenario};
+
+/// Run one registry workload at its smoke shape with explicit knobs.
+fn run_knobs(
+    spec: &registry::WorkloadSpec,
+    net: NetConfig,
+    perturb: Perturbations,
+    threads: usize,
+) -> RunReport {
+    let params = registry::params_from_pairs(spec, spec.smoke).unwrap();
+    let nodes = params.u64(spec.nodes_param.name).unwrap() as usize;
+    Scenario::from_dyn((spec.build)(&params).unwrap())
+        .nodes(nodes)
+        .net(net)
+        .perturb(perturb)
+        .seed(CONFORMANCE_SEED)
+        .threads(threads)
+        .run()
+        .unwrap_or_else(|e| panic!("{} (threads={threads}): {e:#}", spec.name))
+}
+
+fn assert_digests_match(spec_name: &str, label: &str, seq: &RunReport, par: &RunReport) {
+    assert_eq!(
+        digest_json(seq, "exec"),
+        digest_json(par, "exec"),
+        "{spec_name} [{label}]: ParExecutor digest diverged from SeqExecutor"
+    );
+    // The digest already covers makespan/counters/stage sums; rendered
+    // reports add the human-facing surface.
+    assert_eq!(seq.render(), par.render(), "{spec_name} [{label}] render");
+}
+
+/// Every workload, smoke tier, unperturbed: seq == par at several thread
+/// counts including "all cores".
+#[test]
+fn all_workloads_smoke_tier_digest_equality() {
+    for spec in registry::WORKLOADS {
+        let seq = run_knobs(spec, NetConfig::default(), Perturbations::default(), 1);
+        for threads in [2usize, 3, 4, 0] {
+            let par = run_knobs(spec, NetConfig::default(), Perturbations::default(), threads);
+            assert_digests_match(spec.name, &format!("threads={threads}"), &seq, &par);
+        }
+    }
+}
+
+/// Every workload at the mid tier (4,096-core class shapes). Sized for
+/// the release profile; CI runs with `--include-ignored`.
+#[test]
+#[ignore = "release-profile scale test; CI runs it via --include-ignored"]
+fn all_workloads_mid_tier_digest_equality() {
+    for spec in registry::WORKLOADS {
+        let (seq, _) = run_tier(spec, Tier::Mid, ComputeChoice::Native, 1).unwrap();
+        let (par, _) = run_tier(spec, Tier::Mid, ComputeChoice::Native, 4).unwrap();
+        assert_digests_match(spec.name, "mid", &seq, &par);
+    }
+}
+
+/// Each perturbation knob, on its own, across every workload: the
+/// per-node RNG streams and destination-side contention must keep the
+/// parallel backend exact even when the knobs are live.
+#[test]
+fn each_perturbation_knob_stays_exact_in_parallel() {
+    let knob_sets: &[(&str, NetConfig, Perturbations)] = &[
+        (
+            "skew=zipfian",
+            NetConfig::default(),
+            Perturbations { dist: KeyDistribution::Zipfian, ..Default::default() },
+        ),
+        (
+            "loss+rto",
+            NetConfig { loss_prob: (1000, 10_000), rto_ns: 5_000, ..NetConfig::default() },
+            Perturbations::default(),
+        ),
+        (
+            "stragglers",
+            NetConfig::default(),
+            Perturbations {
+                stragglers: StragglerConfig { count: 2, factor: 8 },
+                ..Default::default()
+            },
+        ),
+        (
+            "tail",
+            NetConfig { tail_prob: (1, 20), tail_extra_ns: 2_000, ..NetConfig::default() },
+            Perturbations::default(),
+        ),
+    ];
+    for spec in registry::WORKLOADS {
+        for (label, net, perturb) in knob_sets {
+            let seq = run_knobs(spec, net.clone(), perturb.clone(), 1);
+            let par = run_knobs(spec, net.clone(), perturb.clone(), 3);
+            assert_digests_match(spec.name, label, &seq, &par);
+        }
+    }
+}
+
+/// Oversubscription forces leaf-aligned shards (per-leaf spine downlink
+/// registers). A multi-leaf fleet must still shard exactly; a
+/// single-leaf fleet degrades to the sequential backend.
+#[test]
+fn oversubscription_shards_leaf_aligned_and_stays_exact() {
+    let net = NetConfig { oversub: 64, ..NetConfig::default() };
+    let run = |threads: usize| {
+        Scenario::new(NanoSort { keys_per_node: 8, buckets: 4, median_incast: 4, ..Default::default() })
+            .nodes(256) // 4 leaves
+            .net(net.clone())
+            .seed(CONFORMANCE_SEED)
+            .threads(threads)
+            .run()
+            .unwrap()
+    };
+    let seq = run(1);
+    for threads in [2usize, 4, 16] {
+        let par = run(threads);
+        assert_digests_match("nanosort", &format!("oversub threads={threads}"), &seq, &par);
+    }
+    // Single-leaf fleet (16 nodes) + oversub: only one leaf-aligned shard
+    // exists; the parallel entry point must fall back, not wedge.
+    let spec = registry::find("nanosort").unwrap();
+    let seq = run_knobs(spec, net.clone(), Perturbations::default(), 1);
+    let par = run_knobs(spec, net, Perturbations::default(), 8);
+    assert_digests_match("nanosort", "oversub single-leaf fallback", &seq, &par);
+}
+
+/// All knobs composed at once — the hardest determinism case (skewed
+/// inputs + loss + tails + stragglers + oversub on a multi-leaf fleet).
+#[test]
+fn composed_perturbations_stay_exact_in_parallel() {
+    let net = NetConfig {
+        loss_prob: (500, 10_000),
+        rto_ns: 5_000,
+        tail_prob: (1, 50),
+        tail_extra_ns: 2_000,
+        oversub: 16,
+        ..NetConfig::default()
+    };
+    let knobs = Perturbations {
+        dist: KeyDistribution::Zipfian,
+        stragglers: StragglerConfig { count: 3, factor: 4 },
+    };
+    let run = |threads: usize| {
+        Scenario::new(NanoSort { keys_per_node: 8, buckets: 4, median_incast: 4, ..Default::default() })
+            .nodes(256)
+            .net(net.clone())
+            .perturb(knobs.clone())
+            .seed(CONFORMANCE_SEED)
+            .threads(threads)
+            .run()
+            .unwrap()
+    };
+    let seq = run(1);
+    let par = run(4);
+    assert!(seq.validation.ok(), "{}", seq.validation.detail);
+    assert_digests_match("nanosort", "composed", &seq, &par);
+}
+
+/// Window-barrier edge cases.
+#[test]
+fn window_barrier_edge_cases() {
+    // Zero lookahead (degenerate fabric: no NIC overhead, no headers):
+    // the parallel backend must fall back to sequential semantics.
+    let degenerate = NetConfig { nic_overhead_ns: 0, header_bytes: 0, ..NetConfig::default() };
+    let spec = registry::find("mergemin").unwrap();
+    let seq = run_knobs(spec, degenerate.clone(), Perturbations::default(), 1);
+    let par = run_knobs(spec, degenerate, Perturbations::default(), 4);
+    assert_digests_match("mergemin", "zero lookahead", &seq, &par);
+
+    // Single-node shards: a 2-core fleet on 2 threads (one node each).
+    let two = |threads: usize| {
+        Scenario::new(nanosort::algo::mergemin::MergeMin { values_per_core: 8, incast: 2 })
+            .nodes(2)
+            .seed(CONFORMANCE_SEED)
+            .threads(threads)
+            .run()
+            .unwrap()
+    };
+    assert_digests_match("mergemin", "single-node shards", &two(1), &two(2));
+
+    // More threads than nodes: shard count clamps, no empty shard wedges.
+    assert_digests_match("mergemin", "threads > nodes", &two(1), &two(64));
+}
+
+/// Different seeds still disagree with each other under the parallel
+/// backend (it must not collapse seed sensitivity while being exact).
+#[test]
+fn parallel_backend_keeps_seed_sensitivity() {
+    let run = |seed: u64| {
+        Scenario::new(NanoSort { keys_per_node: 8, buckets: 4, median_incast: 4, ..Default::default() })
+            .nodes(16)
+            .seed(seed)
+            .threads(4)
+            .run()
+            .unwrap()
+    };
+    assert_ne!(
+        digest_json(&run(7), "exec"),
+        digest_json(&run(8), "exec"),
+        "different seeds must produce different digests in parallel too"
+    );
+}

@@ -1,20 +1,21 @@
 //! Cross-module integration tests: the full stack (engine + fabric +
 //! algorithms + data planes) exercised together, including the XLA
-//! three-layer path against built artifacts.
+//! three-layer path against built artifacts (skipped on builds without
+//! the `pjrt` feature / without `make artifacts`).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
-use nanosort::algo::mergemin::{run_mergemin, MergeMinConfig};
-use nanosort::algo::millisort::{run_millisort, MilliSortConfig};
-use nanosort::algo::nanosort::{run_nanosort, NanoSortConfig};
+use nanosort::algo::millisort::MilliSort;
+use nanosort::algo::nanosort::NanoSort;
 use nanosort::compute::{LocalCompute, NativeCompute, XlaCompute};
 use nanosort::coordinator::{Args, ComputeChoice};
 use nanosort::net::NetConfig;
 use nanosort::runtime::XlaEngine;
+use nanosort::scenario::{RunReport, Scenario};
 
-fn xla_or_skip() -> Option<Rc<dyn LocalCompute>> {
+fn xla_or_skip() -> Option<Arc<dyn LocalCompute>> {
     match XlaCompute::open_default() {
-        Ok(x) => Some(Rc::new(x)),
+        Ok(x) => Some(Arc::new(x)),
         Err(e) => {
             eprintln!("skipping XLA integration (run `make artifacts`): {e:#}");
             None
@@ -22,23 +23,27 @@ fn xla_or_skip() -> Option<Rc<dyn LocalCompute>> {
     }
 }
 
+fn nanosort_64(values: bool, seed: u64) -> Scenario {
+    Scenario::new(NanoSort {
+        keys_per_node: 16,
+        buckets: 8,
+        median_incast: 8,
+        shuffle_values: values,
+        ..Default::default()
+    })
+    .nodes(64)
+    .seed(seed)
+}
+
 /// The headline path in miniature: NanoSort with GraySort value phase,
 /// node-local compute through the AOT Pallas/JAX artifacts via PJRT.
 #[test]
 fn nanosort_end_to_end_through_xla() {
     let Some(compute) = xla_or_skip() else { return };
-    let cfg = NanoSortConfig {
-        nodes: 64,
-        keys_per_node: 16,
-        buckets: 8,
-        median_incast: 8,
-        shuffle_values: true,
-        seed: 11,
-        ..Default::default()
-    };
-    let r = run_nanosort(&cfg, compute);
-    assert!(r.validation.ok(), "{:?}", r.validation);
-    assert!(r.validation.values_intact);
+    let r = nanosort_64(true, 11).compute_with(compute).run().unwrap();
+    let v = r.validation.sort.as_ref().unwrap();
+    assert!(v.ok(), "{v:?}");
+    assert!(v.values_intact);
 }
 
 /// The two data planes must be *observationally identical*: same final
@@ -47,43 +52,42 @@ fn nanosort_end_to_end_through_xla() {
 #[test]
 fn xla_and_native_data_planes_agree_exactly() {
     let Some(xla) = xla_or_skip() else { return };
-    let cfg = NanoSortConfig {
-        nodes: 64,
-        keys_per_node: 16,
-        buckets: 8,
-        median_incast: 8,
-        shuffle_values: false,
-        seed: 21,
-        ..Default::default()
-    };
-    let a = run_nanosort(&cfg, Rc::new(NativeCompute));
-    let b = run_nanosort(&cfg, xla);
+    let a = nanosort_64(false, 21).compute_with(Arc::new(NativeCompute)).run().unwrap();
+    let b = nanosort_64(false, 21).compute_with(xla).run().unwrap();
     assert_eq!(a.runtime(), b.runtime(), "timing must not depend on data plane");
     assert_eq!(a.summary.net.msgs_sent, b.summary.net.msgs_sent);
-    assert_eq!(a.validation.node_counts, b.validation.node_counts);
+    assert_eq!(
+        a.validation.sort.as_ref().unwrap().node_counts,
+        b.validation.sort.as_ref().unwrap().node_counts
+    );
     assert!(a.validation.ok() && b.validation.ok());
 }
 
 #[test]
 fn millisort_through_xla() {
     let Some(compute) = xla_or_skip() else { return };
-    let cfg = MilliSortConfig { cores: 16, total_keys: 512, seed: 3, ..Default::default() };
-    let r = run_millisort(&cfg, compute);
-    assert!(r.validation.ok(), "{:?}", r.validation);
+    let r = Scenario::new(MilliSort { total_keys: 512, ..Default::default() })
+        .nodes(16)
+        .seed(3)
+        .compute_with(compute)
+        .run()
+        .unwrap();
+    assert!(r.validation.ok(), "{}", r.validation.detail);
 }
 
 #[test]
 fn mergemin_through_xla() {
     let Some(compute) = xla_or_skip() else { return };
-    let cfg = MergeMinConfig {
-        cores: 32,
+    let r = Scenario::new(nanosort::algo::mergemin::MergeMin {
         values_per_core: 64,
         incast: 8,
-        seed: 5,
-        ..Default::default()
-    };
-    let r = run_mergemin(&cfg, compute);
-    assert!(r.correct());
+    })
+    .nodes(32)
+    .seed(5)
+    .compute_with(compute)
+    .run()
+    .unwrap();
+    assert!(r.validation.ok(), "{}", r.validation.detail);
 }
 
 /// Every artifact in the manifest loads, compiles, and executes.
@@ -119,18 +123,11 @@ fn all_artifacts_compile_and_execute() {
 /// must preserve (who wins, direction of effects).
 #[test]
 fn paper_shape_regressions() {
-    let native: Rc<dyn LocalCompute> = Rc::new(NativeCompute);
-
     // 1. NanoSort at 4,096 cores sorts 64 K keys an order of magnitude
     //    faster than MilliSort sorts 4 K keys on 256 cores.
-    let ns = run_nanosort(
-        &NanoSortConfig { nodes: 4096, keys_per_node: 16, seed: 1, ..Default::default() },
-        native.clone(),
-    );
-    let ms = run_millisort(
-        &MilliSortConfig { cores: 256, total_keys: 4096, seed: 1, ..Default::default() },
-        native.clone(),
-    );
+    let ns: RunReport =
+        Scenario::new(NanoSort::default()).nodes(4096).seed(1).run().unwrap();
+    let ms = Scenario::new(MilliSort::default()).nodes(256).seed(1).run().unwrap();
     assert!(ns.validation.ok() && ms.validation.ok());
     assert!(
         ns.runtime().as_us_f64() * 2.0 < ms.runtime().as_us_f64(),
@@ -140,13 +137,12 @@ fn paper_shape_regressions() {
     );
 
     // 2. Multicast off slows NanoSort down (§6.2.3 direction).
-    let mut no_mcast =
-        NanoSortConfig { nodes: 256, keys_per_node: 16, seed: 1, ..Default::default() };
-    no_mcast.net = NetConfig { multicast: false, ..Default::default() };
-    let without = run_nanosort(&no_mcast, native.clone());
-    let mut with = no_mcast.clone();
-    with.net.multicast = true;
-    let with_r = run_nanosort(&with, native);
+    let base = || Scenario::new(NanoSort::default()).nodes(256).seed(1);
+    let without = base()
+        .net(NetConfig { multicast: false, ..Default::default() })
+        .run()
+        .unwrap();
+    let with_r = base().run().unwrap();
     assert!(with_r.runtime() < without.runtime());
 }
 

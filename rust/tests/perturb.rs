@@ -131,7 +131,7 @@ fn all_distributions_validate_across_workloads() {
     // smoke shape (the registry smoke tuple, via the tier machinery,
     // only covers Uniform — here we bend the inputs).
     for spec in registry::WORKLOADS {
-        let (base, _) = run_tier(spec, Tier::Smoke, ComputeChoice::Native).unwrap();
+        let (base, _) = run_tier(spec, Tier::Smoke, ComputeChoice::Native, 1).unwrap();
         assert!(base.validation.ok(), "{}", spec.name);
     }
     for dist in KeyDistribution::ALL {

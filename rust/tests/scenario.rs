@@ -1,14 +1,10 @@
 //! Cross-workload integration tests for the `Scenario`/`Workload` API and
 //! the registry-driven CLI path: every registry entry runs at CI-small
-//! sizes, validates, and produces byte-for-byte deterministic reports.
+//! sizes, validates, and produces byte-for-byte deterministic reports —
+//! at any executor thread count.
 
-use std::rc::Rc;
-
-use nanosort::algo::mergemin::{run_mergemin, MergeMin, MergeMinConfig};
-use nanosort::algo::millisort::{run_millisort, MilliSortConfig};
-use nanosort::algo::nanosort::{run_nanosort, NanoSort, NanoSortConfig};
-use nanosort::algo::setalgebra::{run_setalgebra, SetAlgebraConfig};
-use nanosort::compute::NativeCompute;
+use nanosort::algo::mergemin::MergeMin;
+use nanosort::algo::nanosort::NanoSort;
 use nanosort::coordinator::Args;
 use nanosort::net::NetConfig;
 use nanosort::scenario::{registry, RunReport, Scenario};
@@ -16,6 +12,10 @@ use nanosort::sim::Time;
 
 /// Run one registry entry at its CI-small smoke size.
 fn run_smoke(spec: &registry::WorkloadSpec, seed: u64) -> RunReport {
+    run_smoke_threads(spec, seed, 1)
+}
+
+fn run_smoke_threads(spec: &registry::WorkloadSpec, seed: u64, threads: usize) -> RunReport {
     let params = registry::params_from_pairs(spec, spec.smoke)
         .unwrap_or_else(|e| panic!("{}: smoke params: {e:#}", spec.name));
     let workload =
@@ -24,6 +24,7 @@ fn run_smoke(spec: &registry::WorkloadSpec, seed: u64) -> RunReport {
     Scenario::from_dyn(workload)
         .nodes(nodes)
         .seed(seed)
+        .threads(threads)
         .run()
         .unwrap_or_else(|e| panic!("{}: run: {e:#}", spec.name))
 }
@@ -56,6 +57,20 @@ fn reports_are_byte_for_byte_deterministic() {
             "workload {}",
             spec.name
         );
+    }
+}
+
+/// The `threads` knob changes wall-clock scheduling only: rendered
+/// reports are byte-identical between the sequential and the sharded
+/// backend for every registry workload. (The full digest matrix —
+/// tiers × perturbations — lives in tests/exec.rs.)
+#[test]
+fn thread_count_never_changes_the_report() {
+    for spec in registry::WORKLOADS {
+        let seq = run_smoke_threads(spec, 7, 1);
+        let par = run_smoke_threads(spec, 7, 4);
+        assert_eq!(seq.render(), par.render(), "workload {}", spec.name);
+        assert_eq!(seq.summary.events, par.summary.events, "workload {}", spec.name);
     }
 }
 
@@ -94,22 +109,22 @@ fn unknown_workload_and_bad_params_error_cleanly() {
     assert!(registry::parse_args(spec, &mut args).is_err());
 }
 
-/// The deprecated `run_xxx` shims and the Scenario API are the same code
-/// path: identical simulated results for identical inputs.
+/// Typed workloads through `Scenario::new` and type-erased ones through
+/// the registry are the same code path: identical simulated results.
 #[test]
-fn shims_agree_with_scenario_api() {
-    let shim = run_nanosort(
-        &NanoSortConfig {
-            nodes: 16,
-            keys_per_node: 8,
-            buckets: 4,
-            median_incast: 4,
-            seed: 11,
-            ..Default::default()
-        },
-        Rc::new(NativeCompute),
-    );
-    let api = Scenario::new(NanoSort {
+fn typed_and_registry_paths_agree() {
+    let spec = registry::find("nanosort").unwrap();
+    let params = registry::params_from_pairs(
+        spec,
+        &[("nodes", 16), ("kpn", 8), ("buckets", 4)],
+    )
+    .unwrap();
+    let via_registry = Scenario::from_dyn((spec.build)(&params).unwrap())
+        .nodes(16)
+        .seed(11)
+        .run()
+        .unwrap();
+    let typed = Scenario::new(NanoSort {
         keys_per_node: 8,
         buckets: 4,
         median_incast: 4,
@@ -119,30 +134,26 @@ fn shims_agree_with_scenario_api() {
     .seed(11)
     .run()
     .unwrap();
-    assert_eq!(shim.runtime(), api.runtime());
-    assert_eq!(shim.summary.net.msgs_sent, api.summary.net.msgs_sent);
+    assert_eq!(typed.runtime(), via_registry.runtime());
+    assert_eq!(typed.summary.net.msgs_sent, via_registry.summary.net.msgs_sent);
     assert_eq!(
-        shim.validation.node_counts,
-        api.validation.sort.as_ref().unwrap().node_counts
+        typed.validation.sort.as_ref().unwrap().node_counts,
+        via_registry.validation.sort.as_ref().unwrap().node_counts
     );
 
-    let shim = run_mergemin(
-        &MergeMinConfig {
-            cores: 8,
-            values_per_core: 16,
-            incast: 4,
-            seed: 11,
-            ..Default::default()
-        },
-        Rc::new(NativeCompute),
-    );
-    let api = Scenario::new(MergeMin { values_per_core: 16, incast: 4 })
+    let spec = registry::find("mergemin").unwrap();
+    let params =
+        registry::params_from_pairs(spec, &[("cores", 8), ("vpc", 16), ("incast", 4)])
+            .unwrap();
+    let via_registry =
+        Scenario::from_dyn((spec.build)(&params).unwrap()).nodes(8).seed(11).run().unwrap();
+    let typed = Scenario::new(MergeMin { values_per_core: 16, incast: 4 })
         .nodes(8)
         .seed(11)
         .run()
         .unwrap();
-    assert_eq!(shim.summary.makespan, api.summary.makespan);
-    assert_eq!(Some(shim.found_min), api.metric_u64("found_min"));
+    assert_eq!(typed.summary.makespan, via_registry.summary.makespan);
+    assert_eq!(typed.metric_u64("found_min"), via_registry.metric_u64("found_min"));
 }
 
 /// Scenario-level environment knobs reach the fabric for every workload.
@@ -169,21 +180,4 @@ fn scenario_net_knobs_apply_across_workloads() {
             spec.name
         );
     }
-}
-
-/// Legacy shims still validate on their own config types (compat guard).
-#[test]
-fn legacy_shims_still_validate() {
-    let native = || Rc::new(NativeCompute);
-    assert!(run_millisort(
-        &MilliSortConfig { cores: 8, total_keys: 128, seed: 5, ..Default::default() },
-        native()
-    )
-    .validation
-    .ok());
-    assert!(run_setalgebra(
-        &SetAlgebraConfig { cores: 8, lists: 3, seed: 5, ..Default::default() },
-        native()
-    )
-    .correct());
 }
