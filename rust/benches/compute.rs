@@ -1,0 +1,82 @@
+//! Data-plane kernel microbenchmarks: `sort` / `sort_pairs` / `partition`
+//! on the native (comparison) and radix (count-then-scatter) planes at
+//! 2^10 .. 2^20 keys, so the kernel win is visible independent of the
+//! simulator. (Criterion-style output from the in-repo harness — the
+//! offline registry has no criterion; see DESIGN.md "Dependency
+//! substitutions".)
+//!
+//! Run: `cargo bench --bench compute [-- --quick]` (quick caps at 2^16).
+
+#[path = "common.rs"]
+mod common;
+
+use common::{fmt_t, section, Bench};
+use nanosort::compute::{LocalCompute, NativeCompute, RadixCompute};
+use nanosort::sim::SplitMix64;
+
+fn keys(n: usize) -> Vec<u64> {
+    let mut rng = SplitMix64::new(0xC0FFEE ^ n as u64);
+    (0..n).map(|_| rng.next_u64() % (u64::MAX - 1)).collect()
+}
+
+fn label(kernel: &str, plane: &str, n: usize) -> &'static str {
+    Box::leak(format!("{kernel}/{plane}/n=2^{}", n.trailing_zeros()).into_boxed_str())
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let max_pow = if quick { 16 } else { 20 };
+    let sizes: Vec<usize> = (10..=max_pow).step_by(2).map(|p| 1usize << p).collect();
+    let native = NativeCompute;
+    let radix = RadixCompute;
+    let planes: [(&str, &dyn LocalCompute); 2] = [("native", &native), ("radix", &radix)];
+
+    for &n in &sizes {
+        let samples = if n >= 1 << 18 { 5 } else { 10 };
+        let base = keys(n);
+
+        section(&format!("sort — {n} keys"));
+        let mut means = Vec::new();
+        for (name, plane) in planes {
+            let mean = Bench::new(label("sort", name, n)).samples(samples).run(|| {
+                let mut k = base.clone();
+                plane.sort(&mut k);
+                k[0]
+            });
+            means.push((name, mean));
+        }
+        speedup_line(&means);
+
+        section(&format!("sort_pairs — {n} (key, origin) pairs"));
+        let pairs: Vec<(u64, u64)> =
+            base.iter().enumerate().map(|(i, &k)| (k, i as u64)).collect();
+        let mut means = Vec::new();
+        for (name, plane) in planes {
+            let mean = Bench::new(label("sort_pairs", name, n)).samples(samples).run(|| {
+                let mut p = pairs.clone();
+                plane.sort_pairs(&mut p);
+                p[0].1
+            });
+            means.push((name, mean));
+        }
+        speedup_line(&means);
+
+        section(&format!("partition — {n} keys, 15 pivots (NanoSort shuffle shape)"));
+        let mut pivots = keys(15);
+        pivots.sort_unstable();
+        let mut means = Vec::new();
+        for (name, plane) in planes {
+            let mean = Bench::new(label("partition", name, n)).samples(samples).run(|| {
+                plane.partition(&base, &pivots).len()
+            });
+            means.push((name, mean));
+        }
+        speedup_line(&means);
+    }
+}
+
+fn speedup_line(means: &[(&str, f64)]) {
+    if let [(a, ta), (b, tb)] = means {
+        println!("    -> {a} {} vs {b} {} ({:.2}x)", fmt_t(*ta), fmt_t(*tb), ta / tb.max(1e-12));
+    }
+}

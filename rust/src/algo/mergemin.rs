@@ -104,10 +104,13 @@ impl Program for MergeMinNode {
     type Msg = MinMsg;
 
     fn on_start(&mut self, ctx: &mut Ctx<MinMsg>) {
-        // Local scan (cold cache, like Fig 2's measurement).
+        // Local scan (cold cache, like Fig 2's measurement). An empty
+        // value list contributes the identity (`u64::MAX` — real values
+        // are strictly below it), so load-perturbed cores with nothing to
+        // scan degrade gracefully instead of panicking.
         let n = self.values.len() as u64;
         ctx.compute(ctx.core().scan_min_cycles(n, Temp::Cold));
-        self.current_min = self.compute.min(&self.values);
+        self.current_min = self.compute.min(&self.values).unwrap_or(u64::MAX);
         if self.is_chain() {
             // Straight line: the last core starts the relay.
             if self.id == self.cores - 1 {
@@ -128,7 +131,8 @@ impl Program for MergeMinNode {
 
     fn on_message(&mut self, ctx: &mut Ctx<MinMsg>, _src: NodeId, msg: MinMsg) {
         ctx.compute(ctx.core().merge_cycles(1));
-        self.current_min = self.compute.min(&[self.current_min, msg.value]);
+        self.current_min =
+            self.compute.min(&[self.current_min, msg.value]).expect("two values");
         if self.is_chain() {
             if self.id == 0 {
                 self.result.store(self.current_min, Ordering::Relaxed);
@@ -190,7 +194,7 @@ impl Workload for MergeMin {
                 let values: Vec<u64> = (0..counts[id])
                     .map(|_| rng.next_u64() % (u64::MAX - 1))
                     .collect();
-                true_min = true_min.min(*values.iter().min().unwrap());
+                true_min = true_min.min(values.iter().copied().min().unwrap_or(u64::MAX));
                 MergeMinNode {
                     id,
                     cfg_incast: self.incast,

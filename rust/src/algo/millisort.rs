@@ -20,7 +20,7 @@
 //!    NanoSort), then sorts the received keys.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -29,7 +29,9 @@ use crate::compute::LocalCompute;
 use crate::cpu::Temp;
 use crate::graysort::validate_sorted_output;
 use crate::nanopu::{Ctx, NodeId, Program, WireMsg};
-use crate::scenario::{Built, Finish, RunReport, ScenarioEnv, Validation, Workload};
+use crate::scenario::{
+    Built, Finish, NodeSlots, RunReport, ScenarioEnv, Validation, Workload,
+};
 
 /// Cycles per splitter for a local rank lookup (binary search on the
 /// sorted local keys).
@@ -91,9 +93,9 @@ struct MsShared {
     cores: usize,
     reduction_factor: usize,
     probe_rounds: u32,
-    /// Per-node output slots (`Mutex`: programs run on executor worker
-    /// threads; each node writes only its own slot).
-    outputs: Mutex<Vec<Vec<u64>>>,
+    /// Per-node output sink: write-once slots, lock-free from executor
+    /// worker threads (each node writes exactly its own slot, once).
+    outputs: NodeSlots<Vec<u64>>,
 }
 
 pub struct MilliSortNode {
@@ -241,11 +243,17 @@ impl MilliSortNode {
                 ctx.core()
                     .bucketize_cycles(self.keys.len() as u64, boundaries.len() as u64),
             );
-            let buckets = self.compute.bucketize(&self.keys, boundaries);
+            // Fused data-plane kernel: counting pass + direct scatter
+            // (bucket = destination core). The local keys are sorted, so
+            // bucket-major iteration preserves the old send order.
             let keys = std::mem::take(&mut self.keys);
-            for (key, bucket) in keys.into_iter().zip(buckets) {
-                self.sent += 1;
-                ctx.send(bucket as usize, MsMsg::Key { key, origin: self.id as u32 });
+            for (bucket, members) in
+                self.compute.partition(&keys, boundaries).into_iter().enumerate()
+            {
+                for key in members {
+                    self.sent += 1;
+                    ctx.send(bucket, MsMsg::Key { key, origin: self.id as u32 });
+                }
             }
         }
         self.ct_sum = (self.sent, self.received);
@@ -302,7 +310,7 @@ impl MilliSortNode {
             ctx.compute(ctx.core().sort_cycles(n, Temp::Warm));
             let mut keys = std::mem::take(&mut self.received_keys);
             self.compute.sort(&mut keys);
-            self.shared.outputs.lock().expect("outputs lock")[self.id] = keys;
+            self.shared.outputs.set(self.id, keys);
             ctx.finish();
         } else {
             self.ct_epoch += 1;
@@ -416,7 +424,7 @@ impl Workload for MilliSort {
             cores: env.nodes,
             reduction_factor: self.reduction_factor,
             probe_rounds: self.rounds(),
-            outputs: Mutex::new(vec![Vec::new(); env.nodes]),
+            outputs: NodeSlots::new(env.nodes),
         });
         // Key values come from the scenario's input distribution
         // (`Uniform` = the exact pre-perturbation KeyGen path).
@@ -445,7 +453,7 @@ impl Workload for MilliSort {
             .collect();
 
         let finish: Finish = Box::new(move |env, summary| {
-            let outputs = shared.outputs.lock().expect("outputs lock");
+            let outputs = shared.outputs.as_slices();
             let validation = validate_sorted_output(&input, &outputs, None);
             RunReport::new("millisort", env, summary, Validation::from_sort(validation))
         });

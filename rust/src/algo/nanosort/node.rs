@@ -1,6 +1,7 @@
 //! The per-core NanoSort program and run driver.
 
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -10,7 +11,7 @@ use crate::cpu::Temp;
 use crate::graysort::{validate_sorted_output, value_of_key};
 use crate::nanopu::{Ctx, Group, GroupId, NodeId, Program, WireMsg};
 use crate::scenario::{
-    Built, Finish, MetricValue, RunReport, ScenarioEnv, Validation, Workload,
+    Built, Finish, MetricValue, NodeSlots, RunReport, ScenarioEnv, Validation, Workload,
 };
 use crate::sim::MAX_STAGES;
 
@@ -122,20 +123,16 @@ struct Shared {
     /// Engine multicast-group id offsets per level (groups are registered
     /// level-major, group-index-minor).
     group_offsets: Vec<usize>,
-    /// Cross-node result sink. A `Mutex` (not `RefCell`): node programs
-    /// run on executor worker threads. Writes are per-node slots plus a
-    /// commutative max, so contention is nil and results are
-    /// order-independent.
-    outputs: Mutex<Outputs>,
-}
-
-#[derive(Default)]
-struct Outputs {
-    final_keys: Vec<Vec<u64>>,
-    final_values: Vec<Vec<u64>>,
+    /// Cross-node result sinks, written from executor worker threads.
+    /// Write-once per-node slots (§Perf: one shared `Mutex` here was a
+    /// 2×-per-node acquisition burst at the end of a 65,536-core run
+    /// under `--threads N`; the slots are lock-free) plus a commutative
+    /// atomic max, so results are order-independent.
+    final_keys: NodeSlots<Vec<u64>>,
+    final_values: NodeSlots<Vec<u64>>,
     /// Highest termination-detection epoch any group root needed (0 = the
     /// first count-tree pass always found sent == received).
-    max_retry_epoch: u16,
+    max_retry_epoch: AtomicU64,
 }
 
 impl Shared {
@@ -275,13 +272,22 @@ impl NanoSortNode {
     }
 
     fn sort_keys_with_origins(&mut self) {
-        // Data plane: sort via the LocalCompute (XLA or native), then
-        // realign origins by argsort. Origins follow their key.
-        let mut idx: Vec<usize> = (0..self.keys.len()).collect();
-        let keys_ref = &self.keys;
-        idx.sort_unstable_by_key(|&i| keys_ref[i]);
-        self.origins = idx.iter().map(|&i| self.origins[i]).collect();
-        self.compute.sort(&mut self.keys);
+        // Fused data-plane kernel: sort (key, origin) in one pass instead
+        // of argsort-then-permute (which cost an index vector, a permuted
+        // copy of the origins, and a second full sort of the keys). Ties
+        // keep input order — the backend-independent contract (DESIGN.md
+        // §8), so every plane produces the same origin permutation.
+        let mut pairs: Vec<(u64, u64)> = self
+            .keys
+            .iter()
+            .copied()
+            .zip(self.origins.iter().map(|&o| o as u64))
+            .collect();
+        self.compute.sort_pairs(&mut pairs);
+        for (i, (key, origin)) in pairs.into_iter().enumerate() {
+            self.keys[i] = key;
+            self.origins[i] = origin as u32;
+        }
     }
 
     // --------------------------------------------------------- median tree
@@ -369,15 +375,28 @@ impl NanoSortNode {
 
         if !self.keys.is_empty() {
             ctx.compute(ctx.core().bucketize_cycles(self.keys.len() as u64, (b - 1) as u64));
-            let buckets = self.compute.bucketize(&self.keys, pivots);
+            // Fused data-plane kernel: one counting pass + direct scatter
+            // into per-bucket buffers replaces the per-key bucketize +
+            // caller-side routing loop. The keys are sorted at this point,
+            // so bucket-major iteration here IS input order — the RNG draw
+            // and send sequences are unchanged.
             let keys = std::mem::take(&mut self.keys);
             let origins = std::mem::take(&mut self.origins);
-            for ((key, origin), bucket) in keys.into_iter().zip(origins).zip(buckets) {
-                // Uniformly random node within the bucket's partition
-                // (paper §4 step 2c).
-                let dst = base + bucket as usize * part + ctx.rng().index(part);
-                self.sent_this_level += 1;
-                ctx.send(dst, NsMsg::Key { level: self.level as u8, key, origin });
+            let pairs: Vec<(u64, u64)> =
+                keys.into_iter().zip(origins.into_iter().map(u64::from)).collect();
+            for (bucket, members) in
+                self.compute.partition_pairs(&pairs, pivots).into_iter().enumerate()
+            {
+                for (key, origin) in members {
+                    // Uniformly random node within the bucket's partition
+                    // (paper §4 step 2c).
+                    let dst = base + bucket * part + ctx.rng().index(part);
+                    self.sent_this_level += 1;
+                    ctx.send(
+                        dst,
+                        NsMsg::Key { level: self.level as u8, key, origin: origin as u32 },
+                    );
+                }
             }
         }
         // Open this epoch's running sums with our own (current) counters.
@@ -400,8 +419,8 @@ impl NanoSortNode {
                 // across epochs; `received` catches up as deliveries land.
                 let complete = self.ct_sum.0 == self.ct_sum.1;
                 if complete {
-                    let mut out = self.shared.outputs.lock().expect("outputs lock");
-                    out.max_retry_epoch = out.max_retry_epoch.max(epoch);
+                    // Commutative max: order-independent, lock-free.
+                    self.shared.max_retry_epoch.fetch_max(epoch as u64, Ordering::Relaxed);
                 }
                 let gid = self.shared.group_id(self.id, self.level);
                 ctx.broadcast_to(
@@ -473,8 +492,7 @@ impl NanoSortNode {
         let n = self.keys.len() as u64;
         ctx.compute(ctx.core().sort_cycles(n, Temp::Warm));
         self.sort_keys_with_origins();
-        self.shared.outputs.lock().expect("outputs lock").final_keys[self.id] =
-            self.keys.clone();
+        self.shared.final_keys.set(self.id, self.keys.clone());
 
         if !self.shared.shuffle_values {
             ctx.finish();
@@ -484,8 +502,7 @@ impl NanoSortNode {
         self.values_by_slot = vec![0; self.keys.len()];
         self.values_received = 0;
         if self.keys.is_empty() {
-            self.shared.outputs.lock().expect("outputs lock").final_values[self.id] =
-                Vec::new();
+            self.shared.final_values.set(self.id, Vec::new());
             ctx.finish();
             return;
         }
@@ -539,8 +556,7 @@ impl NanoSortNode {
         }
         self.values_received += 1;
         if self.values_received == self.keys.len() {
-            self.shared.outputs.lock().expect("outputs lock").final_values[self.id] =
-                self.values_by_slot.clone();
+            self.shared.final_values.set(self.id, self.values_by_slot.clone());
             ctx.finish();
         }
     }
@@ -676,11 +692,9 @@ impl Workload for NanoSort {
             shuffle_values: self.shuffle_values,
             pivot_mode: self.pivot_mode,
             group_offsets,
-            outputs: Mutex::new(Outputs {
-                final_keys: vec![Vec::new(); env.nodes],
-                final_values: vec![Vec::new(); env.nodes],
-                max_retry_epoch: 0,
-            }),
+            final_keys: NodeSlots::new(env.nodes),
+            final_values: NodeSlots::new(env.nodes),
+            max_retry_epoch: AtomicU64::new(0),
         });
 
         // Pre-load the cluster (paper §5.2: records loaded before the
@@ -740,18 +754,21 @@ impl Workload for NanoSort {
 
         let shuffle_values = self.shuffle_values;
         let finish: Finish = Box::new(move |env, summary| {
-            let outputs = shared.outputs.lock().expect("outputs lock");
+            // Per-node write-once slots merge in canonical order by
+            // construction: `as_slices` is index order, clone-free.
+            let final_keys = shared.final_keys.as_slices();
+            let final_values = shared.final_values.as_slices();
             let validation = validate_sorted_output(
                 &input,
-                &outputs.final_keys,
-                shuffle_values.then_some(outputs.final_values.as_slice()),
+                &final_keys,
+                shuffle_values.then_some(final_values.as_slice()),
             );
             let skew = crate::graysort::bucket_skew(&validation.node_counts);
-            let max_retry_epoch = outputs.max_retry_epoch;
+            let max_retry_epoch = shared.max_retry_epoch.load(Ordering::Relaxed);
             RunReport::new("nanosort", env, summary, Validation::from_sort(validation))
                 .with_metric("skew", MetricValue::F64(skew))
                 .with_metric("depth", MetricValue::U64(depth as u64))
-                .with_metric("max_retry_epoch", MetricValue::U64(max_retry_epoch as u64))
+                .with_metric("max_retry_epoch", MetricValue::U64(max_retry_epoch))
         });
         Ok(Built { programs, groups, finish })
     }

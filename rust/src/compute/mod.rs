@@ -4,14 +4,33 @@
 //! *data* transformations (keys actually moving and getting sorted) go
 //! through a [`LocalCompute`] implementation:
 //!
-//! - [`NativeCompute`] — pure Rust; the oracle and the fast default for
-//!   huge sweeps.
+//! - [`NativeCompute`] — pure Rust comparison kernels; the
+//!   differential-testing **oracle**. Every other backend is defined (and
+//!   tested, `rust/tests/compute.rs`) to produce byte-identical outputs.
+//! - [`RadixCompute`] — count-then-scatter LSD radix kernels for the u64
+//!   key workloads (DESIGN.md §8); the default data plane. Identical
+//!   outputs to the oracle by the tie-break contract below, measurably
+//!   faster on large blocks.
 //! - [`XlaCompute`] — the paper-mandated three-layer path: each operation
 //!   executes an AOT-compiled artifact (Pallas kernel → JAX → HLO text →
 //!   PJRT) through [`crate::runtime::XlaEngine`]. Shapes are padded up to
 //!   the nearest compiled variant with `u64::MAX` sentinels.
 //!
-//! Both implementations are cross-checked against each other in tests.
+//! # Determinism contract (DESIGN.md §8)
+//!
+//! Backends are interchangeable *per digest byte*: a conformance run must
+//! produce the same digest on every plane. That pins each operation to a
+//! single canonical output, including tie-breaks:
+//!
+//! - [`LocalCompute::sort`] — ascending; u64 duplicates are
+//!   indistinguishable, so any correct sort is canonical.
+//! - [`LocalCompute::sort_pairs`] — ascending by key, **stable**: pairs
+//!   with equal keys keep their input order. (Backend-independent, unlike
+//!   an unstable argsort whose equal-key permutation is an implementation
+//!   detail.)
+//! - [`LocalCompute::partition`] / [`LocalCompute::partition_pairs`] —
+//!   bucket of a key = `|{i : pivots[i] <= key}|`; within each bucket,
+//!   elements keep their input order.
 //!
 //! Timing note: data-plane calls are timing-neutral — every operation's
 //! cost is charged through [`crate::cpu::CoreModel`] by the node program,
@@ -20,9 +39,11 @@
 //! the same kernel output is produced regardless of which cores straggle.
 
 mod native;
+mod radix;
 mod xla_compute;
 
 pub use native::NativeCompute;
+pub use radix::RadixCompute;
 pub use xla_compute::XlaCompute;
 
 /// Key-space data operations a simulated core performs.
@@ -30,13 +51,20 @@ pub use xla_compute::XlaCompute;
 /// Keys must be `< u64::MAX` (the padding sentinel); the GraySort
 /// generator guarantees this.
 ///
+/// The fused kernels ([`LocalCompute::sort_pairs`],
+/// [`LocalCompute::partition`], [`LocalCompute::partition_pairs`]) have
+/// default implementations expressing the oracle semantics in terms of
+/// the base operations, so a backend only overrides them when it can do
+/// better — [`XlaCompute`] inherits the defaults, [`RadixCompute`]
+/// replaces them with single-pass count-then-scatter kernels.
+///
 /// `Send + Sync`: the parallel executor ([`crate::sim::exec`]) shares one
 /// data plane across shard worker threads through `Arc`. The operations
 /// are pure (same inputs → same outputs, no draw order), so concurrent
-/// use cannot perturb results. [`NativeCompute`] is trivially
-/// thread-safe. [`XlaCompute`] is *not* safe to drive from multiple
-/// threads — the real PJRT CPU client is single-threaded — so the
-/// scenario layer refuses to combine the XLA plane with a threaded
+/// use cannot perturb results. [`NativeCompute`] and [`RadixCompute`] are
+/// trivially thread-safe. [`XlaCompute`] is *not* safe to drive from
+/// multiple threads — the real PJRT CPU client is single-threaded — so
+/// the scenario layer refuses to combine the XLA plane with a threaded
 /// executor ([`crate::scenario::Scenario::threads`] must stay 1), and
 /// the default build stubs the PJRT runtime out entirely (see
 /// [`crate::runtime`]; the bound is satisfiable there because the stub
@@ -45,15 +73,51 @@ pub trait LocalCompute: Send + Sync {
     /// Sort a block of keys ascending.
     fn sort(&self, keys: &mut Vec<u64>);
 
-    /// Minimum of a non-empty slice.
-    fn min(&self, vals: &[u64]) -> u64;
+    /// Minimum of a slice; `None` when the slice is empty.
+    fn min(&self, vals: &[u64]) -> Option<u64>;
 
     /// Bucket index of each key against `pivots` (sorted, len = b-1):
     /// bucket = |{i : key >= pivots[i]}| in `[0, b)`.
     fn bucketize(&self, keys: &[u64], pivots: &[u64]) -> Vec<u32>;
 
-    /// Element-wise lower median across rows (all rows same length).
+    /// Element-wise lower median across rows. All rows must be the same
+    /// length (callers aggregate fixed-width pivot vectors); ragged input
+    /// is a caller bug and panics rather than silently truncating.
     fn median_combine(&self, rows: &[Vec<u64>]) -> Vec<u64>;
+
+    /// Fused kernel: sort `(key, payload)` pairs ascending by key,
+    /// **stable** (equal keys keep input order — the contract every
+    /// backend must match, so origin permutations are digest-identical
+    /// across planes). One pass over the pair array replaces the
+    /// argsort-then-permute pattern.
+    fn sort_pairs(&self, pairs: &mut Vec<(u64, u64)>) {
+        pairs.sort_by_key(|p| p.0);
+    }
+
+    /// Fused kernel: route every key to its bucket in one counting pass +
+    /// direct scatter. `out[b]` holds, in input order, the keys with
+    /// bucket index `b` (same bucket definition as
+    /// [`LocalCompute::bucketize`]); `out.len() == pivots.len() + 1`.
+    fn partition(&self, keys: &[u64], pivots: &[u64]) -> Vec<Vec<u64>> {
+        let tags = self.bucketize(keys, pivots);
+        let mut out = vec![Vec::new(); pivots.len() + 1];
+        for (&k, &t) in keys.iter().zip(&tags) {
+            out[t as usize].push(k);
+        }
+        out
+    }
+
+    /// [`LocalCompute::partition`] over `(key, payload)` pairs (bucket by
+    /// the key, the payload rides along; input order kept per bucket).
+    fn partition_pairs(&self, pairs: &[(u64, u64)], pivots: &[u64]) -> Vec<Vec<(u64, u64)>> {
+        let keys: Vec<u64> = pairs.iter().map(|p| p.0).collect();
+        let tags = self.bucketize(&keys, pivots);
+        let mut out = vec![Vec::new(); pivots.len() + 1];
+        for (&pair, &t) in pairs.iter().zip(&tags) {
+            out[t as usize].push(pair);
+        }
+        out
+    }
 
     /// Implementation name (for reports).
     fn name(&self) -> &'static str;

@@ -2,7 +2,10 @@
 
 use super::LocalCompute;
 
-/// Straightforward Rust implementations (pdqsort, linear scans).
+/// Straightforward Rust implementations (pdqsort, linear scans). The
+/// fused kernels come from the trait defaults, which are written in
+/// terms of these base operations — so this backend *is* the oracle
+/// semantics the radix and XLA planes are differentially tested against.
 #[derive(Debug, Clone, Default)]
 pub struct NativeCompute;
 
@@ -11,8 +14,8 @@ impl LocalCompute for NativeCompute {
         keys.sort_unstable();
     }
 
-    fn min(&self, vals: &[u64]) -> u64 {
-        *vals.iter().min().expect("min of empty slice")
+    fn min(&self, vals: &[u64]) -> Option<u64> {
+        vals.iter().copied().min()
     }
 
     fn bucketize(&self, keys: &[u64], pivots: &[u64]) -> Vec<u32> {
@@ -24,8 +27,15 @@ impl LocalCompute for NativeCompute {
 
     fn median_combine(&self, rows: &[Vec<u64>]) -> Vec<u64> {
         let m = rows.len();
-        assert!(m > 0);
+        assert!(m > 0, "median_combine of zero rows");
         let p = rows[0].len();
+        // Ragged rows would silently index out of bounds mid-column (or
+        // truncate, depending on iteration order); fail loudly instead.
+        assert!(
+            rows.iter().all(|r| r.len() == p),
+            "median_combine rows must share one length (got {:?})",
+            rows.iter().map(|r| r.len()).collect::<Vec<_>>()
+        );
         let mut out = Vec::with_capacity(p);
         let mut col = Vec::with_capacity(m);
         for j in 0..p {
@@ -76,10 +86,53 @@ mod tests {
         assert_eq!(nc.median_combine(&rows5), vec![3]);
     }
 
+    /// Regression: ragged rows used to panic deep inside the column loop
+    /// with a bare index error; the precondition is now checked up front
+    /// with a message naming the row lengths.
     #[test]
-    fn min_works() {
+    #[should_panic(expected = "median_combine rows must share one length")]
+    fn median_combine_rejects_ragged_rows() {
+        NativeCompute.median_combine(&[vec![1u64, 2, 3], vec![4, 5]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "median_combine of zero rows")]
+    fn median_combine_rejects_zero_rows() {
+        NativeCompute.median_combine(&[]);
+    }
+
+    /// Regression: `min` used to `expect` on an empty slice; it now
+    /// reports emptiness through the type instead of panicking.
+    #[test]
+    fn min_is_empty_safe() {
         let nc = NativeCompute;
-        assert_eq!(nc.min(&[5, 2, 9]), 2);
-        assert_eq!(nc.min(&[7]), 7);
+        assert_eq!(nc.min(&[5, 2, 9]), Some(2));
+        assert_eq!(nc.min(&[7]), Some(7));
+        assert_eq!(nc.min(&[]), None);
+    }
+
+    /// Trait-default fused kernels express the oracle semantics.
+    #[test]
+    fn default_sort_pairs_is_stable_by_key() {
+        let nc = NativeCompute;
+        let mut pairs = vec![(3u64, 0u64), (1, 1), (3, 2), (1, 3), (2, 4), (3, 5)];
+        nc.sort_pairs(&mut pairs);
+        assert_eq!(pairs, vec![(1, 1), (1, 3), (2, 4), (3, 0), (3, 2), (3, 5)]);
+    }
+
+    #[test]
+    fn default_partition_matches_bucketize_with_input_order_ties() {
+        let nc = NativeCompute;
+        let pivots = vec![10u64, 20];
+        let keys = vec![25u64, 5, 10, 15, 9, 20, 30];
+        let parts = nc.partition(&keys, &pivots);
+        assert_eq!(parts, vec![vec![5, 9], vec![10, 15], vec![25, 20, 30]]);
+        // Pair form: payloads ride along, same bucket order.
+        let pairs: Vec<(u64, u64)> =
+            keys.iter().enumerate().map(|(i, &k)| (k, i as u64)).collect();
+        let pp = nc.partition_pairs(&pairs, &pivots);
+        assert_eq!(pp[0], vec![(5, 1), (9, 4)]);
+        assert_eq!(pp[1], vec![(10, 2), (15, 3)]);
+        assert_eq!(pp[2], vec![(25, 0), (20, 5), (30, 6)]);
     }
 }

@@ -1,0 +1,273 @@
+//! Count-then-scatter radix data plane (DESIGN.md §8).
+//!
+//! The sort-family workloads move uniform-ish u64 keys, which is exactly
+//! the shape where counting kernels beat comparison sorts (hardware
+//! sorting surveys and distributed radix partitioning both land here):
+//!
+//! - [`RadixCompute::sort`] / [`RadixCompute::sort_pairs`] — LSD radix
+//!   over 8-bit digits, modeled on the `lsb_radix_sort` kernels of the
+//!   ska-sort family: one histogram pass computes all eight digit
+//!   distributions, trivial digits (every key shares the byte — common
+//!   once keys are confined to a bucket's sub-range) are skipped, and the
+//!   remaining digits scatter between the key buffer and one scratch
+//!   buffer. LSD scatter is stable, which is what makes the pair kernel's
+//!   tie-break ("equal keys keep input order") hold by construction.
+//! - [`RadixCompute::partition`] / [`RadixCompute::partition_pairs`] —
+//!   one tag+count pass, then a direct scatter into per-bucket buffers
+//!   allocated at exact capacity (no push-time reallocation, no
+//!   intermediate bucket-index `Vec` handed back to the caller).
+//!
+//! Small blocks fall back to comparison sorts: a counting pass over 256
+//! buckets costs more than pdqsort below a few dozen keys, and the
+//! simulated cores hold tens of keys per level at the paper tier. The
+//! fallbacks preserve the same canonical outputs (`sort_unstable` on bare
+//! u64s is indistinguishable from any other correct sort; the pair
+//! fallback is std's stable sort), so the crossover is invisible in
+//! digests — `rust/tests/compute.rs` pins radix-vs-oracle equality across
+//! every input distribution and edge shape.
+
+use super::{LocalCompute, NativeCompute};
+
+/// Digit width of one LSD pass.
+const RADIX_BITS: u32 = 8;
+/// Buckets per pass (2^RADIX_BITS).
+const BUCKETS: usize = 1 << RADIX_BITS;
+/// LSD passes covering a u64.
+const LEVELS: usize = (u64::BITS / RADIX_BITS) as usize;
+/// Below this many elements, comparison sorts win over counting passes.
+const SMALL_SORT: usize = 96;
+/// Pivot-list length up to which the branchless linear scan beats binary
+/// search for bucket tagging.
+const LINEAR_SCAN_PIVOTS: usize = 32;
+
+/// Radix-kernel implementation of [`LocalCompute`]; the default data
+/// plane (`--compute radix`). Reductions (`min`, `median_combine`) have
+/// no radix structure to exploit and delegate to the oracle.
+#[derive(Debug, Clone, Default)]
+pub struct RadixCompute;
+
+#[inline]
+fn digit(key: u64, level: usize) -> usize {
+    ((key >> (RADIX_BITS * level as u32)) & (BUCKETS as u64 - 1)) as usize
+}
+
+/// Per-digit histograms for all eight levels in one pass over the data.
+fn histograms<T, F: Fn(&T) -> u64>(items: &[T], key: F) -> Vec<[usize; BUCKETS]> {
+    let mut counts = vec![[0usize; BUCKETS]; LEVELS];
+    for item in items {
+        let k = key(item);
+        for (level, c) in counts.iter_mut().enumerate() {
+            c[digit(k, level)] += 1;
+        }
+    }
+    counts
+}
+
+/// Exclusive prefix sums of one digit histogram.
+fn prefix_sums(counts: &[usize; BUCKETS]) -> [usize; BUCKETS] {
+    let mut sums = [0usize; BUCKETS];
+    let mut total = 0;
+    for (s, &c) in sums.iter_mut().zip(counts.iter()) {
+        *s = total;
+        total += c;
+    }
+    sums
+}
+
+/// LSD radix sort of `items` by `key`, stable, skipping trivial digits.
+fn lsd_sort<T: Copy + Default, F: Fn(&T) -> u64>(items: &mut Vec<T>, key: F) {
+    let n = items.len();
+    let counts = histograms(items, &key);
+    let mut scratch: Vec<T> = Vec::new();
+    for (level, c) in counts.iter().enumerate() {
+        if c.iter().any(|&b| b == n) {
+            continue; // every key shares this digit: the pass is a no-op
+        }
+        if scratch.is_empty() {
+            scratch.resize(n, T::default());
+        }
+        let mut sums = prefix_sums(c);
+        for item in items.iter() {
+            let d = digit(key(item), level);
+            scratch[sums[d]] = *item;
+            sums[d] += 1;
+        }
+        std::mem::swap(items, &mut scratch);
+    }
+}
+
+/// Bucket of `key` against sorted `pivots`: `|{i : pivots[i] <= key}|`.
+/// Branchless linear scan for short pivot lists (NanoSort's b-1 = 15),
+/// binary search for long ones (MilliSort's cores-1).
+#[inline]
+fn bucket_of(key: u64, pivots: &[u64]) -> usize {
+    if pivots.len() <= LINEAR_SCAN_PIVOTS {
+        pivots.iter().map(|&p| (p <= key) as usize).sum()
+    } else {
+        pivots.partition_point(|&p| p <= key)
+    }
+}
+
+/// One tag+count pass, then scatter into exact-capacity bucket buffers.
+fn partition_by<T: Copy, F: Fn(&T) -> u64>(
+    items: &[T],
+    pivots: &[u64],
+    key: F,
+) -> Vec<Vec<T>> {
+    debug_assert!(pivots.windows(2).all(|w| w[0] <= w[1]));
+    let b = pivots.len() + 1;
+    let mut tags: Vec<u32> = Vec::with_capacity(items.len());
+    let mut counts = vec![0usize; b];
+    for item in items {
+        let t = bucket_of(key(item), pivots);
+        tags.push(t as u32);
+        counts[t] += 1;
+    }
+    let mut out: Vec<Vec<T>> = counts.iter().map(|&c| Vec::with_capacity(c)).collect();
+    for (item, &t) in items.iter().zip(&tags) {
+        out[t as usize].push(*item);
+    }
+    out
+}
+
+impl LocalCompute for RadixCompute {
+    fn sort(&self, keys: &mut Vec<u64>) {
+        if keys.len() < SMALL_SORT {
+            keys.sort_unstable();
+        } else {
+            lsd_sort(keys, |&k| k);
+        }
+    }
+
+    fn sort_pairs(&self, pairs: &mut Vec<(u64, u64)>) {
+        if pairs.len() < SMALL_SORT {
+            pairs.sort_by_key(|p| p.0); // stable, matching the LSD path
+        } else {
+            lsd_sort(pairs, |p| p.0);
+        }
+    }
+
+    fn min(&self, vals: &[u64]) -> Option<u64> {
+        NativeCompute.min(vals)
+    }
+
+    fn bucketize(&self, keys: &[u64], pivots: &[u64]) -> Vec<u32> {
+        debug_assert!(pivots.windows(2).all(|w| w[0] <= w[1]));
+        keys.iter().map(|&k| bucket_of(k, pivots) as u32).collect()
+    }
+
+    fn partition(&self, keys: &[u64], pivots: &[u64]) -> Vec<Vec<u64>> {
+        partition_by(keys, pivots, |&k| k)
+    }
+
+    fn partition_pairs(&self, pairs: &[(u64, u64)], pivots: &[u64]) -> Vec<Vec<(u64, u64)>> {
+        partition_by(pairs, pivots, |p| p.0)
+    }
+
+    fn median_combine(&self, rows: &[Vec<u64>]) -> Vec<u64> {
+        NativeCompute.median_combine(rows)
+    }
+
+    fn name(&self) -> &'static str {
+        "radix"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::test_support::rand_keys;
+
+    /// Force the radix path regardless of the small-input fallback.
+    fn lsd_only(mut keys: Vec<u64>) -> Vec<u64> {
+        lsd_sort(&mut keys, |&k| k);
+        keys
+    }
+
+    #[test]
+    fn lsd_sorts_across_sizes_and_patterns() {
+        for n in [0usize, 1, 2, 3, SMALL_SORT - 1, SMALL_SORT, 1000, 4096] {
+            let keys = rand_keys(n as u64 + 7, n);
+            let mut expect = keys.clone();
+            expect.sort_unstable();
+            assert_eq!(lsd_only(keys), expect, "n={n}");
+        }
+        // Already-sorted, reversed, all-equal, and boundary values.
+        let sorted: Vec<u64> = (0..500).collect();
+        assert_eq!(lsd_only(sorted.clone()), sorted);
+        let rev: Vec<u64> = (0..500).rev().collect();
+        assert_eq!(lsd_only(rev), sorted);
+        assert_eq!(lsd_only(vec![9; 300]), vec![9; 300]);
+        let edges = vec![u64::MAX, 0, u64::MAX - 1, 1, u64::MAX, 1 << 63];
+        let mut expect = edges.clone();
+        expect.sort_unstable();
+        assert_eq!(lsd_only(edges), expect);
+    }
+
+    #[test]
+    fn trivial_digit_skip_is_exercised_and_exact() {
+        // Keys confined to one byte of spread: 7 of 8 digit passes are
+        // skipped, output must still be fully sorted.
+        let keys: Vec<u64> = rand_keys(3, 600)
+            .into_iter()
+            .map(|k| 0xAB00_0000_0000_0000 | (k & 0xFF) << 8)
+            .collect();
+        let mut expect = keys.clone();
+        expect.sort_unstable();
+        assert_eq!(lsd_only(keys), expect);
+    }
+
+    #[test]
+    fn sort_pairs_is_stable_above_and_below_the_crossover() {
+        let rc = RadixCompute;
+        for n in [10usize, SMALL_SORT, 800] {
+            // Few distinct keys so every key value has many ties; the
+            // payload records input position.
+            let mut pairs: Vec<(u64, u64)> = rand_keys(n as u64, n)
+                .into_iter()
+                .enumerate()
+                .map(|(i, k)| (k % 7, i as u64))
+                .collect();
+            let mut expect = pairs.clone();
+            expect.sort_by_key(|p| p.0);
+            rc.sort_pairs(&mut pairs);
+            assert_eq!(pairs, expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn bucket_of_matches_partition_point_on_both_paths() {
+        let mut short = rand_keys(11, LINEAR_SCAN_PIVOTS);
+        short.sort_unstable();
+        let mut long = rand_keys(12, LINEAR_SCAN_PIVOTS + 1);
+        long.sort_unstable();
+        for pivots in [&short, &long] {
+            for &k in rand_keys(13, 200).iter().chain(pivots.iter()) {
+                assert_eq!(
+                    bucket_of(k, pivots),
+                    pivots.partition_point(|&p| p <= k),
+                    "k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn partition_scatters_in_input_order_with_exact_sizes() {
+        let rc = RadixCompute;
+        let pivots = vec![100u64, 200, 300];
+        let keys = rand_keys(5, 400);
+        let parts = rc.partition(&keys, &pivots);
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts.iter().map(Vec::len).sum::<usize>(), keys.len());
+        // Per-bucket subsequences appear in input order.
+        for (b, part) in parts.iter().enumerate() {
+            let expect: Vec<u64> = keys
+                .iter()
+                .copied()
+                .filter(|&k| bucket_of(k, &pivots) == b)
+                .collect();
+            assert_eq!(part, &expect, "bucket {b}");
+        }
+    }
+}

@@ -8,6 +8,7 @@
 //! [`NativeCompute`] and are counted, so a report can state exactly how
 //! much of the data plane ran through XLA.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -158,15 +159,43 @@ impl LocalCompute for XlaCompute {
         *keys = merged;
     }
 
-    fn min(&self, vals: &[u64]) -> u64 {
-        assert!(!vals.is_empty());
+    /// The fused pair sort still routes the heavy kernel through XLA:
+    /// sort the keys via the compiled artifact, then reattach each
+    /// payload to its key's equal range in input order — the §8 stable
+    /// tie-break, byte-identical to the oracle. (Inheriting the trait
+    /// default would silently demote NanoSort's per-level and final
+    /// sorts to host-side std sorts on this plane.)
+    fn sort_pairs(&self, pairs: &mut Vec<(u64, u64)>) {
+        if pairs.len() <= 1 {
+            return;
+        }
+        let mut keys: Vec<u64> = pairs.iter().map(|p| p.0).collect();
+        self.sort(&mut keys);
+        let mut out: Vec<(u64, u64)> = keys.iter().map(|&k| (k, 0)).collect();
+        // Next free slot per key value; first occurrence starts at the
+        // equal range's beginning, later duplicates fill forward.
+        let mut cursor: HashMap<u64, usize> = HashMap::new();
+        for &(k, payload) in pairs.iter() {
+            let slot = cursor
+                .entry(k)
+                .or_insert_with(|| keys.partition_point(|&x| x < k));
+            out[*slot].1 = payload;
+            *slot += 1;
+        }
+        *pairs = out;
+    }
+
+    fn min(&self, vals: &[u64]) -> Option<u64> {
+        if vals.is_empty() {
+            return None;
+        }
         if vals.len() == 1 {
-            return vals[0];
+            return Some(vals[0]);
         }
         let max = *MIN_SIZES.last().unwrap();
         if let Some(variant) = pick_variant(&MIN_SIZES, vals.len()) {
             self.bump_xla();
-            return self.min_padded(vals, variant).expect("xla min");
+            return Some(self.min_padded(vals, variant).expect("xla min"));
         }
         // Chunk, reduce each through the kernel, combine the chunk minima.
         let minima: Vec<u64> = vals
@@ -250,6 +279,27 @@ mod tests {
         assert!(x.xla_fraction() > 0.99);
     }
 
+    /// The pair sort must match the oracle *including* the stable
+    /// equal-key tie-break (keys folded to a tiny range so every block
+    /// is duplicate-heavy), while still running the sort through XLA.
+    #[test]
+    fn xla_sort_pairs_matches_native_stably() {
+        let Some(x) = engine_or_skip() else { return };
+        for n in [0usize, 1, 2, 5, 40, 64, 300] {
+            let pairs: Vec<(u64, u64)> = rand_keys(n as u64 + 3, n)
+                .into_iter()
+                .enumerate()
+                .map(|(i, k)| (k % 13, i as u64))
+                .collect();
+            let mut a = pairs.clone();
+            let mut b = pairs;
+            NativeCompute.sort_pairs(&mut a);
+            x.sort_pairs(&mut b);
+            assert_eq!(a, b, "n={n}");
+        }
+        assert!(x.xla_fraction() > 0.9, "pair sorts must route through the XLA kernel");
+    }
+
     #[test]
     fn xla_min_matches_native() {
         let Some(x) = engine_or_skip() else { return };
@@ -257,6 +307,7 @@ mod tests {
             let vals = rand_keys(7 + n as u64, n);
             assert_eq!(x.min(&vals), NativeCompute.min(&vals), "n={n}");
         }
+        assert_eq!(x.min(&[]), None, "empty input is None, not a panic");
     }
 
     #[test]

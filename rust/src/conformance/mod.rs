@@ -146,21 +146,33 @@ pub fn run_tier(
 /// One `BENCH_<workload>.json` record: the simulated result next to the
 /// wall-clock cost of producing it, so the perf trajectory across PRs is
 /// measurable on both axes. `wall_clock_s` is always the sequential
-/// (`threads = 1`) backend; when a parallel run was also measured,
-/// `threads`/`wall_clock_par_s` record it so the executor speedup is part
-/// of the trajectory too.
+/// (`threads = 1`) backend on the primary data plane, broken down into
+/// host phases (`input_gen_s`/`sim_s`/`validate_s`). Two optional
+/// comparison measurements ride along — the digests are identical by
+/// contract in both cases, only the host time differs:
+///
+/// - `threads`/`wall_clock_par_s`/`speedup`: the parallel backend;
+/// - `wall_clock_native_s`/`compute_speedup`: the `NativeCompute` oracle
+///   plane (the radix-kernel before/after).
 #[derive(Debug, Clone)]
 pub struct BenchRecord {
     pub workload: String,
     pub tier: &'static str,
     pub nodes: usize,
     pub keys: usize,
+    /// Data plane of the primary measurement (`radix` by default).
+    pub compute: &'static str,
     pub makespan_us: f64,
-    /// Sequential-backend wall clock (threads = 1).
+    /// Sequential-backend wall clock (threads = 1), primary plane.
     pub wall_clock_s: f64,
+    /// Host-phase breakdown of the primary run (wall-clock seconds).
+    /// Public so determinism tests can zero the measured values.
+    pub phases: crate::scenario::PhaseWallClock,
     /// Parallel-backend measurement, when taken: (worker threads,
     /// wall-clock seconds). The digest is identical by contract.
     pub parallel: Option<(usize, f64)>,
+    /// Oracle-plane (native) sequential wall clock, when measured.
+    pub native_wall_clock_s: Option<f64>,
     pub events: u64,
     pub msgs_sent: u64,
     pub validated: bool,
@@ -179,9 +191,12 @@ impl BenchRecord {
             tier: tier.name(),
             nodes: report.nodes,
             keys,
+            compute: report.compute,
             makespan_us: report.runtime().as_us_f64(),
             wall_clock_s,
+            phases: report.phases,
             parallel: None,
+            native_wall_clock_s: None,
             events: report.summary.events,
             msgs_sent: report.summary.net.msgs_sent,
             validated: report.validation.ok(),
@@ -194,6 +209,12 @@ impl BenchRecord {
         self
     }
 
+    /// Attach the oracle-plane (native) sequential wall clock.
+    pub fn with_native_baseline(mut self, wall_clock_s: f64) -> BenchRecord {
+        self.native_wall_clock_s = Some(wall_clock_s);
+        self
+    }
+
     pub fn to_json(&self) -> String {
         let parallel = match self.parallel {
             Some((threads, wall)) => format!(
@@ -203,19 +224,32 @@ impl BenchRecord {
             ),
             None => String::new(),
         };
+        let native = match self.native_wall_clock_s {
+            Some(wall) => format!(
+                "\n  \"wall_clock_native_s\": {wall:.3},\n  \"compute_speedup\": {:.2},",
+                wall / self.wall_clock_s.max(1e-9)
+            ),
+            None => String::new(),
+        };
         format!(
             "{{\n  \"workload\": \"{}\",\n  \"tier\": \"{}\",\n  \"nodes\": {},\n  \
-             \"keys\": {},\n  \"makespan_us\": {:.3},\n  \"paper_makespan_us\": {:.1},\n  \
-             \"wall_clock_s\": {:.3},{}\n  \"events\": {},\n  \"msgs_sent\": {},\n  \
-             \"validated\": {}\n}}\n",
+             \"keys\": {},\n  \"compute\": \"{}\",\n  \"makespan_us\": {:.3},\n  \
+             \"paper_makespan_us\": {:.1},\n  \"wall_clock_s\": {:.3},\n  \
+             \"input_gen_s\": {:.3},\n  \"sim_s\": {:.3},\n  \"validate_s\": {:.3},{}{}\n  \
+             \"events\": {},\n  \"msgs_sent\": {},\n  \"validated\": {}\n}}\n",
             self.workload,
             self.tier,
             self.nodes,
             self.keys,
+            self.compute,
             self.makespan_us,
             PAPER_RUNTIME_US,
             self.wall_clock_s,
+            self.phases.input_gen_s,
+            self.phases.sim_s,
+            self.phases.validate_s,
             parallel,
+            native,
             self.events,
             self.msgs_sent,
             self.validated
@@ -312,6 +346,24 @@ mod tests {
         assert!(json.contains("\"speedup\": "), "{json}");
     }
 
+    /// The record carries the per-phase host breakdown and, when
+    /// measured, the oracle-plane baseline with its speedup ratio.
+    #[test]
+    fn bench_record_carries_phases_and_compute_baseline() {
+        let spec = registry::find("mergemin").unwrap();
+        let (report, wall) = run_tier(spec, Tier::Smoke, ComputeChoice::Radix, 1).unwrap();
+        let record = BenchRecord::from_report(&report, Tier::Smoke, wall);
+        let json = record.to_json();
+        assert!(json.contains("\"compute\": \"radix\""), "{json}");
+        for key in ["input_gen_s", "sim_s", "validate_s"] {
+            assert!(json.contains(&format!("\"{key}\": ")), "{key} missing: {json}");
+        }
+        assert!(!json.contains("wall_clock_native_s"), "baseline only when measured");
+        let json = record.with_native_baseline(0.25).to_json();
+        assert!(json.contains("\"wall_clock_native_s\": 0.250"), "{json}");
+        assert!(json.contains("\"compute_speedup\": "), "{json}");
+    }
+
     #[test]
     fn run_tier_digest_is_thread_count_invariant() {
         let spec = registry::find("nanosort").unwrap();
@@ -322,6 +374,28 @@ mod tests {
             digest_json(&par, "smoke"),
             "conformance digests must not depend on the executor backend"
         );
+    }
+
+    /// The §8 data-plane contract at the conformance boundary: for every
+    /// workload, the smoke-tier digest is identical on the oracle and
+    /// radix planes, at both thread counts CI exercises.
+    #[test]
+    fn run_tier_digest_is_compute_plane_invariant() {
+        for spec in registry::WORKLOADS {
+            let (native, _) =
+                run_tier(spec, Tier::Smoke, ComputeChoice::Native, 1).unwrap();
+            let expect = digest_json(&native, "smoke");
+            for threads in [1usize, 4] {
+                let (radix, _) =
+                    run_tier(spec, Tier::Smoke, ComputeChoice::Radix, threads).unwrap();
+                assert_eq!(
+                    expect,
+                    digest_json(&radix, "smoke"),
+                    "{}: radix plane (threads={threads}) diverged from the oracle",
+                    spec.name
+                );
+            }
+        }
     }
 
     #[test]
@@ -336,8 +410,11 @@ mod tests {
         let spec = registry::find("mergemin").unwrap();
         let (a, _) = run_tier(spec, Tier::Smoke, ComputeChoice::Native, 1).unwrap();
         let (b, _) = run_tier(spec, Tier::Smoke, ComputeChoice::Native, 1).unwrap();
-        let ra = BenchRecord::from_report(&a, Tier::Smoke, 0.0);
-        let rb = BenchRecord::from_report(&b, Tier::Smoke, 0.0);
+        let mut ra = BenchRecord::from_report(&a, Tier::Smoke, 0.0);
+        let mut rb = BenchRecord::from_report(&b, Tier::Smoke, 0.0);
+        // Host-phase clocks are measurements, not results — zero them.
+        ra.phases = Default::default();
+        rb.phases = Default::default();
         assert_eq!(ra.to_json(), rb.to_json());
     }
 }

@@ -9,14 +9,17 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::compute::{LocalCompute, NativeCompute, XlaCompute};
+use crate::compute::{LocalCompute, NativeCompute, RadixCompute, XlaCompute};
 
 /// Which data plane executes node-local compute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ComputeChoice {
-    /// Pure-Rust oracle (fast; default for large sweeps).
-    #[default]
+    /// Pure-Rust comparison oracle (the differential-testing reference).
     Native,
+    /// Count-then-scatter radix kernels (DESIGN.md §8); the default —
+    /// digest-identical to the oracle, faster on the sort hot paths.
+    #[default]
+    Radix,
     /// The three-layer path: Pallas -> JAX -> HLO text -> PJRT.
     Xla,
 }
@@ -28,8 +31,27 @@ impl ComputeChoice {
     pub fn build(self) -> Result<Arc<dyn LocalCompute>> {
         Ok(match self {
             ComputeChoice::Native => Arc::new(NativeCompute),
+            ComputeChoice::Radix => Arc::new(RadixCompute),
             ComputeChoice::Xla => Arc::new(XlaCompute::open_default()?),
         })
+    }
+
+    /// Parse the `--compute` knob value.
+    pub fn parse(s: &str) -> Result<ComputeChoice> {
+        match s {
+            "native" => Ok(ComputeChoice::Native),
+            "radix" => Ok(ComputeChoice::Radix),
+            "xla" => Ok(ComputeChoice::Xla),
+            other => bail!("unknown data plane {other:?} (known: native|radix|xla)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ComputeChoice::Native => "native",
+            ComputeChoice::Radix => "radix",
+            ComputeChoice::Xla => "xla",
+        }
     }
 }
 
@@ -46,7 +68,7 @@ pub struct RunOptions {
 
 impl Default for RunOptions {
     fn default() -> Self {
-        RunOptions { compute: ComputeChoice::Native, seed: 1, runs: 1, quick: false }
+        RunOptions { compute: ComputeChoice::default(), seed: 1, runs: 1, quick: false }
     }
 }
 
@@ -132,12 +154,29 @@ impl Args {
         &self.items
     }
 
+    /// Parse the data-plane selection: `--compute native|radix|xla`
+    /// (default [`ComputeChoice::Radix`]), with `--xla` kept as the
+    /// historical shorthand. Naming both is a conflict, not a silent
+    /// precedence.
+    pub fn compute_choice(&mut self) -> Result<ComputeChoice> {
+        let named = self.value_checked("compute")?;
+        let xla_flag = self.flag("xla");
+        match (named, xla_flag) {
+            (Some(v), false) => ComputeChoice::parse(&v),
+            (None, true) => Ok(ComputeChoice::Xla),
+            (None, false) => Ok(ComputeChoice::default()),
+            (Some(v), true) => {
+                bail!("--compute {v} conflicts with --xla; pass one of them")
+            }
+        }
+    }
+
     /// Standard options block shared by subcommands. Dangling or
-    /// malformed `--seed`/`--runs` values are errors, matching the
-    /// strictness of registry workload parameters.
+    /// malformed `--seed`/`--runs`/`--compute` values are errors,
+    /// matching the strictness of registry workload parameters.
     pub fn run_options(&mut self) -> Result<RunOptions> {
         Ok(RunOptions {
-            compute: if self.flag("xla") { ComputeChoice::Xla } else { ComputeChoice::Native },
+            compute: self.compute_choice()?,
             seed: self.num_checked("seed")?.unwrap_or(1),
             runs: self.num_checked("runs")?.unwrap_or(1),
             quick: self.flag("quick"),
@@ -172,13 +211,29 @@ mod tests {
         a.positional();
         a.positional();
         let opts = a.run_options().unwrap();
-        assert_eq!(opts.compute, ComputeChoice::Native);
+        assert_eq!(opts.compute, ComputeChoice::Radix, "radix is the default plane");
         assert_eq!(opts.seed, 1);
     }
 
     #[test]
-    fn native_compute_builds() {
+    fn offline_compute_planes_build() {
         assert!(ComputeChoice::Native.build().is_ok());
+        assert!(ComputeChoice::Radix.build().is_ok());
+    }
+
+    #[test]
+    fn compute_knob_parses_and_conflicts_with_xla_shorthand() {
+        let opts = args("--compute native").run_options().unwrap();
+        assert_eq!(opts.compute, ComputeChoice::Native);
+        let opts = args("--compute radix").run_options().unwrap();
+        assert_eq!(opts.compute, ComputeChoice::Radix);
+        let opts = args("--compute xla").run_options().unwrap();
+        assert_eq!(opts.compute, ComputeChoice::Xla);
+        let err = args("--compute bogo").run_options().unwrap_err().to_string();
+        assert!(err.contains("unknown data plane"), "{err}");
+        let err = args("--compute radix --xla").run_options().unwrap_err().to_string();
+        assert!(err.contains("conflicts"), "{err}");
+        assert!(args("--compute").run_options().is_err(), "dangling value");
     }
 
     #[test]

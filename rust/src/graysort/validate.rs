@@ -29,13 +29,17 @@ impl ValidationReport {
 /// node order; concatenated they must equal the sorted `input` multiset.
 /// `values[node]` (same shape) carries the first value word that traveled
 /// with each key, or `None` if the run did not shuffle values.
-pub fn validate_sorted_output(
+///
+/// Generic over the per-node block representation (`Vec<u64>` or a
+/// borrowed `&[u64]`), so workload finish hooks can hand in views of
+/// their output sinks without cloning every key.
+pub fn validate_sorted_output<K: AsRef<[u64]>>(
     input: &[u64],
-    outputs: &[Vec<u64>],
-    values: Option<&[Vec<u64>]>,
+    outputs: &[K],
+    values: Option<&[K]>,
 ) -> ValidationReport {
-    let node_counts: Vec<usize> = outputs.iter().map(|o| o.len()).collect();
-    let flat: Vec<u64> = outputs.iter().flatten().copied().collect();
+    let node_counts: Vec<usize> = outputs.iter().map(|o| o.as_ref().len()).collect();
+    let flat: Vec<u64> = outputs.iter().flat_map(|o| o.as_ref().iter().copied()).collect();
 
     let globally_sorted = flat.windows(2).all(|w| w[0] <= w[1]);
 
@@ -50,6 +54,7 @@ pub fn validate_sorted_output(
     let values_intact = match values {
         None => true,
         Some(vals) => outputs.iter().zip(vals).all(|(keys, vs)| {
+            let (keys, vs) = (keys.as_ref(), vs.as_ref());
             keys.len() == vs.len()
                 && keys.iter().zip(vs).all(|(&k, &v)| value_of_key(k) == v)
         }),

@@ -18,9 +18,12 @@
 //!   latency injection (the paper's §5.1/§5.3 network).
 //! - [`nanopu`] — the nanoPU programming model: register-interface messages,
 //!   software reorder buffer, fire-and-forget sends (§5.2).
-//! - [`compute`] — node-local data plane: [`compute::NativeCompute`] (pure
-//!   Rust oracle) and [`compute::XlaCompute`] (the three-layer path: Pallas →
-//!   JAX → HLO text → PJRT, loaded by [`runtime::XlaEngine`]).
+//! - [`compute`] — node-local data plane: [`compute::RadixCompute`]
+//!   (count-then-scatter radix kernels, the default; DESIGN.md §8),
+//!   [`compute::NativeCompute`] (the pure-Rust differential oracle), and
+//!   [`compute::XlaCompute`] (the three-layer path: Pallas → JAX → HLO
+//!   text → PJRT, loaded by [`runtime::XlaEngine`]). Selected with
+//!   `--compute native|radix|xla`; digests are plane-invariant.
 //! - [`algo`] — NanoSort (the paper's contribution), MilliSort (the
 //!   baseline), MergeMin (the §3.1 design-space probe), set algebra (the
 //!   §3.2 nanoTask workload).

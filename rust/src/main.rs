@@ -1,18 +1,23 @@
 //! `repro` — the NanoSort reproduction CLI.
 //!
 //! ```text
-//! repro fig <id|all> [--xla] [--seed N] [--runs N] [--quick] [--csv]
+//! repro fig <id|all> [--compute P] [--seed N] [--runs N] [--quick] [--csv]
 //! repro run <workload> [--<param> ...] [--skew D] [--loss N] [--oversub F]
-//!                      [--stragglers N] [--no-multicast] [--xla] [--seed N]
-//!                      [--threads N]
+//!                      [--stragglers N] [--no-multicast] [--compute P]
+//!                      [--seed N] [--threads N]
 //! repro run <workload> --help   # full parameter-descriptor listing
 //! repro sweep <workload> [--tier smoke|mid|paper] --axis <param>=a,b,c
-//!                      [--axis ...] [--xla] [--seed N] [--threads N]
-//! repro paper          [--tier smoke|mid|paper] [--bless] [--xla]
+//!                      [--axis ...] [--compute P] [--seed N] [--threads N]
+//! repro paper          [--tier smoke|mid|paper] [--bless] [--compute P]
 //!                      [--threads N]
 //! repro artifacts      # list loaded XLA artifacts
 //! repro list           # list figure ids and registered workloads
 //! ```
+//!
+//! `--compute native|radix|xla` selects the data plane everywhere
+//! (default `radix`; `--xla` is shorthand for `--compute xla`). Digests
+//! are plane-invariant — `repro paper --compute radix` re-runs the tier
+//! on the native oracle and hard-fails on any divergence.
 //!
 //! `repro run <name>` is registry-driven: the workload is looked up in
 //! [`nanosort::scenario::registry`], its typed parameter descriptors are
@@ -87,10 +92,11 @@ fn real_main() -> Result<()> {
 fn help() -> String {
     format!(
         "repro — NanoSort reproduction CLI
-  repro fig <id|all> [--xla] [--seed N] [--runs N] [--quick] [--csv]
-{}  repro sweep <workload> [--tier smoke|mid|paper] --axis <param>=a,b,c [--axis ...] [--xla] [--seed N] [--threads N]
-  repro paper       [--tier smoke|mid|paper] [--bless] [--xla] [--threads N]
+  repro fig <id|all> [--compute P] [--seed N] [--runs N] [--quick] [--csv]
+{}  repro sweep <workload> [--tier smoke|mid|paper] --axis <param>=a,b,c [--axis ...] [--compute P] [--seed N] [--threads N]
+  repro paper       [--tier smoke|mid|paper] [--bless] [--compute P] [--threads N]
   repro artifacts | repro list
+  (--compute P: data plane, native|radix|xla, default radix; digests are plane-invariant)
   (--threads N: executor worker threads; 1 = sequential, 0 = all cores; results are identical)",
         registry::cli_help()
     )
@@ -178,12 +184,11 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
         !axes.is_empty(),
         "repro sweep needs at least one --axis <param>=a,b,c (try --axis skew=uniform,zipfian)"
     );
-    let xla = args.flag("xla");
+    let compute = args.compute_choice()?;
     let seed = args.num_checked("seed")?.unwrap_or(conformance::CONFORMANCE_SEED);
     let threads = args.num_checked("threads")?.unwrap_or(1);
     ensure_consumed(&args)?;
 
-    let compute = if xla { ComputeChoice::Xla } else { ComputeChoice::Native };
     eprintln!(
         "[sweep: {} @ {} tier, seed {seed:#x}, {} ax{}, {} worker{}]",
         spec.name,
@@ -205,35 +210,40 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
 
 /// Conformance run at a named scale tier: fixed seed, golden comparison,
 /// `BENCH_nanosort.json` emission, and the paper-headline side-by-side.
-/// With `--threads N` (N != 1) the tier runs on **both** backends — the
-/// sequential reference first, then the sharded executor — hard-failing
-/// on any digest divergence and recording both wall-clocks (the
-/// executor-speedup half of the perf trajectory).
+///
+/// Differential gates, each hard-failing on digest divergence:
+/// - `--compute radix` (the default) re-runs the tier on the
+///   `NativeCompute` oracle plane and cross-checks the digests — the §8
+///   data-plane contract — recording the oracle wall-clock as the
+///   radix-kernel before/after (`wall_clock_native_s`/`compute_speedup`).
+/// - `--threads N` (N != 1) runs **both** executor backends — the
+///   sequential reference first, then the sharded executor — and records
+///   both wall-clocks (the executor-speedup half of the trajectory).
 fn cmd_paper(mut args: Args) -> Result<()> {
     let tier = match args.value_checked("tier")? {
         Some(t) => Tier::parse(&t)?,
         None => Tier::Paper,
     };
     let bless = args.flag("bless");
-    let xla = args.flag("xla");
+    let compute = args.compute_choice()?;
     let threads: usize = args.num_checked("threads")?.unwrap_or(1);
-    let compute = if xla { ComputeChoice::Xla } else { ComputeChoice::Native };
     ensure_consumed(&args)?;
     // Fail fast, before the (potentially minutes-long) sequential tier
     // run: the XLA plane drives a single-threaded PJRT client, so the
     // parallel pass would be rejected by the scenario layer anyway.
     anyhow::ensure!(
-        !(xla && threads != 1),
-        "--xla requires --threads 1 (the XLA data plane is single-threaded; \
-         native --threads N and xla --threads 1 still cross-check, since the \
+        !(compute == ComputeChoice::Xla && threads != 1),
+        "--compute xla requires --threads 1 (the XLA data plane is single-threaded; \
+         native/radix --threads N and xla --threads 1 still cross-check, since the \
          executor backends are byte-identical)"
     );
 
     let spec = registry::find("nanosort")?;
     eprintln!(
-        "[conformance: nanosort @ {} tier, seed {:#x}]",
+        "[conformance: nanosort @ {} tier, seed {:#x}, {} data plane]",
         tier.name(),
-        conformance::CONFORMANCE_SEED
+        conformance::CONFORMANCE_SEED,
+        compute.name()
     );
     let (report, wall) = conformance::run_tier(spec, tier, compute, 1)?;
     print!("{}", report.render());
@@ -246,23 +256,45 @@ fn cmd_paper(mut args: Args) -> Result<()> {
         report.nodes,
         wall
     );
+    println!(
+        "phases: input_gen {:.2} s | sim {:.2} s | validate {:.2} s",
+        report.phases.input_gen_s, report.phases.sim_s, report.phases.validate_s
+    );
     anyhow::ensure!(
         report.validation.ok(),
         "validation failed: {}",
         report.validation.detail
     );
+    let digest = conformance::digest_json(&report, tier.name());
 
     let mut record = BenchRecord::from_report(&report, tier, wall);
+    if compute == ComputeChoice::Radix {
+        // Differential oracle pass: same tier on NativeCompute; the §8
+        // contract says the digest must be byte-identical, and the pair
+        // of wall-clocks is the kernel win the BENCH trajectory tracks.
+        let (native_report, native_wall) =
+            conformance::run_tier(spec, tier, ComputeChoice::Native, 1)?;
+        let native_digest = conformance::digest_json(&native_report, tier.name());
+        anyhow::ensure!(
+            digest == native_digest,
+            "data-plane divergence: radix digest differs from the native oracle:\n{}",
+            nanosort::conformance::golden::line_diff(&native_digest, &digest)
+        );
+        println!(
+            "compute: native {native_wall:.2} s vs radix {wall:.2} s ({:.2}x) | digests identical",
+            native_wall / wall.max(1e-9)
+        );
+        record = record.with_native_baseline(native_wall);
+    }
     if threads != 1 {
         let resolved = nanosort::sim::exec::resolve_threads(threads);
         let (par_report, par_wall) = conformance::run_tier(spec, tier, compute, resolved)?;
-        let seq_digest = conformance::digest_json(&report, tier.name());
         let par_digest = conformance::digest_json(&par_report, tier.name());
         anyhow::ensure!(
-            seq_digest == par_digest,
+            digest == par_digest,
             "executor divergence: ParExecutor({resolved} threads) digest differs from \
              SeqExecutor:\n{}",
-            nanosort::conformance::golden::line_diff(&seq_digest, &par_digest)
+            nanosort::conformance::golden::line_diff(&digest, &par_digest)
         );
         println!(
             "executor: seq {wall:.2} s vs par[{resolved}] {par_wall:.2} s ({:.2}x speedup) | digests identical",
@@ -273,10 +305,13 @@ fn cmd_paper(mut args: Args) -> Result<()> {
     let bench = conformance::write_bench(&record)?;
     println!("bench record: {}", bench.display());
 
-    let digest = conformance::digest_json(&report, tier.name());
-    // Same name the test gate uses for (workload, tier); XLA runs get
-    // their own goldens — the data planes agree on results but a bless
-    // must never overwrite the native-pinned file with another plane's.
+    // Same name the test gate uses for (workload, tier). Native and
+    // radix share one golden — their digests are identical by the §8
+    // contract, so the shared file *is* the cross-plane drift gate. XLA
+    // runs get their own goldens: the planes agree on results but a
+    // bless must never overwrite the native/radix-pinned file with
+    // another plane's.
+    let xla = compute == ComputeChoice::Xla;
     let name = format!("nanosort_{}{}", tier.name(), if xla { "_xla" } else { "" });
     match conformance::check_golden(&name, &digest, bless)? {
         GoldenOutcome::Matched => {

@@ -46,7 +46,8 @@ pub mod registry;
 
 pub use registry::{ParamKind, ParamSpec, WorkloadSpec};
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -86,6 +87,56 @@ pub struct ScenarioEnv {
 
 /// Result-extraction hook: runs after quiescence with the engine summary.
 pub type Finish = Box<dyn FnOnce(&ScenarioEnv, RunSummary) -> RunReport>;
+
+/// Per-node output sink: one write-once slot per node, written lock-free
+/// from executor worker threads and read back in canonical node order at
+/// finish.
+///
+/// §Perf: the sort workloads used to funnel every node's final block
+/// through one `Mutex<Vec<...>>` — at 65,536 nodes across a threaded
+/// executor that is a 100k-acquisition contention burst at the end of the
+/// run. Each node writes exactly one slot exactly once (the protocols
+/// guarantee it; a double write panics loudly), so a `OnceLock` per slot
+/// needs no lock at all, and the canonical merge is just index order.
+pub struct NodeSlots<T> {
+    slots: Vec<OnceLock<T>>,
+}
+
+impl<T> NodeSlots<T> {
+    pub fn new(nodes: usize) -> Self {
+        NodeSlots { slots: (0..nodes).map(|_| OnceLock::new()).collect() }
+    }
+
+    /// Write node `id`'s output. Panics if the slot was already written —
+    /// a protocol violation (every workload finishes each node once).
+    pub fn set(&self, id: usize, value: T) {
+        if self.slots[id].set(value).is_err() {
+            panic!("node {id} output slot written twice");
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Slot values in canonical node order (`None` = never written).
+    pub fn iter(&self) -> impl Iterator<Item = Option<&T>> {
+        self.slots.iter().map(|s| s.get())
+    }
+}
+
+impl NodeSlots<Vec<u64>> {
+    /// Borrowed per-node slices in canonical node order (an unwritten
+    /// slot reads as empty) — the shape the sort validators consume,
+    /// with no per-node clone.
+    pub fn as_slices(&self) -> Vec<&[u64]> {
+        self.iter().map(|s| s.map_or(&[][..], Vec::as_slice)).collect()
+    }
+}
 
 /// Everything a workload hands the engine for one run.
 pub struct Built<P: Program> {
@@ -139,7 +190,12 @@ impl<W: Workload> DynWorkload for W {
     }
 
     fn run_on(&self, env: &ScenarioEnv) -> Result<RunReport> {
+        // Host-side phase clocks (BENCH breakdown): input generation +
+        // program construction, then simulation, then result extraction
+        // and validation. Wall-clock only — never part of a digest.
+        let t_gen = Instant::now();
         let built = self.build(env)?;
+        let input_gen_s = t_gen.elapsed().as_secs_f64();
         anyhow::ensure!(
             built.programs.len() == env.nodes,
             "workload {} built {} programs for {} nodes",
@@ -147,6 +203,10 @@ impl<W: Workload> DynWorkload for W {
             built.programs.len(),
             env.nodes
         );
+        // Engine/fabric construction is charged to the `sim` phase so
+        // the three phases partition the whole run: input_gen + sim +
+        // validate ≈ total wall-clock, no unattributed gap.
+        let t_sim = Instant::now();
         let fabric = Fabric::new(Topology::paper(env.nodes), env.net.clone(), env.seed);
         let mut engine = Engine::new(built.programs, fabric, env.core.clone(), env.seed);
         for members in built.groups {
@@ -163,7 +223,11 @@ impl<W: Workload> DynWorkload for W {
             }
         }
         let summary = engine.run_threads(env.threads);
-        Ok((built.finish)(env, summary))
+        let sim_s = t_sim.elapsed().as_secs_f64();
+        let t_val = Instant::now();
+        let mut report = (built.finish)(env, summary);
+        report.phases = PhaseWallClock { input_gen_s, sim_s, validate_s: t_val.elapsed().as_secs_f64() };
+        Ok(report)
     }
 }
 
@@ -217,7 +281,7 @@ impl Scenario {
             nodes: None,
             net: NetConfig::default(),
             core: CoreModel::default(),
-            compute: ComputeSel::Choice(ComputeChoice::Native),
+            compute: ComputeSel::Choice(ComputeChoice::default()),
             seed: 1,
             perturb: Perturbations::default(),
             threads: 1,
@@ -418,6 +482,20 @@ pub fn stage_breakdown(summary: &RunSummary) -> Vec<StageBreakdown> {
         .collect()
 }
 
+/// Host wall-clock spent in each phase of one scenario run (seconds).
+/// Pure measurement: excluded from digests and [`RunReport::render`]
+/// (both must be deterministic); surfaced through `BENCH_*.json`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseWallClock {
+    /// Input generation + per-node program construction ([`Workload::build`]).
+    pub input_gen_s: f64,
+    /// Fabric/engine construction plus the discrete-event simulation
+    /// itself (executor run to quiescence).
+    pub sim_s: f64,
+    /// Result extraction + validation (the workload's finish hook).
+    pub validate_s: f64,
+}
+
 /// Unified outcome of one scenario run, identical in shape across all
 /// workloads: makespan + net stats (in `summary`), per-stage busy/idle
 /// breakdown, validation, and named workload metrics.
@@ -426,12 +504,14 @@ pub struct RunReport {
     pub workload: &'static str,
     pub nodes: usize,
     pub seed: u64,
-    /// Data-plane name (`native` / `xla`).
+    /// Data-plane name (`native` / `radix` / `xla`).
     pub compute: &'static str,
     pub summary: RunSummary,
     pub validation: Validation,
     pub stages: Vec<StageBreakdown>,
     pub metrics: Vec<Metric>,
+    /// Host wall-clock per phase (filled by the scenario runner).
+    pub phases: PhaseWallClock,
 }
 
 impl RunReport {
@@ -452,6 +532,7 @@ impl RunReport {
             validation,
             stages,
             metrics: Vec::new(),
+            phases: PhaseWallClock::default(),
         }
     }
 
@@ -532,7 +613,7 @@ mod tests {
         assert_eq!(r.nodes, 64);
         assert!(r.validation.ok(), "{}", r.validation.detail);
         assert!(r.runtime() > Time::ZERO);
-        assert_eq!(r.compute, "native");
+        assert_eq!(r.compute, "radix", "the radix plane is the default");
     }
 
     #[test]

@@ -353,7 +353,7 @@ pub fn cli_help() -> String {
                 ParamKind::Flag => line += &format!(" [--{}]", p.name),
             }
         }
-        line += " [--skew D] [--no-multicast] [--xla] [--seed N] [--threads N]";
+        line += " [--skew D] [--no-multicast] [--compute P] [--seed N] [--threads N]";
         out += &line;
         out.push('\n');
     }
@@ -384,7 +384,9 @@ pub fn describe(spec: &WorkloadSpec) -> String {
         out += &format!("  {:<22} {help}\n", format!("--{name} <V>"));
     }
     out += "  --no-multicast         degrade group sends to unicast loops (§6.2.3)\n";
-    out += "  --xla                  run node-local compute on the XLA data plane\n";
+    out += "  --compute <P>          data plane: native|radix|xla (default radix; \
+            digests are plane-invariant)\n";
+    out += "  --xla                  shorthand for --compute xla\n";
     out += "  --seed <N>             master seed (default 1)\n";
     out += "  --threads <N>          executor worker threads (1 = sequential, 0 = all \
             cores; identical results)\n";
@@ -484,6 +486,7 @@ mod tests {
         }
         assert!(h.contains("[--values]"), "flags render without N");
         assert!(h.contains("[--skew D]"), "perturbation knob surfaced");
+        assert!(h.contains("[--compute P]"), "data-plane knob surfaced");
         assert!(h.contains("[--threads N]"), "executor knob surfaced");
         assert!(h.contains("--help"), "points at the descriptor listing");
     }

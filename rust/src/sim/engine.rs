@@ -91,7 +91,7 @@ impl<P: Program + Send> Engine<P> {
         if threads == 1 {
             self.run()
         } else {
-            ParExecutor { threads }.run(self.into_parts())
+            ParExecutor::new(threads).run(self.into_parts())
         }
     }
 }
@@ -400,6 +400,126 @@ mod tests {
         // The parallel backend also terminates on an empty event set.
         let e = tiny_engine(vec![Ping { remaining: 0 }, Ping { remaining: 0 }]);
         assert_eq!(e.run_threads(2).makespan, Time::ZERO);
+    }
+
+    /// Window coalescing is a host-perf knob, never a semantics knob:
+    /// every coalescing factor — including the identity `k = 1` (the
+    /// pre-coalescing one-window-per-round schedule) and factors far
+    /// beyond any real tuning — must reproduce the sequential backend's
+    /// results bit for bit, on both the latency-sensitive ping-pong and
+    /// the cross-shard fan-in.
+    #[test]
+    fn window_batching_is_result_identity() {
+        let seq_pp = tiny_engine(vec![Ping { remaining: 10 }, Ping { remaining: 10 }]).run();
+        let seq_fan = fan_in_engine(32).run();
+        for k in [1usize, 2, 4, 16, 1000] {
+            let exec = ParExecutor { threads: 2, window_batch: Some(k) };
+            let pp = exec.run(
+                tiny_engine(vec![Ping { remaining: 10 }, Ping { remaining: 10 }])
+                    .into_parts(),
+            );
+            assert_eq!(seq_pp.makespan, pp.makespan, "ping-pong k={k}");
+            assert_eq!(seq_pp.events, pp.events, "ping-pong k={k}");
+            assert_eq!(seq_pp.net.msgs_delivered, pp.net.msgs_delivered);
+
+            let exec = ParExecutor { threads: 8, window_batch: Some(k) };
+            let fan = exec.run(fan_in_engine(32).into_parts());
+            assert_eq!(seq_fan.makespan, fan.makespan, "fan-in k={k}");
+            assert_eq!(seq_fan.events, fan.events, "fan-in k={k}");
+            for (a, b) in seq_fan.node_stats.iter().zip(&fan.node_stats) {
+                assert_eq!(a.total_busy(), b.total_busy(), "fan-in k={k}");
+                assert_eq!(a.total_idle(), b.total_idle(), "fan-in k={k}");
+            }
+        }
+    }
+
+    /// The chain-guard hazard shape: shard 0 holds a long self-send
+    /// chain (a local event every ~L) *and* wakes shard 1 at t=0; the
+    /// woken shard's reply lands ~2 latencies in — in the middle of what
+    /// a naive k-window coalesced drain would have already processed.
+    /// Without the guard, a coalescing factor ≥ 3 processes the 3L-ish
+    /// self-chain event before the 2L-ish reply and diverges from the
+    /// sequential order (debug builds panic on the past-push assert).
+    #[derive(Clone)]
+    struct ChainEcho {
+        /// Remaining self-chain hops (node 0 only).
+        hops: u32,
+    }
+    #[derive(Clone)]
+    enum EchoMsg {
+        Wake,
+        SelfHop,
+        Reply,
+    }
+    impl WireMsg for EchoMsg {
+        fn wire_bytes(&self) -> u64 {
+            8
+        }
+    }
+    impl Program for ChainEcho {
+        type Msg = EchoMsg;
+        fn on_start(&mut self, ctx: &mut Ctx<EchoMsg>) {
+            if ctx.node() == 0 {
+                ctx.send(1, EchoMsg::Wake);
+                ctx.send(0, EchoMsg::SelfHop);
+            }
+        }
+        fn on_message(&mut self, ctx: &mut Ctx<EchoMsg>, src: NodeId, msg: EchoMsg) {
+            match msg {
+                EchoMsg::Wake => ctx.send(src, EchoMsg::Reply),
+                EchoMsg::SelfHop => {
+                    if self.hops > 0 {
+                        self.hops -= 1;
+                        ctx.send(0, EchoMsg::SelfHop);
+                    }
+                }
+                EchoMsg::Reply => {
+                    // Make the interleaving observable: the reply's
+                    // handler burns cycles, so processing it out of
+                    // order shifts busy_until for every later self-hop.
+                    ctx.compute(500);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn window_batching_exact_under_cross_shard_reply_chains() {
+        let mk = || {
+            let progs = vec![ChainEcho { hops: 40 }, ChainEcho { hops: 0 }];
+            let fabric = Fabric::new(Topology::paper(2), NetConfig::default(), 7);
+            Engine::new(progs, fabric, CoreModel::default(), 13)
+        };
+        let seq = mk().run();
+        assert!(seq.events > 40, "self-chain + wake + reply all processed");
+        for k in [1usize, 2, 3, 4, 16, 1000] {
+            let par = ParExecutor { threads: 2, window_batch: Some(k) }.run(mk().into_parts());
+            assert_eq!(seq.makespan, par.makespan, "k={k}");
+            assert_eq!(seq.events, par.events, "k={k}");
+            for (a, b) in seq.node_stats.iter().zip(&par.node_stats) {
+                assert_eq!(a.total_busy(), b.total_busy(), "k={k}");
+                assert_eq!(a.total_idle(), b.total_idle(), "k={k}");
+                assert_eq!(a.last_active, b.last_active, "k={k}");
+            }
+        }
+    }
+
+    /// A straggling lone node (the coalescing win case: one shard holds
+    /// every pending event while the rest idle) must drain identically
+    /// at every factor.
+    #[test]
+    fn window_batching_exact_under_stragglers() {
+        let mk = || {
+            let mut e = fan_in_engine(16);
+            e.slow_down(3, 64);
+            e
+        };
+        let seq = mk().run();
+        for k in [1usize, 4, 64] {
+            let par = ParExecutor { threads: 4, window_batch: Some(k) }.run(mk().into_parts());
+            assert_eq!(seq.makespan, par.makespan, "k={k}");
+            assert_eq!(seq.events, par.events, "k={k}");
+        }
     }
 
     /// Zero-lookahead fabrics (degenerate config) cannot window; the

@@ -551,7 +551,23 @@ impl<P: Program> Shard<P> {
         bound: Time,
         emit: &mut impl FnMut(Transit<P::Msg>),
     ) {
-        while let Some(t) = self.queue.pop_before(bound) {
+        self.run_window_dyn(sx, &|| bound, emit);
+    }
+
+    /// [`Shard::run_window`] with a bound re-read before every pop. The
+    /// parallel backend's coalesced windows tighten it mid-drain when an
+    /// emission opens a potential cross-shard reply chain (the chain
+    /// guard, see `exec::par`). The bound may only shrink, and a
+    /// tightening triggered by an event processed at `t` can never land
+    /// below `t + 2·lookahead` — above every event already popped — so
+    /// completed pops stay valid.
+    pub fn run_window_dyn(
+        &mut self,
+        sx: &SharedCtx<'_>,
+        bound: &impl Fn() -> Time,
+        emit: &mut impl FnMut(Transit<P::Msg>),
+    ) {
+        while let Some(t) = self.queue.pop_before(bound()) {
             self.events += 1;
             // Destination-side fabric phase: spine + ingress queueing, in
             // canonical order per destination.

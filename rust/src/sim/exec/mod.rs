@@ -8,9 +8,12 @@
 //!   node, drained to quiescence on the calling thread.
 //! - [`ParExecutor`] — deterministic sharded simulation: nodes partition
 //!   into contiguous ranges (one worker thread each) that advance in
-//!   conservative time windows bounded by the fabric's minimum latency
-//!   ([`crate::net::Fabric::min_latency`]), exchange cross-shard sends at
-//!   window barriers, and merge per-shard stats in canonical node order.
+//!   conservative time windows derived from the fabric's minimum latency
+//!   ([`crate::net::Fabric::min_latency`]) and the other shards' published
+//!   event minima (so a shard running alone coalesces up to
+//!   `NANOSORT_WINDOW_BATCH` windows per barrier round), exchange
+//!   cross-shard sends at window barriers, and merge per-shard stats in
+//!   canonical node order.
 //!
 //! # Determinism contract (DESIGN.md §7)
 //!
@@ -27,7 +30,9 @@
 //!    oversubscribed-spine registers) is resolved when the destination
 //!    pops the event, in canonical order, not when the sender issued it;
 //! 4. the window rule (`new events land ≥ one minimum-latency beyond the
-//!    window start`) closes each window's event set before it runs.
+//!    emitting shard's published minimum`) closes each window's event set
+//!    before it runs — at any window-coalescing factor (`sim::exec::par`
+//!    module docs walk the closure argument).
 //!
 //! `rust/tests/exec.rs` pins the contract across every workload, tier,
 //! and perturbation knob.
@@ -99,9 +104,21 @@ impl Executor for SeqExecutor {
 #[derive(Debug, Clone, Copy)]
 pub struct ParExecutor {
     pub threads: usize,
+    /// Window-coalescing factor `k`: how many fabric-lookahead windows a
+    /// shard may drain per barrier round when no other shard could
+    /// interleave a transit (see the `sim::exec::par` module docs).
+    /// `None` resolves the `NANOSORT_WINDOW_BATCH` environment knob
+    /// (default 4). Results are byte-identical at every value; `k = 1`
+    /// reproduces the pre-coalescing one-window-per-round schedule.
+    pub window_batch: Option<usize>,
 }
 
 impl ParExecutor {
+    /// `threads` workers, coalescing factor from the environment knob.
+    pub fn new(threads: usize) -> Self {
+        ParExecutor { threads, window_batch: None }
+    }
+
     /// Resolve the `0 = available_parallelism` convention.
     pub fn resolved_threads(&self) -> usize {
         resolve_threads(self.threads)
@@ -114,6 +131,6 @@ impl Executor for ParExecutor {
     }
 
     fn run<P: Program + Send>(&self, parts: EngineParts<P>) -> RunSummary {
-        par::run_par(parts, self.resolved_threads())
+        par::run_par(parts, self.resolved_threads(), self.window_batch)
     }
 }

@@ -1,6 +1,6 @@
 //! The deterministic sharded backend: nodes are partitioned into
 //! contiguous ranges, one worker thread per shard, advancing together in
-//! conservative time windows bounded by the fabric's minimum latency.
+//! conservative time windows derived from the fabric's minimum latency.
 //!
 //! # Why this is byte-identical to the sequential backend
 //!
@@ -9,17 +9,47 @@
 //! *destination* node's shard, egress registers, RNG streams, and send
 //! counters by the *source* node's shard. Shards only interact through
 //! [`Transit`] values ordered by the canonical `(at, src, ctr)` key, and
-//! the window rule guarantees a shard has **every** transit with
-//! `at < bound` in hand before it processes that window:
+//! the per-shard window bound guarantees a shard has **every** transit
+//! with `at < bound` in hand before it processes that window:
 //!
-//! - window `k` processes events in `[min_k, min_k + L)` where `L` is
-//!   [`crate::net::Fabric::min_latency`] and `min_k` the global earliest
-//!   pending event;
-//! - any event processed at `t ≥ min_k` can only produce transits with
-//!   `at ≥ t + L ≥ min_k + L` — i.e. beyond the current window — so the
-//!   window's event set is closed before it starts;
+//! - at the round barrier each shard publishes `min_S`, the time of its
+//!   earliest pending event (`u64::MAX` when idle);
+//! - any event a shard `B` processes this round is at `t ≥ min_B`, so
+//!   every transit `B` can still emit arrives at `≥ min_B + L`, where `L`
+//!   is [`crate::net::Fabric::min_latency`];
+//! - shard `A` may therefore safely process events strictly before
+//!   `horizon_A = min over B≠A of (min_B + L)` as far as *other shards'
+//!   queued events* are concerned — everything they could still emit
+//!   lands at or beyond it. Idle shards contribute nothing
+//!   (`u64::MAX`), so a shard running alone (a straggler tail, the final
+//!   drain) is not throttled by the fleet-wide minimum;
+//! - the horizon does **not** cover chains `A` itself starts mid-window:
+//!   a transit `A` emits with arrival `a` can wake an idle shard whose
+//!   reply lands as early as `a + L` — potentially before the end of a
+//!   multi-window bound. The **chain guard** closes this: every emission
+//!   tightens the live bound to `min(bound, a + L)`. An emission from an
+//!   event processed at `t` has `a ≥ t + L`, so the guard lands at
+//!   `≥ t + 2L`, above every event already popped — completed work is
+//!   never invalidated, and any reply chain (two or more hops, each
+//!   ≥ L) arrives at or beyond the tightened bound;
 //! - transits are exchanged at the barrier after each window, before the
-//!   next bound is computed.
+//!   next round's minima are published.
+//!
+//! The bound is additionally capped at `min_A + k·L` — the **window
+//! coalescing** factor `k` (`NANOSORT_WINDOW_BATCH`, default
+//! [`DEFAULT_WINDOW_BATCH`]) — so one shard never runs unboundedly ahead
+//! of the exchange cadence. At `k = 1` every shard's bound reduces to
+//! `global_min + L`, the classic single-window rule this backend shipped
+//! with (the chain guard cannot bind there: it is always `≥ min_A + 2L`);
+//! larger `k` lets a shard drain up to `k` *quiet* windows per barrier
+//! round — coalescing stretches with no cross-shard emission, which is
+//! exactly when no other shard could interleave a transit (§Perf: at
+//! small tiers the 2-barrier round, not the event work, is the
+//! wall-clock floor). The knob never changes results — horizon + chain
+//! guard close every window's event set for any `k ≥ 1`, and
+//! `window_batching_is_result_identity` plus
+//! `window_batching_exact_under_cross_shard_reply_chains` in
+//! `sim/engine.rs` pin it.
 //!
 //! Per-shard state therefore evolves through exactly the same sequence of
 //! mutations as in the sequential backend (which is the same state
@@ -44,8 +74,33 @@ use super::seq::run_seq;
 use super::EngineParts;
 use crate::sim::Time;
 
-/// Sentinel bound meaning "no events anywhere: stop".
-const DONE: u64 = u64::MAX;
+/// Default window-coalescing factor: a shard with exclusive claim on the
+/// near future drains up to this many lookahead windows per barrier
+/// round. Results are identical at any value (see module docs); this only
+/// trades barrier overhead against exchange latency.
+pub(crate) const DEFAULT_WINDOW_BATCH: u64 = 4;
+
+/// Resolve the coalescing factor: an explicit executor setting wins,
+/// then the `NANOSORT_WINDOW_BATCH` environment knob, then the default.
+/// Clamped to ≥ 1 (`k = 0` would mean "process nothing", a livelock). A
+/// malformed environment value panics rather than silently running the
+/// default — matching the CLI's strict knob parsing, so a perf
+/// measurement is never taken against a configuration other than the
+/// one the operator asked for.
+pub(crate) fn resolve_window_batch(explicit: Option<usize>) -> u64 {
+    if let Some(k) = explicit {
+        return (k as u64).max(1);
+    }
+    match std::env::var("NANOSORT_WINDOW_BATCH") {
+        Ok(raw) => match raw.parse::<u64>() {
+            Ok(k) => k.max(1),
+            Err(_) => panic!(
+                "NANOSORT_WINDOW_BATCH expects a positive integer, got {raw:?}"
+            ),
+        },
+        Err(_) => DEFAULT_WINDOW_BATCH,
+    }
+}
 
 /// Split `nodes` into up to `threads` contiguous shard ranges. When the
 /// core is oversubscribed the per-leaf spine registers force shard
@@ -80,15 +135,19 @@ struct WindowSync<M> {
     barrier: Barrier,
     /// Per-shard earliest pending event time (u64::MAX = idle).
     mins: Vec<AtomicU64>,
-    /// This round's exclusive window bound ([`DONE`] = quiescent).
-    bound: AtomicU64,
     /// Per-destination-shard mailboxes, drained between windows.
     inboxes: Vec<Mutex<Vec<Transit<M>>>>,
 }
 
 /// Run `parts` on `threads` worker threads (resolved and > 1), falling
 /// back to the sequential backend when sharding cannot help.
-pub fn run_par<P: Program + Send>(parts: EngineParts<P>, threads: usize) -> RunSummary {
+/// `window_batch` is the coalescing factor `k` (`None` = environment
+/// knob / default; identical results at any value).
+pub fn run_par<P: Program + Send>(
+    parts: EngineParts<P>,
+    threads: usize,
+    window_batch: Option<usize>,
+) -> RunSummary {
     let lookahead = parts.fabric.min_latency();
     let leaf_aligned = parts.fabric.cfg.oversub > 0;
     let ranges = shard_ranges(
@@ -102,6 +161,7 @@ pub fn run_par<P: Program + Send>(parts: EngineParts<P>, threads: usize) -> RunS
         // conservative windows cannot make progress / cannot help.
         return run_seq(parts);
     }
+    let batch = resolve_window_batch(window_batch);
 
     let EngineParts { programs, slow, fabric, core, groups, seed } = parts;
     let mut programs = programs;
@@ -119,7 +179,6 @@ pub fn run_par<P: Program + Send>(parts: EngineParts<P>, threads: usize) -> RunS
     let sync = WindowSync {
         barrier: Barrier::new(shards.len()),
         mins: (0..shards.len()).map(|_| AtomicU64::new(u64::MAX)).collect(),
-        bound: AtomicU64::new(0),
         inboxes: (0..shards.len()).map(|_| Mutex::new(Vec::new())).collect(),
     };
     let starts: Vec<usize> = ranges.iter().map(|r| r.start).collect();
@@ -136,7 +195,7 @@ pub fn run_par<P: Program + Send>(parts: EngineParts<P>, threads: usize) -> RunS
                 let groups = &groups;
                 scope.spawn(move || {
                     let sx = SharedCtx { fabric, core, groups: groups.as_slice() };
-                    worker(&mut shard, idx, &sx, sync, starts, lookahead);
+                    worker(&mut shard, idx, &sx, sync, starts, lookahead, batch);
                     shard
                 })
             })
@@ -159,10 +218,18 @@ fn worker<P: Program>(
     sync: &WindowSync<P::Msg>,
     starts: &[usize],
     lookahead: Time,
+    batch: u64,
 ) {
     // Per-destination-shard outboxes, flushed under one short lock each
-    // at the end of every window.
+    // at the end of every window. (`Vec::append` in the flush leaves each
+    // outbox empty *with its capacity*, so these amortize for free.)
     let mut out: Vec<Vec<Transit<P::Msg>>> = (0..starts.len()).map(|_| Vec::new()).collect();
+    // Recycled inbox buffer: swapped with the shared mailbox each round,
+    // drained in place (§Perf: `mem::take` on the mailbox allocated a
+    // fresh Vec per shard per window — thousands of reallocs per shuffle
+    // round at the paper tier; the pooled pair reallocates only on
+    // high-water growth).
+    let mut inbox: Vec<Transit<P::Msg>> = Vec::new();
 
     // Round 0: fire every on_start and exchange the initial transits.
     {
@@ -177,35 +244,53 @@ fn worker<P: Program>(
         // Merge inbound transits (canonical-order queues make the merge
         // order irrelevant, but sort anyway so the insertion path is
         // deterministic bucket by bucket).
-        let mut inbox = std::mem::take(&mut *sync.inboxes[idx].lock().expect("inbox"));
+        std::mem::swap(&mut *sync.inboxes[idx].lock().expect("inbox"), &mut inbox);
         inbox.sort_unstable_by_key(|t| (t.flight.at, t.flight.src, t.flight.ctr));
-        for t in inbox {
+        for t in inbox.drain(..) {
             shard.push(t);
         }
 
-        // Publish the earliest pending event; the barrier leader turns
-        // the global minimum into this round's window bound.
-        let min = shard.peek_at().map(|t| t.0).unwrap_or(u64::MAX);
-        sync.mins[idx].store(min, Ordering::SeqCst);
-        if sync.barrier.wait().is_leader() {
-            let global = sync.mins.iter().map(|m| m.load(Ordering::SeqCst)).min().unwrap();
-            let bound = if global == u64::MAX {
-                DONE
-            } else {
-                global.saturating_add(lookahead.0)
-            };
-            sync.bound.store(bound, Ordering::SeqCst);
-        }
+        // Publish the earliest pending event; after the barrier every
+        // shard derives its own bound from the full minima vector — the
+        // same deterministic inputs on every worker, no leader round.
+        let own = shard.peek_at().map(|t| t.0).unwrap_or(u64::MAX);
+        sync.mins[idx].store(own, Ordering::SeqCst);
         sync.barrier.wait();
 
-        let bound = sync.bound.load(Ordering::SeqCst);
-        if bound == DONE {
-            return;
+        // horizon = earliest time any *other* shard could still emit a
+        // transit into this shard (min over others of min + L); the own
+        // cap bounds coalescing at `batch` lookahead windows.
+        let mut horizon = u64::MAX;
+        let mut all_idle = true;
+        for (j, m) in sync.mins.iter().enumerate() {
+            let v = m.load(Ordering::SeqCst);
+            if v != u64::MAX {
+                all_idle = false;
+                if j != idx {
+                    horizon = horizon.min(v.saturating_add(lookahead.0));
+                }
+            }
         }
+        if all_idle {
+            return; // global quiescence
+        }
+        let own_cap = own.saturating_add(lookahead.0.saturating_mul(batch));
         {
-            let mut emit =
-                |t: Transit<P::Msg>| out[shard_of(starts, t.flight.dst)].push(t);
-            shard.run_window(sx, Time(bound), &mut emit);
+            // Chain guard: the horizon covers events other shards hold
+            // *now*, but a transit this shard emits mid-window can wake
+            // an idle shard whose reply lands as early as the transit's
+            // arrival + L. Tightening the live bound to that point keeps
+            // coalesced windows closed against two-hop reply chains:
+            // every event already popped ran at t < arrival, and the
+            // guard lands at ≥ arrival + L ≥ t + 2L — above everything
+            // processed. Quiet (emission-free) stretches coalesce freely
+            // up to the `batch` cap.
+            let guard = std::cell::Cell::new(horizon.min(own_cap));
+            let mut emit = |t: Transit<P::Msg>| {
+                guard.set(guard.get().min(t.flight.at.0.saturating_add(lookahead.0)));
+                out[shard_of(starts, t.flight.dst)].push(t);
+            };
+            shard.run_window_dyn(sx, &|| Time(guard.get()), &mut emit);
         }
         flush(&mut out, sync, idx);
         sync.barrier.wait();
@@ -266,5 +351,17 @@ mod tests {
             assert_eq!(shard_of(&starts, r.start), i);
             assert_eq!(shard_of(&starts, r.end - 1), i);
         }
+    }
+
+    #[test]
+    fn window_batch_resolution_prefers_explicit_and_clamps() {
+        assert_eq!(resolve_window_batch(Some(7)), 7);
+        assert_eq!(resolve_window_batch(Some(1)), 1);
+        // k = 0 would process nothing forever; clamp to identity.
+        assert_eq!(resolve_window_batch(Some(0)), 1);
+        // No explicit setting: env var or default, both ≥ 1. (The env
+        // value itself is read-only here — tests must not mutate process
+        // environment under a parallel test harness.)
+        assert!(resolve_window_batch(None) >= 1);
     }
 }

@@ -1,0 +1,218 @@
+//! Data-plane differential suite: every kernel of every offline backend
+//! against the `NativeCompute` oracle (DESIGN.md §8).
+//!
+//! The §8 contract is *byte-identical outputs* — including tie-breaks —
+//! so a radix run and a native run produce the same conformance digest.
+//! This suite pins the kernels directly: across every input distribution
+//! the perturbation layer can generate (uniform, zipfian, sorted,
+//! few-distinct, adversarial-bucket), across edge shapes (empty, single
+//! key, all-equal, `u64::MAX` boundary), and across the small-input
+//! crossover where the radix backend falls back to comparison sorts.
+
+use nanosort::compute::{LocalCompute, NativeCompute, RadixCompute};
+use nanosort::perturb::KeyDistribution;
+use nanosort::scenario::Scenario;
+use nanosort::sim::SplitMix64;
+
+/// Key blocks in the shapes the simulated cores actually sort: per-node
+/// slices of every perturbation-layer distribution, at sizes spanning
+/// the radix crossover.
+fn distribution_blocks() -> Vec<(String, Vec<u64>)> {
+    let mut blocks = Vec::new();
+    for d in KeyDistribution::ALL {
+        for (cores, total) in [(8usize, 64usize), (4, 512), (2, 8192)] {
+            for (i, part) in d.partitioned_keys(0xC0FFEE, total, cores).into_iter().enumerate()
+            {
+                if i < 2 {
+                    blocks.push((format!("{}/{total}k/core{i}", d.name()), part));
+                }
+            }
+        }
+    }
+    blocks
+}
+
+/// Edge shapes: empty, singleton, all-equal, and the u64 boundary. The
+/// kernels are total functions over u64 even though the simulator's
+/// generator keeps keys `< u64::MAX`.
+fn edge_blocks() -> Vec<(String, Vec<u64>)> {
+    vec![
+        ("empty".into(), vec![]),
+        ("single".into(), vec![42]),
+        ("single-max".into(), vec![u64::MAX]),
+        ("all-equal".into(), vec![7; 300]),
+        ("two".into(), vec![9, 3]),
+        (
+            "max-boundary".into(),
+            (0..400u64).map(|i| u64::MAX - (i * 37) % 5).collect(),
+        ),
+        ("zero-heavy".into(), {
+            let mut v = vec![0u64; 200];
+            v.extend([u64::MAX, 1, 0, u64::MAX - 1]);
+            v
+        }),
+    ]
+}
+
+fn all_blocks() -> Vec<(String, Vec<u64>)> {
+    let mut blocks = distribution_blocks();
+    blocks.extend(edge_blocks());
+    blocks
+}
+
+/// Pivot lists exercising both the short (branchless-scan) and long
+/// (binary-search) tagging paths, including duplicate pivots.
+fn pivot_lists(rng: &mut SplitMix64) -> Vec<Vec<u64>> {
+    let mut lists = vec![
+        vec![],
+        vec![1u64 << 32],
+        vec![0, 0, u64::MAX - 1],
+    ];
+    for p in [3usize, 15, 63, 255] {
+        let mut pivots: Vec<u64> = (0..p).map(|_| rng.next_u64()).collect();
+        pivots.sort_unstable();
+        lists.push(pivots);
+    }
+    lists
+}
+
+#[test]
+fn sort_matches_oracle_on_every_distribution_and_edge() {
+    let (native, radix) = (NativeCompute, RadixCompute);
+    for (label, block) in all_blocks() {
+        let mut a = block.clone();
+        let mut b = block;
+        native.sort(&mut a);
+        radix.sort(&mut b);
+        assert_eq!(a, b, "sort diverged on {label}");
+    }
+}
+
+#[test]
+fn sort_pairs_matches_oracle_including_tie_order() {
+    let (native, radix) = (NativeCompute, RadixCompute);
+    for (label, block) in all_blocks() {
+        // Payload = input position, so any tie-break difference between
+        // the planes shows up as a payload mismatch.
+        let pairs: Vec<(u64, u64)> =
+            block.into_iter().enumerate().map(|(i, k)| (k, i as u64)).collect();
+        let mut a = pairs.clone();
+        let mut b = pairs;
+        native.sort_pairs(&mut a);
+        radix.sort_pairs(&mut b);
+        assert_eq!(a, b, "sort_pairs diverged on {label}");
+    }
+}
+
+#[test]
+fn bucketize_and_partition_match_oracle() {
+    let (native, radix) = (NativeCompute, RadixCompute);
+    let mut rng = SplitMix64::new(0xBEEF);
+    let pivot_sets = pivot_lists(&mut rng);
+    for (label, block) in all_blocks() {
+        for (pi, pivots) in pivot_sets.iter().enumerate() {
+            assert_eq!(
+                native.bucketize(&block, pivots),
+                radix.bucketize(&block, pivots),
+                "bucketize diverged on {label} pivots#{pi}"
+            );
+            let a = native.partition(&block, pivots);
+            let b = radix.partition(&block, pivots);
+            assert_eq!(a, b, "partition diverged on {label} pivots#{pi}");
+            assert_eq!(a.len(), pivots.len() + 1, "{label}: bucket count");
+            assert_eq!(
+                a.iter().map(Vec::len).sum::<usize>(),
+                block.len(),
+                "{label}: partition must conserve keys"
+            );
+            let pairs: Vec<(u64, u64)> =
+                block.iter().enumerate().map(|(i, &k)| (k, i as u64)).collect();
+            assert_eq!(
+                native.partition_pairs(&pairs, pivots),
+                radix.partition_pairs(&pairs, pivots),
+                "partition_pairs diverged on {label} pivots#{pi}"
+            );
+        }
+    }
+}
+
+#[test]
+fn min_and_median_combine_match_oracle() {
+    let (native, radix) = (NativeCompute, RadixCompute);
+    for (label, block) in all_blocks() {
+        assert_eq!(native.min(&block), radix.min(&block), "min diverged on {label}");
+    }
+    let mut rng = SplitMix64::new(0xD0E);
+    for (m, p) in [(1usize, 5usize), (2, 15), (7, 15), (16, 3), (5, 1)] {
+        let rows: Vec<Vec<u64>> =
+            (0..m).map(|_| (0..p).map(|_| rng.next_u64()).collect()).collect();
+        assert_eq!(
+            native.median_combine(&rows),
+            radix.median_combine(&rows),
+            "median_combine diverged at m={m} p={p}"
+        );
+    }
+}
+
+/// End to end: the same seeded NanoSort scenario — duplicate-heavy
+/// distributions included, where the stable tie-break contract is
+/// load-bearing for the value phase — renders identically on both
+/// planes (same makespan, counters, validation, and metrics).
+#[test]
+fn nanosort_scenario_is_plane_invariant_under_every_distribution() {
+    use nanosort::algo::nanosort::NanoSort;
+    use nanosort::coordinator::ComputeChoice;
+    for d in KeyDistribution::ALL {
+        let run = |choice: ComputeChoice| {
+            Scenario::new(NanoSort {
+                keys_per_node: 8,
+                buckets: 4,
+                median_incast: 4,
+                shuffle_values: true,
+                ..Default::default()
+            })
+            .nodes(16)
+            .dist(d)
+            .compute(choice)
+            .seed(0xC0FFEE)
+            .run()
+            .unwrap()
+        };
+        let native = run(ComputeChoice::Native);
+        let radix = run(ComputeChoice::Radix);
+        assert!(native.validation.ok(), "{}: {}", d.name(), native.validation.detail);
+        assert!(radix.validation.ok(), "{}: {}", d.name(), radix.validation.detail);
+        // Everything but the plane name must match; compare the rendered
+        // reports with the name normalized away.
+        assert_eq!(
+            native.render().replace("compute=native", "compute=<plane>"),
+            radix.render().replace("compute=radix", "compute=<plane>"),
+            "{}: radix scenario diverged from the native oracle",
+            d.name()
+        );
+    }
+}
+
+/// MilliSort drives the long-pivot-list (cores-1 boundaries) partition
+/// path; cross-check it end to end as well.
+#[test]
+fn millisort_scenario_is_plane_invariant() {
+    use nanosort::algo::millisort::MilliSort;
+    use nanosort::coordinator::ComputeChoice;
+    let run = |choice: ComputeChoice| {
+        Scenario::new(MilliSort::default())
+            .nodes(64)
+            .compute(choice)
+            .seed(0xC0FFEE)
+            .run()
+            .unwrap()
+    };
+    let native = run(ComputeChoice::Native);
+    let radix = run(ComputeChoice::Radix);
+    assert!(native.validation.ok() && radix.validation.ok());
+    assert_eq!(
+        native.render().replace("compute=native", "compute=<plane>"),
+        radix.render().replace("compute=radix", "compute=<plane>"),
+        "millisort: radix scenario diverged from the native oracle"
+    );
+}
