@@ -20,12 +20,12 @@ use anyhow::{bail, Result};
 use crate::coordinator::{RunOptions, Table};
 
 /// All figure/table ids in paper order (plus the conformance-tier
-/// `paperscale` summary and the sweep-driven `skewsweep`/`tailsweep`
-/// sensitivity studies).
+/// `paperscale` summary, the sweep-driven `skewsweep`/`tailsweep`
+/// sensitivity studies, and the service-layer `loadsweep`).
 pub const ALL_FIGURES: &[&str] = &[
     "table1", "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "12", "13", "14",
     "15", "multicast", "16", "headline", "table2", "ablation", "paperscale", "skewsweep",
-    "tailsweep",
+    "tailsweep", "loadsweep",
 ];
 
 /// Run one figure/table by id; returns the report tables.
@@ -55,6 +55,7 @@ pub fn run_figure(id: &str, opts: &RunOptions) -> Result<Vec<Table>> {
         "paperscale" => vec![datacenter::paperscale(opts)?],
         "skewsweep" => vec![crate::perturb::sweep::skew_sweep_figure(opts)?],
         "tailsweep" => vec![crate::perturb::sweep::tail_sweep_figure(opts)?],
+        "loadsweep" => vec![crate::service::loadsweep_figure(opts)?],
         other => bail!("unknown figure id {other:?}; ids: {}", ALL_FIGURES.join(", ")),
     })
 }

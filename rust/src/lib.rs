@@ -48,10 +48,20 @@
 //!   all default-off and bit-identical when off — plus the deterministic
 //!   grid driver behind `repro sweep <workload> --axis <param>=a,b,c`
 //!   ([`perturb::sweep`]).
+//! - [`service`] — sorting as a service (DESIGN.md §9): deterministic
+//!   open Poisson job arrivals over a zipf workload mix, coordinator-level
+//!   admission schedulers ([`service::SchedPolicy`]: `fifo`/`sjf`/
+//!   `reserve`) placing jobs onto disjoint contiguous ranges of one
+//!   shared fabric, per-job node-id namespacing and output validation,
+//!   and tail-JCT reporting ([`service::ServiceReport`]: offered vs
+//!   achieved load, queueing delay, p50/p95/p99 JCT per size class).
+//!   Driven by `repro serve <mix>` with its own conformance digest, and
+//!   the `loadsweep` figure.
 //! - [`benchfig`] — regenerates every table and figure in the paper's
 //!   evaluation (see DESIGN.md §4 for the index), plus `paperscale`
-//!   (the simulated headline next to the paper's 68 µs, per tier) and the
-//!   sweep-driven `skewsweep`/`tailsweep` sensitivity studies.
+//!   (the simulated headline next to the paper's 68 µs, per tier), the
+//!   sweep-driven `skewsweep`/`tailsweep` sensitivity studies, and the
+//!   service-layer `loadsweep` (offered load × scheduler).
 //!
 //! Quickstart: `cargo run --release --example quickstart`.
 
@@ -67,5 +77,6 @@ pub mod net;
 pub mod perturb;
 pub mod runtime;
 pub mod scenario;
+pub mod service;
 pub mod sim;
 pub mod stats;

@@ -8,6 +8,9 @@
 //! repro run <workload> --help   # full parameter-descriptor listing
 //! repro sweep <workload> [--tier smoke|mid|paper] --axis <param>=a,b,c
 //!                      [--axis ...] [--compute P] [--seed N] [--threads N]
+//! repro serve [mix]    [--sched fifo|sjf|reserve|all] [--tier smoke|mid|paper]
+//!                      [--jobs N] [--iat NS] [--bless] [--compute P] [--threads N]
+//! repro serve --help   # service parameter descriptors
 //! repro paper          [--tier smoke|mid|paper] [--bless] [--compute P]
 //!                      [--threads N]
 //! repro artifacts      # list loaded XLA artifacts
@@ -58,6 +61,7 @@ use nanosort::net::NetConfig;
 use nanosort::perturb::{self, sweep, Perturbations};
 use nanosort::runtime::XlaEngine;
 use nanosort::scenario::{registry, Scenario};
+use nanosort::service::{self, Mix, SchedPolicy, ServiceConfig};
 
 fn main() {
     if let Err(e) = real_main() {
@@ -72,6 +76,7 @@ fn real_main() -> Result<()> {
         Some("fig") => cmd_fig(args),
         Some("run") => cmd_run(args),
         Some("sweep") => cmd_sweep(args),
+        Some("serve") => cmd_serve(args),
         Some("paper") => cmd_paper(args),
         Some("artifacts") => cmd_artifacts(),
         Some("list") => {
@@ -94,6 +99,9 @@ fn help() -> String {
         "repro — NanoSort reproduction CLI
   repro fig <id|all> [--compute P] [--seed N] [--runs N] [--quick] [--csv]
 {}  repro sweep <workload> [--tier smoke|mid|paper] --axis <param>=a,b,c [--axis ...] [--compute P] [--seed N] [--threads N]
+  repro serve [mix]  [--sched fifo|sjf|reserve|all] [--tier smoke|mid|paper] [--jobs N] [--iat NS] [--bless] [--compute P] [--threads N]
+  repro serve --help # service parameter descriptors (mix, scheduler, arrival knobs)
+  repro fig loadsweep # offered load × scheduler sweep of the job service
   repro paper       [--tier smoke|mid|paper] [--bless] [--compute P] [--threads N]
   repro artifacts | repro list
   (--compute P: data plane, native|radix|xla, default radix; digests are plane-invariant)
@@ -205,6 +213,170 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
     }
     println!("{}", outcome.table.render());
     eprintln!("[sweep: {} cells in {:.2?}]", outcome.cells.len(), start.elapsed());
+    Ok(())
+}
+
+/// `repro serve --help` output, mirroring [`registry::describe`]'s
+/// typed-descriptor format for the service's own parameters.
+fn serve_describe() -> String {
+    let mut out = String::from(
+        "serve — multi-tenant sorting service: open Poisson job arrivals, pluggable \
+         admission schedulers, one shared fabric\n\nservice parameters:\n",
+    );
+    out += "  [mix]                  workload mix: nanosort = every job a NanoSort \
+            instance; mixed = zipf-popularity draw over all four registered workloads \
+            (default nanosort)\n";
+    out += "  --sched <S>            admission scheduler: fifo (strict arrival order) | \
+            sjf (smallest job first) | reserve (whole-leaf partition reservation) | all \
+            (default all)\n";
+    out += "  --tier <T>             scale tier: smoke (256 workers, 24 jobs) | mid \
+            (1024, 64) | paper (4096, 256) (default smoke)\n";
+    out += "  --iat <NS>             mean Poisson interarrival gap in ns; offered load = \
+            1/iat (default from tier; skips golden/bench when overridden)\n";
+    out += "  --jobs <N>             trace length in jobs — the run's duration knob \
+            (default from tier; skips golden/bench when overridden)\n";
+    out += "  --bless                accept an intentional service-digest change\n";
+    out += "\nenvironment knobs:\n";
+    for (name, help) in perturb::ENV_AXES {
+        // Skew shifts per-job inputs; loss/rto/tail/oversub shape the
+        // shared fabric; stragglers slow fleet machines (never the
+        // coordinator node).
+        out += &format!("  {:<22} {help}\n", format!("--{name} <V>"));
+    }
+    out += "  --compute <P>          data plane: native|radix|xla (default radix; \
+            digests are plane-invariant)\n";
+    out += "  --threads <N>          executor worker threads (1 = sequential, 0 = all \
+            cores; identical results — N != 1 cross-checks both backends)\n";
+    out
+}
+
+/// The service conformance entry point: run the tier's open job stream
+/// under each requested scheduler with the fixed conformance seed,
+/// cross-check the sequential and sharded executors when `--threads N`
+/// is given, compare each `service_<mix>_<sched>_<tier>` digest against
+/// its golden, and write the per-scheduler `BENCH_service*.json` record.
+fn cmd_serve(mut args: Args) -> Result<()> {
+    if args.flag("help") {
+        print!("{}", serve_describe());
+        return Ok(());
+    }
+    let mix = match args.positional() {
+        Some(m) => Mix::parse(&m)?,
+        None => Mix::Nanosort,
+    };
+    let sched_arg = args.value_checked("sched")?.unwrap_or_else(|| "all".into());
+    let tier = match args.value_checked("tier")? {
+        Some(t) => Tier::parse(&t)?,
+        None => Tier::Smoke,
+    };
+    let iat_override: Option<u64> = args.num_checked("iat")?;
+    let jobs_override: Option<usize> = args.num_checked("jobs")?;
+    let bless = args.flag("bless");
+    let compute = args.compute_choice()?;
+    let threads: usize = args.num_checked("threads")?.unwrap_or(1);
+    // Environment knobs shape the shared fabric and every job's inputs.
+    let mut net = NetConfig { multicast: false, ..NetConfig::default() };
+    let mut knobs = Perturbations::default();
+    let mut env_custom = false;
+    for &(name, _) in perturb::ENV_AXES {
+        if let Some(value) = args.value_checked(name)? {
+            perturb::apply_env_setting(name, &value, &mut net, &mut knobs)?;
+            env_custom = true;
+        }
+    }
+    ensure_consumed(&args)?;
+    anyhow::ensure!(
+        !(compute == ComputeChoice::Xla && threads != 1),
+        "--compute xla requires --threads 1 (the XLA data plane is single-threaded)"
+    );
+
+    let policies: Vec<SchedPolicy> = if sched_arg == "all" {
+        SchedPolicy::ALL.to_vec()
+    } else {
+        vec![SchedPolicy::parse(&sched_arg)?]
+    };
+    let (workers, mut arrivals) = service::service_tier(tier, mix);
+    if let Some(iat) = iat_override {
+        arrivals.mean_iat_ns = iat;
+    }
+    if let Some(jobs) = jobs_override {
+        arrivals.jobs = jobs;
+    }
+    // Overridden arrival or environment knobs are exploration, not
+    // conformance: goldens and bench records pin the tier's canonical
+    // configuration only.
+    let custom = iat_override.is_some() || jobs_override.is_some() || env_custom;
+    let plane = compute.build()?;
+    let mut bench_parts = Vec::new();
+    for policy in policies {
+        eprintln!(
+            "[service: {} mix @ {} tier, sched {}, {} workers, {} jobs, seed {:#x}]",
+            mix.name(),
+            tier.name(),
+            policy.name(),
+            workers,
+            arrivals.jobs,
+            conformance::CONFORMANCE_SEED
+        );
+        let mut cfg = ServiceConfig::new(workers, arrivals.clone(), policy)?;
+        cfg.net = net.clone();
+        cfg.perturb = knobs.clone();
+        cfg.compute = plane.clone();
+        let start = std::time::Instant::now();
+        let report = service::run_service(&cfg, conformance::CONFORMANCE_SEED)?;
+        let wall = start.elapsed().as_secs_f64();
+        print!("{}", report.render());
+        println!("wall-clock: {wall:.2} s");
+        let digest = service::service_digest(&report, tier.name());
+        if threads != 1 {
+            let resolved = nanosort::sim::exec::resolve_threads(threads);
+            let mut pcfg = ServiceConfig::new(workers, arrivals.clone(), policy)?;
+            pcfg.net = net.clone();
+            pcfg.perturb = knobs.clone();
+            pcfg.compute = plane.clone();
+            pcfg.threads = resolved;
+            let pstart = std::time::Instant::now();
+            let par = service::run_service(&pcfg, conformance::CONFORMANCE_SEED)?;
+            let pwall = pstart.elapsed().as_secs_f64();
+            let par_digest = service::service_digest(&par, tier.name());
+            anyhow::ensure!(
+                digest == par_digest,
+                "executor divergence: ParExecutor({resolved} threads) service digest \
+                 differs from SeqExecutor:\n{}",
+                nanosort::conformance::golden::line_diff(&digest, &par_digest)
+            );
+            println!(
+                "executor: seq {wall:.2} s vs par[{resolved}] {pwall:.2} s ({:.2}x) | \
+                 digests identical",
+                wall / pwall.max(1e-9)
+            );
+        }
+        if custom {
+            continue;
+        }
+        bench_parts
+            .push(service::service_bench_json(&report, tier.name(), wall, 1).trim_end().to_string());
+        let name = format!("service_{}_{}_{}", mix.name(), policy.name(), tier.name());
+        match conformance::check_golden(&name, &digest, bless)? {
+            GoldenOutcome::Matched => println!("golden: {name}.json matches"),
+            GoldenOutcome::Blessed { path, created } => println!(
+                "golden: {} {} — commit it to pin this result",
+                if created { "created" } else { "re-blessed" },
+                path.display()
+            ),
+            GoldenOutcome::Mismatch { path, diff } => bail!(
+                "seeded-result drift vs {}:\n{}\nre-run with --bless to accept an \
+                 intentional change",
+                path.display(),
+                diff
+            ),
+        }
+    }
+    if !bench_parts.is_empty() {
+        let path = conformance::bench_path("service", tier.name());
+        std::fs::write(&path, format!("[\n{}\n]\n", bench_parts.join(",\n")))?;
+        println!("bench record: {}", path.display());
+    }
     Ok(())
 }
 

@@ -127,6 +127,11 @@ pub trait Program {
 pub(crate) enum SendOp<M> {
     Unicast { dst: NodeId, msg: M },
     Multicast { group: GroupId, msg: M },
+    /// Local timer: re-deliver `msg` to the issuing node after `delay`.
+    /// Never touches the fabric (no egress, no RNG draw, no net stats) —
+    /// it models a core-local timer interrupt, e.g. a coordinator's
+    /// arrival clock.
+    Timer { delay: Time, msg: M },
 }
 
 /// Handler-side API: accumulates compute cycles and outbound messages;
@@ -181,6 +186,17 @@ impl<'a, M: WireMsg> Ctx<'a, M> {
     pub fn send(&mut self, dst: NodeId, msg: M) {
         self.cycles += self.core.tx_cycles(msg.wire_bytes());
         self.ops.push((self.cycles, SendOp::Unicast { dst, msg }));
+    }
+
+    /// Schedule `msg` for re-delivery to *this* node after `delay` of
+    /// local time (measured from the issue point, i.e. after all cycles
+    /// charged so far in this handler). Timers bypass the fabric entirely:
+    /// no egress serialization, no propagation, no loss/tail draws, no
+    /// traffic counters — only the delivery-side RX charge applies when
+    /// the timer fires. Delivery order still follows the canonical
+    /// `(at, src, ctr)` event key, sharing the source's flight counter.
+    pub fn timer(&mut self, delay: Time, msg: M) {
+        self.ops.push((self.cycles, SendOp::Timer { delay, msg }));
     }
 
     /// True if the fabric supports switch-replicated multicast (§5.3).

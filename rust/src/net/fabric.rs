@@ -340,6 +340,19 @@ impl Fabric {
         leg_impl(&self.topo, &self.cfg, tx, stats, src, dst, on_wire)
     }
 
+    /// Mint a [`Flight`] for a core-local timer: `src` re-delivers to
+    /// itself at exactly `at`, off the fabric. The flight consumes one
+    /// slot of the source's send counter (so it orders canonically with
+    /// real sends from the same node) but draws nothing from the RNG
+    /// stream, counts no traffic, and never touches the egress register —
+    /// a run's network physics are identical with or without timers.
+    pub fn timer(&self, tx: &mut TxLane, src: usize, at: Time) -> Flight {
+        let slot = src - tx.base;
+        let ctr = tx.ctr[slot];
+        tx.ctr[slot] += 1;
+        Flight { at, src, dst: src, ctr, spine_at: at, cross_leaf: false }
+    }
+
     // ------------------------------------------------------ phase 2: admit
 
     /// Destination side of one flight: oversubscribed-spine queueing (when

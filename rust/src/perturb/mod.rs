@@ -48,6 +48,10 @@ pub const ZIPF_THETA: f64 = 1.2;
 /// Distinct values used by [`KeyDistribution::FewDistinct`].
 pub const FEW_DISTINCT_VALUES: usize = 16;
 
+/// Seed salt for the straggler-core selection stream (shared by the
+/// single-job scenario path and the multi-job service layer).
+pub const STRAGGLER_SALT: u64 = 0x7374_7261_6767_6c65; // "straggle"
+
 const ZIPF_SALT: u64 = 0x7a69_7066_6b65_7973; // "zipfkeys"
 const RANK_SALT: u64 = 0x7261_6e6b_6d61_7073; // "rankmaps"
 const FEW_SALT: u64 = 0x6665_7764_6973_7431; // "fewdist1"
@@ -243,6 +247,29 @@ impl StragglerConfig {
     pub fn enabled(&self) -> bool {
         self.count > 0 && self.factor > 1
     }
+
+    /// The straggler node indices for one job: a pure function of
+    /// `(seed, job, nodes)`, drawn from a per-job derived stream
+    /// ([`SplitMix64::derive`] on [`job_salt`]). Because each job gets its
+    /// own stream, admitting a second concurrent job can never shift the
+    /// straggler picks (or any downstream RNG state) of the first — the
+    /// isolation the service digest relies on. Solo scenario runs are
+    /// job 0. Returned sorted ascending; indices are relative to the
+    /// job's own `nodes`-wide range.
+    pub fn picks(&self, seed: u64, job: u64, nodes: usize) -> Vec<usize> {
+        if !self.enabled() || nodes == 0 {
+            return Vec::new();
+        }
+        let mut rng = SplitMix64::new(seed ^ STRAGGLER_SALT).derive(job_salt(job));
+        rng.sample_indices(nodes, self.count.min(nodes))
+    }
+}
+
+/// Per-job stream selector for perturbation draws. Job 0 is the solo
+/// scenario path; the service layer passes each admitted job's id so
+/// concurrent jobs draw from disjoint streams.
+pub fn job_salt(job: u64) -> u64 {
+    job
 }
 
 /// The scenario-level perturbations (network knobs live on
@@ -480,5 +507,21 @@ mod tests {
     fn stragglers_default_off() {
         assert!(!StragglerConfig::default().enabled());
         assert!(!StragglerConfig { count: 3, factor: 1 }.enabled());
+    }
+
+    #[test]
+    fn straggler_picks_are_a_pure_function_of_seed_job_nodes() {
+        let st = StragglerConfig { count: 4, factor: 4 };
+        let a = st.picks(7, 0, 64);
+        let b = st.picks(7, 0, 64);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "sorted, distinct");
+        assert!(a.iter().all(|&n| n < 64));
+        // Different jobs draw from disjoint streams under the same seed.
+        assert_ne!(st.picks(7, 0, 64), st.picks(7, 1, 64));
+        // Disabled configs draw nothing.
+        assert!(StragglerConfig::default().picks(7, 0, 64).is_empty());
+        assert!(StragglerConfig { count: 2, factor: 1 }.picks(7, 0, 64).is_empty());
     }
 }

@@ -58,10 +58,7 @@ use crate::graysort::ValidationReport;
 use crate::nanopu::{Group, Program};
 use crate::net::{Fabric, NetConfig, Topology};
 use crate::perturb::{KeyDistribution, Perturbations};
-use crate::sim::{Engine, RunSummary, SplitMix64, Time, MAX_STAGES};
-
-/// Seed salt for the straggler-core selection stream.
-const STRAGGLER_SALT: u64 = 0x7374_7261_6767_6c65; // "straggle"
+use crate::sim::{Engine, RunSummary, Time, MAX_STAGES};
 
 /// Everything the environment (not the workload) decides about a run.
 pub struct ScenarioEnv {
@@ -214,13 +211,11 @@ impl<W: Workload> DynWorkload for W {
         }
         // Straggler perturbation: a seeded subset of cores runs its
         // compute slower (off by default — the selection stream is only
-        // created when the knob is on).
+        // created when the knob is on). A solo scenario run is job 0 of
+        // the per-job-salted selection ([`crate::perturb::StragglerConfig::picks`]).
         let st = env.perturb.stragglers;
-        if st.enabled() {
-            let mut rng = SplitMix64::new(env.seed ^ STRAGGLER_SALT);
-            for node in rng.sample_indices(env.nodes, st.count.min(env.nodes)) {
-                engine.slow_down(node, st.factor);
-            }
+        for node in st.picks(env.seed, 0, env.nodes) {
+            engine.slow_down(node, st.factor);
         }
         let summary = engine.run_threads(env.threads);
         let sim_s = t_sim.elapsed().as_secs_f64();

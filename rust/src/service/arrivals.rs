@@ -1,0 +1,378 @@
+//! Open arrival generation: deterministic Poisson interarrivals, zipfian
+//! workload popularity over the registry, and a configurable job-size
+//! mix, producing the [`JobSpec`] trace the coordinator replays.
+//!
+//! Everything here is integer/fixed-point arithmetic on
+//! [`SplitMix64`] draws — no `libm` transcendentals — so a trace (and
+//! therefore the service digest) is bit-identical across platforms.
+
+use crate::algo::mergemin::MergeMin;
+use crate::algo::millisort::MilliSort;
+use crate::algo::nanosort::NanoSort;
+use crate::algo::setalgebra::SetAlgebra;
+use crate::sim::{SplitMix64, Time};
+
+use anyhow::{bail, Result};
+
+/// Seed salt separating the service layer's RNG streams from every other
+/// consumer of the master seed.
+pub const SERVICE_SALT: u64 = 0x736f_7274_7376_6331; // "sortsvc1"
+
+/// Zipfian popularity weights over the workload registry order
+/// (nanosort, millisort, mergemin, setalgebra): the exact θ=1 harmonic
+/// series 1/1 : 1/2 : 1/3 : 1/4 scaled by lcm(1..4) = 12, kept as
+/// integers so the popularity draw never touches floating point.
+const MIX_WEIGHTS: [u64; 4] = [12, 6, 4, 3];
+
+/// Job size class; the mix draws classes by [`ArrivalConfig::size_weights`]
+/// and each (workload, class) pair maps to a fixed shape in [`job_kind`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SizeClass {
+    Small,
+    Medium,
+    Large,
+}
+
+impl SizeClass {
+    pub const ALL: [SizeClass; 3] = [SizeClass::Small, SizeClass::Medium, SizeClass::Large];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SizeClass::Small => "small",
+            SizeClass::Medium => "medium",
+            SizeClass::Large => "large",
+        }
+    }
+}
+
+/// Which workload population the service draws jobs from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mix {
+    /// Every job is a NanoSort instance (size class still varies).
+    Nanosort,
+    /// Zipf-popularity draw over all four registered workloads.
+    Mixed,
+}
+
+impl Mix {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mix::Nanosort => "nanosort",
+            Mix::Mixed => "mixed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Mix> {
+        match s {
+            "nanosort" => Ok(Mix::Nanosort),
+            "mixed" => Ok(Mix::Mixed),
+            other => bail!("unknown mix {other:?} (known: nanosort|mixed)"),
+        }
+    }
+}
+
+/// A fully-built workload instance a job runs (constructed per job so
+/// per-class shapes are self-contained in the trace).
+#[derive(Debug, Clone)]
+pub enum JobKind {
+    NanoSort(NanoSort),
+    MilliSort(MilliSort),
+    MergeMin(MergeMin),
+    SetAlgebra(SetAlgebra),
+}
+
+impl JobKind {
+    pub fn workload(&self) -> &'static str {
+        match self {
+            JobKind::NanoSort(_) => "nanosort",
+            JobKind::MilliSort(_) => "millisort",
+            JobKind::MergeMin(_) => "mergemin",
+            JobKind::SetAlgebra(_) => "setalgebra",
+        }
+    }
+}
+
+/// One job in the arrival trace.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Dense job id (index into the trace; also the per-job RNG stream
+    /// selector for perturbation draws — [`crate::perturb::job_salt`]).
+    pub id: u32,
+    /// Nominal arrival time (the coordinator's Tick clock replays it).
+    pub arrival: Time,
+    /// Worker nodes this job needs (contiguous once placed).
+    pub nodes: usize,
+    pub class: SizeClass,
+    pub kind: JobKind,
+    /// Per-job input seed (derived; disjoint across jobs by stream).
+    pub seed: u64,
+}
+
+/// Open-arrival generator configuration.
+#[derive(Debug, Clone)]
+pub struct ArrivalConfig {
+    /// Jobs in the trace.
+    pub jobs: usize,
+    /// Mean Poisson interarrival gap, ns (offered load = 1/mean).
+    pub mean_iat_ns: u64,
+    pub mix: Mix,
+    /// Relative draw weights for small/medium/large job sizes.
+    pub size_weights: [u64; 3],
+}
+
+impl Default for ArrivalConfig {
+    fn default() -> Self {
+        ArrivalConfig {
+            jobs: 24,
+            mean_iat_ns: 4_000,
+            mix: Mix::Nanosort,
+            size_weights: [8, 3, 1],
+        }
+    }
+}
+
+/// The fixed shape of one (workload, size-class) cell: fleet slice plus
+/// the workload parameters. NanoSort sizes are powers of its bucket
+/// radix (4) as `depth_of` requires; MilliSort keys scale with cores so
+/// per-core load stays constant across classes.
+pub fn job_kind(workload: usize, class: SizeClass) -> (usize, JobKind) {
+    use SizeClass::*;
+    match workload {
+        0 => {
+            let nodes = match class {
+                Small => 4,
+                Medium => 16,
+                Large => 64,
+            };
+            (
+                nodes,
+                JobKind::NanoSort(NanoSort {
+                    keys_per_node: 8,
+                    buckets: 4,
+                    median_incast: 4,
+                    ..Default::default()
+                }),
+            )
+        }
+        1 => {
+            let cores = match class {
+                Small => 4,
+                Medium => 8,
+                Large => 16,
+            };
+            (
+                cores,
+                JobKind::MilliSort(MilliSort {
+                    total_keys: 16 * cores,
+                    ..Default::default()
+                }),
+            )
+        }
+        2 => {
+            let cores = match class {
+                Small => 8,
+                Medium => 32,
+                Large => 64,
+            };
+            (cores, JobKind::MergeMin(MergeMin { values_per_core: 64, incast: 8 }))
+        }
+        _ => {
+            let cores = match class {
+                Small => 8,
+                Medium => 32,
+                Large => 64,
+            };
+            (
+                cores,
+                JobKind::SetAlgebra(SetAlgebra {
+                    lists: 3,
+                    ids_per_core: 32,
+                    incast: 8,
+                    ..Default::default()
+                }),
+            )
+        }
+    }
+}
+
+/// Draw an index from integer `weights` (probability ∝ weight).
+fn pick_weighted(rng: &mut SplitMix64, weights: &[u64]) -> usize {
+    let total: u64 = weights.iter().sum();
+    debug_assert!(total > 0);
+    let mut x = rng.next_below(total);
+    for (i, &w) in weights.iter().enumerate() {
+        if x < w {
+            return i;
+        }
+        x -= w;
+    }
+    weights.len() - 1
+}
+
+/// One Exp(mean)-distributed gap in [`Time`] units, via von Neumann's
+/// 1951 comparison method: only uniform u64 draws and integer compares
+/// decide the sample, and the final magnitude is a 128-bit fixed-point
+/// product — bit-identical on every platform, unlike `ln()`.
+///
+/// The integer part is the count of *rejected* unit intervals (each
+/// accepted with probability 1/e via descending-run parity); the
+/// fractional part is the first uniform of the accepting run.
+fn exp_gap_units(rng: &mut SplitMix64, mean_units: u64) -> u64 {
+    let mut whole: u64 = 0;
+    loop {
+        let u0 = rng.next_u64();
+        let mut last = u0;
+        let mut run: u64 = 1;
+        loop {
+            let u = rng.next_u64();
+            if u < last {
+                last = u;
+                run += 1;
+            } else {
+                break;
+            }
+        }
+        if run % 2 == 1 {
+            let frac = ((u0 as u128 * mean_units as u128) >> 64) as u64;
+            return whole.saturating_mul(mean_units).saturating_add(frac);
+        }
+        whole += 1;
+    }
+}
+
+/// Generate the deterministic arrival trace for `(cfg, seed)`: Poisson
+/// arrivals at rate `1/mean_iat_ns`, workload popularity per the mix,
+/// size class per `size_weights`, and a derived per-job input seed.
+pub fn generate(cfg: &ArrivalConfig, seed: u64) -> Vec<JobSpec> {
+    let root = SplitMix64::new(seed ^ SERVICE_SALT);
+    let mut iat_rng = root.derive(1);
+    let mut mix_rng = root.derive(2);
+    let mut size_rng = root.derive(3);
+    let mean_units = Time::from_ns(cfg.mean_iat_ns).0.max(1);
+    let mut at = Time::ZERO;
+    (0..cfg.jobs)
+        .map(|id| {
+            at += Time(exp_gap_units(&mut iat_rng, mean_units));
+            let workload = match cfg.mix {
+                Mix::Nanosort => 0,
+                Mix::Mixed => pick_weighted(&mut mix_rng, &MIX_WEIGHTS),
+            };
+            let class = SizeClass::ALL[pick_weighted(&mut size_rng, &cfg.size_weights)];
+            let (nodes, kind) = job_kind(workload, class);
+            JobSpec {
+                id: id as u32,
+                arrival: at,
+                nodes,
+                class,
+                kind,
+                seed: root.derive(16 + id as u64).next_u64(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_monotone() {
+        let cfg = ArrivalConfig::default();
+        let a = generate(&cfg, 7);
+        let b = generate(&cfg, 7);
+        assert_eq!(a.len(), cfg.jobs);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.nodes, y.nodes);
+            assert_eq!(x.seed, y.seed);
+        }
+        assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert!(a[0].arrival > Time::ZERO, "first gap is drawn too");
+        // A different seed moves the arrivals.
+        let c = generate(&cfg, 8);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.arrival != y.arrival));
+    }
+
+    #[test]
+    fn exponential_mean_is_roughly_right() {
+        let mut rng = SplitMix64::new(42);
+        let mean = Time::from_ns(4_000).0;
+        let n = 4000u64;
+        let total: u128 = (0..n).map(|_| exp_gap_units(&mut rng, mean) as u128).sum();
+        let got = (total / n as u128) as u64;
+        // Within 10% of the configured mean over 4k draws.
+        assert!(
+            got > mean * 9 / 10 && got < mean * 11 / 10,
+            "sample mean {got} vs configured {mean}"
+        );
+    }
+
+    #[test]
+    fn exponential_tail_exceeds_the_mean() {
+        // P(X > mean) = 1/e ≈ 37%: the integer part must sometimes be > 0.
+        let mut rng = SplitMix64::new(1);
+        let over = (0..1000).filter(|_| exp_gap_units(&mut rng, 1000) > 1000).count();
+        assert!(over > 250 && over < 500, "{over}/1000 over the mean");
+    }
+
+    #[test]
+    fn nanosort_mix_is_all_nanosort() {
+        let cfg = ArrivalConfig { jobs: 32, ..Default::default() };
+        assert!(generate(&cfg, 3).iter().all(|j| j.workload_is("nanosort")));
+    }
+
+    impl JobSpec {
+        fn workload_is(&self, name: &str) -> bool {
+            self.kind.workload() == name
+        }
+    }
+
+    #[test]
+    fn mixed_popularity_is_zipf_ordered() {
+        let cfg = ArrivalConfig { jobs: 400, mix: Mix::Mixed, ..Default::default() };
+        let trace = generate(&cfg, 11);
+        let count = |w: &str| trace.iter().filter(|j| j.workload_is(w)).count();
+        let (ns, ms, mm, sa) =
+            (count("nanosort"), count("millisort"), count("mergemin"), count("setalgebra"));
+        assert_eq!(ns + ms + mm + sa, 400);
+        assert!(ns > ms && ms > sa, "zipf order: {ns} {ms} {mm} {sa}");
+        assert!(sa > 0, "even the least-popular workload appears");
+    }
+
+    #[test]
+    fn size_weights_shape_the_class_histogram() {
+        let cfg = ArrivalConfig { jobs: 400, ..Default::default() };
+        let trace = generate(&cfg, 5);
+        let small = trace.iter().filter(|j| j.class == SizeClass::Small).count();
+        let large = trace.iter().filter(|j| j.class == SizeClass::Large).count();
+        assert!(small > large, "default mix favors small jobs: {small} vs {large}");
+        // All-large weights produce only large jobs.
+        let cfg = ArrivalConfig { size_weights: [0, 0, 1], jobs: 16, ..Default::default() };
+        assert!(generate(&cfg, 5).iter().all(|j| j.class == SizeClass::Large));
+    }
+
+    #[test]
+    fn per_job_seeds_are_distinct() {
+        let trace = generate(&ArrivalConfig { jobs: 64, ..Default::default() }, 9);
+        let mut seeds: Vec<u64> = trace.iter().map(|j| j.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 64);
+    }
+
+    #[test]
+    fn every_job_kind_cell_is_well_formed() {
+        for w in 0..4 {
+            for class in SizeClass::ALL {
+                let (nodes, kind) = job_kind(w, class);
+                assert!(nodes >= 4 && nodes <= 64, "{} {}", kind.workload(), class.name());
+                if let JobKind::MilliSort(ms) = &kind {
+                    assert_eq!(ms.total_keys % nodes, 0);
+                }
+                if let JobKind::NanoSort(_) = &kind {
+                    assert!(nodes.is_power_of_two());
+                }
+            }
+        }
+    }
+}

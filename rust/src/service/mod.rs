@@ -1,0 +1,705 @@
+//! Sorting as a service: a multi-tenant job service over one shared
+//! simulated fabric (DESIGN.md §9).
+//!
+//! The paper evaluates NanoSort one job at a time; real granular
+//! datacenters run an *open stream* of them. This layer closes that gap
+//! on top of the existing Scenario/Engine stack:
+//!
+//! - [`arrivals`] — deterministic open arrivals: Poisson interarrivals
+//!   (von Neumann sampler, no `libm`), a zipf-popularity workload mix
+//!   over the whole registry, and a configurable size-class split.
+//! - [`sched`] — coordinator-level admission policies (`fifo` / `sjf` /
+//!   `reserve`) over a first-fit contiguous range allocator.
+//! - [`wrap`] — the in-simulation protocol: a coordinator node admits
+//!   jobs onto disjoint worker ranges and worker nodes relay namespaced
+//!   inner-algorithm messages, so concurrent jobs share the fabric (and
+//!   its congestion) without sharing state.
+//! - this module — the host-side runner ([`run_service`]), per-job
+//!   output validation through each workload's own `finish` hook, the
+//!   [`ServiceReport`] (offered vs achieved load, queueing delay, and
+//!   p50/p95/p99 JCT per size class), the canonical service digest
+//!   ([`service_digest`]) pinned by the `service` conformance tier, and
+//!   the `loadsweep` benchfig.
+//!
+//! Determinism: the service digest is byte-identical across executor
+//! backends, thread counts, and data planes — same contract as the
+//! single-job goldens. Timers carry no RNG, per-job perturbation draws
+//! come from per-job derived streams, and all cross-node shared state is
+//! ordered by simulated message causality (see [`wrap`]'s module docs).
+
+pub mod arrivals;
+pub mod sched;
+mod wrap;
+
+pub use arrivals::{ArrivalConfig, JobKind, JobSpec, Mix, SizeClass};
+pub use sched::{RangeAlloc, SchedPolicy, LEAF_RADIX};
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::compute::LocalCompute;
+use crate::conformance::Tier;
+use crate::coordinator::{f, ComputeChoice, RunOptions, Table};
+use crate::cpu::CoreModel;
+use crate::net::{Fabric, NetConfig, NetStats, Topology};
+use crate::perturb::Perturbations;
+use crate::scenario::{Finish, ScenarioEnv, Workload};
+use crate::sim::{Engine, RunSummary, Time};
+use crate::stats::Summary;
+
+use wrap::{Coordinator, InnerProg, JobState, ServiceArena, ServiceProg, Worker};
+
+/// Everything one service run needs besides the seed.
+pub struct ServiceConfig {
+    /// Worker fleet size (the fabric gets one extra coordinator node).
+    pub workers: usize,
+    pub arrivals: ArrivalConfig,
+    pub policy: SchedPolicy,
+    /// Fabric configuration. Multicast is always forced off: per-job
+    /// dynamic groups cannot be registered mid-run, so inner broadcasts
+    /// degrade to unicast loops (see [`wrap`]).
+    pub net: NetConfig,
+    pub core: CoreModel,
+    pub compute: Arc<dyn LocalCompute>,
+    /// Fleet-level perturbations: the input distribution applies to
+    /// every job's input generation; stragglers are *machine* properties
+    /// picked once per fleet (never the coordinator node).
+    pub perturb: Perturbations,
+    pub threads: usize,
+}
+
+impl ServiceConfig {
+    /// Default environment around the three load-bearing knobs.
+    pub fn new(workers: usize, arrivals: ArrivalConfig, policy: SchedPolicy) -> Result<Self> {
+        Ok(ServiceConfig {
+            workers,
+            arrivals,
+            policy,
+            net: NetConfig { multicast: false, ..NetConfig::default() },
+            core: CoreModel::default(),
+            compute: ComputeChoice::default().build()?,
+            perturb: Perturbations::default(),
+            threads: 1,
+        })
+    }
+}
+
+/// One job's lifecycle through the service, filled in by the
+/// in-simulation coordinator. Sentinels before admission:
+/// `admit_seq == u64::MAX`, `base == usize::MAX`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobRecord {
+    pub job: u32,
+    pub workload: &'static str,
+    pub class: SizeClass,
+    pub nodes: usize,
+    /// Nominal arrival (from the trace).
+    pub arrival: Time,
+    /// Position in the coordinator's total admission order.
+    pub admit_seq: u64,
+    /// First worker node of the job's range.
+    pub base: usize,
+    /// Admission time (coordinator clock).
+    pub start: Time,
+    /// Last worker `Done` folded in (coordinator clock).
+    pub finish: Time,
+    pub completed: bool,
+}
+
+impl JobRecord {
+    /// Queueing delay: arrival → admission.
+    pub fn wait(&self) -> Time {
+        self.start.saturating_sub(self.arrival)
+    }
+
+    /// Job completion time: arrival → finish (wait + service).
+    pub fn jct(&self) -> Time {
+        self.finish.saturating_sub(self.arrival)
+    }
+}
+
+/// A job's record plus its output validation verdict.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub record: JobRecord,
+    /// The workload's own validator, run over the job's carved-out slice
+    /// of the fleet (always `true` — a failure aborts the run loudly).
+    pub validated: bool,
+}
+
+/// Outcome of one service run.
+pub struct ServiceReport {
+    pub mix: Mix,
+    pub policy: SchedPolicy,
+    pub workers: usize,
+    pub seed: u64,
+    pub compute: &'static str,
+    pub mean_iat_ns: u64,
+    /// Per-job outcomes in job-id (= arrival) order.
+    pub jobs: Vec<JobOutcome>,
+    /// Fleet makespan: first arrival scheduled at t = 0, last event.
+    pub makespan: Time,
+    pub events: u64,
+    /// Fleet-level fabric counters (shared by all jobs; per-job net
+    /// attribution is not tracked — DESIGN.md §9).
+    pub net: NetStats,
+}
+
+impl ServiceReport {
+    /// Nominal offered load from the arrival process, jobs per ms.
+    pub fn offered_jobs_per_ms(&self) -> f64 {
+        1.0e6 / self.mean_iat_ns.max(1) as f64
+    }
+
+    /// Completed jobs per ms of fleet makespan.
+    pub fn achieved_jobs_per_ms(&self) -> f64 {
+        let ms = self.makespan.as_us_f64() / 1000.0;
+        if ms <= 0.0 {
+            0.0
+        } else {
+            self.jobs.len() as f64 / ms
+        }
+    }
+
+    pub fn jct_summary(&self) -> Summary {
+        Summary::of(&self.jct_us(None))
+    }
+
+    pub fn wait_summary(&self) -> Summary {
+        let waits: Vec<f64> =
+            self.jobs.iter().map(|j| j.record.wait().as_us_f64()).collect();
+        Summary::of(&waits)
+    }
+
+    /// JCT summary restricted to one size class.
+    pub fn class_jct_summary(&self, class: SizeClass) -> Summary {
+        Summary::of(&self.jct_us(Some(class)))
+    }
+
+    fn jct_us(&self, class: Option<SizeClass>) -> Vec<f64> {
+        self.jobs
+            .iter()
+            .filter(|j| class.is_none_or(|c| j.record.class == c))
+            .map(|j| j.record.jct().as_us_f64())
+            .collect()
+    }
+
+    /// Deterministic text rendering (the CLI's `repro serve` output).
+    pub fn render(&self) -> String {
+        let jct = self.jct_summary();
+        let wait = self.wait_summary();
+        let mut out = format!(
+            "service: mix={} sched={} workers={} jobs={} seed={} compute={}\n",
+            self.mix.name(),
+            self.policy.name(),
+            self.workers,
+            self.jobs.len(),
+            self.seed,
+            self.compute
+        );
+        out += &format!(
+            "makespan = {:.2} µs | events = {} | msgs = {} | retransmits = {}\n",
+            self.makespan.as_us_f64(),
+            self.events,
+            self.net.msgs_sent,
+            self.net.retransmits
+        );
+        out += &format!(
+            "offered = {} jobs/ms | achieved = {} jobs/ms\n",
+            f(self.offered_jobs_per_ms()),
+            f(self.achieved_jobs_per_ms())
+        );
+        if !jct.is_empty() {
+            out += &format!(
+                "jct µs: p50 = {} | p95 = {} | p99 = {} | max = {}\n",
+                f(jct.p50),
+                f(jct.p95),
+                f(jct.p99),
+                f(jct.max)
+            );
+            out += &format!(
+                "wait µs: mean = {} | p50 = {} | p99 = {}\n",
+                f(wait.mean),
+                f(wait.p50),
+                f(wait.p99)
+            );
+        }
+        for class in SizeClass::ALL {
+            let s = self.class_jct_summary(class);
+            if !s.is_empty() {
+                out += &format!(
+                    "  class {:<6} n = {:<3} jct µs: p50 = {} | p95 = {} | p99 = {}\n",
+                    class.name(),
+                    s.n,
+                    f(s.p50),
+                    f(s.p95),
+                    f(s.p99)
+                );
+            }
+        }
+        out
+    }
+}
+
+/// Generate the arrival trace for `cfg` and run it. The same `seed`
+/// drives arrivals, fabric jitter, and per-node program streams, so one
+/// `(config, seed)` pair fully determines the report.
+pub fn run_service(cfg: &ServiceConfig, seed: u64) -> Result<ServiceReport> {
+    run_service_trace(cfg, seed, arrivals::generate(&cfg.arrivals, seed))
+}
+
+/// Run an explicit job trace (the tests' entry point for crafted mixes).
+/// `specs` must be sorted by arrival with ids `0..n` (what
+/// [`arrivals::generate`] produces).
+pub fn run_service_trace(
+    cfg: &ServiceConfig,
+    seed: u64,
+    specs: Vec<JobSpec>,
+) -> Result<ServiceReport> {
+    ensure!(cfg.workers > 0, "service needs at least one worker");
+    ensure!(
+        cfg.threads == 1 || cfg.compute.name() != "xla",
+        "the XLA data plane is single-threaded; run it with --threads 1"
+    );
+    if cfg.policy == SchedPolicy::Reserve {
+        ensure!(
+            cfg.workers % LEAF_RADIX == 0,
+            "the reserve scheduler partitions whole {LEAF_RADIX}-node leaves; \
+             fleet size {} is not leaf-aligned",
+            cfg.workers
+        );
+    }
+    let net = NetConfig { multicast: false, ..cfg.net.clone() };
+
+    // Host-side build: per-job programs and finish hooks through each
+    // workload's own `Workload::build`, against a synthesized per-job
+    // environment (the job's nodes/seed, the shared fabric's knobs).
+    let mut jobs = Vec::with_capacity(specs.len());
+    let mut records = Vec::with_capacity(specs.len());
+    let mut finishes = Vec::with_capacity(specs.len());
+    let mut trace = Vec::with_capacity(specs.len());
+    for (i, spec) in specs.iter().enumerate() {
+        ensure!(spec.id as usize == i, "job ids must be 0..n in trace order");
+        let footprint = cfg.policy.footprint(spec.nodes);
+        ensure!(
+            footprint <= cfg.workers,
+            "job {} ({}) needs {footprint} workers under {} but the fleet has {}",
+            spec.id,
+            spec.kind.workload(),
+            cfg.policy.name(),
+            cfg.workers
+        );
+        let env = ScenarioEnv {
+            nodes: spec.nodes,
+            net: net.clone(),
+            core: cfg.core.clone(),
+            compute: cfg.compute.clone(),
+            seed: spec.seed,
+            // Input skew applies per job; stragglers are fleet-level
+            // machine properties, applied to the engine below.
+            perturb: Perturbations { dist: cfg.perturb.dist, stragglers: Default::default() },
+            threads: cfg.threads,
+        };
+        let (programs, finish) = build_job(&spec.kind, &env)
+            .with_context(|| format!("building job {} ({})", spec.id, spec.kind.workload()))?;
+        ensure!(
+            programs.len() == spec.nodes,
+            "job {} built {} programs for {} nodes",
+            spec.id,
+            programs.len(),
+            spec.nodes
+        );
+        jobs.push(JobState {
+            nodes: spec.nodes,
+            programs: programs.into_iter().map(|p| Mutex::new(Some(p))).collect(),
+            placement: Mutex::new(None),
+        });
+        records.push(JobRecord {
+            job: spec.id,
+            workload: spec.kind.workload(),
+            class: spec.class,
+            nodes: spec.nodes,
+            arrival: spec.arrival,
+            admit_seq: u64::MAX,
+            base: usize::MAX,
+            start: Time::ZERO,
+            finish: Time::ZERO,
+            completed: false,
+        });
+        finishes.push((env, finish));
+        trace.push((spec.arrival, spec.id, spec.nodes));
+    }
+
+    let arena = Arc::new(ServiceArena { jobs, records: Mutex::new(records) });
+    let coord = cfg.workers;
+    let mut programs: Vec<ServiceProg> = (0..cfg.workers)
+        .map(|_| ServiceProg::Worker(Worker::new(arena.clone(), coord)))
+        .collect();
+    programs.push(ServiceProg::Coordinator(Coordinator::new(
+        arena.clone(),
+        cfg.policy,
+        trace,
+        cfg.workers,
+    )));
+    let fabric = Fabric::new(Topology::paper(cfg.workers + 1), net.clone(), seed);
+    let mut engine = Engine::new(programs, fabric, cfg.core.clone(), seed);
+    // Stragglers are slow machines, not slow jobs: picked once for the
+    // whole fleet (stream 0 of the per-job-salted selection) and never
+    // the coordinator, so every job admitted onto a straggler inherits
+    // the slowdown — exactly what a real shared cluster does.
+    let st = cfg.perturb.stragglers;
+    for node in st.picks(seed, 0, cfg.workers) {
+        engine.slow_down(node, st.factor);
+    }
+    let summary = engine.run_threads(cfg.threads);
+
+    let records = std::mem::take(&mut *arena.records.lock().unwrap());
+    let mut outcomes = Vec::with_capacity(records.len());
+    for ((env, finish), rec) in finishes.into_iter().zip(records) {
+        ensure!(
+            rec.completed,
+            "job {} ({}) never completed (arrived at {} units)",
+            rec.job,
+            rec.workload,
+            rec.arrival.0
+        );
+        // Carve the job's slice of the fleet into a per-job summary for
+        // its validator. Fabric counters are fleet-level only, so the
+        // carved net stats are zeroed (DESIGN.md §9).
+        let carved = RunSummary {
+            makespan: rec.finish.saturating_sub(rec.start),
+            node_stats: summary.node_stats[rec.base..rec.base + rec.nodes].to_vec(),
+            net: NetStats::default(),
+            events: 0,
+        };
+        let report = finish(&env, carved);
+        ensure!(
+            report.validation.ok(),
+            "job {} ({}) failed output validation: {}",
+            rec.job,
+            rec.workload,
+            report.validation.detail
+        );
+        outcomes.push(JobOutcome { record: rec, validated: true });
+    }
+
+    Ok(ServiceReport {
+        mix: cfg.arrivals.mix,
+        policy: cfg.policy,
+        workers: cfg.workers,
+        seed,
+        compute: cfg.compute.name(),
+        mean_iat_ns: cfg.arrivals.mean_iat_ns,
+        jobs: outcomes,
+        makespan: summary.makespan,
+        events: summary.events,
+        net: summary.net,
+    })
+}
+
+/// Build one job's per-slot programs and finish hook through the
+/// workload's own `build` path (input generation included).
+fn build_job(kind: &JobKind, env: &ScenarioEnv) -> Result<(Vec<InnerProg>, Finish)> {
+    Ok(match kind {
+        JobKind::NanoSort(w) => {
+            // Per-job multicast groups can't be registered mid-run; the
+            // env has multicast off, so group sends degrade to unicast
+            // loops inside the wrapper and the built groups are unused.
+            let b = w.build(env)?;
+            (b.programs.into_iter().map(InnerProg::Ns).collect(), b.finish)
+        }
+        JobKind::MilliSort(w) => {
+            let b = w.build(env)?;
+            (b.programs.into_iter().map(InnerProg::Ms).collect(), b.finish)
+        }
+        JobKind::MergeMin(w) => {
+            let b = w.build(env)?;
+            (b.programs.into_iter().map(InnerProg::Min).collect(), b.finish)
+        }
+        JobKind::SetAlgebra(w) => {
+            let b = w.build(env)?;
+            (b.programs.into_iter().map(InnerProg::Count).collect(), b.finish)
+        }
+    })
+}
+
+/// Fleet size and arrival configuration of the `service` conformance
+/// tier ladder (≥ 20 jobs at every tier — the acceptance floor).
+pub fn service_tier(tier: Tier, mix: Mix) -> (usize, ArrivalConfig) {
+    match tier {
+        Tier::Smoke => {
+            (256, ArrivalConfig { jobs: 24, mean_iat_ns: 4_000, mix, ..Default::default() })
+        }
+        Tier::Mid => {
+            (1024, ArrivalConfig { jobs: 64, mean_iat_ns: 2_000, mix, ..Default::default() })
+        }
+        Tier::Paper => {
+            (4096, ArrivalConfig { jobs: 256, mean_iat_ns: 1_000, mix, ..Default::default() })
+        }
+    }
+}
+
+/// Canonical line-oriented JSON digest of one service run: fleet header
+/// plus one line per job (arrival, scheduler decision, start, finish).
+/// Exact integers for sim-exact values, quoted `%.6f` for floats; no
+/// backend-, thread-, or plane-dependent field may appear. Golden name:
+/// `service_<mix>_<sched>_<tier>`.
+pub fn service_digest(r: &ServiceReport, tier: &str) -> String {
+    let jct = r.jct_summary();
+    let wait = r.wait_summary();
+    let mut lines = vec![
+        format!("  \"service\": \"{}\"", r.mix.name()),
+        format!("  \"tier\": \"{tier}\""),
+        format!("  \"sched\": \"{}\"", r.policy.name()),
+        format!("  \"workers\": {}", r.workers),
+        format!("  \"seed\": {}", r.seed),
+        format!("  \"jobs\": {}", r.jobs.len()),
+        format!("  \"makespan_units\": {}", r.makespan.0),
+        format!("  \"events\": {}", r.events),
+        format!("  \"msgs_sent\": {}", r.net.msgs_sent),
+        format!("  \"msgs_delivered\": {}", r.net.msgs_delivered),
+        format!("  \"retransmits\": {}", r.net.retransmits),
+        format!("  \"jct_p50_us\": \"{:.6}\"", jct.p50),
+        format!("  \"jct_p95_us\": \"{:.6}\"", jct.p95),
+        format!("  \"jct_p99_us\": \"{:.6}\"", jct.p99),
+        format!("  \"wait_mean_us\": \"{:.6}\"", wait.mean),
+        format!("  \"wait_p99_us\": \"{:.6}\"", wait.p99),
+    ];
+    for j in &r.jobs {
+        let rec = &j.record;
+        lines.push(format!(
+            "  \"job{}\": {{\"workload\": \"{}\", \"class\": \"{}\", \"nodes\": {}, \
+             \"arrival_units\": {}, \"admit_seq\": {}, \"base\": {}, \"start_units\": {}, \
+             \"finish_units\": {}, \"valid\": {}}}",
+            rec.job,
+            rec.workload,
+            rec.class.name(),
+            rec.nodes,
+            rec.arrival.0,
+            rec.admit_seq,
+            rec.base,
+            rec.start.0,
+            rec.finish.0,
+            j.validated
+        ));
+    }
+    format!("{{\n{}\n}}\n", lines.join(",\n"))
+}
+
+/// `BENCH_service*.json` record: simulated service quality next to the
+/// host cost of producing it (same two-axis contract as [`crate::conformance::BenchRecord`]).
+pub fn service_bench_json(
+    r: &ServiceReport,
+    tier: &str,
+    wall_clock_s: f64,
+    threads: usize,
+) -> String {
+    let jct = r.jct_summary();
+    let wait = r.wait_summary();
+    format!(
+        "{{\n  \"workload\": \"service\",\n  \"tier\": \"{tier}\",\n  \"mix\": \"{}\",\n  \
+         \"sched\": \"{}\",\n  \"workers\": {},\n  \"jobs\": {},\n  \"mean_iat_ns\": {},\n  \
+         \"makespan_us\": {:.3},\n  \"offered_jobs_per_ms\": {:.3},\n  \
+         \"achieved_jobs_per_ms\": {:.3},\n  \"jct_p50_us\": {:.3},\n  \
+         \"jct_p95_us\": {:.3},\n  \"jct_p99_us\": {:.3},\n  \"wait_mean_us\": {:.3},\n  \
+         \"events\": {},\n  \"msgs_sent\": {},\n  \"threads\": {threads},\n  \
+         \"wall_clock_s\": {wall_clock_s:.3},\n  \"validated\": true\n}}\n",
+        r.mix.name(),
+        r.policy.name(),
+        r.workers,
+        r.jobs.len(),
+        r.mean_iat_ns,
+        r.makespan.as_us_f64(),
+        r.offered_jobs_per_ms(),
+        r.achieved_jobs_per_ms(),
+        jct.p50,
+        jct.p95,
+        jct.p99,
+        wait.mean,
+        r.events,
+        r.net.msgs_sent
+    )
+}
+
+/// `repro fig loadsweep`: offered load × scheduler at smoke scale —
+/// the tail-JCT/utilization trade each policy makes as load rises.
+pub fn loadsweep_figure(opts: &RunOptions) -> Result<Table> {
+    let mut t = Table::new(
+        "Load sweep: offered load × scheduler (open Poisson arrivals, shared fleet)",
+        &[
+            "sched",
+            "iat_ns",
+            "offered/ms",
+            "achieved/ms",
+            "jct_p50_us",
+            "jct_p95_us",
+            "jct_p99_us",
+            "wait_mean_us",
+        ],
+    );
+    let (workers, jobs) = if opts.quick { (128, 12) } else { (256, 24) };
+    let iats: &[u64] = if opts.quick { &[4_000, 1_000] } else { &[8_000, 4_000, 2_000, 1_000] };
+    let plane = opts.compute.build()?;
+    for policy in SchedPolicy::ALL {
+        for &iat in iats {
+            let arrivals = ArrivalConfig {
+                jobs,
+                mean_iat_ns: iat,
+                mix: Mix::Nanosort,
+                ..Default::default()
+            };
+            let mut cfg = ServiceConfig::new(workers, arrivals, policy)?;
+            cfg.compute = plane.clone();
+            let r = run_service(&cfg, opts.seed)
+                .with_context(|| format!("loadsweep {} iat={iat}", policy.name()))?;
+            let jct = r.jct_summary();
+            let wait = r.wait_summary();
+            t.row(vec![
+                policy.name().into(),
+                iat.to_string(),
+                f(r.offered_jobs_per_ms()),
+                f(r.achieved_jobs_per_ms()),
+                f(jct.p50),
+                f(jct.p95),
+                f(jct.p99),
+                f(wait.mean),
+            ]);
+        }
+    }
+    t.note(
+        "Shape to match: queueing delay (and thus tail JCT) grows as interarrival \
+         shrinks; sjf flattens small-job tails vs fifo; reserve trades utilization \
+         for whole-leaf isolation.",
+    );
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(policy: SchedPolicy) -> ServiceConfig {
+        let arrivals = ArrivalConfig {
+            jobs: 6,
+            mean_iat_ns: 2_000,
+            mix: Mix::Nanosort,
+            ..Default::default()
+        };
+        ServiceConfig::new(128, arrivals, policy).unwrap()
+    }
+
+    #[test]
+    fn service_run_completes_and_validates_every_job() {
+        let r = run_service(&tiny_cfg(SchedPolicy::Fifo), 7).unwrap();
+        assert_eq!(r.jobs.len(), 6);
+        assert!(r.jobs.iter().all(|j| j.record.completed && j.validated));
+        assert!(r.makespan > Time::ZERO);
+        assert!(r.events > 0);
+        // Every job waits at least as long as its nominal arrival says.
+        for j in &r.jobs {
+            assert!(j.record.start >= j.record.arrival, "job {}", j.record.job);
+            assert!(j.record.finish > j.record.start, "job {}", j.record.job);
+        }
+        assert_eq!(r.jct_summary().n, 6);
+    }
+
+    #[test]
+    fn admission_order_is_total_and_starts_monotone_in_admit_seq() {
+        let r = run_service(&tiny_cfg(SchedPolicy::Fifo), 7).unwrap();
+        let mut by_seq: Vec<&JobRecord> = r.jobs.iter().map(|j| &j.record).collect();
+        by_seq.sort_by_key(|rec| rec.admit_seq);
+        assert!(by_seq.iter().all(|rec| rec.admit_seq != u64::MAX));
+        assert!(by_seq.windows(2).all(|w| w[0].admit_seq + 1 == w[1].admit_seq));
+        assert!(by_seq.windows(2).all(|w| w[0].start <= w[1].start));
+    }
+
+    #[test]
+    fn digest_is_canonical_line_json() {
+        let r = run_service(&tiny_cfg(SchedPolicy::Sjf), 7).unwrap();
+        let d = service_digest(&r, "smoke");
+        assert!(d.starts_with("{\n") && d.ends_with("}\n"));
+        assert!(d.contains("\"service\": \"nanosort\""));
+        assert!(d.contains("\"sched\": \"sjf\""));
+        assert!(d.contains("\"job0\": {\"workload\": "));
+        assert!(d.contains("\"job5\": "));
+        assert!(!d.contains("job6"));
+        // Rendering is deterministic for the same report.
+        assert_eq!(d, service_digest(&r, "smoke"));
+    }
+
+    #[test]
+    fn zero_job_service_quiesces_immediately() {
+        let mut cfg = tiny_cfg(SchedPolicy::Fifo);
+        cfg.arrivals.jobs = 0;
+        let r = run_service(&cfg, 7).unwrap();
+        assert!(r.jobs.is_empty());
+        assert_eq!(r.makespan, Time::ZERO);
+        assert_eq!(r.net.msgs_sent, 0);
+        let d = service_digest(&r, "smoke");
+        assert!(d.contains("\"jobs\": 0"));
+        assert!(!d.contains("\"job0\""));
+    }
+
+    #[test]
+    fn oversized_job_is_a_loud_error() {
+        let arrivals = ArrivalConfig {
+            jobs: 4,
+            mean_iat_ns: 2_000,
+            mix: Mix::Nanosort,
+            // All jobs Large (64 nodes) — too big for a 32-worker fleet.
+            size_weights: [0, 0, 1],
+        };
+        let cfg = ServiceConfig::new(32, arrivals, SchedPolicy::Fifo).unwrap();
+        let err = run_service(&cfg, 7).unwrap_err();
+        assert!(err.to_string().contains("needs"), "{err:#}");
+    }
+
+    #[test]
+    fn reserve_requires_a_leaf_aligned_fleet() {
+        let arrivals = ArrivalConfig { jobs: 2, ..Default::default() };
+        let cfg = ServiceConfig::new(100, arrivals, SchedPolicy::Reserve).unwrap();
+        let err = run_service(&cfg, 7).unwrap_err();
+        assert!(err.to_string().contains("leaf"), "{err:#}");
+    }
+
+    #[test]
+    fn mixed_mix_runs_all_workload_kinds_on_one_fabric() {
+        let arrivals = ArrivalConfig {
+            jobs: 12,
+            mean_iat_ns: 2_000,
+            mix: Mix::Mixed,
+            ..Default::default()
+        };
+        let cfg = ServiceConfig::new(128, arrivals, SchedPolicy::Sjf).unwrap();
+        let r = run_service(&cfg, 11).unwrap();
+        assert!(r.jobs.iter().all(|j| j.record.completed && j.validated));
+        // The zipf mix at 12 jobs reliably includes at least 2 kinds.
+        let mut kinds: Vec<&str> = r.jobs.iter().map(|j| j.record.workload).collect();
+        kinds.sort_unstable();
+        kinds.dedup();
+        assert!(kinds.len() >= 2, "only {kinds:?}");
+    }
+
+    #[test]
+    fn tier_ladder_meets_the_acceptance_floor() {
+        for tier in Tier::ALL {
+            let (workers, arrivals) = service_tier(tier, Mix::Nanosort);
+            assert!(arrivals.jobs >= 20, "{}: {} jobs", tier.name(), arrivals.jobs);
+            assert_eq!(workers % LEAF_RADIX, 0, "{}", tier.name());
+            // Largest job of either mix (64 nodes) fits even reserved.
+            assert!(SchedPolicy::Reserve.footprint(64) <= workers);
+        }
+    }
+
+    #[test]
+    fn report_load_metrics() {
+        let r = run_service(&tiny_cfg(SchedPolicy::Fifo), 7).unwrap();
+        assert!((r.offered_jobs_per_ms() - 500.0).abs() < 1e-9, "1e6/2000");
+        assert!(r.achieved_jobs_per_ms() > 0.0);
+        let s = r.render();
+        assert!(s.contains("service: mix=nanosort sched=fifo"));
+        assert!(s.contains("offered = "));
+        assert!(s.contains("jct µs: p50 = "));
+    }
+}

@@ -1,0 +1,240 @@
+//! Coordinator-level job schedulers and the worker-range allocator.
+//!
+//! The service admits each queued job onto a *contiguous* range of
+//! worker nodes (contiguity is what makes per-job node-id namespacing a
+//! base offset — see [`super::wrap`]). [`RangeAlloc`] is the free-list
+//! over the worker id space; [`SchedPolicy`] decides which queued job is
+//! admitted next and where.
+
+use anyhow::{bail, Result};
+
+/// Reservation granularity of [`SchedPolicy::Reserve`]: one leaf switch
+/// of the paper fabric ([`crate::net::Topology::paper`]'s radix).
+pub const LEAF_RADIX: usize = 64;
+
+/// First-fit free-list allocator over the worker id space `0..nodes`.
+/// Ranges are kept sorted, disjoint, and non-adjacent (adjacent frees
+/// merge), so `fit` scans lowest-base-first — deterministic placement.
+#[derive(Debug, Clone)]
+pub struct RangeAlloc {
+    nodes: usize,
+    /// Sorted, disjoint, non-adjacent free ranges `[start, end)`.
+    free: Vec<(usize, usize)>,
+}
+
+impl RangeAlloc {
+    pub fn new(nodes: usize) -> Self {
+        RangeAlloc { nodes, free: if nodes > 0 { vec![(0, nodes)] } else { Vec::new() } }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// Total free workers (not necessarily contiguous).
+    pub fn free_nodes(&self) -> usize {
+        self.free.iter().map(|(s, e)| e - s).sum()
+    }
+
+    /// Lowest base where `n` nodes fit with `base % align == 0`.
+    pub fn fit(&self, n: usize, align: usize) -> Option<usize> {
+        assert!(n > 0 && align > 0);
+        for &(s, e) in &self.free {
+            let base = s.div_ceil(align) * align;
+            if base + n <= e {
+                return Some(base);
+            }
+        }
+        None
+    }
+
+    /// Claim `[base, base + n)`. Panics if any of it is not free (the
+    /// coordinator only takes ranges returned by [`RangeAlloc::fit`]).
+    pub fn take(&mut self, base: usize, n: usize) {
+        let i = self
+            .free
+            .iter()
+            .position(|&(s, e)| s <= base && base + n <= e)
+            .expect("take() of a range that is not free");
+        let (s, e) = self.free.remove(i);
+        if base + n < e {
+            self.free.insert(i, (base + n, e));
+        }
+        if s < base {
+            self.free.insert(i, (s, base));
+        }
+    }
+
+    /// Return `[base, base + n)` to the free list, merging neighbors.
+    pub fn release(&mut self, base: usize, n: usize) {
+        let i = self.free.partition_point(|&(s, _)| s < base);
+        self.free.insert(i, (base, base + n));
+        if i + 1 < self.free.len() && self.free[i].1 == self.free[i + 1].0 {
+            self.free[i].1 = self.free[i + 1].1;
+            self.free.remove(i + 1);
+        }
+        if i > 0 && self.free[i - 1].1 == self.free[i].0 {
+            self.free[i - 1].1 = self.free[i].1;
+            self.free.remove(i);
+        }
+    }
+}
+
+/// Which queued job the coordinator admits next, and where.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Strict arrival order: the head-of-line job is admitted first-fit
+    /// or nothing is (large jobs block smaller ones behind them).
+    Fifo,
+    /// Smallest-job-first: the smallest queued job (ties by arrival)
+    /// is admitted when it fits — classic tail-JCT trade: small jobs
+    /// jump the line, large jobs risk starvation under load.
+    Sjf,
+    /// Partition-reserving FIFO: arrival order, but every job gets a
+    /// private leaf-aligned reservation of whole [`LEAF_RADIX`] leaves,
+    /// queueing while the fabric is full — no leaf is ever shared
+    /// between jobs, at the cost of internal fragmentation.
+    Reserve,
+}
+
+impl SchedPolicy {
+    pub const ALL: [SchedPolicy; 3] =
+        [SchedPolicy::Fifo, SchedPolicy::Sjf, SchedPolicy::Reserve];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedPolicy::Fifo => "fifo",
+            SchedPolicy::Sjf => "sjf",
+            SchedPolicy::Reserve => "reserve",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SchedPolicy> {
+        match s {
+            "fifo" => Ok(SchedPolicy::Fifo),
+            "sjf" => Ok(SchedPolicy::Sjf),
+            "reserve" => Ok(SchedPolicy::Reserve),
+            other => bail!("unknown scheduler {other:?} (known: fifo|sjf|reserve)"),
+        }
+    }
+
+    /// Workers actually claimed for a job of `n` nodes.
+    pub fn footprint(self, n: usize) -> usize {
+        match self {
+            SchedPolicy::Reserve => n.div_ceil(LEAF_RADIX) * LEAF_RADIX,
+            _ => n,
+        }
+    }
+
+    fn alignment(self) -> usize {
+        match self {
+            SchedPolicy::Reserve => LEAF_RADIX,
+            _ => 1,
+        }
+    }
+
+    /// Pick the next admission from `queue` (entries are `(job, nodes)`
+    /// in arrival order): returns `(queue index, base)` or `None` when
+    /// nothing admissible fits.
+    pub fn pick(self, queue: &[(u32, usize)], alloc: &RangeAlloc) -> Option<(usize, usize)> {
+        match self {
+            SchedPolicy::Fifo | SchedPolicy::Reserve => {
+                let &(_, n) = queue.first()?;
+                alloc.fit(self.footprint(n), self.alignment()).map(|b| (0, b))
+            }
+            SchedPolicy::Sjf => {
+                // Smallest queued job, ties by arrival order. If the
+                // smallest doesn't fit, nothing larger can either.
+                let (i, &(_, n)) = queue
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(i, (_, n))| (*n, *i))?;
+                alloc.fit(n, 1).map(|b| (i, b))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_first_fit_take_release_merge() {
+        let mut a = RangeAlloc::new(256);
+        assert_eq!(a.free_nodes(), 256);
+        assert_eq!(a.fit(16, 1), Some(0));
+        a.take(0, 16);
+        assert_eq!(a.fit(16, 1), Some(16));
+        a.take(16, 16);
+        a.take(32, 64);
+        assert_eq!(a.free_nodes(), 256 - 96);
+        // Free the middle range; first-fit lands back in the hole.
+        a.release(16, 16);
+        assert_eq!(a.fit(16, 1), Some(16));
+        assert_eq!(a.fit(32, 1), Some(96));
+        // Release everything; neighbors merge back to one range.
+        a.release(0, 16);
+        a.release(32, 64);
+        assert_eq!(a.fit(256, 1), Some(0));
+        assert_eq!(a.free_nodes(), 256);
+    }
+
+    #[test]
+    fn alloc_alignment() {
+        let mut a = RangeAlloc::new(256);
+        a.take(0, 10);
+        // Next 64-aligned base after the hole at 10 is 64.
+        assert_eq!(a.fit(64, 64), Some(64));
+        assert_eq!(a.fit(10, 1), Some(10));
+        a.take(64, 192);
+        assert_eq!(a.fit(64, 64), None, "only [10, 64) left");
+    }
+
+    #[test]
+    #[should_panic(expected = "not free")]
+    fn alloc_take_of_busy_range_panics() {
+        let mut a = RangeAlloc::new(64);
+        a.take(0, 32);
+        a.take(16, 8);
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in SchedPolicy::ALL {
+            assert_eq!(SchedPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(SchedPolicy::parse("lifo").is_err());
+    }
+
+    #[test]
+    fn fifo_is_head_of_line_blocking() {
+        let mut alloc = RangeAlloc::new(64);
+        alloc.take(0, 32); // half the fabric busy
+        let queue = [(0u32, 64usize), (1, 4)];
+        // FIFO refuses to jump the 64-node head even though job 1 fits.
+        assert_eq!(SchedPolicy::Fifo.pick(&queue, &alloc), None);
+        // SJF admits the small job immediately.
+        assert_eq!(SchedPolicy::Sjf.pick(&queue, &alloc), Some((1, 32)));
+    }
+
+    #[test]
+    fn sjf_breaks_ties_by_arrival() {
+        let alloc = RangeAlloc::new(64);
+        let queue = [(7u32, 8usize), (9, 8), (3, 16)];
+        assert_eq!(SchedPolicy::Sjf.pick(&queue, &alloc), Some((0, 0)));
+    }
+
+    #[test]
+    fn reserve_rounds_footprint_to_whole_leaves() {
+        assert_eq!(SchedPolicy::Reserve.footprint(1), 64);
+        assert_eq!(SchedPolicy::Reserve.footprint(64), 64);
+        assert_eq!(SchedPolicy::Reserve.footprint(65), 128);
+        assert_eq!(SchedPolicy::Fifo.footprint(65), 65);
+        let mut alloc = RangeAlloc::new(256);
+        alloc.take(0, 64);
+        let queue = [(0u32, 10usize)];
+        // 10 nodes reserve a whole leaf, at the next leaf boundary.
+        assert_eq!(SchedPolicy::Reserve.pick(&queue, &alloc), Some((0, 64)));
+    }
+}

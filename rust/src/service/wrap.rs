@@ -1,0 +1,602 @@
+//! The multi-job wrapper protocol: one shared fleet runs many workload
+//! instances concurrently, each namespaced onto a contiguous worker
+//! range, under an in-simulation coordinator.
+//!
+//! Node `workers` (the extra last node of the fabric) runs the
+//! [`Coordinator`]: it replays the arrival trace off a core-local timer
+//! chain, queues jobs, admits them per [`SchedPolicy`] onto disjoint
+//! ranges from [`RangeAlloc`], and collects per-worker `Done` reports.
+//! Every other node runs a [`Worker`]: idle until a `Kick{job, slot}`
+//! hands it slot `slot` of job `job`'s pre-built program, then a pure
+//! relay — inner algorithm messages cross the fabric wrapped in an 8 B
+//! [`ServiceMsg::Inner`] header, and [`adapt`] re-bases node ids so the
+//! inner program never learns it is sharing a fabric.
+//!
+//! Determinism under the sharded executor (DESIGN.md §9): all
+//! cross-node shared state in [`ServiceArena`] is written and read only
+//! at points ordered by message chains (placement is written before the
+//! admission Kicks depart; a worker reads a job's placement only on
+//! messages that causally follow those Kicks), so every access pair is
+//! separated by at least one conservative window barrier.
+
+use std::sync::{Arc, Mutex};
+
+use crate::algo::mergemin::{MergeMin, MinMsg};
+use crate::algo::millisort::{MilliSort, MsMsg};
+use crate::algo::nanosort::{NanoSort, NsMsg};
+use crate::algo::setalgebra::{CountMsg, SetAlgebra};
+use crate::nanopu::{Ctx, NodeId, Program, SendOp, WireMsg};
+use crate::scenario::Workload;
+use crate::sim::Time;
+
+use super::sched::{RangeAlloc, SchedPolicy};
+use super::JobRecord;
+
+/// Service header bytes prepended to every wrapped inner message.
+pub(crate) const CTRL_BYTES: u64 = 8;
+
+/// Coordinator bookkeeping cycles per arrival processed off a tick.
+const ARRIVAL_CYCLES: u64 = 16;
+/// Coordinator base cost of one timer tick.
+const TICK_CYCLES: u64 = 24;
+/// Coordinator cost of one admission decision (queue scan + allocator).
+const ADMIT_CYCLES: u64 = 64;
+/// Coordinator cost of folding in one worker `Done`.
+const DONE_CYCLES: u64 = 24;
+/// Worker cost of installing a kicked job (arena fetch + reset).
+const KICK_CYCLES: u64 = 24;
+/// Worker cost of stashing a not-yet-current job's message (mirrors the
+/// engine reorder buffer's store cost).
+const STASH_CYCLES: u64 = 4;
+/// Worker cost of popping a stashed message back out.
+const UNSTASH_CYCLES: u64 = 6;
+
+pub(crate) type NsProg = <NanoSort as Workload>::Prog;
+pub(crate) type MsProg = <MilliSort as Workload>::Prog;
+pub(crate) type MmProg = <MergeMin as Workload>::Prog;
+pub(crate) type SaProg = <SetAlgebra as Workload>::Prog;
+
+/// An algorithm message of any registered workload, as carried inside a
+/// [`ServiceMsg::Inner`] envelope.
+#[derive(Clone)]
+pub(crate) enum InnerMsg {
+    Ns(NsMsg),
+    Ms(MsMsg),
+    Min(MinMsg),
+    Count(CountMsg),
+}
+
+impl InnerMsg {
+    fn wire_bytes(&self) -> u64 {
+        match self {
+            InnerMsg::Ns(m) => m.wire_bytes(),
+            InnerMsg::Ms(m) => m.wire_bytes(),
+            InnerMsg::Min(m) => m.wire_bytes(),
+            InnerMsg::Count(m) => m.wire_bytes(),
+        }
+    }
+
+    fn step(&self) -> u32 {
+        match self {
+            InnerMsg::Ns(m) => m.step(),
+            InnerMsg::Ms(m) => m.step(),
+            InnerMsg::Min(m) => m.step(),
+            InnerMsg::Count(m) => m.step(),
+        }
+    }
+}
+
+/// A node program of any registered workload, as installed on a worker.
+pub(crate) enum InnerProg {
+    Ns(NsProg),
+    Ms(MsProg),
+    Min(MmProg),
+    Count(SaProg),
+}
+
+impl InnerProg {
+    fn step(&self) -> u32 {
+        match self {
+            InnerProg::Ns(p) => p.step(),
+            InnerProg::Ms(p) => p.step(),
+            InnerProg::Min(p) => p.step(),
+            InnerProg::Count(p) => p.step(),
+        }
+    }
+
+    fn start(
+        &mut self,
+        octx: &mut Ctx<'_, ServiceMsg>,
+        job: u32,
+        base: NodeId,
+        stage: &mut u8,
+        finished: &mut bool,
+    ) {
+        match self {
+            InnerProg::Ns(p) => adapt(octx, job, base, stage, finished, InnerMsg::Ns, |c| {
+                p.on_start(c)
+            }),
+            InnerProg::Ms(p) => adapt(octx, job, base, stage, finished, InnerMsg::Ms, |c| {
+                p.on_start(c)
+            }),
+            InnerProg::Min(p) => adapt(octx, job, base, stage, finished, InnerMsg::Min, |c| {
+                p.on_start(c)
+            }),
+            InnerProg::Count(p) => {
+                adapt(octx, job, base, stage, finished, InnerMsg::Count, |c| p.on_start(c))
+            }
+        }
+    }
+
+    /// Deliver one inner message (`src` is already re-based to the job's
+    /// namespace). The (program, message) kinds always match because both
+    /// are keyed by the same job id.
+    fn deliver(
+        &mut self,
+        octx: &mut Ctx<'_, ServiceMsg>,
+        job: u32,
+        base: NodeId,
+        stage: &mut u8,
+        finished: &mut bool,
+        src: NodeId,
+        msg: InnerMsg,
+    ) {
+        match (self, msg) {
+            (InnerProg::Ns(p), InnerMsg::Ns(m)) => {
+                adapt(octx, job, base, stage, finished, InnerMsg::Ns, |c| {
+                    p.on_message(c, src, m)
+                })
+            }
+            (InnerProg::Ms(p), InnerMsg::Ms(m)) => {
+                adapt(octx, job, base, stage, finished, InnerMsg::Ms, |c| {
+                    p.on_message(c, src, m)
+                })
+            }
+            (InnerProg::Min(p), InnerMsg::Min(m)) => {
+                adapt(octx, job, base, stage, finished, InnerMsg::Min, |c| {
+                    p.on_message(c, src, m)
+                })
+            }
+            (InnerProg::Count(p), InnerMsg::Count(m)) => {
+                adapt(octx, job, base, stage, finished, InnerMsg::Count, |c| {
+                    p.on_message(c, src, m)
+                })
+            }
+            _ => unreachable!("inner message kind does not match the job's program"),
+        }
+    }
+}
+
+/// The service wire protocol. `Tick` is timer-only (it never crosses the
+/// fabric); everything else is ordinary unicast traffic paying the full
+/// fabric model.
+#[derive(Clone)]
+pub(crate) enum ServiceMsg {
+    /// Coordinator → worker: install slot `slot` of job `job` and start.
+    Kick { job: u32, slot: u32 },
+    /// Worker → coordinator: this worker's share of `job` is complete.
+    Done { job: u32 },
+    /// Coordinator self-timer: the arrival clock.
+    Tick,
+    /// A namespaced algorithm message: [`CTRL_BYTES`] of header plus the
+    /// inner payload.
+    Inner { job: u32, msg: InnerMsg },
+}
+
+impl WireMsg for ServiceMsg {
+    fn wire_bytes(&self) -> u64 {
+        match self {
+            ServiceMsg::Kick { .. } => 16,
+            ServiceMsg::Done { .. } => 8,
+            ServiceMsg::Tick => 8,
+            ServiceMsg::Inner { msg, .. } => CTRL_BYTES + msg.wire_bytes(),
+        }
+    }
+
+    /// The engine's reorder buffer gates wrapped messages exactly like
+    /// the inner protocol, shifted up one step: step 0 stays reserved for
+    /// control messages (Kick/Done/Tick), which are always deliverable.
+    fn step(&self) -> u32 {
+        match self {
+            ServiceMsg::Inner { msg, .. } => msg.step() + 1,
+            _ => 0,
+        }
+    }
+}
+
+/// Run the inner handler `f` inside a namespaced [`Ctx`] carved out of
+/// the worker's real context, then translate its effects back out:
+/// node ids shift by `base`, every outbound unicast/timer is wrapped in
+/// [`ServiceMsg::Inner`], and each wrapped send's extra TX serialization
+/// (the inner handler charged TX for the *inner* byte count) is folded
+/// into the running cycle count so later sends shift with it.
+fn adapt<M: WireMsg>(
+    octx: &mut Ctx<'_, ServiceMsg>,
+    job: u32,
+    base: NodeId,
+    stage: &mut u8,
+    finished: &mut bool,
+    wrap: impl Fn(M) -> InnerMsg,
+    f: impl for<'b> FnOnce(&mut Ctx<'b, M>),
+) {
+    let mut ictx = Ctx {
+        node: octx.node - base,
+        core: octx.core,
+        rng: &mut *octx.rng,
+        entry: octx.entry,
+        cycles: octx.cycles,
+        ops: Vec::new(),
+        stage,
+        finished,
+        // Per-job dynamic groups cannot be registered mid-run; the
+        // service fabric always degrades broadcasts to unicast loops.
+        mcast_supported: false,
+    };
+    f(&mut ictx);
+    let Ctx { cycles, ops, .. } = ictx;
+    let core = octx.core;
+    let mut extra = 0u64;
+    for (cyc, op) in ops {
+        match op {
+            SendOp::Unicast { dst, msg } => {
+                let inner_bytes = msg.wire_bytes();
+                let wrapped = ServiceMsg::Inner { job, msg: wrap(msg) };
+                extra += core
+                    .tx_cycles(wrapped.wire_bytes())
+                    .saturating_sub(core.tx_cycles(inner_bytes));
+                octx.ops
+                    .push((cyc + extra, SendOp::Unicast { dst: dst + base, msg: wrapped }));
+            }
+            SendOp::Timer { delay, msg } => {
+                let wrapped = ServiceMsg::Inner { job, msg: wrap(msg) };
+                octx.ops.push((cyc + extra, SendOp::Timer { delay, msg: wrapped }));
+            }
+            SendOp::Multicast { .. } => {
+                unreachable!("service jobs run with multicast disabled")
+            }
+        }
+    }
+    octx.cycles = cycles + extra;
+}
+
+/// One job's shared run-state: its pre-built per-slot programs (taken
+/// exactly once, by the Kick) and its current placement.
+pub(crate) struct JobState {
+    /// Worker nodes this job occupies once placed.
+    pub nodes: usize,
+    /// Slot-indexed programs, built host-side before the run.
+    pub programs: Vec<Mutex<Option<InnerProg>>>,
+    /// Base of the job's current range; `None` before admission and
+    /// again after completion (written by the coordinator only, at
+    /// points ordered before/after every worker read — see module docs).
+    pub placement: Mutex<Option<usize>>,
+}
+
+/// Cross-node shared state of one service run. Every access is ordered
+/// by the simulation's own message causality (module docs), so the
+/// mutexes are for `Sync` soundness, never for logical ordering.
+pub(crate) struct ServiceArena {
+    pub jobs: Vec<JobState>,
+    /// Per-job outcome records, indexed by job id; the coordinator fills
+    /// admission/completion fields in as the run progresses.
+    pub records: Mutex<Vec<JobRecord>>,
+}
+
+/// A running job, from the coordinator's point of view.
+struct JobRun {
+    base: usize,
+    footprint: usize,
+    /// Worker `Done`s still outstanding.
+    remaining: usize,
+}
+
+/// The coordinator program (node id = worker count).
+pub(crate) struct Coordinator {
+    arena: Arc<ServiceArena>,
+    policy: SchedPolicy,
+    /// `(arrival, job, nodes)` in arrival order.
+    trace: Vec<(Time, u32, usize)>,
+    /// Next trace index still to arrive.
+    next: usize,
+    /// Arrived-but-unadmitted jobs, `(job, nodes)` in arrival order.
+    queue: Vec<(u32, usize)>,
+    alloc: RangeAlloc,
+    running: Vec<Option<JobRun>>,
+    /// Admission sequence counter (total order of scheduler decisions).
+    admits: u64,
+    completed: usize,
+}
+
+impl Coordinator {
+    pub fn new(
+        arena: Arc<ServiceArena>,
+        policy: SchedPolicy,
+        trace: Vec<(Time, u32, usize)>,
+        workers: usize,
+    ) -> Self {
+        let jobs = arena.jobs.len();
+        Coordinator {
+            arena,
+            policy,
+            trace,
+            next: 0,
+            queue: Vec::new(),
+            alloc: RangeAlloc::new(workers),
+            running: (0..jobs).map(|_| None).collect(),
+            admits: 0,
+            completed: 0,
+        }
+    }
+
+    fn on_start(&mut self, ctx: &mut Ctx<'_, ServiceMsg>) {
+        match self.trace.first() {
+            // The arrival clock: a timer chain hitting each nominal
+            // arrival (timers draw no RNG and never touch the fabric).
+            Some(&(at, _, _)) => ctx.timer(at, ServiceMsg::Tick),
+            None => ctx.finish(),
+        }
+    }
+
+    fn tick(&mut self, ctx: &mut Ctx<'_, ServiceMsg>) {
+        let now = ctx.now();
+        let mut due = 0u64;
+        while self.next < self.trace.len() && self.trace[self.next].0 <= now {
+            let (_, job, nodes) = self.trace[self.next];
+            self.queue.push((job, nodes));
+            self.next += 1;
+            due += 1;
+        }
+        if self.next < self.trace.len() {
+            // Re-anchor on the absolute nominal arrival so handler
+            // processing time never accumulates into the open stream.
+            let delay = self.trace[self.next].0.saturating_sub(now);
+            ctx.timer(delay, ServiceMsg::Tick);
+        }
+        ctx.compute(TICK_CYCLES + ARRIVAL_CYCLES * due);
+        self.try_admit(ctx);
+    }
+
+    fn done(&mut self, ctx: &mut Ctx<'_, ServiceMsg>, job: u32) {
+        ctx.compute(DONE_CYCLES);
+        let j = job as usize;
+        let run = self.running[j].as_mut().expect("Done for a job that is not running");
+        run.remaining -= 1;
+        if run.remaining > 0 {
+            return;
+        }
+        let JobRun { base, footprint, .. } =
+            self.running[j].take().expect("checked running above");
+        {
+            let mut recs = self.arena.records.lock().unwrap();
+            recs[j].finish = ctx.now();
+            recs[j].completed = true;
+        }
+        // Placement is cleared before the range becomes reusable, so a
+        // worker that later sees this job's leftovers drops them as
+        // stale instead of stashing them forever.
+        *self.arena.jobs[j].placement.lock().unwrap() = None;
+        self.alloc.release(base, footprint);
+        self.completed += 1;
+        if self.completed == self.trace.len() {
+            ctx.finish();
+        }
+        self.try_admit(ctx);
+    }
+
+    fn try_admit(&mut self, ctx: &mut Ctx<'_, ServiceMsg>) {
+        while let Some((qi, base)) = self.policy.pick(&self.queue, &self.alloc) {
+            let (job, nodes) = self.queue.remove(qi);
+            let footprint = self.policy.footprint(nodes);
+            self.alloc.take(base, footprint);
+            self.running[job as usize] =
+                Some(JobRun { base, footprint, remaining: nodes });
+            // Placement must be visible before any Kick departs: every
+            // worker read of it causally follows one of these Kicks.
+            *self.arena.jobs[job as usize].placement.lock().unwrap() = Some(base);
+            {
+                let mut recs = self.arena.records.lock().unwrap();
+                let r = &mut recs[job as usize];
+                r.admit_seq = self.admits;
+                r.base = base;
+                r.start = ctx.now();
+            }
+            self.admits += 1;
+            ctx.compute(ADMIT_CYCLES);
+            // Control-plane fan-out pays the real unicast egress chain.
+            for slot in 0..nodes {
+                ctx.send(base + slot, ServiceMsg::Kick { job, slot: slot as u32 });
+            }
+        }
+    }
+}
+
+/// The job a worker is currently running.
+struct Active {
+    job: u32,
+    base: NodeId,
+    inner: InnerProg,
+    stage: u8,
+    finished: bool,
+    done_sent: bool,
+    /// Job-local reorder buffer: messages of the active job stashed
+    /// before its kick (relative src, message), drained in step order.
+    held: Vec<(NodeId, InnerMsg)>,
+}
+
+/// A worker program: idle relay until kicked, then the active job's
+/// inner program namespaced through [`adapt`].
+pub(crate) struct Worker {
+    arena: Arc<ServiceArena>,
+    coord: NodeId,
+    active: Option<Active>,
+    /// Messages for *other* (placed, not-yet-kicked-here) jobs,
+    /// `(job, absolute src, msg)` in arrival order.
+    pending: Vec<(u32, NodeId, InnerMsg)>,
+}
+
+impl Worker {
+    pub fn new(arena: Arc<ServiceArena>, coord: NodeId) -> Self {
+        Worker { arena, coord, active: None, pending: Vec::new() }
+    }
+
+    fn step(&self) -> u32 {
+        // Mirrors [`ServiceMsg::step`]: active job's step shifted up one,
+        // step 0 (control traffic) always acceptable.
+        self.active.as_ref().map_or(0, |a| a.inner.step() + 1)
+    }
+
+    fn kick(&mut self, ctx: &mut Ctx<'_, ServiceMsg>, job: u32, slot: usize) {
+        ctx.compute(KICK_CYCLES);
+        let inner = self.arena.jobs[job as usize].programs[slot]
+            .lock()
+            .unwrap()
+            .take()
+            .expect("job slot kicked twice");
+        let base = ctx.node() - slot;
+        ctx.set_stage(0);
+        *ctx.finished = false; // new job: this worker is busy again
+        self.active = Some(Active {
+            job,
+            base,
+            inner,
+            stage: 0,
+            finished: false,
+            done_sent: false,
+            held: Vec::new(),
+        });
+        // Early-arrived messages of this job move into its held buffer;
+        // leftovers of completed jobs are pruned (their placement is
+        // gone), anything else keeps waiting for its own kick.
+        let (mine, mut rest): (Vec<_>, Vec<_>) =
+            std::mem::take(&mut self.pending).into_iter().partition(|e| e.0 == job);
+        let arena = &self.arena;
+        rest.retain(|(j, _, _)| arena.jobs[*j as usize].placement.lock().unwrap().is_some());
+        self.pending = rest;
+        let a = self.active.as_mut().expect("just installed");
+        for (_, src, m) in mine {
+            a.held.push((src - a.base, m));
+        }
+        let Active { job, base, inner, stage, finished, .. } = a;
+        inner.start(ctx, *job, *base, stage, finished);
+        self.after_inner(ctx);
+    }
+
+    fn inner_msg(&mut self, ctx: &mut Ctx<'_, ServiceMsg>, job: u32, src: NodeId, msg: InnerMsg) {
+        if matches!(&self.active, Some(a) if a.job == job) {
+            let a = self.active.as_mut().expect("checked above");
+            let rel = src - a.base;
+            let Active { job, base, inner, stage, finished, .. } = a;
+            // Engine reorder gating (one-step-shifted) guarantees
+            // msg.step() <= inner.step() here.
+            inner.deliver(ctx, *job, *base, stage, finished, rel, msg);
+            self.after_inner(ctx);
+            return;
+        }
+        // Not the active job: either an early message of a job whose
+        // kick is still in flight (this node is inside its placement) —
+        // stash it — or a stale leftover of a completed job — drop it.
+        let st = &self.arena.jobs[job as usize];
+        let covered = st
+            .placement
+            .lock()
+            .unwrap()
+            .is_some_and(|b| b <= ctx.node() && ctx.node() < b + st.nodes);
+        if covered {
+            ctx.compute(STASH_CYCLES);
+            self.pending.push((job, src, msg));
+        }
+    }
+
+    /// Post-handler bookkeeping: report the finishing transition to the
+    /// coordinator, then drain held messages that have become current
+    /// (each drained delivery can itself finish the job or advance the
+    /// step, so loop until a fixpoint).
+    fn after_inner(&mut self, ctx: &mut Ctx<'_, ServiceMsg>) {
+        let coord = self.coord;
+        loop {
+            let Some(a) = self.active.as_mut() else { return };
+            let stage = a.stage;
+            ctx.set_stage(stage);
+            if a.finished && !a.done_sent {
+                a.done_sent = true;
+                let job = a.job;
+                ctx.finish();
+                ctx.send(coord, ServiceMsg::Done { job });
+            }
+            let cur = a.inner.step();
+            let Some(pos) = a.held.iter().position(|(_, m)| m.step() <= cur) else {
+                return;
+            };
+            let (src, m) = a.held.remove(pos);
+            ctx.compute(UNSTASH_CYCLES);
+            let Active { job, base, inner, stage, finished, .. } = a;
+            inner.deliver(ctx, *job, *base, stage, finished, src, m);
+        }
+    }
+}
+
+/// The one program type every node of a service run executes.
+pub(crate) enum ServiceProg {
+    Worker(Worker),
+    Coordinator(Coordinator),
+}
+
+impl Program for ServiceProg {
+    type Msg = ServiceMsg;
+
+    fn on_start(&mut self, ctx: &mut Ctx<'_, ServiceMsg>) {
+        match self {
+            ServiceProg::Worker(_) => {} // workers idle until kicked
+            ServiceProg::Coordinator(c) => c.on_start(ctx),
+        }
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx<'_, ServiceMsg>, src: NodeId, msg: ServiceMsg) {
+        match (self, msg) {
+            (ServiceProg::Worker(w), ServiceMsg::Kick { job, slot }) => {
+                w.kick(ctx, job, slot as usize)
+            }
+            (ServiceProg::Worker(w), ServiceMsg::Inner { job, msg }) => {
+                w.inner_msg(ctx, job, src, msg)
+            }
+            (ServiceProg::Coordinator(c), ServiceMsg::Tick) => c.tick(ctx),
+            (ServiceProg::Coordinator(c), ServiceMsg::Done { job }) => c.done(ctx, job),
+            _ => unreachable!("service message routed to the wrong node kind"),
+        }
+    }
+
+    fn step(&self) -> u32 {
+        match self {
+            ServiceProg::Worker(w) => w.step(),
+            // The coordinator only ever receives step-0 control traffic.
+            ServiceProg::Coordinator(_) => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wrapped_wire_bytes_add_the_header() {
+        let inner = MinMsg { round: 2, value: 5 };
+        let raw = inner.wire_bytes();
+        let wrapped = ServiceMsg::Inner { job: 3, msg: InnerMsg::Min(inner) };
+        assert_eq!(wrapped.wire_bytes(), CTRL_BYTES + raw);
+        assert_eq!(ServiceMsg::Kick { job: 0, slot: 0 }.wire_bytes(), 16);
+        assert_eq!(ServiceMsg::Done { job: 0 }.wire_bytes(), 8);
+        assert_eq!(ServiceMsg::Tick.wire_bytes(), 8);
+    }
+
+    #[test]
+    fn wrapped_step_shifts_up_and_control_stays_zero() {
+        let inner = MinMsg { round: 4, value: 1 };
+        let istep = inner.step();
+        let wrapped = ServiceMsg::Inner { job: 0, msg: InnerMsg::Min(inner) };
+        assert_eq!(wrapped.step(), istep + 1);
+        assert_eq!(ServiceMsg::Kick { job: 9, slot: 1 }.step(), 0);
+        assert_eq!(ServiceMsg::Done { job: 9 }.step(), 0);
+        assert_eq!(ServiceMsg::Tick.step(), 0);
+    }
+}

@@ -34,6 +34,10 @@ pub const MAX_STAGES: usize = 16;
 pub(crate) struct Transit<M> {
     pub flight: Flight,
     pub phantom: bool,
+    /// Core-local timer self-delivery: skips the destination-side fabric
+    /// phase entirely (no admit, no ingress occupancy, no net counters) —
+    /// the flight's `at` *is* the delivery time.
+    pub timer: bool,
     pub msg: M,
 }
 
@@ -570,9 +574,13 @@ impl<P: Program> Shard<P> {
         while let Some(t) = self.queue.pop_before(bound()) {
             self.events += 1;
             // Destination-side fabric phase: spine + ingress queueing, in
-            // canonical order per destination.
-            let arrival =
-                sx.fabric.admit(&mut self.rx, &mut self.net, &t.flight, t.msg.wire_bytes());
+            // canonical order per destination. Timers never crossed the
+            // fabric, so they bypass admission and fire at their own time.
+            let arrival = if t.timer {
+                t.flight.at
+            } else {
+                sx.fabric.admit(&mut self.rx, &mut self.net, &t.flight, t.msg.wire_bytes())
+            };
             if t.phantom {
                 continue; // multicast self-leg: delivered, never invoked
             }
@@ -731,7 +739,13 @@ impl<P: Program> Shard<P> {
                         msg.wire_bytes(),
                         ready,
                     );
-                    self.route(flight, false, msg, emit);
+                    self.route(flight, false, false, msg, emit);
+                }
+                SendOp::Timer { delay, msg } => {
+                    // Core-local self-delivery: mint a canonical flight at
+                    // the absolute fire time, never touching the fabric.
+                    let flight = sx.fabric.timer(&mut self.tx, id, ready + delay);
+                    self.route(flight, false, true, msg, emit);
                 }
                 SendOp::Multicast { group, msg } => {
                     // The packet serializes once at the sender; every
@@ -748,7 +762,7 @@ impl<P: Program> Shard<P> {
                     for dst in sx.groups[group].iter() {
                         let flight =
                             sx.fabric.mcast_leg(&mut self.tx, &mut self.net, id, dst, on_wire);
-                        self.route(flight, dst == id, msg.clone(), emit);
+                        self.route(flight, dst == id, false, msg.clone(), emit);
                     }
                 }
             }
@@ -762,11 +776,12 @@ impl<P: Program> Shard<P> {
         &mut self,
         flight: Flight,
         phantom: bool,
+        timer: bool,
         msg: P::Msg,
         emit: &mut impl FnMut(Transit<P::Msg>),
     ) {
         let own = self.owns(flight.dst);
-        let t = Transit { flight, phantom, msg };
+        let t = Transit { flight, phantom, timer, msg };
         if own {
             self.queue.push(t);
         } else {

@@ -10,6 +10,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
     pub max: f64,
 }
@@ -30,6 +31,7 @@ impl Summary {
                 min: f64::NAN,
                 p50: f64::NAN,
                 p90: f64::NAN,
+                p95: f64::NAN,
                 p99: f64::NAN,
                 max: f64::NAN,
             };
@@ -46,6 +48,7 @@ impl Summary {
             min: v[0],
             p50: percentile_sorted(&v, 0.50),
             p90: percentile_sorted(&v, 0.90),
+            p95: percentile_sorted(&v, 0.95),
             p99: percentile_sorted(&v, 0.99),
             max: v[n - 1],
         }
@@ -165,7 +168,7 @@ mod tests {
         let s = Summary::of(&[]);
         assert!(s.is_empty());
         assert_eq!(s.n, 0);
-        for v in [s.mean, s.std, s.min, s.p50, s.p90, s.p99, s.max] {
+        for v in [s.mean, s.std, s.min, s.p50, s.p90, s.p95, s.p99, s.max] {
             assert!(v.is_nan(), "empty-sample statistics are NaN, got {v}");
         }
     }
@@ -176,7 +179,7 @@ mod tests {
         assert_eq!(s.n, 1);
         assert!(!s.is_empty());
         assert_eq!(s.std, 0.0);
-        for v in [s.mean, s.min, s.p50, s.p90, s.p99, s.max] {
+        for v in [s.mean, s.min, s.p50, s.p90, s.p95, s.p99, s.max] {
             assert_eq!(v, 7.5);
         }
     }

@@ -1,0 +1,218 @@
+//! Service-layer integration gates (DESIGN.md §9).
+//!
+//! - the service digest is byte-identical across executor backends and
+//!   thread counts, per scheduler;
+//! - FIFO and SJF make observably different admission decisions on a
+//!   crafted size mix (head-of-line blocking vs smallest-first);
+//! - no scheduler ever overlaps the node ranges of concurrently running
+//!   jobs, and the reserve policy stays leaf-aligned;
+//! - a zero-arrival run quiesces to the same empty digest on both
+//!   executors;
+//! - perturbation isolation: admitting a second job — concurrently or
+//!   after node reuse — cannot shift an earlier job's record, even with
+//!   tail injection, packet loss, and stragglers enabled (the
+//!   per-job-salted draw streams this PR pins).
+
+use nanosort::algo::nanosort::NanoSort;
+use nanosort::perturb::apply_env_setting;
+use nanosort::service::{
+    run_service, run_service_trace, service_digest, ArrivalConfig, JobKind, JobSpec, Mix,
+    SchedPolicy, ServiceConfig, SizeClass, LEAF_RADIX,
+};
+use nanosort::sim::Time;
+
+/// A crafted NanoSort job of one of the generator's size classes
+/// (4/16/64 nodes — the same shapes `arrivals::job_kind` emits).
+fn ns_job(id: u32, arrival_ns: u64, class: SizeClass) -> JobSpec {
+    let nodes = match class {
+        SizeClass::Small => 4,
+        SizeClass::Medium => 16,
+        SizeClass::Large => 64,
+    };
+    JobSpec {
+        id,
+        arrival: Time::from_ns(arrival_ns),
+        nodes,
+        class,
+        kind: JobKind::NanoSort(NanoSort {
+            keys_per_node: 8,
+            buckets: 4,
+            median_incast: 4,
+            ..Default::default()
+        }),
+        seed: 0x5eed_0000 + id as u64,
+    }
+}
+
+fn small_fleet(policy: SchedPolicy) -> ServiceConfig {
+    let arrivals = ArrivalConfig {
+        jobs: 8,
+        mean_iat_ns: 1_000,
+        mix: Mix::Nanosort,
+        ..Default::default()
+    };
+    ServiceConfig::new(128, arrivals, policy).unwrap()
+}
+
+#[test]
+fn service_digest_is_executor_and_thread_invariant_per_scheduler() {
+    for policy in SchedPolicy::ALL {
+        let seq = run_service(&small_fleet(policy), 7).unwrap();
+        let mut par_cfg = small_fleet(policy);
+        par_cfg.threads = 4;
+        let par = run_service(&par_cfg, 7).unwrap();
+        assert_eq!(
+            service_digest(&seq, "smoke"),
+            service_digest(&par, "smoke"),
+            "{}: SeqExecutor vs ParExecutor(4)",
+            policy.name()
+        );
+    }
+}
+
+#[test]
+fn sjf_admits_small_jobs_ahead_of_a_blocking_large_job() {
+    // One fleet-filling large job and two small ones, all due at the
+    // same coordinator tick of a 64-worker fleet.
+    let trace = || {
+        vec![
+            ns_job(0, 100, SizeClass::Large),
+            ns_job(1, 100, SizeClass::Small),
+            ns_job(2, 100, SizeClass::Small),
+        ]
+    };
+    let cfg_of = |policy| {
+        let arrivals = ArrivalConfig { jobs: 3, ..Default::default() };
+        ServiceConfig::new(64, arrivals, policy).unwrap()
+    };
+
+    // FIFO: strict arrival order — the large job grabs the whole fleet
+    // and head-of-line blocks both small ones behind it.
+    let fifo = run_service_trace(&cfg_of(SchedPolicy::Fifo), 7, trace()).unwrap();
+    let rec = |r: &nanosort::service::JobRecord| (r.admit_seq, r.start);
+    let f: Vec<_> = fifo.jobs.iter().map(|j| rec(&j.record)).collect();
+    assert_eq!(f[0].0, 0, "fifo admits the large job first");
+    assert!(f[1].1 >= fifo.jobs[0].record.finish, "small job waits out the large one");
+
+    // SJF: both small jobs jump the queue; the large job runs last.
+    let sjf = run_service_trace(&cfg_of(SchedPolicy::Sjf), 7, trace()).unwrap();
+    let s: Vec<_> = sjf.jobs.iter().map(|j| rec(&j.record)).collect();
+    assert_eq!(s[0].0, 2, "sjf admits the large job last");
+    assert_eq!((s[1].0, s[2].0), (0, 1), "small jobs keep arrival order among themselves");
+    assert!(s[1].1 < s[0].1, "a small job starts before the large one");
+
+    // The decision difference is visible in the conformance digest.
+    assert_ne!(service_digest(&fifo, "smoke"), service_digest(&sjf, "smoke"));
+}
+
+#[test]
+fn no_scheduler_overlaps_concurrent_node_ranges() {
+    for policy in SchedPolicy::ALL {
+        let r = run_service(&small_fleet(policy), 11).unwrap();
+        let recs: Vec<_> = r.jobs.iter().map(|j| j.record.clone()).collect();
+        for a in &recs {
+            assert!(a.base + policy.footprint(a.nodes) <= r.workers, "{}", policy.name());
+            if policy == SchedPolicy::Reserve {
+                assert_eq!(a.base % LEAF_RADIX, 0, "reserve base must be leaf-aligned");
+            }
+            for b in &recs {
+                if a.job == b.job {
+                    continue;
+                }
+                // Concurrent in time ⇒ disjoint in node space.
+                let concurrent = a.start < b.finish && b.start < a.finish;
+                let (af, bf) = (policy.footprint(a.nodes), policy.footprint(b.nodes));
+                let disjoint = a.base + af <= b.base || b.base + bf <= a.base;
+                assert!(
+                    !concurrent || disjoint,
+                    "{}: jobs {} and {} overlap in time and space",
+                    policy.name(),
+                    a.job,
+                    b.job
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_arrival_run_is_byte_identical_to_the_empty_digest_on_both_executors() {
+    let mut cfg = small_fleet(SchedPolicy::Fifo);
+    cfg.arrivals.jobs = 0;
+    let seq = run_service(&cfg, 7).unwrap();
+    cfg.threads = 4;
+    let par = run_service(&cfg, 7).unwrap();
+    let d = service_digest(&seq, "smoke");
+    assert_eq!(d, service_digest(&par, "smoke"));
+    assert!(d.contains("\"jobs\": 0") && d.contains("\"makespan_units\": 0"));
+    assert!(!d.contains("\"job0\""));
+}
+
+/// Enable the full perturbation gauntlet on a service config: tail
+/// injection, packet loss + retransmit, and straggler cores.
+fn perturbed(mut cfg: ServiceConfig, loss: bool) -> ServiceConfig {
+    let mut knobs = cfg.perturb.clone();
+    apply_env_setting("tail", "100", &mut cfg.net, &mut knobs).unwrap();
+    if loss {
+        apply_env_setting("loss", "20", &mut cfg.net, &mut knobs).unwrap();
+    }
+    apply_env_setting("stragglers", "6", &mut cfg.net, &mut knobs).unwrap();
+    apply_env_setting("straggler-factor", "4", &mut cfg.net, &mut knobs).unwrap();
+    cfg.perturb = knobs;
+    cfg
+}
+
+#[test]
+fn a_concurrent_second_job_cannot_shift_the_first_jobs_record() {
+    // Satellite bugfix pin: perturbation draws are per-job-salted, so a
+    // second live job must not consume (and thereby shift) any RNG
+    // stream the first job's timing depends on. Tail + stragglers on;
+    // loss off so the concurrency witness stays sharp.
+    let cfg_of = |jobs| {
+        let arrivals = ArrivalConfig { jobs, ..Default::default() };
+        perturbed(ServiceConfig::new(128, arrivals, SchedPolicy::Fifo).unwrap(), false)
+    };
+    let job0 = || ns_job(0, 100, SizeClass::Medium);
+    let solo = run_service_trace(&cfg_of(1), 7, vec![job0()]).unwrap();
+    let duo = run_service_trace(
+        &cfg_of(2),
+        7,
+        vec![job0(), ns_job(1, 200, SizeClass::Large)],
+    )
+    .unwrap();
+    // The two jobs really did share the fabric concurrently…
+    assert!(
+        duo.jobs[1].record.start < duo.jobs[0].record.finish,
+        "expected overlap: job1 starts at {} but job0 already finished at {}",
+        duo.jobs[1].record.start.0,
+        duo.jobs[0].record.finish.0
+    );
+    // …yet job 0's entire lifecycle is bit-identical to its solo run.
+    assert_eq!(solo.jobs[0].record, duo.jobs[0].record);
+}
+
+#[test]
+fn node_reuse_by_a_later_job_cannot_shift_the_first_jobs_record() {
+    // Same pin, sequential flavor: job 1 arrives long after job 0
+    // completed and first-fit hands it the *same* node range; with loss
+    // and stragglers enabled its draws must still come from its own
+    // streams, leaving job 0's record untouched.
+    let cfg_of = |jobs| {
+        let arrivals = ArrivalConfig { jobs, ..Default::default() };
+        perturbed(ServiceConfig::new(64, arrivals, SchedPolicy::Fifo).unwrap(), true)
+    };
+    let job0 = || ns_job(0, 100, SizeClass::Medium);
+    let solo = run_service_trace(&cfg_of(1), 7, vec![job0()]).unwrap();
+    let duo = run_service_trace(
+        &cfg_of(2),
+        7,
+        vec![job0(), ns_job(1, 500_000, SizeClass::Medium)],
+    )
+    .unwrap();
+    assert!(duo.jobs[1].record.start >= duo.jobs[0].record.finish, "strictly sequential");
+    assert_eq!(
+        duo.jobs[1].record.base, duo.jobs[0].record.base,
+        "first-fit reuses the freed range"
+    );
+    assert_eq!(solo.jobs[0].record, duo.jobs[0].record);
+}
