@@ -38,6 +38,7 @@ impl WireMsg for MinMsg {
 }
 
 /// Per-core MergeMin program.
+#[derive(Clone)]
 pub struct MergeMinNode {
     id: NodeId,
     cfg_incast: usize,

@@ -93,11 +93,13 @@ struct MsShared {
     cores: usize,
     reduction_factor: usize,
     probe_rounds: u32,
-    /// Per-node output sink: write-once slots, lock-free from executor
-    /// worker threads (each node writes exactly its own slot, once).
+    /// Per-node output sink: contention-free slots (each node writes
+    /// only its own), overwrite-safe under optimistic rollback
+    /// re-execution.
     outputs: NodeSlots<Vec<u64>>,
 }
 
+#[derive(Clone)]
 pub struct MilliSortNode {
     id: NodeId,
     shared: Arc<MsShared>,
@@ -453,7 +455,7 @@ impl Workload for MilliSort {
             .collect();
 
         let finish: Finish = Box::new(move |env, summary| {
-            let outputs = shared.outputs.as_slices();
+            let outputs = shared.outputs.take_vecs();
             let validation = validate_sorted_output(&input, &outputs, None);
             RunReport::new("millisort", env, summary, Validation::from_sort(validation))
         });

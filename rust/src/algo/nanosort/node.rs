@@ -1,6 +1,5 @@
 //! The per-core NanoSort program and run driver.
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -124,15 +123,21 @@ struct Shared {
     /// level-major, group-index-minor).
     group_offsets: Vec<usize>,
     /// Cross-node result sinks, written from executor worker threads.
-    /// Write-once per-node slots (§Perf: one shared `Mutex` here was a
-    /// 2×-per-node acquisition burst at the end of a 65,536-core run
-    /// under `--threads N`; the slots are lock-free) plus a commutative
-    /// atomic max, so results are order-independent.
+    /// Per-node slots (§Perf: one shared `Mutex` here was a 2×-per-node
+    /// acquisition burst at the end of a 65,536-core run under
+    /// `--threads N`; the slots are contention-free), written at each
+    /// node's own finishing event so results are order-independent —
+    /// and overwrite-safe under optimistic rollback re-execution.
     final_keys: NodeSlots<Vec<u64>>,
     final_values: NodeSlots<Vec<u64>>,
-    /// Highest termination-detection epoch any group root needed (0 = the
-    /// first count-tree pass always found sent == received).
-    max_retry_epoch: AtomicU64,
+    /// Highest termination-detection epoch each node observed as a group
+    /// root (0 = every count-tree pass it rooted found sent ==
+    /// received). Folded to the fleet max at finish. A shared atomic
+    /// `fetch_max` here would be monotone-polluting under discarded
+    /// speculation (a rolled-back root verdict's max sticks); the
+    /// per-node slot is written at final-sort entry from checkpointed
+    /// program state, so rollback restores it exactly.
+    retry_epochs: NodeSlots<u64>,
 }
 
 impl Shared {
@@ -170,6 +175,7 @@ enum Phase {
     Final,
 }
 
+#[derive(Clone)]
 pub struct NanoSortNode {
     id: NodeId,
     shared: Arc<Shared>,
@@ -210,6 +216,10 @@ pub struct NanoSortNode {
     initial_keys: Vec<u64>, // sorted, for origin-side validation
     values_by_slot: Vec<u64>,
     values_received: usize,
+
+    /// Highest termination-detection epoch this node saw as a group root
+    /// (see [`Shared::retry_epochs`]).
+    max_retry_epoch: u64,
 }
 
 impl NanoSortNode {
@@ -419,8 +429,10 @@ impl NanoSortNode {
                 // across epochs; `received` catches up as deliveries land.
                 let complete = self.ct_sum.0 == self.ct_sum.1;
                 if complete {
-                    // Commutative max: order-independent, lock-free.
-                    self.shared.max_retry_epoch.fetch_max(epoch as u64, Ordering::Relaxed);
+                    // Node-local max (checkpointable program state);
+                    // published per node at final-sort entry and folded
+                    // at finish, so it stays order-independent.
+                    self.max_retry_epoch = self.max_retry_epoch.max(epoch as u64);
                 }
                 let gid = self.shared.group_id(self.id, self.level);
                 ctx.broadcast_to(
@@ -493,6 +505,7 @@ impl NanoSortNode {
         ctx.compute(ctx.core().sort_cycles(n, Temp::Warm));
         self.sort_keys_with_origins();
         self.shared.final_keys.set(self.id, self.keys.clone());
+        self.shared.retry_epochs.set(self.id, self.max_retry_epoch);
 
         if !self.shared.shuffle_values {
             ctx.finish();
@@ -694,7 +707,7 @@ impl Workload for NanoSort {
             group_offsets,
             final_keys: NodeSlots::new(env.nodes),
             final_values: NodeSlots::new(env.nodes),
-            max_retry_epoch: AtomicU64::new(0),
+            retry_epochs: NodeSlots::new(env.nodes),
         });
 
         // Pre-load the cluster (paper §5.2: records loaded before the
@@ -735,6 +748,7 @@ impl Workload for NanoSort {
                     initial_keys: initial,
                     values_by_slot: Vec::new(),
                     values_received: 0,
+                    max_retry_epoch: 0,
                 }
             })
             .collect();
@@ -754,17 +768,18 @@ impl Workload for NanoSort {
 
         let shuffle_values = self.shuffle_values;
         let finish: Finish = Box::new(move |env, summary| {
-            // Per-node write-once slots merge in canonical order by
-            // construction: `as_slices` is index order, clone-free.
-            let final_keys = shared.final_keys.as_slices();
-            let final_values = shared.final_values.as_slices();
+            // Per-node slots merge in canonical order by construction:
+            // `take_vecs` is index order, clone-free.
+            let final_keys = shared.final_keys.take_vecs();
+            let final_values = shared.final_values.take_vecs();
             let validation = validate_sorted_output(
                 &input,
                 &final_keys,
                 shuffle_values.then_some(final_values.as_slice()),
             );
             let skew = crate::graysort::bucket_skew(&validation.node_counts);
-            let max_retry_epoch = shared.max_retry_epoch.load(Ordering::Relaxed);
+            let max_retry_epoch =
+                shared.retry_epochs.take_vecs().into_iter().max().unwrap_or(0);
             RunReport::new("nanosort", env, summary, Validation::from_sort(validation))
                 .with_metric("skew", MetricValue::F64(skew))
                 .with_metric("depth", MetricValue::U64(depth as u64))

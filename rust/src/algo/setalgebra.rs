@@ -40,6 +40,7 @@ impl WireMsg for CountMsg {
 }
 
 /// Per-core program: intersect local shards, then reduce counts up-tree.
+#[derive(Clone)]
 pub struct SetAlgebraNode {
     id: NodeId,
     cores: usize,

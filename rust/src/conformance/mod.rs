@@ -30,6 +30,7 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::ComputeChoice;
 use crate::scenario::registry::{self, WorkloadSpec};
 use crate::scenario::{RunReport, Scenario};
+use crate::sim::{ExecKind, ExecProfile};
 
 /// The paper's headline runtime (mean over 10 runs, §6.3).
 pub const PAPER_RUNTIME_US: f64 = 68.0;
@@ -129,6 +130,22 @@ pub fn run_tier(
     compute: ComputeChoice,
     threads: usize,
 ) -> Result<(RunReport, f64)> {
+    run_tier_exec(spec, tier, compute, threads, ExecKind::default())
+}
+
+/// [`run_tier`] with an explicit executor backend. `exec` only matters
+/// when `threads != 1`: `par` is the conservative adaptive-window
+/// backend, `opt` adds speculation past the window bound with rollback
+/// on mis-speculation. The digest is identical across every
+/// (exec, threads) combination — that invariance is the contract CI
+/// enforces (`rust/tests/exec.rs`, `rust/tests/exec_fuzz.rs`).
+pub fn run_tier_exec(
+    spec: &WorkloadSpec,
+    tier: Tier,
+    compute: ComputeChoice,
+    threads: usize,
+    exec: ExecKind,
+) -> Result<(RunReport, f64)> {
     let params = registry::params_from_pairs(spec, &tier_params(spec, tier))
         .with_context(|| format!("{} {} tier params", spec.name, tier.name()))?;
     let workload = (spec.build)(&params)?;
@@ -139,6 +156,7 @@ pub fn run_tier(
         .compute(compute)
         .seed(CONFORMANCE_SEED)
         .threads(threads)
+        .exec(exec)
         .run()?;
     Ok((report, start.elapsed().as_secs_f64()))
 }
@@ -171,6 +189,17 @@ pub struct BenchRecord {
     /// Parallel-backend measurement, when taken: (worker threads,
     /// wall-clock seconds). The digest is identical by contract.
     pub parallel: Option<(usize, f64)>,
+    /// Executor backend of the parallel comparison leg (`"par"` or
+    /// `"opt"`); `"seq"` when no comparison leg was taken.
+    pub exec: &'static str,
+    /// Rollback count from the optimistic backend's comparison leg
+    /// (`--exec opt` only; mis-speculated bursts that were undone and
+    /// re-executed conservatively).
+    pub rollbacks: Option<u64>,
+    /// Mean committed speculative burst span in sim ticks (`--exec opt`
+    /// only): how far past the conservative window bound speculation
+    /// actually paid off, averaged over committed bursts.
+    pub committed_window_avg: Option<f64>,
     /// Oracle-plane (native) sequential wall clock, when measured.
     pub native_wall_clock_s: Option<f64>,
     pub events: u64,
@@ -196,6 +225,9 @@ impl BenchRecord {
             wall_clock_s,
             phases: report.phases,
             parallel: None,
+            exec: ExecKind::Seq.name(),
+            rollbacks: None,
+            committed_window_avg: None,
             native_wall_clock_s: None,
             events: report.summary.events,
             msgs_sent: report.summary.net.msgs_sent,
@@ -206,6 +238,25 @@ impl BenchRecord {
     /// Attach a parallel-backend wall-clock measurement.
     pub fn with_parallel(mut self, threads: usize, wall_clock_s: f64) -> BenchRecord {
         self.parallel = Some((threads, wall_clock_s));
+        if self.exec == ExecKind::Seq.name() {
+            self.exec = ExecKind::Par.name();
+        }
+        self
+    }
+
+    /// Record which executor backend drove the comparison leg, plus the
+    /// optimistic backend's speculation counters when `kind` is
+    /// [`ExecKind::Opt`].
+    pub fn with_exec(mut self, kind: ExecKind, profile: &ExecProfile) -> BenchRecord {
+        self.exec = kind.name();
+        if kind == ExecKind::Opt {
+            self.rollbacks = Some(profile.rollbacks);
+            self.committed_window_avg = Some(if profile.committed > 0 {
+                profile.committed_span as f64 / profile.committed as f64
+            } else {
+                0.0
+            });
+        }
         self
     }
 
@@ -224,6 +275,13 @@ impl BenchRecord {
             ),
             None => String::new(),
         };
+        let mut opt = String::new();
+        if let Some(rollbacks) = self.rollbacks {
+            opt.push_str(&format!("\n  \"rollbacks\": {rollbacks},"));
+        }
+        if let Some(avg) = self.committed_window_avg {
+            opt.push_str(&format!("\n  \"committed_window_avg\": {avg:.1},"));
+        }
         let native = match self.native_wall_clock_s {
             Some(wall) => format!(
                 "\n  \"wall_clock_native_s\": {wall:.3},\n  \"compute_speedup\": {:.2},",
@@ -233,15 +291,17 @@ impl BenchRecord {
         };
         format!(
             "{{\n  \"workload\": \"{}\",\n  \"tier\": \"{}\",\n  \"nodes\": {},\n  \
-             \"keys\": {},\n  \"compute\": \"{}\",\n  \"makespan_us\": {:.3},\n  \
+             \"keys\": {},\n  \"compute\": \"{}\",\n  \"exec\": \"{}\",\n  \
+             \"makespan_us\": {:.3},\n  \
              \"paper_makespan_us\": {:.1},\n  \"wall_clock_s\": {:.3},\n  \
-             \"input_gen_s\": {:.3},\n  \"sim_s\": {:.3},\n  \"validate_s\": {:.3},{}{}\n  \
+             \"input_gen_s\": {:.3},\n  \"sim_s\": {:.3},\n  \"validate_s\": {:.3},{}{}{}\n  \
              \"events\": {},\n  \"msgs_sent\": {},\n  \"validated\": {}\n}}\n",
             self.workload,
             self.tier,
             self.nodes,
             self.keys,
             self.compute,
+            self.exec,
             self.makespan_us,
             PAPER_RUNTIME_US,
             self.wall_clock_s,
@@ -249,6 +309,7 @@ impl BenchRecord {
             self.phases.sim_s,
             self.phases.validate_s,
             parallel,
+            opt,
             native,
             self.events,
             self.msgs_sent,
@@ -344,6 +405,26 @@ mod tests {
         assert!(json.contains("\"threads\": 4"), "{json}");
         assert!(json.contains("\"wall_clock_par_s\": 0.500"), "{json}");
         assert!(json.contains("\"speedup\": "), "{json}");
+        assert!(json.contains("\"exec\": \"par\""), "{json}");
+    }
+
+    /// The opt comparison leg stamps the backend name plus its
+    /// speculation counters; the par leg carries neither counter.
+    #[test]
+    fn bench_record_carries_opt_counters() {
+        let spec = registry::find("mergemin").unwrap();
+        let (report, wall) =
+            run_tier_exec(spec, Tier::Smoke, ComputeChoice::Native, 4, ExecKind::Opt)
+                .unwrap();
+        let record = BenchRecord::from_report(&report, Tier::Smoke, wall);
+        assert!(!record.to_json().contains("\"rollbacks\""), "seq record is counter-free");
+        let json = record
+            .with_parallel(4, 0.5)
+            .with_exec(ExecKind::Opt, &report.summary.profile)
+            .to_json();
+        assert!(json.contains("\"exec\": \"opt\""), "{json}");
+        assert!(json.contains("\"rollbacks\": "), "{json}");
+        assert!(json.contains("\"committed_window_avg\": "), "{json}");
     }
 
     /// The record carries the per-phase host breakdown and, when
@@ -373,6 +454,14 @@ mod tests {
             digest_json(&seq, "smoke"),
             digest_json(&par, "smoke"),
             "conformance digests must not depend on the executor backend"
+        );
+        let (opt, _) =
+            run_tier_exec(spec, Tier::Smoke, ComputeChoice::Native, 4, ExecKind::Opt)
+                .unwrap();
+        assert_eq!(
+            digest_json(&seq, "smoke"),
+            digest_json(&opt, "smoke"),
+            "the optimistic backend must be digest-invisible"
         );
     }
 

@@ -4,15 +4,17 @@
 //! repro fig <id|all> [--compute P] [--seed N] [--runs N] [--quick] [--csv]
 //! repro run <workload> [--<param> ...] [--skew D] [--loss N] [--oversub F]
 //!                      [--stragglers N] [--no-multicast] [--compute P]
-//!                      [--seed N] [--threads N]
+//!                      [--seed N] [--threads N] [--exec E]
 //! repro run <workload> --help   # full parameter-descriptor listing
 //! repro sweep <workload> [--tier smoke|mid|paper] --axis <param>=a,b,c
 //!                      [--axis ...] [--compute P] [--seed N] [--threads N]
+//!                      [--exec E]
 //! repro serve [mix]    [--sched fifo|sjf|reserve|all] [--tier smoke|mid|paper]
 //!                      [--jobs N] [--iat NS] [--bless] [--compute P] [--threads N]
+//!                      [--exec E]
 //! repro serve --help   # service parameter descriptors
 //! repro paper          [--tier smoke|mid|paper] [--bless] [--compute P]
-//!                      [--threads N]
+//!                      [--threads N] [--exec E]
 //! repro artifacts      # list loaded XLA artifacts
 //! repro list           # list figure ids and registered workloads
 //! ```
@@ -43,14 +45,20 @@
 //! intentional change; a missing golden is created), and writes
 //! `BENCH_nanosort.json` with the simulated makespan + wall-clock.
 //!
-//! `--threads N` (everywhere) picks the executor backend: `1` (default)
-//! is the sequential reference, `0` = all host cores, anything else
-//! shards the simulated fleet across that many worker threads —
+//! `--threads N` (everywhere) picks the executor worker count: `1`
+//! (default) is the sequential reference, `0` = all host cores, anything
+//! else shards the simulated fleet across that many worker threads —
 //! byte-identical results by the [`nanosort::sim::exec`] determinism
-//! contract. `repro paper --threads N` runs *both* backends, hard-fails
-//! on any digest divergence, and records both wall-clocks in the bench
-//! record. `repro sweep --threads N` additionally fans independent grid
-//! cells out across the worker pool.
+//! contract. `--exec seq|par|opt` picks *which* sharded backend those
+//! workers drive (default `par`, the conservative adaptive-window
+//! executor; `opt` adds speculation past the window bound with rollback
+//! on mis-speculation — still byte-identical). `repro paper --threads N`
+//! runs *both* backends, hard-fails on any digest divergence, and
+//! records both wall-clocks plus the chosen backend (and, for `opt`, its
+//! rollback counters) in the bench record. `repro sweep --threads N`
+//! additionally fans independent grid cells out across the worker pool;
+//! `repro sweep --exec E` runs every cell through backend `E` instead of
+//! the sequential reference.
 
 use anyhow::{bail, Result};
 
@@ -62,6 +70,7 @@ use nanosort::perturb::{self, sweep, Perturbations};
 use nanosort::runtime::XlaEngine;
 use nanosort::scenario::{registry, Scenario};
 use nanosort::service::{self, Mix, SchedPolicy, ServiceConfig};
+use nanosort::sim::ExecKind;
 
 fn main() {
     if let Err(e) = real_main() {
@@ -98,14 +107,15 @@ fn help() -> String {
     format!(
         "repro — NanoSort reproduction CLI
   repro fig <id|all> [--compute P] [--seed N] [--runs N] [--quick] [--csv]
-{}  repro sweep <workload> [--tier smoke|mid|paper] --axis <param>=a,b,c [--axis ...] [--compute P] [--seed N] [--threads N]
-  repro serve [mix]  [--sched fifo|sjf|reserve|all] [--tier smoke|mid|paper] [--jobs N] [--iat NS] [--bless] [--compute P] [--threads N]
+{}  repro sweep <workload> [--tier smoke|mid|paper] --axis <param>=a,b,c [--axis ...] [--compute P] [--seed N] [--threads N] [--exec E]
+  repro serve [mix]  [--sched fifo|sjf|reserve|all] [--tier smoke|mid|paper] [--jobs N] [--iat NS] [--bless] [--compute P] [--threads N] [--exec E]
   repro serve --help # service parameter descriptors (mix, scheduler, arrival knobs)
   repro fig loadsweep # offered load × scheduler sweep of the job service
-  repro paper       [--tier smoke|mid|paper] [--bless] [--compute P] [--threads N]
+  repro paper       [--tier smoke|mid|paper] [--bless] [--compute P] [--threads N] [--exec E]
   repro artifacts | repro list
   (--compute P: data plane, native|radix|xla, default radix; digests are plane-invariant)
-  (--threads N: executor worker threads; 1 = sequential, 0 = all cores; results are identical)",
+  (--threads N: executor worker threads; 1 = sequential, 0 = all cores; results are identical)
+  (--exec E: sharded backend, seq|par|opt, default par; opt speculates past the window bound with rollback — results are identical)",
         registry::cli_help()
     )
 }
@@ -157,6 +167,7 @@ fn cmd_run(mut args: Args) -> Result<()> {
         }
     }
     let threads = args.num_checked("threads")?.unwrap_or(1);
+    let exec = exec_choice(&mut args)?.unwrap_or_default();
     let opts = args.run_options()?;
     ensure_consumed(&args)?;
 
@@ -169,6 +180,7 @@ fn cmd_run(mut args: Args) -> Result<()> {
         .compute(opts.compute)
         .seed(opts.seed)
         .threads(threads)
+        .exec(exec)
         .run()?;
     print!("{}", report.render());
     Ok(())
@@ -195,6 +207,7 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
     let compute = args.compute_choice()?;
     let seed = args.num_checked("seed")?.unwrap_or(conformance::CONFORMANCE_SEED);
     let threads = args.num_checked("threads")?.unwrap_or(1);
+    let exec = exec_choice(&mut args)?;
     ensure_consumed(&args)?;
 
     eprintln!(
@@ -207,7 +220,7 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
         if sweep::resolve_threads(threads) == 1 { "" } else { "s" }
     );
     let start = std::time::Instant::now();
-    let outcome = sweep::run_sweep(spec, tier, &axes, compute, seed, threads)?;
+    let outcome = sweep::run_sweep(spec, tier, &axes, compute, seed, threads, exec)?;
     for line in outcome.json_lines() {
         println!("{line}");
     }
@@ -247,6 +260,9 @@ fn serve_describe() -> String {
             digests are plane-invariant)\n";
     out += "  --threads <N>          executor worker threads (1 = sequential, 0 = all \
             cores; identical results — N != 1 cross-checks both backends)\n";
+    out += "  --exec <E>             sharded backend for the cross-check: seq|par|opt \
+            (default par; the service opts out of speculation, so opt runs its \
+            conservative path — still byte-identical)\n";
     out
 }
 
@@ -274,6 +290,7 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     let bless = args.flag("bless");
     let compute = args.compute_choice()?;
     let threads: usize = args.num_checked("threads")?.unwrap_or(1);
+    let exec = exec_choice(&mut args)?.unwrap_or_default();
     // Environment knobs shape the shared fabric and every job's inputs.
     let mut net = NetConfig { multicast: false, ..NetConfig::default() };
     let mut knobs = Perturbations::default();
@@ -335,19 +352,22 @@ fn cmd_serve(mut args: Args) -> Result<()> {
             pcfg.perturb = knobs.clone();
             pcfg.compute = plane.clone();
             pcfg.threads = resolved;
+            pcfg.exec = exec;
             let pstart = std::time::Instant::now();
             let par = service::run_service(&pcfg, conformance::CONFORMANCE_SEED)?;
             let pwall = pstart.elapsed().as_secs_f64();
             let par_digest = service::service_digest(&par, tier.name());
             anyhow::ensure!(
                 digest == par_digest,
-                "executor divergence: ParExecutor({resolved} threads) service digest \
+                "executor divergence: {}({resolved} threads) service digest \
                  differs from SeqExecutor:\n{}",
+                exec.name(),
                 nanosort::conformance::golden::line_diff(&digest, &par_digest)
             );
             println!(
-                "executor: seq {wall:.2} s vs par[{resolved}] {pwall:.2} s ({:.2}x) | \
+                "executor: seq {wall:.2} s vs {}[{resolved}] {pwall:.2} s ({:.2}x) | \
                  digests identical",
+                exec.name(),
                 wall / pwall.max(1e-9)
             );
         }
@@ -389,8 +409,10 @@ fn cmd_serve(mut args: Args) -> Result<()> {
 ///   data-plane contract — recording the oracle wall-clock as the
 ///   radix-kernel before/after (`wall_clock_native_s`/`compute_speedup`).
 /// - `--threads N` (N != 1) runs **both** executor backends — the
-///   sequential reference first, then the sharded executor — and records
-///   both wall-clocks (the executor-speedup half of the trajectory).
+///   sequential reference first, then the sharded executor chosen by
+///   `--exec` (default `par`; `opt` adds the speculative rollback
+///   backend and records its rollback counters) — and records both
+///   wall-clocks (the executor-speedup half of the trajectory).
 fn cmd_paper(mut args: Args) -> Result<()> {
     let tier = match args.value_checked("tier")? {
         Some(t) => Tier::parse(&t)?,
@@ -399,6 +421,7 @@ fn cmd_paper(mut args: Args) -> Result<()> {
     let bless = args.flag("bless");
     let compute = args.compute_choice()?;
     let threads: usize = args.num_checked("threads")?.unwrap_or(1);
+    let exec = exec_choice(&mut args)?.unwrap_or_default();
     ensure_consumed(&args)?;
     // Fail fast, before the (potentially minutes-long) sequential tier
     // run: the XLA plane drives a single-threaded PJRT client, so the
@@ -460,19 +483,31 @@ fn cmd_paper(mut args: Args) -> Result<()> {
     }
     if threads != 1 {
         let resolved = nanosort::sim::exec::resolve_threads(threads);
-        let (par_report, par_wall) = conformance::run_tier(spec, tier, compute, resolved)?;
+        let (par_report, par_wall) =
+            conformance::run_tier_exec(spec, tier, compute, resolved, exec)?;
         let par_digest = conformance::digest_json(&par_report, tier.name());
         anyhow::ensure!(
             digest == par_digest,
-            "executor divergence: ParExecutor({resolved} threads) digest differs from \
+            "executor divergence: {}({resolved} threads) digest differs from \
              SeqExecutor:\n{}",
+            exec.name(),
             nanosort::conformance::golden::line_diff(&digest, &par_digest)
         );
         println!(
-            "executor: seq {wall:.2} s vs par[{resolved}] {par_wall:.2} s ({:.2}x speedup) | digests identical",
+            "executor: seq {wall:.2} s vs {}[{resolved}] {par_wall:.2} s ({:.2}x speedup) | digests identical",
+            exec.name(),
             wall / par_wall.max(1e-9)
         );
-        record = record.with_parallel(resolved, par_wall);
+        if exec == ExecKind::Opt {
+            let p = &par_report.summary.profile;
+            println!(
+                "speculation: {} bursts, {} committed, {} rollbacks",
+                p.speculated, p.committed, p.rollbacks
+            );
+        }
+        record = record
+            .with_parallel(resolved, par_wall)
+            .with_exec(exec, &par_report.summary.profile);
     }
     let bench = conformance::write_bench(&record)?;
     println!("bench record: {}", bench.display());
@@ -528,4 +563,17 @@ fn ensure_consumed(args: &Args) -> Result<()> {
         bail!("unrecognized arguments: {:?}", args.rest());
     }
     Ok(())
+}
+
+/// Parse the shared `--exec seq|par|opt` backend flag. `None` = not
+/// given (callers default to [`ExecKind::default`], the conservative
+/// sharded backend; the sweep keeps its sequential cells instead).
+fn exec_choice(args: &mut Args) -> Result<Option<ExecKind>> {
+    match args.value_checked("exec")? {
+        Some(raw) => match ExecKind::parse(&raw) {
+            Some(kind) => Ok(Some(kind)),
+            None => bail!("unknown executor {raw:?} (known: seq|par|opt)"),
+        },
+        None => Ok(None),
+    }
 }

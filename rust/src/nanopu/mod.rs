@@ -121,6 +121,17 @@ pub trait Program {
     fn step(&self) -> u32 {
         0
     }
+
+    /// Whether the optimistic executor may run this program inside
+    /// speculative bursts. A program must opt out when `Clone` cannot
+    /// capture all of its event-visible state — e.g. state behind shared
+    /// `Arc`s mutated destructively per message — because rollback
+    /// restores a node from its clone (DESIGN.md §10). Opted-out programs
+    /// still run under `--exec opt`, just conservatively (adaptive
+    /// windows, zero speculation).
+    fn speculation_safe(&self) -> bool {
+        true
+    }
 }
 
 /// One queued outbound operation recorded by a handler.

@@ -142,7 +142,7 @@ impl NetConfig {
 /// counted in phase 1; delivery counters in phase 2. Under the parallel
 /// executor each shard keeps its own `NetStats` and the engine merges
 /// them with [`NetStats::merge`] — all fields are order-independent sums.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct NetStats {
     /// Messages injected by senders (a multicast counts once).
     pub msgs_sent: u64,
@@ -188,6 +188,22 @@ pub struct TxLane {
     ctr: Vec<u64>,
 }
 
+impl TxLane {
+    /// Snapshot of one node's sender-side registers, for the optimistic
+    /// executor's per-node rollback checkpoints (DESIGN.md §10).
+    pub(crate) fn spec_save(&self, node: usize) -> (Time, SplitMix64, u64) {
+        let s = node - self.base;
+        (self.egress_free[s], self.rng[s].clone(), self.ctr[s])
+    }
+
+    pub(crate) fn spec_restore(&mut self, node: usize, saved: &(Time, SplitMix64, u64)) {
+        let s = node - self.base;
+        self.egress_free[s] = saved.0;
+        self.rng[s] = saved.1.clone();
+        self.ctr[s] = saved.2;
+    }
+}
+
 /// Destination-side fabric state for a contiguous node range: ingress
 /// busy-until per node plus the spine downlink registers of every leaf
 /// the range covers (the range must cover whole leaves when
@@ -201,6 +217,29 @@ pub struct RxLane {
     spines_per_leaf: usize,
     /// `spines_per_leaf` registers per covered leaf, leaf-major.
     spine_free: Vec<Time>,
+}
+
+impl RxLane {
+    /// Snapshot of one node's ingress busy-until register (per-node
+    /// rollback checkpoint, DESIGN.md §10).
+    pub(crate) fn spec_save(&self, node: usize) -> Time {
+        self.ingress_free[node - self.base]
+    }
+
+    pub(crate) fn spec_restore(&mut self, node: usize, t: Time) {
+        self.ingress_free[node - self.base] = t;
+    }
+
+    /// Snapshot of every spine downlink register the lane covers. Empty
+    /// unless the core is oversubscribed, so a wholesale copy per
+    /// speculative burst is cheap.
+    pub(crate) fn spec_save_spines(&self) -> Vec<Time> {
+        self.spine_free.clone()
+    }
+
+    pub(crate) fn spec_restore_spines(&mut self, saved: &[Time]) {
+        self.spine_free.copy_from_slice(saved);
+    }
 }
 
 /// One in-flight message leg after the sender-side phase: the candidate

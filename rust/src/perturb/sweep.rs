@@ -29,6 +29,7 @@ use crate::coordinator::{f, ComputeChoice, RunOptions, Table};
 use crate::net::NetConfig;
 use crate::scenario::registry::{self, ParamKind, WorkloadSpec};
 use crate::scenario::{RunReport, Scenario};
+use crate::sim::ExecKind;
 use crate::stats::Summary;
 
 use super::{apply_env_setting, is_env_axis, KeyDistribution, Perturbations};
@@ -146,6 +147,15 @@ pub use crate::sim::exec::resolve_threads;
 /// (each cell is a pure function of `(workload, tier, assignment, seed)`,
 /// so cell-level parallelism cannot change any result — the cells
 /// themselves run on the sequential backend). `0` = all host cores.
+///
+/// `exec` picks the executor backend *inside* each cell: `None` (the
+/// default) keeps cells on the single-threaded sequential path;
+/// `Some(kind)` runs every cell through `kind` on two sim worker
+/// threads (one for `seq`) — enough to engage the sharded backends
+/// without oversubscribing the cell pool. Digests are backend-invariant
+/// by the executor contract, so every fingerprint in the output is
+/// identical across `exec` settings; a differing cell is a determinism
+/// bug, not a perturbation effect.
 pub fn run_sweep(
     spec: &'static WorkloadSpec,
     tier: Tier,
@@ -153,6 +163,7 @@ pub fn run_sweep(
     compute: ComputeChoice,
     seed: u64,
     threads: usize,
+    exec: Option<ExecKind>,
 ) -> Result<SweepOutcome> {
     // Validate axis names up front so a typo fails before any run.
     for (name, values) in axes {
@@ -189,11 +200,11 @@ pub fn run_sweep(
     let cells: Vec<SweepCell> = if workers <= 1 {
         let mut cells = Vec::with_capacity(assignments.len());
         for a in &assignments {
-            cells.push(run_cell(spec, tier, a, compute, seed)?);
+            cells.push(run_cell(spec, tier, a, compute, seed, exec)?);
         }
         cells
     } else {
-        run_cells_pooled(spec, tier, &assignments, compute, seed, workers)?
+        run_cells_pooled(spec, tier, &assignments, compute, seed, workers, exec)?
     };
 
     let table = render_table(spec.name, tier, &cells);
@@ -203,6 +214,7 @@ pub fn run_sweep(
 /// Dispatch cells across `workers` threads via an atomic work queue;
 /// results land in their slot, so the output order (and every digest) is
 /// identical to the serial path. The first error (in cell order) wins.
+#[allow(clippy::too_many_arguments)]
 fn run_cells_pooled(
     spec: &'static WorkloadSpec,
     tier: Tier,
@@ -210,6 +222,7 @@ fn run_cells_pooled(
     compute: ComputeChoice,
     seed: u64,
     workers: usize,
+    exec: Option<ExecKind>,
 ) -> Result<Vec<SweepCell>> {
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Mutex;
@@ -224,7 +237,7 @@ fn run_cells_pooled(
                 if i >= assignments.len() {
                     return;
                 }
-                let cell = run_cell(spec, tier, &assignments[i], compute, seed);
+                let cell = run_cell(spec, tier, &assignments[i], compute, seed, exec);
                 *slots[i].lock().expect("cell slot") = Some(cell);
             });
         }
@@ -243,6 +256,7 @@ fn run_cell(
     assignment: &[(String, String)],
     compute: ComputeChoice,
     seed: u64,
+    exec: Option<ExecKind>,
 ) -> Result<SweepCell> {
     let mut pairs = conformance::tier_params(spec, tier);
     let mut net = NetConfig::default();
@@ -271,12 +285,18 @@ fn run_cell(
         .with_context(|| format!("{} {} cell params", spec.name, tier.name()))?;
     let workload = (spec.build)(&params)?;
     let nodes = params.u64(spec.nodes_param.name)? as usize;
+    let (kind, cell_threads) = match exec {
+        Some(ExecKind::Seq) | None => (ExecKind::default(), 1),
+        Some(kind) => (kind, 2),
+    };
     let report = Scenario::from_dyn(workload)
         .nodes(nodes)
         .net(net)
         .perturb(knobs)
         .compute(compute)
         .seed(seed)
+        .exec(kind)
+        .threads(cell_threads)
         .run()?;
     anyhow::ensure!(
         report.validation.ok(),
@@ -382,7 +402,7 @@ pub fn skew_sweep_figure(opts: &RunOptions) -> Result<Table> {
         "skew".to_string(),
         KeyDistribution::ALL.iter().map(|d| d.name().to_string()).collect(),
     )];
-    let mut out = run_sweep(spec, tier, &axes, opts.compute, opts.seed, 1)?;
+    let mut out = run_sweep(spec, tier, &axes, opts.compute, opts.seed, 1, None)?;
     out.table.note(
         "skew study: zipfian/few-distinct/adversarial inputs vs the paper's uniform assumption",
     );
@@ -398,7 +418,7 @@ pub fn tail_sweep_figure(opts: &RunOptions) -> Result<Table> {
         "tail".to_string(),
         ["0", "500", "1000", "2000", "4000"].iter().map(|s| s.to_string()).collect(),
     )];
-    let mut out = run_sweep(spec, tier, &axes, opts.compute, opts.seed, 1)?;
+    let mut out = run_sweep(spec, tier, &axes, opts.compute, opts.seed, 1, None)?;
     out.table.note("Fig 14-style: paper sees 2x runtime at 4,000 ns injected p99");
     Ok(out.table)
 }
@@ -438,7 +458,7 @@ mod tests {
     fn unknown_axis_is_an_error() {
         let spec = registry::find("nanosort").unwrap();
         let axes = vec![("warp".to_string(), vec!["9".to_string()])];
-        let err = run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, 1, 1)
+        let err = run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, 1, 1, None)
             .unwrap_err()
             .to_string();
         assert!(err.contains("unknown sweep axis"), "{err}");
@@ -450,7 +470,7 @@ mod tests {
         let spec = registry::find("mergemin").unwrap();
         let axes = vec![("incast".to_string(), vec!["2".to_string(), "8".to_string()])];
         let out =
-            run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, CONFORMANCE_SEED, 1)
+            run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, CONFORMANCE_SEED, 1, None)
                 .unwrap();
         assert_eq!(out.cells.len(), 3, "baseline + 2 cells");
         assert_eq!(out.cells[0].label(), "baseline");
@@ -470,7 +490,7 @@ mod tests {
         let axes =
             vec![("skew".to_string(), vec!["uniform".to_string(), "zipfian".to_string()])];
         let run = || {
-            run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, CONFORMANCE_SEED, 1)
+            run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, CONFORMANCE_SEED, 1, None)
                 .unwrap()
         };
         let a = run();
@@ -503,8 +523,16 @@ mod tests {
             ("vpc".to_string(), vec!["8".into(), "16".into()]),
         ];
         let run = |threads| {
-            run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, CONFORMANCE_SEED, threads)
-                .unwrap()
+            run_sweep(
+                spec,
+                Tier::Smoke,
+                &axes,
+                ComputeChoice::Native,
+                CONFORMANCE_SEED,
+                threads,
+                None,
+            )
+            .unwrap()
         };
         let serial = run(1);
         let pooled = run(4);
@@ -513,6 +541,33 @@ mod tests {
         assert_eq!(serial.table.render(), pooled.table.render());
         // `0` = all host cores, same contract.
         assert_eq!(run(0).json_lines(), serial.json_lines());
+    }
+
+    /// The executor contract at the sweep boundary: running every cell
+    /// through the sharded or optimistic backend reproduces the
+    /// sequential sweep's JSON lines byte for byte — including under a
+    /// perturbation axis, where speculation actually has stragglers and
+    /// retransmits to mis-speculate against.
+    #[test]
+    fn sweep_cells_are_executor_invariant() {
+        let spec = registry::find("mergemin").unwrap();
+        let axes = vec![
+            ("incast".to_string(), vec!["2".into(), "8".into()]),
+            ("loss".to_string(), vec!["0".into(), "1000".into()]),
+        ];
+        let run = |exec| {
+            run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, CONFORMANCE_SEED, 1, exec)
+                .unwrap()
+        };
+        let seq = run(None);
+        for kind in [ExecKind::Par, ExecKind::Opt] {
+            assert_eq!(
+                seq.json_lines(),
+                run(Some(kind)).json_lines(),
+                "{} backend diverged in a sweep cell",
+                kind.name()
+            );
+        }
     }
 
     #[test]

@@ -39,14 +39,16 @@
 //!
 //! Execution backend: [`Scenario::threads`] picks how many host worker
 //! threads simulate the fleet (`1` = the sequential reference backend,
-//! `0` = all available cores). Results are byte-identical at every
-//! thread count — see [`crate::sim::exec`] for the determinism contract.
+//! `0` = all available cores) and [`Scenario::exec`] which backend runs
+//! them (conservative windows or optimistic speculation with rollback).
+//! Results are byte-identical at every combination — see
+//! [`crate::sim::exec`] for the determinism contract.
 
 pub mod registry;
 
 pub use registry::{ParamKind, ParamSpec, WorkloadSpec};
 
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -58,7 +60,7 @@ use crate::graysort::ValidationReport;
 use crate::nanopu::{Group, Program};
 use crate::net::{Fabric, NetConfig, Topology};
 use crate::perturb::{KeyDistribution, Perturbations};
-use crate::sim::{Engine, RunSummary, Time, MAX_STAGES};
+use crate::sim::{Engine, ExecKind, RunSummary, Time, MAX_STAGES};
 
 /// Everything the environment (not the workload) decides about a run.
 pub struct ScenarioEnv {
@@ -80,36 +82,51 @@ pub struct ScenarioEnv {
     /// Host worker threads simulating the fleet (`1` = sequential
     /// backend, `0` = all available cores). Never changes results.
     pub threads: usize,
+    /// Execution backend (`--exec`): conservative parallel windows by
+    /// default; `seq` forces the reference path, `opt` speculates with
+    /// rollback. Never changes results ([`crate::sim::exec`]).
+    pub exec: ExecKind,
+    /// Window-coalescing factor override (`None` = the
+    /// `NANOSORT_WINDOW_BATCH` environment knob / default). Never
+    /// changes results.
+    pub window_batch: Option<usize>,
+    /// Test-only optimistic-executor fault hook: force a rollback on
+    /// every `n`-th speculative burst. Never changes results.
+    pub force_rollback_every: Option<u64>,
 }
 
 /// Result-extraction hook: runs after quiescence with the engine summary.
 pub type Finish = Box<dyn FnOnce(&ScenarioEnv, RunSummary) -> RunReport>;
 
-/// Per-node output sink: one write-once slot per node, written lock-free
-/// from executor worker threads and read back in canonical node order at
-/// finish.
+/// Per-node output sink: one slot per node, written from executor worker
+/// threads and read back in canonical node order at finish.
 ///
 /// §Perf: the sort workloads used to funnel every node's final block
 /// through one `Mutex<Vec<...>>` — at 65,536 nodes across a threaded
 /// executor that is a 100k-acquisition contention burst at the end of the
-/// run. Each node writes exactly one slot exactly once (the protocols
-/// guarantee it; a double write panics loudly), so a `OnceLock` per slot
-/// needs no lock at all, and the canonical merge is just index order.
+/// run. One `Mutex<Option<T>>` per slot keeps writes contention-free
+/// (each node only ever touches its own slot), and the canonical merge
+/// is just index order.
+///
+/// Writes *overwrite* (last write wins) rather than write-once: under the
+/// optimistic executor a node's finishing event can run inside a
+/// speculative burst that is later rolled back and re-executed, writing
+/// its slot twice. The re-execution is deterministic, so overwriting
+/// converges on exactly the sequential value (DESIGN.md §10); a
+/// write-once panic here would turn a legal rollback into a crash.
 pub struct NodeSlots<T> {
-    slots: Vec<OnceLock<T>>,
+    slots: Vec<Mutex<Option<T>>>,
 }
 
 impl<T> NodeSlots<T> {
     pub fn new(nodes: usize) -> Self {
-        NodeSlots { slots: (0..nodes).map(|_| OnceLock::new()).collect() }
+        NodeSlots { slots: (0..nodes).map(|_| Mutex::new(None)).collect() }
     }
 
-    /// Write node `id`'s output. Panics if the slot was already written —
-    /// a protocol violation (every workload finishes each node once).
+    /// Write node `id`'s output, replacing any previous write (see the
+    /// type docs for why replacement is the correct semantics).
     pub fn set(&self, id: usize, value: T) {
-        if self.slots[id].set(value).is_err() {
-            panic!("node {id} output slot written twice");
-        }
+        *self.slots[id].lock().expect("node output slot") = Some(value);
     }
 
     pub fn len(&self) -> usize {
@@ -120,18 +137,18 @@ impl<T> NodeSlots<T> {
         self.slots.is_empty()
     }
 
-    /// Slot values in canonical node order (`None` = never written).
-    pub fn iter(&self) -> impl Iterator<Item = Option<&T>> {
-        self.slots.iter().map(|s| s.get())
-    }
-}
-
-impl NodeSlots<Vec<u64>> {
-    /// Borrowed per-node slices in canonical node order (an unwritten
-    /// slot reads as empty) — the shape the sort validators consume,
-    /// with no per-node clone.
-    pub fn as_slices(&self) -> Vec<&[u64]> {
-        self.iter().map(|s| s.map_or(&[][..], Vec::as_slice)).collect()
+    /// Move every slot value out, in canonical node order (an unwritten
+    /// slot yields the default — e.g. an empty block for sort outputs,
+    /// which the validators then flag). Runs after quiescence, so no
+    /// writer exists; no per-node clone.
+    pub fn take_vecs(&self) -> Vec<T>
+    where
+        T: Default,
+    {
+        self.slots
+            .iter()
+            .map(|s| s.lock().expect("node output slot").take().unwrap_or_default())
+            .collect()
     }
 }
 
@@ -155,8 +172,9 @@ pub struct Built<P: Program> {
 pub trait Workload {
     /// The node program type this workload runs. `Send` so the fleet can
     /// shard across the parallel backend's worker threads (messages are
-    /// `Send` by the [`crate::nanopu::WireMsg`] bound).
-    type Prog: Program + Send;
+    /// `Send` by the [`crate::nanopu::WireMsg`] bound); `Clone` so the
+    /// optimistic backend can checkpoint nodes for rollback.
+    type Prog: Program + Send + Clone;
 
     /// Registry/report name (e.g. `"nanosort"`).
     fn name(&self) -> &'static str;
@@ -217,7 +235,12 @@ impl<W: Workload> DynWorkload for W {
         for node in st.picks(env.seed, 0, env.nodes) {
             engine.slow_down(node, st.factor);
         }
-        let summary = engine.run_threads(env.threads);
+        let summary = engine.run_exec(
+            env.exec,
+            env.threads,
+            env.window_batch,
+            env.force_rollback_every,
+        );
         let sim_s = t_sim.elapsed().as_secs_f64();
         let t_val = Instant::now();
         let mut report = (built.finish)(env, summary);
@@ -262,6 +285,9 @@ pub struct Scenario {
     seed: u64,
     perturb: Perturbations,
     threads: usize,
+    exec: ExecKind,
+    window_batch: Option<usize>,
+    force_rollback_every: Option<u64>,
 }
 
 impl Scenario {
@@ -280,6 +306,9 @@ impl Scenario {
             seed: 1,
             perturb: Perturbations::default(),
             threads: 1,
+            exec: ExecKind::default(),
+            window_batch: None,
+            force_rollback_every: None,
         }
     }
 
@@ -325,6 +354,29 @@ impl Scenario {
         self
     }
 
+    /// Execution backend ([`ExecKind::Par`] by default; `--exec` on the
+    /// CLI). Results are byte-identical at every setting.
+    pub fn exec(mut self, exec: ExecKind) -> Self {
+        self.exec = exec;
+        self
+    }
+
+    /// Override the window-coalescing factor (instead of the
+    /// `NANOSORT_WINDOW_BATCH` environment knob). Results are
+    /// byte-identical at every value.
+    pub fn window_batch(mut self, k: usize) -> Self {
+        self.window_batch = Some(k);
+        self
+    }
+
+    /// Test-only: force the optimistic backend to roll back every `n`-th
+    /// speculative burst (exercises the recovery path; results are
+    /// byte-identical with the hook on or off).
+    pub fn force_rollback_every(mut self, n: u64) -> Self {
+        self.force_rollback_every = Some(n);
+        self
+    }
+
     /// Set the full perturbation block (input distribution + stragglers).
     pub fn perturb(mut self, perturb: Perturbations) -> Self {
         self.perturb = perturb;
@@ -367,6 +419,9 @@ impl Scenario {
             seed: self.seed,
             perturb: self.perturb,
             threads: self.threads,
+            exec: self.exec,
+            window_batch: self.window_batch,
+            force_rollback_every: self.force_rollback_every,
         };
         self.workload.run_on(&env)
     }

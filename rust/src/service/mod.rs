@@ -45,7 +45,7 @@ use crate::cpu::CoreModel;
 use crate::net::{Fabric, NetConfig, NetStats, Topology};
 use crate::perturb::Perturbations;
 use crate::scenario::{Finish, ScenarioEnv, Workload};
-use crate::sim::{Engine, RunSummary, Time};
+use crate::sim::{Engine, ExecKind, RunSummary, Time};
 use crate::stats::Summary;
 
 use wrap::{Coordinator, InnerProg, JobState, ServiceArena, ServiceProg, Worker};
@@ -67,6 +67,12 @@ pub struct ServiceConfig {
     /// picked once per fleet (never the coordinator node).
     pub perturb: Perturbations,
     pub threads: usize,
+    /// Execution backend. The service program opts out of speculation
+    /// ([`crate::nanopu::Program::speculation_safe`] — its state lives in
+    /// shared arenas a clone cannot checkpoint), so `opt` here runs the
+    /// conservative adaptive-window path; results are byte-identical
+    /// across all backends either way.
+    pub exec: ExecKind,
 }
 
 impl ServiceConfig {
@@ -81,6 +87,7 @@ impl ServiceConfig {
             compute: ComputeChoice::default().build()?,
             perturb: Perturbations::default(),
             threads: 1,
+            exec: ExecKind::default(),
         })
     }
 }
@@ -300,6 +307,9 @@ pub fn run_service_trace(
             // machine properties, applied to the engine below.
             perturb: Perturbations { dist: cfg.perturb.dist, stragglers: Default::default() },
             threads: cfg.threads,
+            exec: cfg.exec,
+            window_batch: None,
+            force_rollback_every: None,
         };
         let (programs, finish) = build_job(&spec.kind, &env)
             .with_context(|| format!("building job {} ({})", spec.id, spec.kind.workload()))?;
@@ -352,7 +362,7 @@ pub fn run_service_trace(
     for node in st.picks(seed, 0, cfg.workers) {
         engine.slow_down(node, st.factor);
     }
-    let summary = engine.run_threads(cfg.threads);
+    let summary = engine.run_exec(cfg.exec, cfg.threads, None, None);
 
     let records = std::mem::take(&mut *arena.records.lock().unwrap());
     let mut outcomes = Vec::with_capacity(records.len());
@@ -372,6 +382,7 @@ pub fn run_service_trace(
             node_stats: summary.node_stats[rec.base..rec.base + rec.nodes].to_vec(),
             net: NetStats::default(),
             events: 0,
+            profile: Default::default(),
         };
         let report = finish(&env, carved);
         ensure!(

@@ -87,6 +87,7 @@ impl InnerMsg {
 }
 
 /// A node program of any registered workload, as installed on a worker.
+#[derive(Clone)]
 pub(crate) enum InnerProg {
     Ns(NsProg),
     Ms(MsProg),
@@ -283,6 +284,7 @@ pub(crate) struct ServiceArena {
 }
 
 /// A running job, from the coordinator's point of view.
+#[derive(Clone)]
 struct JobRun {
     base: usize,
     footprint: usize,
@@ -291,6 +293,7 @@ struct JobRun {
 }
 
 /// The coordinator program (node id = worker count).
+#[derive(Clone)]
 pub(crate) struct Coordinator {
     arena: Arc<ServiceArena>,
     policy: SchedPolicy,
@@ -411,6 +414,7 @@ impl Coordinator {
 }
 
 /// The job a worker is currently running.
+#[derive(Clone)]
 struct Active {
     job: u32,
     base: NodeId,
@@ -425,6 +429,7 @@ struct Active {
 
 /// A worker program: idle relay until kicked, then the active job's
 /// inner program namespaced through [`adapt`].
+#[derive(Clone)]
 pub(crate) struct Worker {
     arena: Arc<ServiceArena>,
     coord: NodeId,
@@ -536,6 +541,7 @@ impl Worker {
 }
 
 /// The one program type every node of a service run executes.
+#[derive(Clone)]
 pub(crate) enum ServiceProg {
     Worker(Worker),
     Coordinator(Coordinator),
@@ -571,6 +577,16 @@ impl Program for ServiceProg {
             // The coordinator only ever receives step-0 control traffic.
             ServiceProg::Coordinator(_) => 0,
         }
+    }
+
+    /// The service program's event-visible state straddles shared arenas
+    /// a clone cannot checkpoint: [`Worker::kick`] destructively takes
+    /// the job's slot program, and placements/records live behind
+    /// `Arc`-shared mutexes (DESIGN.md §9). Rolling back a clone would
+    /// leave the arena mutated, so the optimistic executor must run this
+    /// program conservatively.
+    fn speculation_safe(&self) -> bool {
+        false
     }
 }
 

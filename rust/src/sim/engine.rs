@@ -16,14 +16,17 @@
 //!
 //! The event loop itself lives in [`crate::sim::exec`]: [`Engine::run`]
 //! uses the sequential backend, [`Engine::run_threads`] picks the
-//! deterministic sharded backend for `threads != 1` — both produce
-//! byte-identical results (the §7 determinism contract).
+//! deterministic sharded backend for `threads != 1`, and
+//! [`Engine::run_exec`] selects any backend by [`ExecKind`] — all
+//! produce byte-identical results (the §7 + §10 determinism contract).
 
 use crate::cpu::CoreModel;
 use crate::nanopu::{Group, GroupId, NodeId, Program};
 use crate::net::Fabric;
 
-use super::exec::{run_seq_inner, EngineParts, Executor, ParExecutor, RunSummary};
+use super::exec::{
+    run_seq_inner, EngineParts, ExecKind, Executor, OptExecutor, ParExecutor, RunSummary,
+};
 
 /// The engine: node programs + fabric + core model + groups, ready to be
 /// handed to an execution backend.
@@ -82,16 +85,38 @@ impl<P: Program> Engine<P> {
     }
 }
 
-impl<P: Program + Send> Engine<P> {
+impl<P: Program + Send + Clone> Engine<P> {
     /// Run to quiescence on `threads` worker threads (`1` = the
     /// sequential backend, `0` = all available host cores); consumes the
     /// engine. Results are byte-identical at every thread count — the
     /// parallel backend's determinism contract ([`crate::sim::exec`]).
     pub fn run_threads(self, threads: usize) -> RunSummary {
-        if threads == 1 {
-            self.run()
-        } else {
-            ParExecutor::new(threads).run(self.into_parts())
+        self.run_exec(ExecKind::Par, threads, None, None)
+    }
+
+    /// Run to quiescence on the backend named by `kind`; consumes the
+    /// engine. `threads == 1` (or [`ExecKind::Seq`]) collapses to the
+    /// sequential reference path; `window_batch` and
+    /// `force_rollback_every` thread the parallel/optimistic knobs
+    /// through (ignored where meaningless). Results are byte-identical
+    /// across every combination.
+    pub fn run_exec(
+        self,
+        kind: ExecKind,
+        threads: usize,
+        window_batch: Option<usize>,
+        force_rollback_every: Option<u64>,
+    ) -> RunSummary {
+        match kind {
+            ExecKind::Seq => self.run(),
+            _ if threads == 1 => self.run(),
+            ExecKind::Par => {
+                ParExecutor { threads, window_batch }.run(self.into_parts())
+            }
+            ExecKind::Opt => {
+                OptExecutor { threads, window_batch, force_rollback_every }
+                    .run(self.into_parts())
+            }
         }
     }
 }
@@ -539,5 +564,154 @@ mod tests {
         let par = mk().run_threads(4);
         assert_eq!(seq.makespan, par.makespan);
         assert_eq!(seq.events, par.events);
+        let opt = mk().run_exec(ExecKind::Opt, 4, None, None);
+        assert_eq!(seq.makespan, opt.makespan);
+        assert_eq!(seq.events, opt.events);
+    }
+
+    /// The optimistic backend joins the §7 contract on every shape that
+    /// already stresses the conservative one: latency ping-pong across
+    /// one-node shards, cross-shard incast, multicast fan-out, the
+    /// chain-guard hazard, and a straggling core — full per-node stats
+    /// and fabric counters, not just the makespan.
+    #[test]
+    fn opt_backend_matches_sequential_everywhere() {
+        let cases: Vec<(&str, RunSummary, Box<dyn Fn(usize) -> RunSummary>)> = vec![
+            (
+                "ping-pong",
+                tiny_engine(vec![Ping { remaining: 9 }, Ping { remaining: 9 }]).run(),
+                Box::new(|threads| {
+                    tiny_engine(vec![Ping { remaining: 9 }, Ping { remaining: 9 }])
+                        .run_exec(ExecKind::Opt, threads, None, None)
+                }),
+            ),
+            (
+                "fan-in",
+                fan_in_engine(32).run(),
+                Box::new(|threads| {
+                    fan_in_engine(32).run_exec(ExecKind::Opt, threads, None, None)
+                }),
+            ),
+            (
+                "multicast",
+                bcast_engine(16, Group::from(0..16)).run(),
+                Box::new(|threads| {
+                    bcast_engine(16, Group::from(0..16))
+                        .run_exec(ExecKind::Opt, threads, None, None)
+                }),
+            ),
+            (
+                "chain-echo",
+                {
+                    let progs = vec![ChainEcho { hops: 40 }, ChainEcho { hops: 0 }];
+                    let fabric = Fabric::new(Topology::paper(2), NetConfig::default(), 7);
+                    Engine::new(progs, fabric, CoreModel::default(), 13).run()
+                },
+                Box::new(|threads| {
+                    let progs = vec![ChainEcho { hops: 40 }, ChainEcho { hops: 0 }];
+                    let fabric = Fabric::new(Topology::paper(2), NetConfig::default(), 7);
+                    Engine::new(progs, fabric, CoreModel::default(), 13)
+                        .run_exec(ExecKind::Opt, threads, None, None)
+                }),
+            ),
+            (
+                "straggler",
+                {
+                    let mut e = fan_in_engine(16);
+                    e.slow_down(3, 64);
+                    e.run()
+                },
+                Box::new(|threads| {
+                    let mut e = fan_in_engine(16);
+                    e.slow_down(3, 64);
+                    e.run_exec(ExecKind::Opt, threads, None, None)
+                }),
+            ),
+        ];
+        for (name, seq, opt_run) in &cases {
+            for threads in [2usize, 4] {
+                let opt = opt_run(threads);
+                assert_eq!(seq.makespan, opt.makespan, "{name} threads={threads}");
+                assert_eq!(seq.events, opt.events, "{name} threads={threads}");
+                assert_eq!(seq.net, opt.net, "{name} threads={threads}");
+                assert_eq!(seq.node_stats, opt.node_stats, "{name} threads={threads}");
+                // Every burst that went pending resolved exactly once.
+                let p = opt.profile;
+                assert_eq!(p.speculated, p.committed + p.rollbacks, "{name}");
+            }
+        }
+    }
+
+    /// Independent self-send chain per node: every shard stays busy for
+    /// the whole run with zero cross-shard traffic, so the optimistic
+    /// backend demonstrably speculates — and, with no inbound transits,
+    /// no straggler can exist.
+    #[derive(Clone)]
+    struct SelfChain {
+        hops: u32,
+    }
+    impl Program for SelfChain {
+        type Msg = Msg;
+        fn on_start(&mut self, ctx: &mut Ctx<Msg>) {
+            if self.hops > 0 {
+                let me = ctx.node();
+                ctx.send(me, Msg);
+            }
+        }
+        fn on_message(&mut self, ctx: &mut Ctx<Msg>, _src: NodeId, _msg: Msg) {
+            if self.hops > 0 {
+                self.hops -= 1;
+                if self.hops > 0 {
+                    let me = ctx.node();
+                    ctx.send(me, Msg);
+                }
+            }
+        }
+    }
+
+    fn self_chain_engine(n: usize, hops: u32) -> Engine<SelfChain> {
+        let progs: Vec<SelfChain> = (0..n).map(|_| SelfChain { hops }).collect();
+        let fabric = Fabric::new(Topology::paper(n), NetConfig::default(), 3);
+        Engine::new(progs, fabric, CoreModel::default(), 17)
+    }
+
+    /// Speculation engages (and commits) on shard-local work, stays
+    /// byte-identical to the sequential backend at every coalescing
+    /// factor, and the forced-rollback hook exercises the full recovery
+    /// path — rollback + conservative re-execution — without disturbing
+    /// a single byte of the result.
+    #[test]
+    fn opt_speculation_and_forced_rollbacks_are_result_identity() {
+        let seq = self_chain_engine(4, 300).run();
+        let opt = self_chain_engine(4, 300).run_exec(ExecKind::Opt, 2, None, None);
+        assert_eq!(seq.makespan, opt.makespan);
+        assert_eq!(seq.events, opt.events);
+        assert_eq!(seq.node_stats, opt.node_stats);
+        let p = opt.profile;
+        assert!(p.speculated > 0, "dense local chains must trigger speculation");
+        assert_eq!(p.speculated, p.committed + p.rollbacks);
+        assert!(p.committed > 0, "uncontended bursts must commit");
+
+        for k in [1usize, 4, 1000] {
+            let opt = self_chain_engine(4, 300)
+                .run_exec(ExecKind::Opt, 2, Some(k), None);
+            assert_eq!(seq.makespan, opt.makespan, "k={k}");
+            assert_eq!(seq.node_stats, opt.node_stats, "k={k}");
+        }
+
+        for force in [1u64, 3] {
+            let opt = self_chain_engine(4, 300)
+                .run_exec(ExecKind::Opt, 2, None, Some(force));
+            assert_eq!(seq.makespan, opt.makespan, "force={force}");
+            assert_eq!(seq.events, opt.events, "force={force}");
+            assert_eq!(seq.node_stats, opt.node_stats, "force={force}");
+            let p = opt.profile;
+            assert_eq!(p.speculated, p.committed + p.rollbacks, "force={force}");
+            if force == 1 {
+                assert_eq!(p.committed, 0, "every burst must have been rolled back");
+                assert_eq!(p.rollbacks, p.speculated);
+                assert!(p.rollbacks > 0, "the hook must have fired");
+            }
+        }
     }
 }

@@ -31,6 +31,7 @@ pub const MAX_STAGES: usize = 16;
 /// `phantom` marks a multicast self-leg — it occupies the ingress link
 /// and counts as a delivery (the switch really replicates the packet
 /// back down) but never reaches the handler.
+#[derive(Clone)]
 pub(crate) struct Transit<M> {
     pub flight: Flight,
     pub phantom: bool,
@@ -280,6 +281,14 @@ impl CalendarQueue {
                 self.peek_cache = None;
                 return bucket.events.pop();
             }
+            if self.cur == limit {
+                // Never walk past the last in-bound bucket: when `bound`
+                // is not bucket-aligned, a later push at `at >= bound` can
+                // still land in this bucket (`at >> g_shift == limit`), and
+                // a cursor beyond it would reject that push as "scheduled
+                // in the past" (and alias its ring slot a full span later).
+                return None;
+            }
             self.cur += 1;
             if self.cur & self.mask == 0 {
                 // Entered a new aligned window: its far shard (if any) can
@@ -287,6 +296,27 @@ impl CalendarQueue {
                 self.rehome(self.cur >> self.ring_bits);
             }
         }
+    }
+
+    /// Highest pop bound a speculative burst may use such that rewinding
+    /// the cursor afterwards is sound: the start of the next aligned far
+    /// window. Under any bound `<=` this, `pop_before` can never re-home a
+    /// far shard (far windows begin at or beyond the boundary) and the
+    /// cursor never crosses the window boundary, so every popped event's
+    /// bucket stays within one ring span of the saved cursor and a
+    /// rollback can re-push it verbatim without ring aliasing.
+    fn spec_fence(&self) -> Time {
+        let boundary = ((self.cur >> self.ring_bits) + 1) << self.ring_bits;
+        Time(boundary << self.g_shift)
+    }
+
+    /// Rewind the cursor to a position saved before a speculative burst
+    /// bounded by [`CalendarQueue::spec_fence`]. The caller re-pushes the
+    /// burst's pops afterwards.
+    fn rewind(&mut self, cursor: u64) {
+        debug_assert!(cursor <= self.cur);
+        self.cur = cursor;
+        self.peek_cache = None;
     }
 }
 
@@ -353,10 +383,30 @@ impl<M> EventQueue<M> {
     pub fn is_empty(&self) -> bool {
         self.cal.len == 0
     }
+
+    /// Opaque cursor token for [`EventQueue::rewind`].
+    pub fn cursor(&self) -> u64 {
+        self.cal.cur
+    }
+
+    /// The cursor position corresponding to `at`'s bucket.
+    pub fn cursor_of(&self, at: Time) -> u64 {
+        self.cal.bucket_of(at)
+    }
+
+    /// See [`CalendarQueue::spec_fence`].
+    pub fn spec_fence(&self) -> Time {
+        self.cal.spec_fence()
+    }
+
+    /// See [`CalendarQueue::rewind`].
+    pub fn rewind(&mut self, cursor: u64) {
+        self.cal.rewind(cursor);
+    }
 }
 
 /// Per-node accounting (drives Figs 15b and 16).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct NodeStats {
     /// Busy time attributed to each stage.
     pub busy: [Time; MAX_STAGES],
@@ -425,6 +475,47 @@ pub struct RunSummary {
     pub net: NetStats,
     /// Total events processed (engine-level, for perf work).
     pub events: u64,
+    /// Executor-side observability counters. **Never** part of a digest
+    /// or rendered report: backends legitimately differ here (rollback
+    /// counts, barrier rounds) while everything above must not.
+    pub profile: ExecProfile,
+}
+
+/// Speculation/scheduling counters for one run. All zero for the
+/// sequential backend; the optimistic backend fills every field and the
+/// BENCH records surface `rollbacks` and `committed_window_avg`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecProfile {
+    /// Barrier rounds driven (parallel backends).
+    pub rounds: u64,
+    /// Speculative bursts begun.
+    pub speculated: u64,
+    /// Bursts committed.
+    pub committed: u64,
+    /// Bursts rolled back (straggler message, uncovered horizon, or the
+    /// test-only forced hook).
+    pub rollbacks: u64,
+    /// Sum over committed bursts of (last − first) speculated event time.
+    pub committed_span: u64,
+}
+
+impl ExecProfile {
+    pub fn merge(&mut self, other: &ExecProfile) {
+        self.rounds = self.rounds.max(other.rounds);
+        self.speculated += other.speculated;
+        self.committed += other.committed;
+        self.rollbacks += other.rollbacks;
+        self.committed_span += other.committed_span;
+    }
+
+    /// Mean committed speculative burst span, in time units.
+    pub fn committed_window_avg(&self) -> f64 {
+        if self.committed == 0 {
+            0.0
+        } else {
+            self.committed_span as f64 / self.committed as f64
+        }
+    }
 }
 
 impl RunSummary {
@@ -468,6 +559,11 @@ pub(crate) struct Shard<P: Program> {
     /// Scratch buffer for handler-emitted ops (reused across invokes —
     /// §Perf: one Vec alloc/free per delivered message otherwise).
     ops_scratch: Vec<(u64, SendOp<P::Msg>)>,
+    /// When set (speculative bursts only), *every* emission — own-shard
+    /// sends and timers included — is handed to the `emit` hook instead of
+    /// the local queue, so the caller can buffer it until the burst
+    /// commits (DESIGN.md §10).
+    divert: bool,
 }
 
 impl<P: Program> Shard<P> {
@@ -509,6 +605,7 @@ impl<P: Program> Shard<P> {
             net: NetStats::default(),
             events: 0,
             ops_scratch: Vec::new(),
+            divert: false,
             range,
         }
     }
@@ -559,12 +656,13 @@ impl<P: Program> Shard<P> {
     }
 
     /// [`Shard::run_window`] with a bound re-read before every pop. The
-    /// parallel backend's coalesced windows tighten it mid-drain when an
+    /// parallel backends' coalesced windows tighten it mid-drain when an
     /// emission opens a potential cross-shard reply chain (the chain
     /// guard, see `exec::par`). The bound may only shrink, and a
     /// tightening triggered by an event processed at `t` can never land
-    /// below `t + 2·lookahead` — above every event already popped — so
-    /// completed pops stay valid.
+    /// below `t` plus a full cross-shard round trip through the bound
+    /// matrix — above every event already popped — so completed pops stay
+    /// valid.
     pub fn run_window_dyn(
         &mut self,
         sx: &SharedCtx<'_>,
@@ -782,11 +880,184 @@ impl<P: Program> Shard<P> {
     ) {
         let own = self.owns(flight.dst);
         let t = Transit { flight, phantom, timer, msg };
-        if own {
+        if own && !self.divert {
             self.queue.push(t);
         } else {
             emit(t);
         }
+    }
+
+    /// See [`EventQueue::spec_fence`]: the hard upper bound for a
+    /// speculative burst's pop window.
+    pub fn spec_fence(&self) -> Time {
+        self.queue.spec_fence()
+    }
+
+    /// Open a speculative burst: snapshot the cheap wholesale state
+    /// (fabric counters, spine registers, event count, queue cursor) and
+    /// reset the lazy per-node backup log.
+    pub fn begin_burst(&mut self, log: &mut SpecLog<P>) {
+        log.burst += 1;
+        log.saved.clear();
+        log.redo.clear();
+        log.spines = self.rx.spec_save_spines();
+        log.net = self.net.clone();
+        log.events = self.events;
+        log.cursor = self.queue.cursor();
+    }
+
+    /// Optimistically drain events with `at < bound()` while journaling
+    /// undo state into `log`: every pop is recorded for re-push, and each
+    /// touched node's program/RNG/reorder-buffer/hot/stats plus its fabric
+    /// lane registers are backed up at most once per burst
+    /// (generation-stamped). One event only ever mutates its destination
+    /// node's state — sends, timers, and RNG draws all charge the invoked
+    /// node — so the per-destination backup covers the whole mutation.
+    /// All emissions are diverted to `emit` (see [`Shard::route`]).
+    pub fn run_window_spec(
+        &mut self,
+        sx: &SharedCtx<'_>,
+        bound: &impl Fn() -> Time,
+        emit: &mut impl FnMut(Transit<P::Msg>),
+        log: &mut SpecLog<P>,
+    ) where
+        P: Clone,
+    {
+        debug_assert!(!self.divert);
+        debug_assert!(bound() <= self.spec_fence(), "burst bound past the rewind fence");
+        self.divert = true;
+        while let Some(t) = self.queue.pop_before(bound()) {
+            let i = self.ix(t.flight.dst);
+            if log.node_stamp[i] != log.burst {
+                log.node_stamp[i] = log.burst;
+                log.saved.push((
+                    i,
+                    NodeBackup {
+                        prog: self.nodes[i].prog.clone(),
+                        rng: self.nodes[i].rng.clone(),
+                        held: self.nodes[i].held.clone(),
+                        hot: self.hot[i],
+                        stats: self.stats[i].clone(),
+                        tx: self.tx.spec_save(t.flight.dst),
+                        ingress: self.rx.spec_save(t.flight.dst),
+                    },
+                ));
+            }
+            log.redo.push(t.clone());
+            self.events += 1;
+            let arrival = if t.timer {
+                t.flight.at
+            } else {
+                sx.fabric.admit(&mut self.rx, &mut self.net, &t.flight, t.msg.wire_bytes())
+            };
+            if !t.phantom {
+                self.deliver(sx, arrival, t.flight.src, t.flight.dst, t.msg, emit);
+            }
+        }
+        self.divert = false;
+        // The walk may have advanced the cursor over empty buckets beyond
+        // the last pop (up to the burst bound — past the conservative
+        // horizon by design). Later inbound transits are only guaranteed
+        // to key after the last *popped* event, so retreat the cursor to
+        // that event's bucket — or all the way back when the burst popped
+        // nothing. This moves a position, not contents: re-walking empty
+        // buckets is free, and every remaining event sits at or beyond it.
+        let back = match log.last_key() {
+            Some((at, _, _)) => log.cursor.max(self.queue.cursor_of(at)),
+            None => log.cursor,
+        };
+        self.queue.rewind(back);
+    }
+
+    /// Undo one speculative burst: restore every touched node and fabric
+    /// register, rewind the queue cursor, and re-push the popped transits
+    /// (no anti-messages exist — the burst's emissions were buffered by
+    /// the caller and are simply dropped).
+    pub fn rollback_burst(&mut self, log: &mut SpecLog<P>) {
+        self.net = log.net.clone();
+        self.events = log.events;
+        self.rx.spec_restore_spines(&log.spines);
+        for (i, b) in log.saved.drain(..) {
+            let node = self.range.start + i;
+            self.nodes[i].prog = b.prog;
+            self.nodes[i].rng = b.rng;
+            self.nodes[i].held = b.held;
+            self.hot[i] = b.hot;
+            self.stats[i] = b.stats;
+            self.tx.spec_restore(node, &b.tx);
+            self.rx.spec_restore(node, b.ingress);
+        }
+        self.queue.rewind(log.cursor);
+        for t in log.redo.drain(..) {
+            self.queue.push(t);
+        }
+    }
+}
+
+/// Backup of everything processing one event can mutate on its
+/// destination node (DESIGN.md §10).
+struct NodeBackup<P: Program> {
+    prog: P,
+    rng: SplitMix64,
+    held: Vec<(u32, NodeId, P::Msg)>,
+    hot: HotNode,
+    stats: NodeStats,
+    /// Sender-side lane registers (egress busy-until, RNG, flight ctr).
+    tx: (Time, SplitMix64, u64),
+    /// Destination ingress busy-until register.
+    ingress: Time,
+}
+
+/// Per-shard undo journal for one optimistic burst. Owned by the
+/// optimistic executor's worker; reused across bursts (the generation
+/// stamp makes per-node backups lazy without clearing the stamp arena).
+pub(crate) struct SpecLog<P: Program> {
+    burst: u64,
+    /// Last burst id that backed up each local node index.
+    node_stamp: Vec<u64>,
+    saved: Vec<(usize, NodeBackup<P>)>,
+    spines: Vec<Time>,
+    net: NetStats,
+    events: u64,
+    cursor: u64,
+    /// Clones of every popped transit, in pop order.
+    redo: Vec<Transit<P::Msg>>,
+}
+
+impl<P: Program> SpecLog<P> {
+    pub fn new(shard_len: usize) -> Self {
+        SpecLog {
+            burst: 0,
+            node_stamp: vec![0; shard_len],
+            saved: Vec::new(),
+            spines: Vec::new(),
+            net: NetStats::default(),
+            events: 0,
+            cursor: 0,
+            redo: Vec::new(),
+        }
+    }
+
+    /// Canonical key of the last (deepest) speculated event.
+    pub fn last_key(&self) -> Option<(Time, usize, u64)> {
+        self.redo.last().map(|t| (t.flight.at, t.flight.src, t.flight.ctr))
+    }
+
+    /// Time of the first speculated event (published as the shard's event
+    /// minimum while the burst is pending — see `exec::opt`).
+    pub fn first_at(&self) -> Option<Time> {
+        self.redo.first().map(|t| t.flight.at)
+    }
+
+    pub fn is_pending(&self) -> bool {
+        !self.redo.is_empty()
+    }
+
+    /// Drop the undo journal after a commit (the speculated state *is*
+    /// the committed state; nothing to restore or re-push).
+    pub fn resolve(&mut self) {
+        self.saved.clear();
+        self.redo.clear();
     }
 }
 
@@ -802,7 +1073,7 @@ pub(crate) fn merge_shards<P: Program>(shards: Vec<Shard<P>>) -> RunSummary {
         events += shard.events;
     }
     let makespan = node_stats.iter().map(|s| s.last_active).max().unwrap_or(Time::ZERO);
-    RunSummary { makespan, node_stats, net, events }
+    RunSummary { makespan, node_stats, net, events, profile: ExecProfile::default() }
 }
 
 #[cfg(test)]
@@ -927,6 +1198,62 @@ mod tests {
         assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(66_000 * bucket_units));
         assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(70_000 * bucket_units));
         assert!(q.pop_before(Time(u64::MAX)).is_none());
+    }
+
+    /// Regression: a bounded pop walking empty buckets must not advance
+    /// the cursor past the bound's own bucket. With an unaligned bound, a
+    /// later push at `at >= bound` can still land in that bucket — an
+    /// overshot cursor would reject it as "scheduled in the past" (and
+    /// alias its ring slot a full span later in release builds).
+    #[test]
+    fn bounded_pop_never_overshoots_the_bound_bucket() {
+        let mut q = CalendarQueue::new();
+        q.push(ev(10, 0, 0));
+        // Unaligned bound inside bucket 3 (64-unit buckets): the drain
+        // pops the one event, then walks empty buckets up to the limit.
+        assert_eq!(q.pop_before(Time(230)).unwrap().at, Time(10));
+        assert!(q.pop_before(Time(230)).is_none());
+        assert!(q.cur <= 3, "cursor overshot the bound bucket");
+        // A conservative-window push at `at >= bound` sharing the bound's
+        // bucket must be accepted and pop next.
+        q.push(ev(250, 1, 0));
+        assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(250));
+    }
+
+    /// The speculation fence/rewind contract: a burst bounded by
+    /// `spec_fence` can be undone by rewinding the cursor and re-pushing
+    /// its pops, after which the identical sequence replays and later
+    /// (beyond-fence) events still drain in order.
+    #[test]
+    fn rewind_replays_a_fenced_burst_exactly() {
+        let mut q = CalendarQueue::new();
+        let mut rng = SplitMix64::new(0x5EC);
+        let fence = q.spec_fence();
+        let mut ctr = 0u64;
+        for _ in 0..500 {
+            // Spread events below and beyond the fence.
+            let at = rng.next_below(fence.0 + fence.0 / 2);
+            ctr += 1;
+            q.push(ev(at, rng.index(8) as u32, ctr));
+        }
+        let cursor = q.cur;
+        let first: Vec<(u64, u32, u64)> = std::iter::from_fn(|| q.pop_before(fence))
+            .map(|e| (e.at.0, e.src, e.ctr))
+            .collect();
+        assert!(!first.is_empty(), "degenerate test: nothing below the fence");
+        q.rewind(cursor);
+        for &(at, src, c) in &first {
+            q.push(ev(at, src, c));
+        }
+        let replay: Vec<(u64, u32, u64)> = std::iter::from_fn(|| q.pop_before(fence))
+            .map(|e| (e.at.0, e.src, e.ctr))
+            .collect();
+        assert_eq!(first, replay);
+        let rest: Vec<u64> =
+            std::iter::from_fn(|| q.pop_before(Time(u64::MAX))).map(|e| e.at.0).collect();
+        assert_eq!(first.len() + rest.len(), 500);
+        assert!(rest.windows(2).all(|w| w[0] <= w[1]), "post-fence drain out of order");
+        assert!(rest.iter().all(|&at| at >= fence.0));
     }
 
     /// peek_at never advances the cursor: a push earlier than a previous

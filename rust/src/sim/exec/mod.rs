@@ -8,12 +8,18 @@
 //!   node, drained to quiescence on the calling thread.
 //! - [`ParExecutor`] — deterministic sharded simulation: nodes partition
 //!   into contiguous ranges (one worker thread each) that advance in
-//!   conservative time windows derived from the fabric's minimum latency
-//!   ([`crate::net::Fabric::min_latency`]) and the other shards' published
-//!   event minima (so a shard running alone coalesces up to
-//!   `NANOSORT_WINDOW_BATCH` windows per barrier round), exchange
+//!   conservative time windows derived from the topology-aware per-pair
+//!   bound matrix (`sim::exec::par::BoundMatrix` — same-leaf shard pairs
+//!   get a far wider window than the global worst case) and the other
+//!   shards' published event minima (so a shard running alone coalesces
+//!   up to `NANOSORT_WINDOW_BATCH` windows per barrier round), exchange
 //!   cross-shard sends at window barriers, and merge per-shard stats in
 //!   canonical node order.
+//! - [`OptExecutor`] — the optimistic backend: conservative windows as
+//!   above, plus Time-Warp-style speculation past the bound with
+//!   shard-local rollback (cross-shard sends are buffered until a burst
+//!   commits, so no anti-messages exist — `sim::exec::opt` module docs
+//!   and DESIGN.md §10).
 //!
 //! # Determinism contract (DESIGN.md §7)
 //!
@@ -35,13 +41,15 @@
 //!    module docs walk the closure argument).
 //!
 //! `rust/tests/exec.rs` pins the contract across every workload, tier,
-//! and perturbation knob.
+//! and perturbation knob; `rust/tests/exec_fuzz.rs` fuzzes it over
+//! randomized scenario × perturbation × backend × sharding composites.
 
 pub(crate) mod core;
+mod opt;
 mod par;
 mod seq;
 
-pub use self::core::{NodeStats, RunSummary, MAX_STAGES};
+pub use self::core::{ExecProfile, NodeStats, RunSummary, MAX_STAGES};
 
 use crate::cpu::CoreModel;
 use crate::nanopu::{Group, Program};
@@ -72,15 +80,17 @@ pub fn resolve_threads(threads: usize) -> usize {
     }
 }
 
-/// A scheduling policy for the engine core. `P: Send` bounds the trait
-/// method so one trait serves both backends; the sequential path is also
-/// reachable without `Send` through [`crate::sim::Engine::run`].
+/// A scheduling policy for the engine core. `P: Send + Clone` bounds the
+/// trait method so one trait serves every backend (`Clone` feeds the
+/// optimistic backend's per-node checkpoints; every program is a plain
+/// value type); the sequential path is also reachable without either
+/// bound through [`crate::sim::Engine::run`].
 pub trait Executor {
     /// Backend name (reports/diagnostics).
     fn name(&self) -> &'static str;
 
     /// Run `parts` to global quiescence.
-    fn run<P: Program + Send>(&self, parts: EngineParts<P>) -> RunSummary;
+    fn run<P: Program + Send + Clone>(&self, parts: EngineParts<P>) -> RunSummary;
 }
 
 /// The exact reference semantics, single-threaded.
@@ -92,7 +102,7 @@ impl Executor for SeqExecutor {
         "seq"
     }
 
-    fn run<P: Program + Send>(&self, parts: EngineParts<P>) -> RunSummary {
+    fn run<P: Program + Send + Clone>(&self, parts: EngineParts<P>) -> RunSummary {
         seq::run_seq(parts)
     }
 }
@@ -130,7 +140,87 @@ impl Executor for ParExecutor {
         "par"
     }
 
-    fn run<P: Program + Send>(&self, parts: EngineParts<P>) -> RunSummary {
+    fn run<P: Program + Send + Clone>(&self, parts: EngineParts<P>) -> RunSummary {
         par::run_par(parts, self.resolved_threads(), self.window_batch)
+    }
+}
+
+/// Optimistic sharded execution: the same deterministic windows as
+/// [`ParExecutor`], plus speculative bursts past the conservative bound
+/// with shard-local rollback (`sim::exec::opt`). Identical digests to
+/// both other backends; [`RunSummary::profile`] additionally reports
+/// burst/commit/rollback counters.
+#[derive(Debug, Clone, Copy)]
+pub struct OptExecutor {
+    pub threads: usize,
+    /// See [`ParExecutor::window_batch`]; also bounds how far a
+    /// speculative burst may run past the conservative bound.
+    pub window_batch: Option<usize>,
+    /// Test-only fault hook: unconditionally roll back every `n`-th
+    /// speculative burst at its resolution round, exercising the recovery
+    /// path on every workload. `None` (the default) rolls back only on
+    /// real stragglers.
+    pub force_rollback_every: Option<u64>,
+}
+
+impl OptExecutor {
+    /// `threads` workers, coalescing factor from the environment knob,
+    /// no forced rollbacks.
+    pub fn new(threads: usize) -> Self {
+        OptExecutor { threads, window_batch: None, force_rollback_every: None }
+    }
+
+    /// Enable the forced-rollback fault hook (tests only; `n` is clamped
+    /// to ≥ 1, i.e. "every burst").
+    pub fn force_rollback_every(mut self, n: u64) -> Self {
+        self.force_rollback_every = Some(n.max(1));
+        self
+    }
+
+    /// Resolve the `0 = available_parallelism` convention.
+    pub fn resolved_threads(&self) -> usize {
+        resolve_threads(self.threads)
+    }
+}
+
+impl Executor for OptExecutor {
+    fn name(&self) -> &'static str {
+        "opt"
+    }
+
+    fn run<P: Program + Send + Clone>(&self, parts: EngineParts<P>) -> RunSummary {
+        opt::run_opt(parts, self.resolved_threads(), self.window_batch, self.force_rollback_every)
+    }
+}
+
+/// CLI-facing backend selector (`--exec seq|par|opt`). [`ExecKind::Par`]
+/// is the default everywhere: `--threads 1` collapses it to the
+/// sequential path, so prior CLI behavior is unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecKind {
+    Seq,
+    #[default]
+    Par,
+    Opt,
+}
+
+impl ExecKind {
+    /// Parse the `--exec` operand.
+    pub fn parse(raw: &str) -> Option<Self> {
+        match raw {
+            "seq" => Some(ExecKind::Seq),
+            "par" => Some(ExecKind::Par),
+            "opt" => Some(ExecKind::Opt),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (reports, bench records, `--exec` operand).
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecKind::Seq => "seq",
+            ExecKind::Par => "par",
+            ExecKind::Opt => "opt",
+        }
     }
 }

@@ -1,0 +1,325 @@
+//! The optimistic (Time-Warp-style) backend: shards advance through the
+//! same topology-aware conservative windows as `exec::par`, then
+//! **speculate past the horizon** — optimistically processing events the
+//! conservative bound cannot yet prove safe — and roll back when a
+//! straggler transit proves the speculation wrong.
+//!
+//! # Protocol (one barrier round per shard)
+//!
+//! 1. Swap the inbox. If a burst is pending and any inbound transit keys
+//!    **before** the deepest speculated event — a straggler — roll the
+//!    burst back (the test-only forced hook rolls back here too).
+//! 2. Publish the shard's event minimum: the pending burst's *first*
+//!    event time while speculation is in flight (the most conservative
+//!    claim — the rest of the fleet never trusts uncommitted work), the
+//!    queue minimum otherwise. Barrier.
+//! 3. Compute the adaptive horizon exactly as `exec::par` (per-pair
+//!    [`BoundMatrix`] closure). All shards idle → done.
+//! 4. Resolve the pending burst: **commit** iff the deepest speculated
+//!    event now lies strictly below the horizon — every transit any
+//!    other shard can still produce keys after it, and step 1 already
+//!    cleared the in-flight ones. On commit the burst's buffered
+//!    emissions are released (own-shard sends into the local queue,
+//!    cross-shard sends into this round's outboxes); otherwise roll
+//!    back — a partially covered burst retries conservatively instead of
+//!    waiting, so speculation can never livelock the fleet.
+//! 5. Queue the inbound transits (after resolution, so a rollback's
+//!    cursor rewind happens first) and drain the conservative window —
+//!    identical to `exec::par`, and automatically the in-order
+//!    re-execution of anything a rollback undid: the rolled-back pops
+//!    were re-pushed, their emissions were never visible, so there are
+//!    no duplicates and no anti-messages (DESIGN.md §10).
+//! 6. Speculate: open an undo-journaled burst ([`SpecLog`]) and pop past
+//!    the conservative bound up to `batch` extra minimum-latency windows,
+//!    capped by the queue's rewind fence. *Every* emission is buffered —
+//!    cross-shard sends stay invisible (rollback stays shard-local), and
+//!    an own-shard emission tightens the live burst bound to its arrival
+//!    (it is buffered too, so popping past it would jump the canonical
+//!    order). Flush, barrier.
+//!
+//! # Why rollback cannot be observed
+//!
+//! A burst mutates only shard-local state (per-node backups + wholesale
+//! fabric-register/counter snapshots restore it exactly), publishes only
+//! its *first* event time (valid whether or not it commits), and emits
+//! nothing. Commit releases buffered sends whose arrivals all lie at or
+//! beyond `first + W[this][dst]` — at or beyond every receiver's current
+//! bound, so a released send can at worst trigger the receiver's *own*
+//! straggler rollback, never corrupt committed work. Digests are
+//! therefore byte-identical to the sequential backend; `rust/tests/
+//! exec_fuzz.rs` fuzzes this and the forced-rollback hook pins it.
+
+use std::cell::Cell;
+use std::sync::atomic::Ordering;
+
+use crate::nanopu::Program;
+use crate::net::Fabric;
+
+use super::core::{
+    merge_shards, ExecProfile, RunSummary, Shard, SharedCtx, SpecLog, Transit,
+};
+use super::par::{
+    carve_shards, flush, resolve_window_batch, shard_of, shard_ranges, BoundMatrix,
+    WindowSync,
+};
+use super::seq::run_seq;
+use super::EngineParts;
+use crate::sim::Time;
+
+/// One in-flight speculative burst, between the round that ran it and the
+/// round that resolves it.
+struct PendingBurst<M> {
+    /// Canonical key of the deepest speculated event.
+    last_key: (Time, usize, u64),
+    /// Time of the first speculated event (the published minimum).
+    first_at: Time,
+    /// Buffered own-shard emissions, released into the queue on commit.
+    local: Vec<Transit<M>>,
+    /// Buffered cross-shard emissions per destination shard, released
+    /// into the outboxes on commit.
+    cross: Vec<Vec<Transit<M>>>,
+}
+
+/// Run `parts` optimistically on `threads` workers. Falls back to the
+/// sequential backend exactly like `exec::par`; runs conservatively
+/// (adaptive windows, zero speculation) when any program opts out via
+/// [`Program::speculation_safe`]. `force_every` is the test-only hook:
+/// every nth burst is rolled back unconditionally at its resolution
+/// round, regardless of coverage.
+pub fn run_opt<P: Program + Send + Clone>(
+    parts: EngineParts<P>,
+    threads: usize,
+    window_batch: Option<usize>,
+    force_every: Option<u64>,
+) -> RunSummary {
+    let lookahead = parts.fabric.min_latency();
+    let leaf_aligned = parts.fabric.cfg.oversub > 0;
+    let ranges = shard_ranges(
+        parts.programs.len(),
+        parts.fabric.topo.leaf_radix,
+        leaf_aligned,
+        threads,
+    );
+    if ranges.len() <= 1 || lookahead == Time::ZERO {
+        return run_seq(parts);
+    }
+    let batch = resolve_window_batch(window_batch);
+    let force_every = force_every.map(|n| n.max(1));
+    let bounds = BoundMatrix::new(&parts.fabric, &ranges);
+    let speculate = parts.programs.iter().all(|p| p.speculation_safe());
+
+    let EngineParts { programs, slow, fabric, core, groups, seed } = parts;
+    let shards = carve_shards(&ranges, programs, slow, &fabric, seed);
+    let sync = WindowSync::new(shards.len());
+    let starts: Vec<usize> = ranges.iter().map(|r| r.start).collect();
+
+    let results: Vec<(Shard<P>, ExecProfile)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(idx, mut shard)| {
+                let sync = &sync;
+                let starts = &starts;
+                let bounds = &bounds;
+                let fabric: &Fabric = &fabric;
+                let core = &core;
+                let groups = &groups;
+                scope.spawn(move || {
+                    let sx = SharedCtx { fabric, core, groups: groups.as_slice() };
+                    let profile = worker(
+                        &mut shard, idx, &sx, sync, starts, bounds, batch, speculate,
+                        force_every,
+                    );
+                    (shard, profile)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+    });
+
+    let mut profile = ExecProfile::default();
+    let mut shards = Vec::with_capacity(results.len());
+    for (shard, p) in results {
+        profile.merge(&p);
+        shards.push(shard);
+    }
+    let mut summary = merge_shards(shards);
+    summary.profile = profile;
+    summary
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker<P: Program + Clone>(
+    shard: &mut Shard<P>,
+    idx: usize,
+    sx: &SharedCtx<'_>,
+    sync: &WindowSync<P::Msg>,
+    starts: &[usize],
+    bounds: &BoundMatrix,
+    batch: u64,
+    speculate: bool,
+    force_every: Option<u64>,
+) -> ExecProfile {
+    let n = starts.len();
+    let mut profile = ExecProfile::default();
+    let mut out: Vec<Vec<Transit<P::Msg>>> = (0..n).map(|_| Vec::new()).collect();
+    let mut inbox: Vec<Transit<P::Msg>> = Vec::new();
+    let mut log: SpecLog<P> = SpecLog::new(shard.range.len());
+    let mut pending: Option<PendingBurst<P::Msg>> = None;
+    let mut bursts = 0u64;
+
+    // Round 0: fire every on_start and exchange the initial transits.
+    {
+        let mut emit = |t: Transit<P::Msg>| out[shard_of(starts, t.flight.dst)].push(t);
+        shard.start(sx, &mut emit);
+    }
+    flush(&mut out, sync, idx);
+    sync.barrier.wait();
+
+    loop {
+        profile.rounds += 1;
+        std::mem::swap(&mut *sync.inboxes[idx].lock().expect("inbox"), &mut inbox);
+        inbox.sort_unstable_by_key(|t| (t.flight.at, t.flight.src, t.flight.ctr));
+
+        // Straggler detection: cross-shard latency is strictly positive,
+        // so an inbound transit keying before the deepest speculated
+        // event means the sequential order would have processed it first
+        // — the burst is wrong. (Equal keys cannot occur: `(at, src,
+        // ctr)` is unique.) The forced hook fails every nth burst here.
+        if let Some(p) = &pending {
+            let straggler = inbox
+                .first()
+                .is_some_and(|t| (t.flight.at, t.flight.src, t.flight.ctr) < p.last_key);
+            if straggler || force_every.is_some_and(|k| bursts % k == 0) {
+                shard.rollback_burst(&mut log);
+                pending = None;
+                profile.rollbacks += 1;
+            }
+        }
+
+        // Publish the event minimum. The inbox is not queued yet (its
+        // placement must follow a possible resolution rollback), so fold
+        // it in by hand; while a burst is pending its first event is the
+        // floor — straggler-checked inbound keys at or after the last
+        // speculated event, which is at or after the first.
+        let own = match &pending {
+            Some(p) => p.first_at.0,
+            None => shard
+                .peek_at()
+                .map(|t| t.0)
+                .unwrap_or(u64::MAX)
+                .min(inbox.first().map(|t| t.flight.at.0).unwrap_or(u64::MAX)),
+        };
+        sync.mins[idx].store(own, Ordering::SeqCst);
+        sync.barrier.wait();
+
+        let mut horizon = u64::MAX;
+        let mut all_idle = true;
+        for (j, m) in sync.mins.iter().enumerate() {
+            let v = m.load(Ordering::SeqCst);
+            if v != u64::MAX {
+                all_idle = false;
+                if j != idx {
+                    horizon = horizon.min(v.saturating_add(bounds.get(j, idx)));
+                }
+            }
+        }
+        if all_idle {
+            debug_assert!(pending.is_none(), "pending burst publishes a finite minimum");
+            return profile;
+        }
+
+        // Resolve the pending burst against the fresh horizon. The undo
+        // journal and the pending handoff always agree: the journal holds
+        // redo entries exactly while a burst awaits resolution.
+        debug_assert_eq!(log.is_pending(), pending.is_some());
+        if let Some(p) = pending.take() {
+            if p.last_key.0 .0 < horizon {
+                // Commit: every speculated event is provably final. The
+                // buffered own-shard sends re-enter the queue (their
+                // arrivals all key after the burst's pops); cross-shard
+                // sends ride this round's outboxes — each arrival is at
+                // or beyond its receiver's current bound, so at worst it
+                // triggers the receiver's own straggler rollback.
+                profile.committed += 1;
+                profile.committed_span += p.last_key.0 .0 - p.first_at.0;
+                log.resolve();
+                for t in p.local {
+                    shard.push(t);
+                }
+                for (d, buf) in p.cross.into_iter().enumerate() {
+                    out[d].extend(buf);
+                }
+            } else {
+                // Not fully covered: retry conservatively rather than
+                // idling on an uncommitted burst (livelock prevention —
+                // the conservative drain below always makes progress).
+                shard.rollback_burst(&mut log);
+                profile.rollbacks += 1;
+            }
+        }
+
+        // Inbound transits enter the queue only now, after any rollback
+        // rewound the cursor — their ring/far placement must be computed
+        // against the rewound position.
+        for t in inbox.drain(..) {
+            shard.push(t);
+        }
+
+        // Conservative window, identical to exec::par (and automatically
+        // the in-order re-execution of anything a rollback undid).
+        let own_cap = own.saturating_add(bounds.min().saturating_mul(batch));
+        let drained_to = {
+            let guard = Cell::new(horizon.min(own_cap));
+            let mut emit = |t: Transit<P::Msg>| {
+                let d = shard_of(starts, t.flight.dst);
+                guard.set(guard.get().min(t.flight.at.0.saturating_add(bounds.get(d, idx))));
+                out[d].push(t);
+            };
+            shard.run_window_dyn(sx, &|| Time(guard.get()), &mut emit);
+            guard.get()
+        };
+
+        // Speculate past the conservative bound: up to `batch` extra
+        // minimum-latency windows, hard-capped by the queue's rewind
+        // fence (the burst must stay undoable).
+        if speculate {
+            let cap = drained_to
+                .saturating_add(bounds.min().saturating_mul(batch))
+                .min(shard.spec_fence().0);
+            if cap > drained_to && shard.peek_at().is_some_and(|t| t.0 < cap) {
+                bursts += 1;
+                shard.begin_burst(&mut log);
+                let spec_bound = Cell::new(cap);
+                let mut local: Vec<Transit<P::Msg>> = Vec::new();
+                let mut cross: Vec<Vec<Transit<P::Msg>>> =
+                    (0..n).map(|_| Vec::new()).collect();
+                {
+                    let mut emit = |t: Transit<P::Msg>| {
+                        let d = shard_of(starts, t.flight.dst);
+                        if d == idx {
+                            // Buffered until commit, so the burst must
+                            // not pop past its arrival: anything later in
+                            // the queue would jump the canonical order.
+                            spec_bound.set(spec_bound.get().min(t.flight.at.0));
+                            local.push(t);
+                        } else {
+                            cross[d].push(t);
+                        }
+                    };
+                    shard.run_window_spec(sx, &|| Time(spec_bound.get()), &mut emit, &mut log);
+                }
+                if let Some(last_key) = log.last_key() {
+                    profile.speculated += 1;
+                    let first_at = log.first_at().expect("non-empty burst");
+                    pending = Some(PendingBurst { last_key, first_at, local, cross });
+                } else {
+                    debug_assert!(local.is_empty(), "emissions without pops");
+                }
+            }
+        }
+
+        flush(&mut out, sync, idx);
+        sync.barrier.wait();
+    }
+}

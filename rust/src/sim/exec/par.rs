@@ -14,39 +14,51 @@
 //!
 //! - at the round barrier each shard publishes `min_S`, the time of its
 //!   earliest pending event (`u64::MAX` when idle);
-//! - any event a shard `B` processes this round is at `t ≥ min_B`, so
-//!   every transit `B` can still emit arrives at `≥ min_B + L`, where `L`
-//!   is [`crate::net::Fabric::min_latency`];
+//! - windows are **topology-aware**: the lookahead from shard `B` to
+//!   shard `A` is not the fabric-wide [`crate::net::Fabric::min_latency`]
+//!   `L` but the per-pair entry `W[B][A]` of a [`BoundMatrix`] — the
+//!   min-plus (Floyd–Warshall) closure over per-pair direct bounds
+//!   derived from [`crate::net::Topology`] hop classes (loopback /
+//!   same-leaf / cross-leaf). Any event `B` processes this round is at
+//!   `t ≥ min_B`, and any causal chain from it that ends in a transit
+//!   into `A` — directly, or relayed through any other shards — pays at
+//!   least the closure bound, so it arrives at `≥ min_B + W[B][A]`. (The
+//!   closure matters: two same-leaf hops can undercut one cross-leaf
+//!   hop, so the direct pairwise bound alone would be unsound for
+//!   relayed chains. Core-local timers never cross shards and therefore
+//!   never weaken a cross-shard bound.);
 //! - shard `A` may therefore safely process events strictly before
-//!   `horizon_A = min over B≠A of (min_B + L)` as far as *other shards'
-//!   queued events* are concerned — everything they could still emit
-//!   lands at or beyond it. Idle shards contribute nothing
-//!   (`u64::MAX`), so a shard running alone (a straggler tail, the final
-//!   drain) is not throttled by the fleet-wide minimum;
+//!   `horizon_A = min over B≠A of (min_B + W[B][A])` as far as *other
+//!   shards' queued events* are concerned. Idle shards contribute
+//!   nothing (`u64::MAX`), so a shard running alone (a straggler tail,
+//!   the final drain) is not throttled by the fleet-wide minimum; and
+//!   leaf-local neighbours throttle each other far less than cross-spine
+//!   pairs, which is the whole point;
 //! - the horizon does **not** cover chains `A` itself starts mid-window:
-//!   a transit `A` emits with arrival `a` can wake an idle shard whose
-//!   reply lands as early as `a + L` — potentially before the end of a
-//!   multi-window bound. The **chain guard** closes this: every emission
-//!   tightens the live bound to `min(bound, a + L)`. An emission from an
-//!   event processed at `t` has `a ≥ t + L`, so the guard lands at
-//!   `≥ t + 2L`, above every event already popped — completed work is
-//!   never invalidated, and any reply chain (two or more hops, each
-//!   ≥ L) arrives at or beyond the tightened bound;
+//!   a transit `A` emits into shard `D` with arrival `a` can wake an
+//!   idle shard whose reply lands as early as `a + W[D][A]` —
+//!   potentially before the end of a multi-window bound. The **chain
+//!   guard** closes this: every emission tightens the live bound to
+//!   `min(bound, a + W[D][A])`. An emission from an event processed at
+//!   `t` has `a ≥ t + W[A][D]`, so the guard lands at
+//!   `≥ t + W[A][D] + W[D][A]`, above every event already popped —
+//!   completed work is never invalidated, and any reply chain arrives at
+//!   or beyond the tightened bound;
 //! - transits are exchanged at the barrier after each window, before the
 //!   next round's minima are published.
 //!
-//! The bound is additionally capped at `min_A + k·L` — the **window
-//! coalescing** factor `k` (`NANOSORT_WINDOW_BATCH`, default
-//! [`DEFAULT_WINDOW_BATCH`]) — so one shard never runs unboundedly ahead
-//! of the exchange cadence. At `k = 1` every shard's bound reduces to
-//! `global_min + L`, the classic single-window rule this backend shipped
-//! with (the chain guard cannot bind there: it is always `≥ min_A + 2L`);
-//! larger `k` lets a shard drain up to `k` *quiet* windows per barrier
-//! round — coalescing stretches with no cross-shard emission, which is
-//! exactly when no other shard could interleave a transit (§Perf: at
-//! small tiers the 2-barrier round, not the event work, is the
-//! wall-clock floor). The knob never changes results — horizon + chain
-//! guard close every window's event set for any `k ≥ 1`, and
+//! The bound is additionally capped at `min_A + k·L` (with `L` the
+//! matrix minimum, which equals the classic global `min_latency` — the
+//! loopback diagonal; `matrix_minimum_is_the_conservative_global_bound`
+//! pins adaptive ⊇ conservative) — the **window coalescing** factor `k`
+//! (`NANOSORT_WINDOW_BATCH`, default [`DEFAULT_WINDOW_BATCH`]) — so one
+//! shard never runs unboundedly ahead of the exchange cadence. Larger
+//! `k` lets a shard drain up to `k` *quiet* windows per barrier round —
+//! coalescing stretches with no cross-shard emission, which is exactly
+//! when no other shard could interleave a transit (§Perf: at small
+//! tiers the 2-barrier round, not the event work, is the wall-clock
+//! floor). The knob never changes results — horizon + chain guard close
+//! every window's event set for any `k ≥ 1`, and
 //! `window_batching_is_result_identity` plus
 //! `window_batching_exact_under_cross_shard_reply_chains` in
 //! `sim/engine.rs` pin it.
@@ -130,13 +142,122 @@ pub(crate) fn shard_ranges(
     }
 }
 
-/// Window-barrier synchronization state shared by the workers.
-struct WindowSync<M> {
-    barrier: Barrier,
+/// Per-shard-pair conservative lookahead: `get(from, to)` is a lower
+/// bound on the time between an event processed on shard `from` and the
+/// earliest transit any causal chain it starts can land on shard `to`.
+///
+/// Construction: the direct pairwise bound is minimum serialization plus
+/// the propagation of the cheapest admissible hop class between the two
+/// shards' node ranges — loopback `(0,0)` on the diagonal, same-leaf
+/// `(2,1)` when the shards' leaf intervals intersect, cross-leaf `(4,3)`
+/// otherwise — then closed under min-plus composition (Floyd–Warshall),
+/// because a chain relayed through intermediate shards can undercut the
+/// direct bound (two same-leaf hops are cheaper than one cross-leaf hop
+/// at the paper constants). Perturbations only ever *add* latency (tail,
+/// loss/RTO, contention, oversub spine queueing), so the hop-class floor
+/// is sound under every knob.
+pub(crate) struct BoundMatrix {
+    n: usize,
+    /// Row-major: `w[from * n + to]`.
+    w: Vec<u64>,
+}
+
+impl BoundMatrix {
+    pub fn new(fabric: &Fabric, ranges: &[std::ops::Range<usize>]) -> Self {
+        let (topo, cfg) = (&fabric.topo, &fabric.cfg);
+        let ser = cfg.serialization(0);
+        let loopback = (ser + cfg.propagation(0, 0)).0;
+        let same_leaf = (ser + cfg.propagation(2, 1)).0;
+        let cross_leaf = (ser + cfg.propagation(4, 3)).0;
+        let n = ranges.len();
+        let leaves: Vec<(usize, usize)> = ranges
+            .iter()
+            .map(|r| {
+                if r.is_empty() {
+                    (usize::MAX, 0) // empty interval: intersects nothing
+                } else {
+                    (topo.leaf_of(r.start), topo.leaf_of(r.end - 1))
+                }
+            })
+            .collect();
+        let mut w = vec![0u64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                w[i * n + j] = if i == j {
+                    loopback
+                } else if leaves[i].0 <= leaves[j].1 && leaves[j].0 <= leaves[i].1 {
+                    same_leaf
+                } else {
+                    cross_leaf
+                };
+            }
+        }
+        // Min-plus closure: W[i][j] = min over relay paths of the summed
+        // direct bounds. n = shard count (small), so O(n³) is free.
+        for k in 0..n {
+            for i in 0..n {
+                for j in 0..n {
+                    let via = w[i * n + k].saturating_add(w[k * n + j]);
+                    if via < w[i * n + j] {
+                        w[i * n + j] = via;
+                    }
+                }
+            }
+        }
+        BoundMatrix { n, w }
+    }
+
+    /// Lower bound on `from`-shard → `to`-shard causal influence.
+    pub fn get(&self, from: usize, to: usize) -> u64 {
+        self.w[from * self.n + to]
+    }
+
+    /// Smallest entry — equal to the classic global
+    /// [`crate::net::Fabric::min_latency`] bound (the loopback diagonal),
+    /// so the adaptive matrix strictly dominates the conservative rule.
+    pub fn min(&self) -> u64 {
+        self.w.iter().copied().min().unwrap_or(0)
+    }
+}
+
+/// Window-barrier synchronization state shared by the workers (also used
+/// by the optimistic backend, `exec::opt`).
+pub(crate) struct WindowSync<M> {
+    pub barrier: Barrier,
     /// Per-shard earliest pending event time (u64::MAX = idle).
-    mins: Vec<AtomicU64>,
+    pub mins: Vec<AtomicU64>,
     /// Per-destination-shard mailboxes, drained between windows.
-    inboxes: Vec<Mutex<Vec<Transit<M>>>>,
+    pub inboxes: Vec<Mutex<Vec<Transit<M>>>>,
+}
+
+impl<M> WindowSync<M> {
+    pub fn new(shards: usize) -> Self {
+        WindowSync {
+            barrier: Barrier::new(shards),
+            mins: (0..shards).map(|_| AtomicU64::new(u64::MAX)).collect(),
+            inboxes: (0..shards).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+}
+
+/// Carve the per-node program/slowdown vectors into one [`Shard`] per
+/// range, back to front so the splits are O(shards) rather than
+/// O(nodes · shards).
+pub(crate) fn carve_shards<P: Program>(
+    ranges: &[std::ops::Range<usize>],
+    mut programs: Vec<P>,
+    mut slow: Vec<u32>,
+    fabric: &Fabric,
+    seed: u64,
+) -> Vec<Shard<P>> {
+    let mut shards: Vec<Shard<P>> = Vec::with_capacity(ranges.len());
+    for range in ranges.iter().rev() {
+        let progs = programs.split_off(range.start);
+        let slows = slow.split_off(range.start);
+        shards.push(Shard::new(range.clone(), progs, slows, fabric, seed));
+    }
+    shards.reverse();
+    shards
 }
 
 /// Run `parts` on `threads` worker threads (resolved and > 1), falling
@@ -162,25 +283,12 @@ pub fn run_par<P: Program + Send>(
         return run_seq(parts);
     }
     let batch = resolve_window_batch(window_batch);
+    let bounds = BoundMatrix::new(&parts.fabric, &ranges);
 
     let EngineParts { programs, slow, fabric, core, groups, seed } = parts;
-    let mut programs = programs;
-    let mut slow = slow;
-    // Carve the per-node vectors into shards, back to front so the
-    // splits are O(shards) rather than O(nodes · shards).
-    let mut shards: Vec<Shard<P>> = Vec::with_capacity(ranges.len());
-    for range in ranges.iter().rev() {
-        let progs = programs.split_off(range.start);
-        let slows = slow.split_off(range.start);
-        shards.push(Shard::new(range.clone(), progs, slows, &fabric, seed));
-    }
-    shards.reverse();
+    let shards = carve_shards(&ranges, programs, slow, &fabric, seed);
 
-    let sync = WindowSync {
-        barrier: Barrier::new(shards.len()),
-        mins: (0..shards.len()).map(|_| AtomicU64::new(u64::MAX)).collect(),
-        inboxes: (0..shards.len()).map(|_| Mutex::new(Vec::new())).collect(),
-    };
+    let sync = WindowSync::new(shards.len());
     let starts: Vec<usize> = ranges.iter().map(|r| r.start).collect();
 
     let shards: Vec<Shard<P>> = std::thread::scope(|scope| {
@@ -190,12 +298,13 @@ pub fn run_par<P: Program + Send>(
             .map(|(idx, mut shard)| {
                 let sync = &sync;
                 let starts = &starts;
+                let bounds = &bounds;
                 let fabric: &Fabric = &fabric;
                 let core = &core;
                 let groups = &groups;
                 scope.spawn(move || {
                     let sx = SharedCtx { fabric, core, groups: groups.as_slice() };
-                    worker(&mut shard, idx, &sx, sync, starts, lookahead, batch);
+                    worker(&mut shard, idx, &sx, sync, starts, bounds, batch);
                     shard
                 })
             })
@@ -207,7 +316,7 @@ pub fn run_par<P: Program + Send>(
 }
 
 /// Index of the shard owning `node` (ranges are contiguous + ascending).
-fn shard_of(starts: &[usize], node: usize) -> usize {
+pub(crate) fn shard_of(starts: &[usize], node: usize) -> usize {
     starts.partition_point(|&s| s <= node) - 1
 }
 
@@ -217,7 +326,7 @@ fn worker<P: Program>(
     sx: &SharedCtx<'_>,
     sync: &WindowSync<P::Msg>,
     starts: &[usize],
-    lookahead: Time,
+    bounds: &BoundMatrix,
     batch: u64,
 ) {
     // Per-destination-shard outboxes, flushed under one short lock each
@@ -257,9 +366,10 @@ fn worker<P: Program>(
         sync.mins[idx].store(own, Ordering::SeqCst);
         sync.barrier.wait();
 
-        // horizon = earliest time any *other* shard could still emit a
-        // transit into this shard (min over others of min + L); the own
-        // cap bounds coalescing at `batch` lookahead windows.
+        // horizon = earliest time any *other* shard could still land a
+        // transit in this shard — min over others of min_B plus the
+        // per-pair closure bound W[B][this] (see [`BoundMatrix`]); the
+        // own cap bounds coalescing at `batch` minimum-latency windows.
         let mut horizon = u64::MAX;
         let mut all_idle = true;
         for (j, m) in sync.mins.iter().enumerate() {
@@ -267,28 +377,29 @@ fn worker<P: Program>(
             if v != u64::MAX {
                 all_idle = false;
                 if j != idx {
-                    horizon = horizon.min(v.saturating_add(lookahead.0));
+                    horizon = horizon.min(v.saturating_add(bounds.get(j, idx)));
                 }
             }
         }
         if all_idle {
             return; // global quiescence
         }
-        let own_cap = own.saturating_add(lookahead.0.saturating_mul(batch));
+        let own_cap = own.saturating_add(bounds.min().saturating_mul(batch));
         {
             // Chain guard: the horizon covers events other shards hold
             // *now*, but a transit this shard emits mid-window can wake
             // an idle shard whose reply lands as early as the transit's
-            // arrival + L. Tightening the live bound to that point keeps
-            // coalesced windows closed against two-hop reply chains:
-            // every event already popped ran at t < arrival, and the
-            // guard lands at ≥ arrival + L ≥ t + 2L — above everything
-            // processed. Quiet (emission-free) stretches coalesce freely
-            // up to the `batch` cap.
+            // arrival + W[dst-shard][this]. Tightening the live bound to
+            // that point keeps coalesced windows closed against reply
+            // chains: every event already popped ran at t < arrival, and
+            // the guard lands at ≥ arrival + W[D][A] ≥ t + W[A][D] +
+            // W[D][A] — above everything processed. Quiet (emission-free)
+            // stretches coalesce freely up to the `batch` cap.
             let guard = std::cell::Cell::new(horizon.min(own_cap));
             let mut emit = |t: Transit<P::Msg>| {
-                guard.set(guard.get().min(t.flight.at.0.saturating_add(lookahead.0)));
-                out[shard_of(starts, t.flight.dst)].push(t);
+                let d = shard_of(starts, t.flight.dst);
+                guard.set(guard.get().min(t.flight.at.0.saturating_add(bounds.get(d, idx))));
+                out[d].push(t);
             };
             shard.run_window_dyn(sx, &|| Time(guard.get()), &mut emit);
         }
@@ -298,7 +409,7 @@ fn worker<P: Program>(
 }
 
 /// Hand this window's cross-shard transits to their destination inboxes.
-fn flush<M>(out: &mut [Vec<Transit<M>>], sync: &WindowSync<M>, own: usize) {
+pub(crate) fn flush<M>(out: &mut [Vec<Transit<M>>], sync: &WindowSync<M>, own: usize) {
     for (j, buf) in out.iter_mut().enumerate() {
         debug_assert!(j != own || buf.is_empty(), "own-shard transit routed via outbox");
         if !buf.is_empty() {
@@ -350,6 +461,129 @@ mod tests {
         for (i, r) in ranges.iter().enumerate() {
             assert_eq!(shard_of(&starts, r.start), i);
             assert_eq!(shard_of(&starts, r.end - 1), i);
+        }
+    }
+
+    use crate::net::{NetConfig, Topology};
+
+    fn paper_fabric(nodes: usize) -> Fabric {
+        Fabric::new(Topology::paper(nodes), NetConfig::default(), 7)
+    }
+
+    /// Expected direct bound for a hop class, straight from the config.
+    fn bound_for(f: &Fabric, links: u64, switches: u64) -> u64 {
+        (f.cfg.serialization(0) + f.cfg.propagation(links, switches)).0
+    }
+
+    /// Loopback diagonal: a shard's self-bound is exactly the global
+    /// conservative lookahead (2×NIC overhead + header serialization).
+    #[test]
+    fn matrix_diagonal_is_loopback() {
+        let f = paper_fabric(256);
+        let ranges = shard_ranges(256, 64, false, 4);
+        let m = BoundMatrix::new(&f, &ranges);
+        for i in 0..ranges.len() {
+            assert_eq!(m.get(i, i), f.min_latency().0);
+            assert_eq!(m.get(i, i), bound_for(&f, 0, 0));
+        }
+    }
+
+    /// 4 shards × 64 nodes on radix-64 leaves: every shard is exactly one
+    /// leaf, so every off-diagonal pair is cross-leaf (4 links, 3
+    /// switches) — no closure path can undercut it (any relay would pay
+    /// two cross-leaf hops).
+    #[test]
+    fn matrix_leaf_per_shard_pairs_are_cross_leaf() {
+        let f = paper_fabric(256);
+        let ranges = shard_ranges(256, 64, true, 4);
+        assert_eq!(ranges.len(), 4);
+        let m = BoundMatrix::new(&f, &ranges);
+        let cross = bound_for(&f, 4, 3);
+        for i in 0..4 {
+            for j in 0..4 {
+                if i != j {
+                    assert_eq!(m.get(i, j), cross);
+                }
+            }
+        }
+    }
+
+    /// 128 nodes split four ways (32 nodes each) on radix-64 leaves:
+    /// shards 0,1 share leaf 0 and shards 2,3 share leaf 1, so those
+    /// pairs get the same-leaf bound (2 links, 1 switch); pairs across
+    /// the leaf boundary stay cross-leaf — and here no same-leaf relay
+    /// chain connects them, so the closure leaves the direct bound.
+    #[test]
+    fn matrix_same_leaf_shards_get_the_wide_bound() {
+        let f = paper_fabric(128);
+        let ranges = shard_ranges(128, 64, false, 4);
+        assert_eq!(ranges, vec![0..32, 32..64, 64..96, 96..128]);
+        let m = BoundMatrix::new(&f, &ranges);
+        let same = bound_for(&f, 2, 1);
+        let cross = bound_for(&f, 4, 3);
+        assert!(same < cross);
+        assert_eq!(m.get(0, 1), same);
+        assert_eq!(m.get(2, 3), same);
+        assert_eq!(m.get(0, 2), cross);
+        assert_eq!(m.get(1, 3), cross);
+        assert_eq!(m.get(0, 3), cross);
+    }
+
+    /// Straddling shards chain the leaves together: 150 nodes in three
+    /// 50-node shards put shard 1 across leaves 0 and 1, so shards 0 and
+    /// 2 — though leaf-disjoint — are connected by a two-hop same-leaf
+    /// relay through shard 1. At the paper constants two same-leaf hops
+    /// undercut one cross-leaf hop, and the min-plus closure must take
+    /// the relay path (the direct pairwise rule alone would be unsound
+    /// for exactly this chain).
+    #[test]
+    fn matrix_closure_takes_same_leaf_relays() {
+        let f = paper_fabric(150);
+        let ranges = shard_ranges(150, 64, false, 3);
+        assert_eq!(ranges, vec![0..50, 50..100, 100..150]);
+        let m = BoundMatrix::new(&f, &ranges);
+        let same = bound_for(&f, 2, 1);
+        let cross = bound_for(&f, 4, 3);
+        assert!(2 * same < cross, "paper constants make the relay cheaper");
+        assert_eq!(m.get(0, 1), same, "shares leaf 0");
+        assert_eq!(m.get(1, 2), same, "shares leaf 1");
+        assert_eq!(m.get(0, 2), 2 * same, "closure through the straddler");
+        assert_eq!(m.get(2, 0), 2 * same);
+    }
+
+    /// Partial last leaf: 129 nodes on radix-64 leaves puts one node on
+    /// leaf 2. A final shard straddling leaves [1, 2] keeps the same-leaf
+    /// bound to the leaf-1 shard (interval intersection handles ragged
+    /// tails), while its bound to the leaf-0 shard stays cross-leaf — the
+    /// relay through shard 1 (same + cross) can't beat direct cross-leaf.
+    #[test]
+    fn matrix_partial_last_leaf() {
+        let f = paper_fabric(129);
+        let ranges = vec![0..64, 64..120, 120..129];
+        let m = BoundMatrix::new(&f, &ranges);
+        assert_eq!(m.get(1, 2), bound_for(&f, 2, 1), "leaf-1 overlap");
+        assert_eq!(m.get(0, 1), bound_for(&f, 4, 3));
+        assert_eq!(m.get(2, 0), bound_for(&f, 4, 3));
+        assert_eq!(m.get(0, 2), bound_for(&f, 4, 3));
+    }
+
+    /// Adaptive ⊇ conservative: the matrix minimum equals the old global
+    /// `min_latency` bound on every fleet shape, so every per-pair window
+    /// is at least as wide as the rule it replaces.
+    #[test]
+    fn matrix_minimum_is_the_conservative_global_bound() {
+        for (nodes, threads, aligned) in
+            [(256usize, 4usize, false), (128, 4, false), (150, 3, false), (256, 4, true), (129, 7, false)]
+        {
+            let f = paper_fabric(nodes);
+            let ranges = shard_ranges(nodes, 64, aligned, threads);
+            let m = BoundMatrix::new(&f, &ranges);
+            assert_eq!(m.min(), f.min_latency().0);
+            for i in 0..ranges.len() {
+                for j in 0..ranges.len() {
+                    assert!(m.get(i, j) >= f.min_latency().0, "adaptive below conservative");
+                }
+            }
         }
     }
 

@@ -5,9 +5,10 @@
 //! node programs ([`crate::nanopu::Program`]) over the network fabric
 //! ([`crate::net::Fabric`]) with per-node busy/idle accounting on an exact
 //! integer time grid ([`Time`]); the event loop itself is a pluggable
-//! [`exec::Executor`] backend — sequential ([`exec::SeqExecutor`]) or
-//! deterministic sharded across host threads ([`exec::ParExecutor`]),
-//! byte-identical by construction (DESIGN.md §7).
+//! [`exec::Executor`] backend — sequential ([`exec::SeqExecutor`]),
+//! deterministic sharded across host threads ([`exec::ParExecutor`]), or
+//! optimistic with speculative rollback ([`exec::OptExecutor`]) — all
+//! byte-identical by construction (DESIGN.md §7, §10).
 
 mod engine;
 pub mod exec;
@@ -15,6 +16,6 @@ mod rng;
 mod time;
 
 pub use engine::Engine;
-pub use exec::{NodeStats, RunSummary, MAX_STAGES};
+pub use exec::{ExecKind, ExecProfile, NodeStats, RunSummary, MAX_STAGES};
 pub use rng::SplitMix64;
 pub use time::{Time, CLOCK_HZ, UNITS_PER_CYCLE, UNITS_PER_NS};

@@ -1,0 +1,322 @@
+//! Randomized executor-equivalence campaigns: the fuzzing layer that
+//! gates the optimistic backend (`--exec opt`) and the topology-aware
+//! adaptive windows behind one property — **every** backend
+//! configuration reproduces the sequential reference digest byte for
+//! byte.
+//!
+//! Each case draws a workload at a random tier-sized shape, composes a
+//! random perturbation set (skew, loss + RTO, injected tails,
+//! stragglers, oversubscription — the last only on leaf-multiple
+//! fleets), then runs it under a random backend configuration
+//! ({`par`, `opt`} × threads × `window_batch` × an occasional forced
+//! rollback cadence) and compares conformance digests and rendered
+//! reports against the sequential run of the same scenario. The case
+//! generator is seeded, so a failure reproduces by case index.
+//!
+//! `NANOSORT_FUZZ_CASES` scales the campaign (default 64; CI pins 32 in
+//! the release-profile leg; soak runs can set 1000+).
+
+use nanosort::conformance::{digest_json, Tier, CONFORMANCE_SEED};
+use nanosort::net::NetConfig;
+use nanosort::perturb::{KeyDistribution, Perturbations, StragglerConfig};
+use nanosort::scenario::{registry, RunReport, Scenario};
+use nanosort::service::{self, Mix, SchedPolicy, ServiceConfig};
+use nanosort::sim::{ExecKind, SplitMix64};
+
+fn fuzz_cases() -> usize {
+    match std::env::var("NANOSORT_FUZZ_CASES") {
+        Ok(raw) => raw
+            .parse()
+            .unwrap_or_else(|_| panic!("NANOSORT_FUZZ_CASES must be a number, got {raw:?}")),
+        Err(_) => 64,
+    }
+}
+
+/// Leaf radix of the paper topology: oversubscription forces
+/// leaf-aligned shards, so the oversub knob only composes onto fleets
+/// that span multiple whole leaves.
+const LEAF: usize = 64;
+
+/// One drawn case: a workload shape, an environment, and a backend
+/// configuration. Everything derives from the campaign RNG, so the
+/// whole case replays from its index.
+struct Case {
+    spec: &'static registry::WorkloadSpec,
+    pairs: Vec<(&'static str, u64)>,
+    nodes: usize,
+    net: NetConfig,
+    knobs: Perturbations,
+    seed: u64,
+    exec: ExecKind,
+    threads: usize,
+    window_batch: Option<usize>,
+    force_every: Option<u64>,
+}
+
+impl Case {
+    fn draw(rng: &mut SplitMix64) -> Case {
+        let spec = &registry::WORKLOADS[rng.index(registry::WORKLOADS.len())];
+        // Tier-sized shapes per workload, keeping data-size parameters
+        // consistent with the drawn fleet size.
+        let (pairs, nodes): (Vec<(&'static str, u64)>, usize) = match spec.name {
+            "nanosort" => {
+                let nodes = [16usize, 32, 64, 128, 192][rng.index(5)];
+                let kpn = [4u64, 8, 16][rng.index(3)];
+                let buckets = [4u64, 8, 16][rng.index(3)].min(nodes as u64);
+                let values = rng.chance(1, 3) as u64;
+                (
+                    vec![
+                        ("nodes", nodes as u64),
+                        ("kpn", kpn),
+                        ("buckets", buckets),
+                        ("values", values),
+                    ],
+                    nodes,
+                )
+            }
+            "millisort" => {
+                let cores = [8usize, 16, 32, 64][rng.index(4)];
+                let keys = cores as u64 * [16u64, 32, 64][rng.index(3)];
+                (vec![("cores", cores as u64), ("keys", keys)], cores)
+            }
+            "mergemin" => {
+                let cores = [8usize, 48, 64, 128, 192][rng.index(5)];
+                let vpc = [8u64, 16, 32][rng.index(3)];
+                let incast = [1u64, 2, 4, 8][rng.index(4)];
+                (
+                    vec![("cores", cores as u64), ("vpc", vpc), ("incast", incast)],
+                    cores,
+                )
+            }
+            _ => {
+                let cores = [8usize, 64, 128][rng.index(3)];
+                let lists = [2u64, 3, 4][rng.index(3)];
+                let ids = [16u64, 32, 64][rng.index(3)];
+                (
+                    vec![("cores", cores as u64), ("lists", lists), ("ids", ids)],
+                    cores,
+                )
+            }
+        };
+
+        // Perturbation composite: each knob joins independently.
+        let mut net = NetConfig::default();
+        let mut knobs = Perturbations::default();
+        if rng.chance(1, 3) {
+            knobs.dist = KeyDistribution::ALL[rng.index(KeyDistribution::ALL.len())];
+        }
+        if rng.chance(1, 3) {
+            net.loss_prob = (200 + rng.next_u64() % 1800, 10_000);
+            net.rto_ns = 3_000 + rng.next_u64() % 5_000;
+        }
+        if rng.chance(1, 4) {
+            net.tail_prob = (1, 20 + rng.next_u64() % 80);
+            net.tail_extra_ns = 500 + rng.next_u64() % 3_500;
+        }
+        if rng.chance(1, 4) {
+            knobs.stragglers = StragglerConfig {
+                count: 1 + rng.index(3),
+                factor: 2 + (rng.next_u64() % 7) as u32,
+            };
+        }
+        if rng.chance(1, 4) && nodes >= 2 * LEAF && nodes % LEAF == 0 {
+            net.oversub = [4u64, 16, 64][rng.index(3)];
+        }
+        if rng.chance(1, 8) {
+            net.multicast = false;
+        }
+
+        // Backend configuration under test.
+        let exec = if rng.chance(1, 2) { ExecKind::Opt } else { ExecKind::Par };
+        let threads = [2usize, 3, 4, 8][rng.index(4)];
+        let window_batch = match rng.index(4) {
+            0 => None,
+            1 => Some(1),
+            2 => Some(4),
+            _ => Some(32),
+        };
+        let force_every = (exec == ExecKind::Opt && rng.chance(1, 4))
+            .then(|| 1 + rng.next_u64() % 4);
+
+        Case {
+            spec,
+            pairs,
+            nodes,
+            net,
+            knobs,
+            seed: rng.next_u64(),
+            exec,
+            threads,
+            window_batch,
+            force_every,
+        }
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "{} {:?} nodes={} exec={} threads={} wb={:?} force={:?} oversub={} loss={:?} \
+             stragglers={} dist={} seed={:#x}",
+            self.spec.name,
+            self.pairs,
+            self.nodes,
+            self.exec.name(),
+            self.threads,
+            self.window_batch,
+            self.force_every,
+            self.net.oversub,
+            self.net.loss_prob,
+            self.knobs.stragglers.count,
+            self.knobs.dist.name(),
+            self.seed
+        )
+    }
+
+    /// Run this case's scenario under an explicit backend configuration.
+    fn run(
+        &self,
+        exec: ExecKind,
+        threads: usize,
+        window_batch: Option<usize>,
+        force_every: Option<u64>,
+    ) -> RunReport {
+        let params = registry::params_from_pairs(self.spec, &self.pairs).unwrap();
+        let mut scenario = Scenario::from_dyn((self.spec.build)(&params).unwrap())
+            .nodes(self.nodes)
+            .net(self.net.clone())
+            .perturb(self.knobs.clone())
+            .seed(self.seed)
+            .threads(threads)
+            .exec(exec);
+        if let Some(k) = window_batch {
+            scenario = scenario.window_batch(k);
+        }
+        if let Some(n) = force_every {
+            scenario = scenario.force_rollback_every(n);
+        }
+        scenario
+            .run()
+            .unwrap_or_else(|e| panic!("{}: {e:#}", self.label()))
+    }
+}
+
+fn assert_case_identical(case_no: usize, label: &str, seq: &RunReport, got: &RunReport) {
+    assert_eq!(
+        digest_json(seq, "fuzz"),
+        digest_json(got, "fuzz"),
+        "case {case_no} [{label}]: digest diverged from SeqExecutor"
+    );
+    assert_eq!(
+        seq.summary.node_stats, got.summary.node_stats,
+        "case {case_no} [{label}]: per-node stats diverged"
+    );
+    assert_eq!(
+        seq.summary.net, got.summary.net,
+        "case {case_no} [{label}]: net counters diverged"
+    );
+    assert_eq!(seq.render(), got.render(), "case {case_no} [{label}]: render diverged");
+}
+
+/// The campaign: every drawn (scenario, backend) configuration must
+/// reproduce the sequential digest byte for byte.
+#[test]
+fn randomized_configs_reproduce_the_sequential_digest() {
+    let cases = fuzz_cases();
+    let mut rng = SplitMix64::new(0x4655_5A5A_4E53_5254); // "FUZZ NSRT"
+    let mut opt_cases = 0usize;
+    for case_no in 0..cases {
+        let case = Case::draw(&mut rng);
+        let seq = case.run(ExecKind::Seq, 1, None, None);
+        let got = case.run(case.exec, case.threads, case.window_batch, case.force_every);
+        assert_case_identical(case_no, &case.label(), &seq, &got);
+        if case.exec == ExecKind::Opt {
+            opt_cases += 1;
+            let p = &got.summary.profile;
+            assert_eq!(
+                p.speculated,
+                p.committed + p.rollbacks,
+                "case {case_no} [{}]: every speculative burst must resolve exactly once",
+                case.label()
+            );
+        }
+    }
+    // The exec draw is a fair coin; a campaign that never exercised the
+    // optimistic backend tests nothing new.
+    assert!(opt_cases > 0, "campaign of {cases} cases never drew --exec opt");
+}
+
+/// Forced-rollback property: with `force_rollback_every(1)` every
+/// speculative burst is rolled back and re-executed conservatively, and
+/// the result must still be byte-identical — including under loss + RTO
+/// and stragglers, where re-execution replays retransmit timers and
+/// slowdown factors.
+#[test]
+fn forced_rollbacks_are_result_invisible() {
+    let knob_sets: &[(&str, NetConfig, Perturbations)] = &[
+        ("clean", NetConfig::default(), Perturbations::default()),
+        (
+            "loss+rto",
+            NetConfig { loss_prob: (1000, 10_000), rto_ns: 5_000, ..NetConfig::default() },
+            Perturbations::default(),
+        ),
+        (
+            "stragglers",
+            NetConfig::default(),
+            Perturbations {
+                stragglers: StragglerConfig { count: 2, factor: 8 },
+                ..Default::default()
+            },
+        ),
+    ];
+    for spec in registry::WORKLOADS {
+        for (label, net, knobs) in knob_sets {
+            let run = |exec: ExecKind, threads: usize, force: Option<u64>| {
+                let params = registry::params_from_pairs(spec, spec.smoke).unwrap();
+                let nodes = params.u64(spec.nodes_param.name).unwrap() as usize;
+                let mut scenario = Scenario::from_dyn((spec.build)(&params).unwrap())
+                    .nodes(nodes)
+                    .net(net.clone())
+                    .perturb(knobs.clone())
+                    .seed(CONFORMANCE_SEED)
+                    .threads(threads)
+                    .exec(exec);
+                if let Some(n) = force {
+                    scenario = scenario.force_rollback_every(n);
+                }
+                scenario.run().unwrap_or_else(|e| panic!("{} [{label}]: {e:#}", spec.name))
+            };
+            let seq = run(ExecKind::Seq, 1, None);
+            let forced = run(ExecKind::Opt, 3, Some(1));
+            assert_case_identical(0, &format!("{} {label} force=1", spec.name), &seq, &forced);
+            let p = &forced.summary.profile;
+            assert_eq!(
+                p.committed, 0,
+                "{} [{label}]: force=1 must roll back every burst",
+                spec.name
+            );
+            assert_eq!(p.rollbacks, p.speculated, "{} [{label}]", spec.name);
+        }
+    }
+}
+
+/// The service opts out of speculation (`speculation_safe() == false`:
+/// destructive worker-slot handoff + `Arc`-shared scheduler state), so
+/// `--exec opt` must take the conservative path — zero speculative
+/// bursts — and stay byte-identical to the sequential reference.
+#[test]
+fn service_smoke_under_opt_is_byte_identical_without_speculation() {
+    let (workers, arrivals) = service::service_tier(Tier::Smoke, Mix::Nanosort);
+    let run = |exec: ExecKind, threads: usize| {
+        let mut cfg = ServiceConfig::new(workers, arrivals.clone(), SchedPolicy::Fifo)
+            .expect("service config");
+        cfg.threads = threads;
+        cfg.exec = exec;
+        service::run_service(&cfg, CONFORMANCE_SEED).expect("service run")
+    };
+    let seq = run(ExecKind::Seq, 1);
+    let opt = run(ExecKind::Opt, 3);
+    assert_eq!(
+        service::service_digest(&seq, "fuzz"),
+        service::service_digest(&opt, "fuzz"),
+        "service digest must be executor-invariant"
+    );
+}
