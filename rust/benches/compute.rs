@@ -1,17 +1,22 @@
 //! Data-plane kernel microbenchmarks: `sort` / `sort_pairs` / `partition`
-//! on the native (comparison) and radix (count-then-scatter) planes at
-//! 2^10 .. 2^20 keys, so the kernel win is visible independent of the
-//! simulator. (Criterion-style output from the in-repo harness — the
-//! offline registry has no criterion; see DESIGN.md "Dependency
-//! substitutions".)
+//! on the native (comparison) plane and on each radix kernel family the
+//! tuner can dispatch (`lsb`, `ska`, the parallel pair, and the `auto`
+//! policy itself) at 2^10 .. 2^20 keys, so the per-kernel win — and the
+//! tuner's choice quality — is visible independent of the simulator.
+//! (Criterion-style output from the in-repo harness — the offline
+//! registry has no criterion; see DESIGN.md "Dependency substitutions".)
 //!
 //! Run: `cargo bench --bench compute [-- --quick]` (quick caps at 2^16).
 
 #[path = "common.rs"]
 mod common;
 
+use std::sync::Arc;
+
 use common::{fmt_t, section, Bench};
-use nanosort::compute::{LocalCompute, NativeCompute, RadixCompute};
+use nanosort::compute::{LocalCompute, NativeCompute, RadixCompute, TunerOverride};
+use nanosort::pool::WorkerPool;
+use nanosort::sim::exec::resolve_threads;
 use nanosort::sim::SplitMix64;
 
 fn keys(n: usize) -> Vec<u64> {
@@ -23,13 +28,31 @@ fn label(kernel: &str, plane: &str, n: usize) -> &'static str {
     Box::leak(format!("{kernel}/{plane}/n=2^{}", n.trailing_zeros()).into_boxed_str())
 }
 
+/// The benched planes: the oracle, the auto tuner, and each forced
+/// radix family. `par` gets the host's full budget; the sequential
+/// families run on a budget-1 pool so their numbers are pure kernel.
+fn planes() -> Vec<(&'static str, Arc<dyn LocalCompute>)> {
+    let solo = || Arc::new(WorkerPool::new(1));
+    vec![
+        ("native", Arc::new(NativeCompute)),
+        ("auto", Arc::new(RadixCompute::forced(None, solo()))),
+        ("lsb", Arc::new(RadixCompute::forced(Some(TunerOverride::Lsb), solo()))),
+        ("ska", Arc::new(RadixCompute::forced(Some(TunerOverride::Ska), solo()))),
+        (
+            "par",
+            Arc::new(RadixCompute::forced(
+                Some(TunerOverride::Par),
+                Arc::new(WorkerPool::new(resolve_threads(0))),
+            )),
+        ),
+    ]
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let max_pow = if quick { 16 } else { 20 };
     let sizes: Vec<usize> = (10..=max_pow).step_by(2).map(|p| 1usize << p).collect();
-    let native = NativeCompute;
-    let radix = RadixCompute;
-    let planes: [(&str, &dyn LocalCompute); 2] = [("native", &native), ("radix", &radix)];
+    let planes = planes();
 
     for &n in &sizes {
         let samples = if n >= 1 << 18 { 5 } else { 10 };
@@ -37,13 +60,13 @@ fn main() {
 
         section(&format!("sort — {n} keys"));
         let mut means = Vec::new();
-        for (name, plane) in planes {
+        for (name, plane) in &planes {
             let mean = Bench::new(label("sort", name, n)).samples(samples).run(|| {
                 let mut k = base.clone();
                 plane.sort(&mut k);
                 k[0]
             });
-            means.push((name, mean));
+            means.push((*name, mean));
         }
         speedup_line(&means);
 
@@ -51,32 +74,38 @@ fn main() {
         let pairs: Vec<(u64, u64)> =
             base.iter().enumerate().map(|(i, &k)| (k, i as u64)).collect();
         let mut means = Vec::new();
-        for (name, plane) in planes {
+        for (name, plane) in &planes {
             let mean = Bench::new(label("sort_pairs", name, n)).samples(samples).run(|| {
                 let mut p = pairs.clone();
                 plane.sort_pairs(&mut p);
                 p[0].1
             });
-            means.push((name, mean));
+            means.push((*name, mean));
         }
         speedup_line(&means);
 
+        // Partition has one radix implementation — no per-family rows.
         section(&format!("partition — {n} keys, 15 pivots (NanoSort shuffle shape)"));
         let mut pivots = keys(15);
         pivots.sort_unstable();
         let mut means = Vec::new();
-        for (name, plane) in planes {
+        for (name, plane) in planes.iter().take(2) {
             let mean = Bench::new(label("partition", name, n)).samples(samples).run(|| {
                 plane.partition(&base, &pivots).len()
             });
-            means.push((name, mean));
+            means.push((*name, mean));
         }
         speedup_line(&means);
     }
 }
 
+/// Speedups of every plane relative to the first (the native oracle).
 fn speedup_line(means: &[(&str, f64)]) {
-    if let [(a, ta), (b, tb)] = means {
-        println!("    -> {a} {} vs {b} {} ({:.2}x)", fmt_t(*ta), fmt_t(*tb), ta / tb.max(1e-12));
+    if let Some(((base, tb), rest)) = means.split_first() {
+        let cells: Vec<String> = rest
+            .iter()
+            .map(|(name, t)| format!("{name} {} ({:.2}x)", fmt_t(*t), tb / t.max(1e-12)))
+            .collect();
+        println!("    -> {base} {} vs {}", fmt_t(*tb), cells.join(", "));
     }
 }

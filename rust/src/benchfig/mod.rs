@@ -21,11 +21,12 @@ use crate::coordinator::{RunOptions, Table};
 
 /// All figure/table ids in paper order (plus the conformance-tier
 /// `paperscale` summary, the sweep-driven `skewsweep`/`tailsweep`
-/// sensitivity studies, and the service-layer `loadsweep`).
+/// sensitivity studies, the service-layer `loadsweep`, and the
+/// host-kernel `tunersweep`).
 pub const ALL_FIGURES: &[&str] = &[
     "table1", "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "12", "13", "14",
     "15", "multicast", "16", "headline", "table2", "ablation", "paperscale", "skewsweep",
-    "tailsweep", "loadsweep",
+    "tailsweep", "loadsweep", "tunersweep",
 ];
 
 /// Run one figure/table by id; returns the report tables.
@@ -56,8 +57,72 @@ pub fn run_figure(id: &str, opts: &RunOptions) -> Result<Vec<Table>> {
         "skewsweep" => vec![crate::perturb::sweep::skew_sweep_figure(opts)?],
         "tailsweep" => vec![crate::perturb::sweep::tail_sweep_figure(opts)?],
         "loadsweep" => vec![crate::service::loadsweep_figure(opts)?],
+        "tunersweep" => vec![tunersweep(opts)?],
         other => bail!("unknown figure id {other:?}; ids: {}", ALL_FIGURES.join(", ")),
     })
+}
+
+/// `tunersweep`: the same NanoSort run under each forced kernel family
+/// (`NANOSORT_TUNER` values), reporting host wall-clock per family with
+/// the §8 invariant asserted on every row — a forced tuner must leave
+/// the rendered report byte-identical to the auto reference.
+fn tunersweep(opts: &RunOptions) -> Result<Table> {
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    use crate::algo::nanosort::NanoSort;
+    use crate::compute::{RadixCompute, TunerOverride};
+    use crate::coordinator::f;
+    use crate::pool::WorkerPool;
+    use crate::scenario::{RunReport, Scenario};
+    use crate::sim::exec::resolve_threads;
+
+    let nodes = if opts.quick { 256 } else { 4096 };
+    let run = |force: Option<TunerOverride>, threads: usize| -> Result<(RunReport, f64)> {
+        let pool = Arc::new(WorkerPool::new(threads));
+        let t0 = Instant::now();
+        let report = Scenario::new(NanoSort {
+            keys_per_node: 16,
+            buckets: 16,
+            ..Default::default()
+        })
+        .nodes(nodes)
+        .seed(opts.seed)
+        .threads(threads)
+        .pool(pool.clone())
+        .compute_with(Arc::new(RadixCompute::forced(force, pool)))
+        .run()?;
+        Ok((report, t0.elapsed().as_secs_f64() * 1e3))
+    };
+
+    let (baseline, base_ms) = run(None, 1)?;
+    let mut table = Table::new(
+        format!("tunersweep — NanoSort nodes={nodes} kpn=16, host wall-clock per kernel family"),
+        &["tuner", "threads", "wall_ms", "vs_auto", "digest"],
+    );
+    table.row(vec!["auto".into(), "1".into(), f(base_ms), "1.00x".into(), "ref".into()]);
+    let rows = [
+        (TunerOverride::Comparative, 1),
+        (TunerOverride::Lsb, 1),
+        (TunerOverride::Ska, 1),
+        (TunerOverride::Par, resolve_threads(0)),
+    ];
+    for (force, threads) in rows {
+        let (report, ms) = run(Some(force), threads)?;
+        if report.render() != baseline.render() {
+            bail!("tuner={} diverged from the auto reference report", force.name());
+        }
+        table.row(vec![
+            force.name().into(),
+            threads.to_string(),
+            f(ms),
+            format!("{:.2}x", base_ms / ms.max(1e-9)),
+            "ok".into(),
+        ]);
+    }
+    table.note("wall-clock is host-dependent; the digest column is the §8 invariant");
+    table.note("simulated makespan is identical by construction — only host time varies");
+    Ok(table)
 }
 
 #[cfg(test)]
@@ -69,7 +134,9 @@ mod tests {
     #[test]
     fn cheap_figures_render() {
         let opts = RunOptions { quick: true, ..Default::default() };
-        for id in ["table1", "1", "2", "3", "4", "6", "7", "8", "skewsweep", "tailsweep"] {
+        for id in
+            ["table1", "1", "2", "3", "4", "6", "7", "8", "skewsweep", "tailsweep", "tunersweep"]
+        {
             let tables = run_figure(id, &opts).unwrap();
             assert!(!tables.is_empty(), "{id}");
             for t in &tables {

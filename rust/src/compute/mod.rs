@@ -7,9 +7,14 @@
 //! - [`NativeCompute`] — pure Rust comparison kernels; the
 //!   differential-testing **oracle**. Every other backend is defined (and
 //!   tested, `rust/tests/compute.rs`) to produce byte-identical outputs.
-//! - [`RadixCompute`] — count-then-scatter LSD radix kernels for the u64
-//!   key workloads (DESIGN.md §8); the default data plane. Identical
-//!   outputs to the oracle by the tie-break contract below, measurably
+//! - [`RadixCompute`] — count-then-scatter radix kernels for the u64 key
+//!   workloads (DESIGN.md §8); the default data plane. A [`Tuner`] picks
+//!   the kernel per block (comparison / LSD / in-place MSD ska /
+//!   parallel out-of-place or regions-style in-place, the last two
+//!   tiling over the worker pool shared with the executor — see
+//!   [`tuner`] and [`crate::pool`]). Identical outputs to the oracle by
+//!   the tie-break contract below regardless of the kernel picked
+//!   (`NANOSORT_TUNER` forces one family for A/B runs), measurably
 //!   faster on large blocks.
 //! - [`XlaCompute`] — the paper-mandated three-layer path: each operation
 //!   executes an AOT-compiled artifact (Pallas kernel → JAX → HLO text →
@@ -40,10 +45,14 @@
 
 mod native;
 mod radix;
+pub mod tuner;
 mod xla_compute;
 
 pub use native::NativeCompute;
 pub use radix::RadixCompute;
+pub use tuner::{
+    Algorithm, StandardTuner, Tuner, TunerOverride, TuningParams, DEFAULT_CROSSOVER,
+};
 pub use xla_compute::XlaCompute;
 
 /// Key-space data operations a simulated core performs.

@@ -1,41 +1,58 @@
-//! Count-then-scatter radix data plane (DESIGN.md §8).
+//! Tuner-dispatched radix data plane (DESIGN.md §8).
 //!
 //! The sort-family workloads move uniform-ish u64 keys, which is exactly
-//! the shape where counting kernels beat comparison sorts (hardware
-//! sorting surveys and distributed radix partitioning both land here):
+//! the shape where counting kernels beat comparison sorts. Since the
+//! tuner layer landed, [`RadixCompute`] is not one kernel but a family
+//! dispatched per block by a [`Tuner`](super::Tuner) (see
+//! [`super::tuner`] for the taxonomy and policy):
 //!
-//! - [`RadixCompute::sort`] / [`RadixCompute::sort_pairs`] — LSD radix
-//!   over 8-bit digits, modeled on the `lsb_radix_sort` kernels of the
-//!   ska-sort family: one histogram pass computes all eight digit
-//!   distributions, trivial digits (every key shares the byte — common
-//!   once keys are confined to a bucket's sub-range) are skipped, and the
-//!   remaining digits scatter between the key buffer and one scratch
-//!   buffer. LSD scatter is stable, which is what makes the pair kernel's
-//!   tie-break ("equal keys keep input order") hold by construction.
-//! - [`RadixCompute::partition`] / [`RadixCompute::partition_pairs`] —
-//!   one tag+count pass, then a direct scatter into per-bucket buffers
-//!   allocated at exact capacity (no push-time reallocation, no
-//!   intermediate bucket-index `Vec` handed back to the caller).
+//! - **comparative** — std comparison sorts below the crossover.
+//! - **lsb** — LSD radix over 8-bit digits, modeled on the
+//!   `lsb_radix_sort` kernels of the ska-sort family: one histogram pass
+//!   computes all eight digit distributions, trivial digits (every key
+//!   shares the byte — common once keys are confined to a bucket's
+//!   sub-range) are skipped, and the remaining digits scatter between
+//!   the key buffer and one scratch buffer. LSD scatter is stable, which
+//!   is what makes the pair kernel's tie-break hold by construction.
+//! - **ska** — MSD at the block's digit level: an in-place American-flag
+//!   cycle-chasing partition for bare keys, a stable out-of-place
+//!   scatter for pairs; each bucket re-enters the tuner one level down,
+//!   so sub-blocks finish on whatever kernel fits their size.
+//! - **mt_oop / regions** — the parallel kernels: a top-byte split into
+//!   ≤ 256 disjoint bucket ranges whose sorts tile across the worker
+//!   pool shared with the executor ([`crate::pool`]). `mt_oop` scatters
+//!   stably out of place then LSD-sorts each bucket (output is
+//!   worker-count independent by construction); `regions` partitions in
+//!   place (unstable → bare keys only).
 //!
-//! Small blocks fall back to comparison sorts: a counting pass over 256
-//! buckets costs more than pdqsort below a few dozen keys, and the
-//! simulated cores hold tens of keys per level at the paper tier. The
-//! fallbacks preserve the same canonical outputs (`sort_unstable` on bare
-//! u64s is indistinguishable from any other correct sort; the pair
-//! fallback is std's stable sort), so the crossover is invisible in
-//! digests — `rust/tests/compute.rs` pins radix-vs-oracle equality across
-//! every input distribution and edge shape.
+//! Every kernel produces the §8-canonical output for its call site, so
+//! the tuner's choice — and the `NANOSORT_TUNER` override — is invisible
+//! in digests; `rust/tests/compute.rs` and `rust/tests/compute_tuner.rs`
+//! pin radix-vs-oracle equality across every algorithm, distribution,
+//! threshold-straddling size, and edge shape.
+//!
+//! [`RadixCompute::partition`] / [`RadixCompute::partition_pairs`] are
+//! single-kernel: one tag+count pass, then a direct scatter into
+//! per-bucket buffers allocated at exact capacity (no push-time
+//! reallocation, no intermediate bucket-index `Vec` handed back).
 
+use std::sync::Arc;
+
+use super::tuner::{
+    Algorithm, KernelCounts, StandardTuner, Tuner, TunerOverride, TuningParams,
+    DEFAULT_CROSSOVER,
+};
 use super::{LocalCompute, NativeCompute};
+use crate::pool::WorkerPool;
 
-/// Digit width of one LSD pass.
+/// Digit width of one radix pass.
 const RADIX_BITS: u32 = 8;
 /// Buckets per pass (2^RADIX_BITS).
 const BUCKETS: usize = 1 << RADIX_BITS;
-/// LSD passes covering a u64.
+/// Radix passes covering a u64.
 const LEVELS: usize = (u64::BITS / RADIX_BITS) as usize;
-/// Below this many elements, comparison sorts win over counting passes.
-const SMALL_SORT: usize = 96;
+/// The most significant digit level (where caller-facing sorts start).
+const TOP_LEVEL: usize = LEVELS - 1;
 /// Pivot-list length up to which the branchless linear scan beats binary
 /// search for bucket tagging.
 const LINEAR_SCAN_PIVOTS: usize = 32;
@@ -43,8 +60,252 @@ const LINEAR_SCAN_PIVOTS: usize = 32;
 /// Radix-kernel implementation of [`LocalCompute`]; the default data
 /// plane (`--compute radix`). Reductions (`min`, `median_combine`) have
 /// no radix structure to exploit and delegate to the oracle.
-#[derive(Debug, Clone, Default)]
-pub struct RadixCompute;
+///
+/// Cloning shares the tuner, worker pool, and kernel-dispatch counters
+/// (all `Arc`), so a plane handed to shard workers and the BENCH
+/// reporter observes one histogram.
+#[derive(Clone)]
+pub struct RadixCompute {
+    tuner: Arc<dyn Tuner>,
+    force: Option<TunerOverride>,
+    crossover: usize,
+    pool: Arc<WorkerPool>,
+    counts: Arc<KernelCounts>,
+}
+
+impl std::fmt::Debug for RadixCompute {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RadixCompute")
+            .field("tuner", &self.tuner.name())
+            .field("force", &self.force)
+            .field("crossover", &self.crossover)
+            .field("threads", &self.pool.budget())
+            .finish()
+    }
+}
+
+impl Default for RadixCompute {
+    /// A sequential plane (pool budget 1, no parallel kernels), still
+    /// honoring `NANOSORT_TUNER` for the sequential families.
+    fn default() -> Self {
+        RadixCompute::with_pool(Arc::new(WorkerPool::new(1)))
+    }
+}
+
+impl RadixCompute {
+    /// A plane backed by `pool` (the budget shared with the executor),
+    /// with the kernel override read from `NANOSORT_TUNER` (panics on a
+    /// malformed value; unset = auto).
+    pub fn with_pool(pool: Arc<WorkerPool>) -> Self {
+        RadixCompute::forced(TunerOverride::from_env(), pool)
+    }
+
+    /// A plane with an explicit override, bypassing the environment —
+    /// what tests and the `tunersweep` benchfig use, so they never
+    /// mutate process-global env state under a parallel test harness.
+    pub fn forced(force: Option<TunerOverride>, pool: Arc<WorkerPool>) -> Self {
+        RadixCompute {
+            tuner: Arc::new(StandardTuner),
+            force,
+            crossover: DEFAULT_CROSSOVER,
+            pool,
+            counts: Arc::new(KernelCounts::default()),
+        }
+    }
+
+    /// Replace the kernel-selection policy.
+    pub fn with_tuner(mut self, tuner: Arc<dyn Tuner>) -> Self {
+        self.tuner = tuner;
+        self
+    }
+
+    /// Override the comparison-fallback crossover (default
+    /// [`DEFAULT_CROSSOVER`]); carried in [`TuningParams`] so policies
+    /// and boundary tests see the same value the dispatcher uses.
+    pub fn with_crossover(mut self, crossover: usize) -> Self {
+        self.crossover = crossover;
+        self
+    }
+
+    /// The forced kernel family, or `"auto"` (BENCH `tuner` field).
+    pub fn tuner_mode(&self) -> &'static str {
+        self.force.map(TunerOverride::name).unwrap_or("auto")
+    }
+
+    /// Per-algorithm dispatch counts so far (BENCH `kernel_histogram`).
+    pub fn kernel_histogram(&self) -> Vec<(&'static str, u64)> {
+        self.counts.snapshot()
+    }
+
+    /// One dispatch decision. The env/explicit override pins depth-0
+    /// (caller-facing) calls only: MSD bucket recursion returns to the
+    /// auto tuner so a forced family still terminates through sensible
+    /// sub-kernels. Stable call sites never get the unstable in-place
+    /// parallel kernel.
+    fn pick(&self, len: usize, level: usize, depth: usize, stable: bool) -> Algorithm {
+        let p = TuningParams {
+            len,
+            level,
+            depth,
+            threads: self.pool.budget(),
+            stable,
+            crossover: self.crossover,
+        };
+        let algo = match self.force {
+            Some(f) if depth == 0 => f.resolve(&p),
+            _ => self.tuner.pick_algorithm(&p),
+        };
+        if stable && algo == Algorithm::Regions {
+            Algorithm::MtOop
+        } else {
+            algo
+        }
+    }
+
+    /// Sort bare keys confined (by the MSD recursion contract) to digit
+    /// levels `0..=level`, dispatching through the tuner.
+    fn sort_keys(&self, keys: &mut [u64], level: usize, depth: usize) {
+        if keys.len() <= 1 {
+            return;
+        }
+        let algo = self.pick(keys.len(), level, depth, false);
+        self.counts.bump(algo);
+        match algo {
+            Algorithm::Comparative => keys.sort_unstable(),
+            Algorithm::Lsb => lsd_sort_slice(keys, |&k| k),
+            Algorithm::Ska => self.ska_sort_keys(keys, level, depth),
+            Algorithm::MtOop => self.mt_oop(keys, |&k| k),
+            Algorithm::Regions => self.regions_sort_keys(keys, depth),
+        }
+    }
+
+    /// Stable pair sort under the same recursion contract.
+    fn sort_pairs_slice(&self, pairs: &mut [(u64, u64)], level: usize, depth: usize) {
+        if pairs.len() <= 1 {
+            return;
+        }
+        let algo = self.pick(pairs.len(), level, depth, true);
+        self.counts.bump(algo);
+        match algo {
+            Algorithm::Comparative => pairs.sort_by_key(|p| p.0),
+            Algorithm::Lsb => lsd_sort_slice(pairs, |p: &(u64, u64)| p.0),
+            Algorithm::Ska => self.msd_pairs(pairs, level, depth),
+            // `pick` sanitizes Regions away for stable call sites.
+            Algorithm::MtOop | Algorithm::Regions => self.mt_oop(pairs, |p: &(u64, u64)| p.0),
+        }
+    }
+
+    /// In-place American-flag MSD pass + per-bucket tuner recursion.
+    /// Unstable (cycle chasing permutes equal keys), so keys only.
+    fn ska_sort_keys(&self, keys: &mut [u64], level: usize, depth: usize) {
+        let counts = flag_partition(keys, level);
+        if level == 0 {
+            return;
+        }
+        let mut rest = keys;
+        for width in counts {
+            let (bucket, tail) = std::mem::take(&mut rest).split_at_mut(width);
+            rest = tail;
+            if bucket.len() > 1 {
+                self.sort_keys(bucket, level - 1, depth + 1);
+            }
+        }
+    }
+
+    /// Stable MSD pass for pairs: out-of-place scatter in input order
+    /// (American-flag swapping would break the §8 tie-break), then
+    /// per-bucket tuner recursion.
+    fn msd_pairs(&self, pairs: &mut [(u64, u64)], level: usize, depth: usize) {
+        let n = pairs.len();
+        let mut counts = [0usize; BUCKETS];
+        for p in pairs.iter() {
+            counts[digit(p.0, level)] += 1;
+        }
+        let trivial = counts.iter().any(|&c| c == n);
+        if !trivial {
+            let mut sums = prefix_sums(&counts);
+            let mut scratch = vec![(0u64, 0u64); n];
+            for p in pairs.iter() {
+                let d = digit(p.0, level);
+                scratch[sums[d]] = *p;
+                sums[d] += 1;
+            }
+            pairs.copy_from_slice(&scratch);
+        }
+        if level == 0 {
+            return;
+        }
+        if trivial {
+            // Every key shares this digit; the whole block continues one
+            // level down as a single bucket.
+            self.sort_pairs_slice(pairs, level - 1, depth + 1);
+            return;
+        }
+        let mut rest = pairs;
+        for width in counts {
+            let (bucket, tail) = std::mem::take(&mut rest).split_at_mut(width);
+            rest = tail;
+            if bucket.len() > 1 {
+                self.sort_pairs_slice(bucket, level - 1, depth + 1);
+            }
+        }
+    }
+
+    /// Parallel stable out-of-place sort: one sequential top-byte
+    /// scatter carves ≤ 256 contiguous bucket ranges in scratch, the
+    /// per-bucket LSD sorts tile across the shared pool, and the result
+    /// copies back. Bucket boundaries and per-bucket outputs are
+    /// data-determined, so the result is identical at any worker count —
+    /// including zero extras, when the tiles just run inline.
+    fn mt_oop<T: Copy + Default + Send, F: Fn(&T) -> u64 + Sync>(&self, items: &mut [T], key: F) {
+        let n = items.len();
+        let mut counts = [0usize; BUCKETS];
+        for item in items.iter() {
+            counts[digit(key(item), TOP_LEVEL)] += 1;
+        }
+        if counts.iter().any(|&c| c == n) {
+            // One bucket holds everything: no split to parallelize over.
+            lsd_sort_slice(items, key);
+            return;
+        }
+        let mut sums = prefix_sums(&counts);
+        let mut scratch = vec![T::default(); n];
+        for item in items.iter() {
+            let d = digit(key(item), TOP_LEVEL);
+            scratch[sums[d]] = *item;
+            sums[d] += 1;
+        }
+        let mut jobs: Vec<&mut [T]> = Vec::new();
+        let mut rest = &mut scratch[..];
+        for width in counts {
+            let (bucket, tail) = std::mem::take(&mut rest).split_at_mut(width);
+            rest = tail;
+            if bucket.len() > 1 {
+                jobs.push(bucket);
+            }
+        }
+        self.pool.run_jobs(jobs, |bucket| lsd_sort_slice(bucket, &key));
+        items.copy_from_slice(&scratch);
+    }
+
+    /// Parallel in-place keys-only sort (regions-sort shape): an
+    /// in-place flag partition at the top byte, then the disjoint bucket
+    /// slices recurse through the tuner across the shared pool.
+    fn regions_sort_keys(&self, keys: &mut [u64], depth: usize) {
+        let counts = flag_partition(keys, TOP_LEVEL);
+        let mut jobs: Vec<&mut [u64]> = Vec::new();
+        let mut rest = keys;
+        for width in counts {
+            let (bucket, tail) = std::mem::take(&mut rest).split_at_mut(width);
+            rest = tail;
+            if bucket.len() > 1 {
+                jobs.push(bucket);
+            }
+        }
+        self.pool
+            .run_jobs(jobs, |bucket| self.sort_keys(bucket, TOP_LEVEL - 1, depth + 1));
+    }
+}
 
 #[inline]
 fn digit(key: u64, level: usize) -> usize {
@@ -74,11 +335,32 @@ fn prefix_sums(counts: &[usize; BUCKETS]) -> [usize; BUCKETS] {
     sums
 }
 
-/// LSD radix sort of `items` by `key`, stable, skipping trivial digits.
-fn lsd_sort<T: Copy + Default, F: Fn(&T) -> u64>(items: &mut Vec<T>, key: F) {
+/// One stable scatter of `src` into `dst` at `level`.
+fn scatter_level<T: Copy, F: Fn(&T) -> u64>(
+    src: &[T],
+    dst: &mut [T],
+    level: usize,
+    sums: &mut [usize; BUCKETS],
+    key: &F,
+) {
+    for item in src {
+        let d = digit(key(item), level);
+        dst[sums[d]] = *item;
+        sums[d] += 1;
+    }
+}
+
+/// LSD radix sort of a slice by `key`, stable, skipping trivial digits.
+/// Ping-pongs between the slice and one scratch buffer; copies back if
+/// the final pass landed in scratch.
+fn lsd_sort_slice<T: Copy + Default, F: Fn(&T) -> u64>(items: &mut [T], key: F) {
     let n = items.len();
+    if n <= 1 {
+        return;
+    }
     let counts = histograms(items, &key);
     let mut scratch: Vec<T> = Vec::new();
+    let mut in_scratch = false;
     for (level, c) in counts.iter().enumerate() {
         if c.iter().any(|&b| b == n) {
             continue; // every key shares this digit: the pass is a no-op
@@ -87,13 +369,47 @@ fn lsd_sort<T: Copy + Default, F: Fn(&T) -> u64>(items: &mut Vec<T>, key: F) {
             scratch.resize(n, T::default());
         }
         let mut sums = prefix_sums(c);
-        for item in items.iter() {
-            let d = digit(key(item), level);
-            scratch[sums[d]] = *item;
-            sums[d] += 1;
+        if in_scratch {
+            scatter_level(&scratch, items, level, &mut sums, &key);
+        } else {
+            scatter_level(items, &mut scratch, level, &mut sums, &key);
         }
-        std::mem::swap(items, &mut scratch);
+        in_scratch = !in_scratch;
     }
+    if in_scratch {
+        items.copy_from_slice(&scratch);
+    }
+}
+
+/// In-place American-flag partition of `keys` on digit `level` using
+/// cycle chasing: hold one key in hand, deposit it at its bucket's head
+/// while picking up the displaced key, until the cycle closes. Returns
+/// the bucket widths (callers derive the sub-ranges). Unstable.
+fn flag_partition(keys: &mut [u64], level: usize) -> [usize; BUCKETS] {
+    let mut counts = [0usize; BUCKETS];
+    for &k in keys.iter() {
+        counts[digit(k, level)] += 1;
+    }
+    let starts = prefix_sums(&counts);
+    let mut heads = starts;
+    let mut ends = [0usize; BUCKETS];
+    for (e, (&s, &c)) in ends.iter_mut().zip(starts.iter().zip(counts.iter())) {
+        *e = s + c;
+    }
+    for b in 0..BUCKETS {
+        while heads[b] < ends[b] {
+            let mut k = keys[heads[b]];
+            let mut d = digit(k, level);
+            while d != b {
+                std::mem::swap(&mut k, &mut keys[heads[d]]);
+                heads[d] += 1;
+                d = digit(k, level);
+            }
+            keys[heads[b]] = k;
+            heads[b] += 1;
+        }
+    }
+    counts
 }
 
 /// Bucket of `key` against sorted `pivots`: `|{i : pivots[i] <= key}|`.
@@ -132,19 +448,11 @@ fn partition_by<T: Copy, F: Fn(&T) -> u64>(
 
 impl LocalCompute for RadixCompute {
     fn sort(&self, keys: &mut Vec<u64>) {
-        if keys.len() < SMALL_SORT {
-            keys.sort_unstable();
-        } else {
-            lsd_sort(keys, |&k| k);
-        }
+        self.sort_keys(keys, TOP_LEVEL, 0);
     }
 
     fn sort_pairs(&self, pairs: &mut Vec<(u64, u64)>) {
-        if pairs.len() < SMALL_SORT {
-            pairs.sort_by_key(|p| p.0); // stable, matching the LSD path
-        } else {
-            lsd_sort(pairs, |p| p.0);
-        }
+        self.sort_pairs_slice(pairs, TOP_LEVEL, 0);
     }
 
     fn min(&self, vals: &[u64]) -> Option<u64> {
@@ -178,15 +486,15 @@ mod tests {
     use super::*;
     use crate::compute::test_support::rand_keys;
 
-    /// Force the radix path regardless of the small-input fallback.
+    /// Force the LSD path regardless of the tuner.
     fn lsd_only(mut keys: Vec<u64>) -> Vec<u64> {
-        lsd_sort(&mut keys, |&k| k);
+        lsd_sort_slice(&mut keys, |&k| k);
         keys
     }
 
     #[test]
     fn lsd_sorts_across_sizes_and_patterns() {
-        for n in [0usize, 1, 2, 3, SMALL_SORT - 1, SMALL_SORT, 1000, 4096] {
+        for n in [0usize, 1, 2, 3, DEFAULT_CROSSOVER - 1, DEFAULT_CROSSOVER, 1000, 4096] {
             let keys = rand_keys(n as u64 + 7, n);
             let mut expect = keys.clone();
             expect.sort_unstable();
@@ -218,9 +526,30 @@ mod tests {
     }
 
     #[test]
+    fn flag_partition_groups_and_preserves_the_multiset() {
+        for (seed, n) in [(21u64, 1usize), (22, 255), (23, 4096)] {
+            let mut keys = rand_keys(seed, n);
+            let mut expect = keys.clone();
+            expect.sort_unstable();
+            let counts = flag_partition(&mut keys, TOP_LEVEL);
+            assert_eq!(counts.iter().sum::<usize>(), n);
+            // Digits ascend across the slice and widths match the counts.
+            let mut at = 0;
+            for (b, &c) in counts.iter().enumerate() {
+                for &k in &keys[at..at + c] {
+                    assert_eq!(digit(k, TOP_LEVEL), b);
+                }
+                at += c;
+            }
+            keys.sort_unstable();
+            assert_eq!(keys, expect, "partition must be a permutation");
+        }
+    }
+
+    #[test]
     fn sort_pairs_is_stable_above_and_below_the_crossover() {
-        let rc = RadixCompute;
-        for n in [10usize, SMALL_SORT, 800] {
+        let rc = RadixCompute::default();
+        for n in [10usize, DEFAULT_CROSSOVER, 800] {
             // Few distinct keys so every key value has many ties; the
             // payload records input position.
             let mut pairs: Vec<(u64, u64)> = rand_keys(n as u64, n)
@@ -233,6 +562,49 @@ mod tests {
             rc.sort_pairs(&mut pairs);
             assert_eq!(pairs, expect, "n={n}");
         }
+    }
+
+    #[test]
+    fn every_forced_family_sorts_identically() {
+        let oracle = NativeCompute;
+        for force in TunerOverride::ALL {
+            for budget in [1usize, 4] {
+                let rc = RadixCompute::forced(Some(force), Arc::new(WorkerPool::new(budget)));
+                let mut keys = rand_keys(0xF0 + budget as u64, 10_000);
+                let mut expect = keys.clone();
+                oracle.sort(&mut expect);
+                rc.sort(&mut keys);
+                assert_eq!(keys, expect, "force={force:?} budget={budget}");
+            }
+        }
+    }
+
+    #[test]
+    fn crossover_is_tunable_and_exact_at_the_boundary() {
+        // A crossover of 10 flips the kernel between 9 and 10 elements;
+        // outputs must be byte-identical on both sides regardless.
+        let rc = RadixCompute::default().with_crossover(10);
+        for n in [9usize, 10, 11] {
+            let mut keys = rand_keys(n as u64, n);
+            let mut expect = keys.clone();
+            expect.sort_unstable();
+            rc.sort(&mut keys);
+            assert_eq!(keys, expect, "n={n}");
+        }
+        // The dispatcher hands the tuned value to the policy.
+        assert_eq!(rc.pick(9, TOP_LEVEL, 0, false), Algorithm::Comparative);
+        assert_eq!(rc.pick(10, TOP_LEVEL, 0, false), Algorithm::Lsb);
+    }
+
+    #[test]
+    fn kernel_histogram_records_dispatches() {
+        let rc = RadixCompute::forced(Some(TunerOverride::Lsb), Arc::new(WorkerPool::new(1)));
+        let mut keys = rand_keys(77, 512);
+        rc.sort(&mut keys);
+        let hist = rc.kernel_histogram();
+        assert_eq!(hist.iter().find(|(k, _)| *k == "lsb").unwrap().1, 1);
+        assert_eq!(rc.tuner_mode(), "lsb");
+        assert_eq!(RadixCompute::default().tuner_mode(), "auto");
     }
 
     #[test]
@@ -254,7 +626,7 @@ mod tests {
 
     #[test]
     fn partition_scatters_in_input_order_with_exact_sizes() {
-        let rc = RadixCompute;
+        let rc = RadixCompute::default();
         let pivots = vec![100u64, 200, 300];
         let keys = rand_keys(5, 400);
         let parts = rc.partition(&keys, &pivots);

@@ -1,0 +1,335 @@
+//! Kernel tuner for the radix data plane (rdst-style `pick_algorithm`).
+//!
+//! [`RadixCompute`](super::RadixCompute) no longer hardwires one kernel:
+//! every `sort`/`sort_pairs` dispatch — top-level calls and per-bucket
+//! MSD recursions alike — asks a [`Tuner`] which [`Algorithm`] to run,
+//! given the block's [`TuningParams`] (length, digit level, recursion
+//! depth, thread budget, stability requirement, comparison crossover).
+//! The tuner picks *wall-clock*, never *results*: each algorithm
+//! produces the §8-canonical output for its call site, so the choice is
+//! digest-invisible by construction and differentially tested against
+//! the `NativeCompute` oracle (`rust/tests/compute_tuner.rs`).
+//!
+//! The kernel families:
+//!
+//! - [`Algorithm::Comparative`] — std comparison sorts (`sort_unstable`
+//!   for bare keys, stable `sort_by_key` for pairs). Wins below the
+//!   crossover, where one counting pass costs more than pdqsort.
+//! - [`Algorithm::Lsb`] — the LSD byte-radix kernel (stable, out of
+//!   place, trivial-digit skip). The workhorse for mid-size blocks.
+//! - [`Algorithm::Ska`] — MSD byte-radix: for keys an in-place
+//!   American-flag (ska-style) cycle-chasing partition; for pairs a
+//!   stable out-of-place scatter. Each bucket recurses *through the
+//!   tuner* at `level - 1`, so small buckets finish on comparison sorts.
+//! - [`Algorithm::MtOop`] — parallel stable out-of-place: one sequential
+//!   top-byte scatter carves ≤ 256 contiguous bucket ranges, then the
+//!   per-bucket LSD sorts tile across the shared worker pool
+//!   ([`crate::pool::WorkerPool`]).
+//! - [`Algorithm::Regions`] — parallel in-place (SPAA'19 regions-sort
+//!   shape): an in-place flag partition at the top byte, then parallel
+//!   per-bucket recursion over disjoint slices. Unstable → keys only;
+//!   stable call sites degrade to [`Algorithm::MtOop`].
+//!
+//! `NANOSORT_TUNER=auto|comparative|lsb|ska|par` forces one family for
+//! A/B runs ([`TunerOverride`], parsed once at plane construction;
+//! malformed values panic — a silently ignored knob would invalidate a
+//! measurement). Digests are tuner-invariant; only wall-clock moves.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::Result;
+
+/// Default comparison-fallback crossover: below this many elements a
+/// comparison sort beats any counting pass. Carried in [`TuningParams`]
+/// (per-plane tunable, `RadixCompute::with_crossover`) rather than
+/// hardwired in the kernels; boundary-tested at 95/96/97 keys.
+pub const DEFAULT_CROSSOVER: usize = 96;
+
+/// A concrete kernel family the dispatcher can run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// std comparison sort (stable for pairs, unstable for keys).
+    Comparative,
+    /// LSD byte radix, stable, out of place.
+    Lsb,
+    /// MSD byte radix (in-place American-flag for keys, stable scatter
+    /// for pairs), per-bucket recursion through the tuner.
+    Ska,
+    /// Parallel stable out-of-place (top-byte scatter + pooled
+    /// per-bucket LSD).
+    MtOop,
+    /// Parallel in-place regions-style (keys only; unstable).
+    Regions,
+}
+
+impl Algorithm {
+    pub const ALL: [Algorithm; 5] = [
+        Algorithm::Comparative,
+        Algorithm::Lsb,
+        Algorithm::Ska,
+        Algorithm::MtOop,
+        Algorithm::Regions,
+    ];
+
+    /// Canonical name (BENCH `kernel_histogram` keys, bench rows).
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Comparative => "comparative",
+            Algorithm::Lsb => "lsb",
+            Algorithm::Ska => "ska",
+            Algorithm::MtOop => "mt_oop",
+            Algorithm::Regions => "regions",
+        }
+    }
+}
+
+/// Everything a [`Tuner`] may condition a kernel choice on.
+#[derive(Debug, Clone, Copy)]
+pub struct TuningParams {
+    /// Elements in the block being dispatched.
+    pub len: usize,
+    /// Digit level the next MSD pass would partition on (7 = top byte,
+    /// 0 = least significant).
+    pub level: usize,
+    /// Recursion depth: 0 for a caller-facing dispatch, +1 per MSD
+    /// bucket recursion. Parallel kernels only engage at depth 0 — the
+    /// sub-buckets they fan out already saturate the pool.
+    pub depth: usize,
+    /// The shared pool's total thread budget (1 = no parallel kernels).
+    pub threads: usize,
+    /// Whether this call site requires the §8 stable tie-break
+    /// (`sort_pairs` does; bare-key `sort` does not — u64 duplicates are
+    /// indistinguishable, so any correct sort is canonical).
+    pub stable: bool,
+    /// Comparison-fallback crossover for this plane
+    /// ([`DEFAULT_CROSSOVER`] unless overridden).
+    pub crossover: usize,
+}
+
+/// A kernel-selection policy. Implementations must be pure functions of
+/// the params (no interior state): the same dispatch sequence must pick
+/// the same kernels on every run, keeping wall-clock measurements
+/// meaningful. Results never depend on the choice — every algorithm is
+/// §8-canonical for the call sites that can pick it.
+pub trait Tuner: Send + Sync {
+    /// Pick the kernel family for one dispatch.
+    fn pick_algorithm(&self, p: &TuningParams) -> Algorithm;
+
+    /// Policy name (diagnostics).
+    fn name(&self) -> &'static str;
+}
+
+/// The default policy: comparison below the crossover, parallel kernels
+/// for large top-level blocks when the pool has threads to give, MSD
+/// (ska) for large sequential blocks, LSD otherwise.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StandardTuner;
+
+impl StandardTuner {
+    /// Minimum block length for the sequential MSD (ska) kernel: below
+    /// this the LSD kernel's single histogram pass wins; above it,
+    /// top-byte partitioning confines keys to bucket sub-ranges whose
+    /// recursive sorts skip most digit passes.
+    pub const SKA_MIN: usize = 4096;
+    /// Minimum top-level block length for the parallel kernels: the
+    /// per-bucket tiles must amortize a pool hand-off each.
+    pub const PAR_MIN: usize = 8192;
+}
+
+impl Tuner for StandardTuner {
+    fn pick_algorithm(&self, p: &TuningParams) -> Algorithm {
+        if p.len < p.crossover {
+            return Algorithm::Comparative;
+        }
+        if p.depth == 0 && p.threads > 1 && p.len >= Self::PAR_MIN {
+            return if p.stable { Algorithm::MtOop } else { Algorithm::Regions };
+        }
+        if p.len >= Self::SKA_MIN && p.level > 0 {
+            // At level 0 an MSD partition *is* the last LSD pass with
+            // nothing left to recurse into; Lsb handles it directly.
+            return Algorithm::Ska;
+        }
+        Algorithm::Lsb
+    }
+
+    fn name(&self) -> &'static str {
+        "standard"
+    }
+}
+
+/// Forced kernel family (`NANOSORT_TUNER`), applied to depth-0
+/// dispatches only — per-bucket recursion returns to the auto tuner, so
+/// a forced MSD family still terminates through sensible sub-kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TunerOverride {
+    Comparative,
+    Lsb,
+    Ska,
+    /// The parallel family: resolves to [`Algorithm::MtOop`] for stable
+    /// call sites, [`Algorithm::Regions`] otherwise.
+    Par,
+}
+
+impl TunerOverride {
+    pub const ALL: [TunerOverride; 4] = [
+        TunerOverride::Comparative,
+        TunerOverride::Lsb,
+        TunerOverride::Ska,
+        TunerOverride::Par,
+    ];
+
+    /// Parse an override value; `"auto"` means "no override" (`None`).
+    pub fn parse(raw: &str) -> Result<Option<TunerOverride>> {
+        Ok(match raw {
+            "auto" => None,
+            "comparative" => Some(TunerOverride::Comparative),
+            "lsb" => Some(TunerOverride::Lsb),
+            "ska" => Some(TunerOverride::Ska),
+            "par" => Some(TunerOverride::Par),
+            other => anyhow::bail!(
+                "unknown tuner override {other:?} (known: auto|comparative|lsb|ska|par)"
+            ),
+        })
+    }
+
+    /// Read `NANOSORT_TUNER` (unset = auto). Malformed values panic,
+    /// matching the strictness of `NANOSORT_WINDOW_BATCH`: an A/B knob
+    /// that silently no-ops would invalidate the measurement it exists
+    /// for. Read once at plane construction, never per dispatch.
+    pub fn from_env() -> Option<TunerOverride> {
+        match std::env::var("NANOSORT_TUNER") {
+            Ok(raw) => TunerOverride::parse(&raw)
+                .unwrap_or_else(|e| panic!("NANOSORT_TUNER: {e}")),
+            Err(_) => None,
+        }
+    }
+
+    /// The `--tuner`/env operand naming this family.
+    pub fn name(self) -> &'static str {
+        match self {
+            TunerOverride::Comparative => "comparative",
+            TunerOverride::Lsb => "lsb",
+            TunerOverride::Ska => "ska",
+            TunerOverride::Par => "par",
+        }
+    }
+
+    /// Resolve the forced family to a concrete algorithm for one
+    /// dispatch (the stability sanitizer for `Par`).
+    pub fn resolve(self, p: &TuningParams) -> Algorithm {
+        match self {
+            TunerOverride::Comparative => Algorithm::Comparative,
+            TunerOverride::Lsb => Algorithm::Lsb,
+            TunerOverride::Ska => Algorithm::Ska,
+            TunerOverride::Par => {
+                if p.stable {
+                    Algorithm::MtOop
+                } else {
+                    Algorithm::Regions
+                }
+            }
+        }
+    }
+}
+
+/// Per-algorithm dispatch counters (BENCH `kernel_histogram`): how often
+/// each kernel family actually ran, including MSD bucket recursions.
+/// Shared across plane clones; relaxed atomics — counts are telemetry,
+/// never results.
+#[derive(Debug, Default)]
+pub struct KernelCounts {
+    counts: [AtomicU64; 5],
+}
+
+impl KernelCounts {
+    pub fn bump(&self, algo: Algorithm) {
+        self.counts[algo as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `(name, count)` per algorithm, in [`Algorithm::ALL`] order.
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        Algorithm::ALL
+            .iter()
+            .map(|&a| (a.name(), self.counts[a as usize].load(Ordering::Relaxed)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(len: usize) -> TuningParams {
+        TuningParams {
+            len,
+            level: 7,
+            depth: 0,
+            threads: 1,
+            stable: false,
+            crossover: DEFAULT_CROSSOVER,
+        }
+    }
+
+    /// Satellite bugfix gate: the crossover sits in `TuningParams`, and
+    /// the boundary is exactly `len < crossover` — pinned at 95/96/97.
+    #[test]
+    fn crossover_boundary_is_exact_at_95_96_97() {
+        let t = StandardTuner;
+        assert_eq!(t.pick_algorithm(&params(95)), Algorithm::Comparative);
+        assert_eq!(t.pick_algorithm(&params(96)), Algorithm::Lsb);
+        assert_eq!(t.pick_algorithm(&params(97)), Algorithm::Lsb);
+        // And it moves with the carried value, not a hidden constant.
+        let custom = TuningParams { crossover: 10, ..params(9) };
+        assert_eq!(t.pick_algorithm(&custom), Algorithm::Comparative);
+        let custom = TuningParams { crossover: 10, ..params(10) };
+        assert_eq!(t.pick_algorithm(&custom), Algorithm::Lsb);
+    }
+
+    #[test]
+    fn standard_tuner_straddles_every_threshold() {
+        let t = StandardTuner;
+        // Sequential ladder: crossover → Lsb → Ska.
+        assert_eq!(t.pick_algorithm(&params(StandardTuner::SKA_MIN - 1)), Algorithm::Lsb);
+        assert_eq!(t.pick_algorithm(&params(StandardTuner::SKA_MIN)), Algorithm::Ska);
+        // Parallel engages only at depth 0 with threads > 1 and len ≥ PAR_MIN.
+        let par = TuningParams { threads: 4, ..params(StandardTuner::PAR_MIN) };
+        assert_eq!(t.pick_algorithm(&par), Algorithm::Regions);
+        let stable = TuningParams { stable: true, ..par };
+        assert_eq!(t.pick_algorithm(&stable), Algorithm::MtOop);
+        let small = TuningParams { threads: 4, ..params(StandardTuner::PAR_MIN - 1) };
+        assert_eq!(t.pick_algorithm(&small), Algorithm::Ska);
+        let deep = TuningParams { depth: 1, ..par };
+        assert_eq!(t.pick_algorithm(&deep), Algorithm::Ska, "no nested parallel fan-out");
+        // At level 0 there is nothing to recurse into: MSD degrades to LSD.
+        let bottom = TuningParams { level: 0, ..params(StandardTuner::SKA_MIN) };
+        assert_eq!(t.pick_algorithm(&bottom), Algorithm::Lsb);
+    }
+
+    #[test]
+    fn override_parses_and_resolves() {
+        assert_eq!(TunerOverride::parse("auto").unwrap(), None);
+        for f in TunerOverride::ALL {
+            assert_eq!(TunerOverride::parse(f.name()).unwrap(), Some(f));
+        }
+        assert!(TunerOverride::parse("bogo").is_err());
+        // Par respects the stability requirement of the call site.
+        assert_eq!(TunerOverride::Par.resolve(&params(10)), Algorithm::Regions);
+        let stable = TuningParams { stable: true, ..params(10) };
+        assert_eq!(TunerOverride::Par.resolve(&stable), Algorithm::MtOop);
+        // The other overrides are unconditional.
+        assert_eq!(TunerOverride::Ska.resolve(&params(1)), Algorithm::Ska);
+    }
+
+    #[test]
+    fn kernel_counts_snapshot_in_canonical_order() {
+        let counts = KernelCounts::default();
+        counts.bump(Algorithm::Lsb);
+        counts.bump(Algorithm::Lsb);
+        counts.bump(Algorithm::Regions);
+        let snap = counts.snapshot();
+        assert_eq!(
+            snap,
+            vec![("comparative", 0), ("lsb", 2), ("ska", 0), ("mt_oop", 0), ("regions", 1)]
+        );
+    }
+}

@@ -24,10 +24,13 @@ pub use digest::digest_json;
 pub use golden::{check_golden, golden_dir, GoldenOutcome};
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::compute::LocalCompute;
 use crate::coordinator::ComputeChoice;
+use crate::pool::WorkerPool;
 use crate::scenario::registry::{self, WorkloadSpec};
 use crate::scenario::{RunReport, Scenario};
 use crate::sim::{ExecKind, ExecProfile};
@@ -161,6 +164,35 @@ pub fn run_tier_exec(
     Ok((report, start.elapsed().as_secs_f64()))
 }
 
+/// [`run_tier_exec`] with an already-built data plane and an explicit
+/// shared worker pool — the entry point `repro paper` uses so the same
+/// plane instance can be interrogated afterwards for its BENCH `tuner` /
+/// `kernel_histogram` fields, and so plane kernels and executor shards
+/// provably share one `--threads` budget ([`crate::pool`]).
+pub fn run_tier_with(
+    spec: &WorkloadSpec,
+    tier: Tier,
+    plane: Arc<dyn LocalCompute>,
+    pool: Arc<WorkerPool>,
+    threads: usize,
+    exec: ExecKind,
+) -> Result<(RunReport, f64)> {
+    let params = registry::params_from_pairs(spec, &tier_params(spec, tier))
+        .with_context(|| format!("{} {} tier params", spec.name, tier.name()))?;
+    let workload = (spec.build)(&params)?;
+    let nodes = params.u64(spec.nodes_param.name)? as usize;
+    let start = std::time::Instant::now();
+    let report = Scenario::from_dyn(workload)
+        .nodes(nodes)
+        .compute_with(plane)
+        .pool(pool)
+        .seed(CONFORMANCE_SEED)
+        .threads(threads)
+        .exec(exec)
+        .run()?;
+    Ok((report, start.elapsed().as_secs_f64()))
+}
+
 /// One `BENCH_<workload>.json` record: the simulated result next to the
 /// wall-clock cost of producing it, so the perf trajectory across PRs is
 /// measurable on both axes. `wall_clock_s` is always the sequential
@@ -202,6 +234,12 @@ pub struct BenchRecord {
     pub committed_window_avg: Option<f64>,
     /// Oracle-plane (native) sequential wall clock, when measured.
     pub native_wall_clock_s: Option<f64>,
+    /// Kernel-tuner mode of the primary plane (`"auto"` or the forced
+    /// `NANOSORT_TUNER` family), when the plane reports one.
+    pub tuner: Option<&'static str>,
+    /// Per-kernel dispatch counts from the primary run, in canonical
+    /// algorithm order (radix plane only; digest-invisible telemetry).
+    pub kernel_histogram: Option<Vec<(&'static str, u64)>>,
     pub events: u64,
     pub msgs_sent: u64,
     pub validated: bool,
@@ -229,6 +267,8 @@ impl BenchRecord {
             rollbacks: None,
             committed_window_avg: None,
             native_wall_clock_s: None,
+            tuner: None,
+            kernel_histogram: None,
             events: report.summary.events,
             msgs_sent: report.summary.net.msgs_sent,
             validated: report.validation.ok(),
@@ -266,6 +306,19 @@ impl BenchRecord {
         self
     }
 
+    /// Attach the primary plane's kernel-tuner telemetry: the tuner mode
+    /// and the per-kernel dispatch histogram
+    /// (`RadixCompute::tuner_mode` / `kernel_histogram`).
+    pub fn with_tuner(
+        mut self,
+        mode: &'static str,
+        histogram: Vec<(&'static str, u64)>,
+    ) -> BenchRecord {
+        self.tuner = Some(mode);
+        self.kernel_histogram = Some(histogram);
+        self
+    }
+
     pub fn to_json(&self) -> String {
         let parallel = match self.parallel {
             Some((threads, wall)) => format!(
@@ -289,12 +342,23 @@ impl BenchRecord {
             ),
             None => String::new(),
         };
+        let tuner = match (&self.tuner, &self.kernel_histogram) {
+            (Some(mode), Some(hist)) => {
+                let cells: Vec<String> =
+                    hist.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+                format!(
+                    "\n  \"tuner\": \"{mode}\",\n  \"kernel_histogram\": {{{}}},",
+                    cells.join(", ")
+                )
+            }
+            _ => String::new(),
+        };
         format!(
             "{{\n  \"workload\": \"{}\",\n  \"tier\": \"{}\",\n  \"nodes\": {},\n  \
              \"keys\": {},\n  \"compute\": \"{}\",\n  \"exec\": \"{}\",\n  \
              \"makespan_us\": {:.3},\n  \
              \"paper_makespan_us\": {:.1},\n  \"wall_clock_s\": {:.3},\n  \
-             \"input_gen_s\": {:.3},\n  \"sim_s\": {:.3},\n  \"validate_s\": {:.3},{}{}{}\n  \
+             \"input_gen_s\": {:.3},\n  \"sim_s\": {:.3},\n  \"validate_s\": {:.3},{}{}{}{}\n  \
              \"events\": {},\n  \"msgs_sent\": {},\n  \"validated\": {}\n}}\n",
             self.workload,
             self.tier,
@@ -311,6 +375,7 @@ impl BenchRecord {
             parallel,
             opt,
             native,
+            tuner,
             self.events,
             self.msgs_sent,
             self.validated
@@ -443,6 +508,38 @@ mod tests {
         let json = record.with_native_baseline(0.25).to_json();
         assert!(json.contains("\"wall_clock_native_s\": 0.250"), "{json}");
         assert!(json.contains("\"compute_speedup\": "), "{json}");
+    }
+
+    /// The tuner telemetry section appears only when attached, and
+    /// serializes the histogram as a canonical-order JSON object.
+    #[test]
+    fn bench_record_carries_tuner_and_kernel_histogram() {
+        let spec = registry::find("mergemin").unwrap();
+        let (report, wall) = run_tier(spec, Tier::Smoke, ComputeChoice::Radix, 1).unwrap();
+        let record = BenchRecord::from_report(&report, Tier::Smoke, wall);
+        assert!(!record.to_json().contains("\"tuner\""), "tuner only when attached");
+        let json = record
+            .with_tuner("auto", vec![("comparative", 12), ("lsb", 3)])
+            .to_json();
+        assert!(json.contains("\"tuner\": \"auto\""), "{json}");
+        assert!(
+            json.contains("\"kernel_histogram\": {\"comparative\": 12, \"lsb\": 3}"),
+            "{json}"
+        );
+    }
+
+    /// `run_tier_with` (explicit plane + pool) matches the
+    /// `ComputeChoice` path digest-for-digest — the contract that lets
+    /// `repro paper` keep a handle on the plane for BENCH telemetry.
+    #[test]
+    fn run_tier_with_matches_the_choice_path() {
+        let spec = registry::find("mergemin").unwrap();
+        let (by_choice, _) = run_tier(spec, Tier::Smoke, ComputeChoice::Radix, 1).unwrap();
+        let pool = Arc::new(WorkerPool::new(1));
+        let plane = Arc::new(crate::compute::RadixCompute::with_pool(pool.clone()));
+        let (by_plane, _) =
+            run_tier_with(spec, Tier::Smoke, plane, pool, 1, ExecKind::default()).unwrap();
+        assert_eq!(digest_json(&by_choice, "smoke"), digest_json(&by_plane, "smoke"));
     }
 
     #[test]

@@ -10,6 +10,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::compute::{LocalCompute, NativeCompute, RadixCompute, XlaCompute};
+use crate::pool::WorkerPool;
 
 /// Which data plane executes node-local compute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -26,12 +27,21 @@ pub enum ComputeChoice {
 
 impl ComputeChoice {
     /// Construct the data plane (shared across executor shards via
-    /// `Arc` — see [`LocalCompute`]'s thread-safety contract). XLA
-    /// requires `make artifacts` to have run on a `pjrt`-featured build.
+    /// `Arc` — see [`LocalCompute`]'s thread-safety contract) with a
+    /// budget-1 worker pool: parallel kernels stay inline. XLA requires
+    /// `make artifacts` to have run on a `pjrt`-featured build.
     pub fn build(self) -> Result<Arc<dyn LocalCompute>> {
+        self.build_pooled(&Arc::new(WorkerPool::new(1)))
+    }
+
+    /// Construct the data plane sharing `pool` with the executor, so the
+    /// radix plane's parallel kernels and the shard workers draw from one
+    /// `--threads` budget ([`crate::pool`]). The other planes have no
+    /// parallel kernels and ignore the pool.
+    pub fn build_pooled(self, pool: &Arc<WorkerPool>) -> Result<Arc<dyn LocalCompute>> {
         Ok(match self {
             ComputeChoice::Native => Arc::new(NativeCompute),
-            ComputeChoice::Radix => Arc::new(RadixCompute),
+            ComputeChoice::Radix => Arc::new(RadixCompute::with_pool(pool.clone())),
             ComputeChoice::Xla => Arc::new(XlaCompute::open_default()?),
         })
     }

@@ -19,11 +19,16 @@
 //! - [`nanopu`] — the nanoPU programming model: register-interface messages,
 //!   software reorder buffer, fire-and-forget sends (§5.2).
 //! - [`compute`] — node-local data plane: [`compute::RadixCompute`]
-//!   (count-then-scatter radix kernels, the default; DESIGN.md §8),
-//!   [`compute::NativeCompute`] (the pure-Rust differential oracle), and
-//!   [`compute::XlaCompute`] (the three-layer path: Pallas → JAX → HLO
-//!   text → PJRT, loaded by [`runtime::XlaEngine`]). Selected with
-//!   `--compute native|radix|xla`; digests are plane-invariant.
+//!   (tuner-dispatched radix kernels, the default; DESIGN.md §8 — a
+//!   [`compute::Tuner`] picks comparison/LSD/ska/parallel per block,
+//!   forceable via `NANOSORT_TUNER`), [`compute::NativeCompute`] (the
+//!   pure-Rust differential oracle), and [`compute::XlaCompute`] (the
+//!   three-layer path: Pallas → JAX → HLO text → PJRT, loaded by
+//!   [`runtime::XlaEngine`]). Selected with `--compute
+//!   native|radix|xla`; digests are plane- and tuner-invariant.
+//! - [`pool`] — the fixed-budget worker pool shared by the parallel
+//!   executors and the parallel compute kernels, so one `--threads N`
+//!   budget covers both layers without oversubscribing the host.
 //! - [`algo`] — NanoSort (the paper's contribution), MilliSort (the
 //!   baseline), MergeMin (the §3.1 design-space probe), set algebra (the
 //!   §3.2 nanoTask workload).
@@ -75,6 +80,7 @@ pub mod graysort;
 pub mod nanopu;
 pub mod net;
 pub mod perturb;
+pub mod pool;
 pub mod runtime;
 pub mod scenario;
 pub mod service;

@@ -60,11 +60,15 @@
 //! `repro sweep --exec E` runs every cell through backend `E` instead of
 //! the sequential reference.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use nanosort::benchfig::{run_figure, ALL_FIGURES};
+use nanosort::compute::RadixCompute;
 use nanosort::conformance::{self, BenchRecord, GoldenOutcome, Tier};
 use nanosort::coordinator::{Args, ComputeChoice};
+use nanosort::pool::WorkerPool;
 use nanosort::net::NetConfig;
 use nanosort::perturb::{self, sweep, Perturbations};
 use nanosort::runtime::XlaEngine;
@@ -440,7 +444,28 @@ fn cmd_paper(mut args: Args) -> Result<()> {
         conformance::CONFORMANCE_SEED,
         compute.name()
     );
-    let (report, wall) = conformance::run_tier(spec, tier, compute, 1)?;
+    // The radix plane is built explicitly (rather than through the
+    // `ComputeChoice` path) so the primary run's tuner mode and kernel
+    // histogram can land in the bench record afterwards. The sequential
+    // primary leg gets a budget-1 pool: parallel kernels stay inline,
+    // and `NANOSORT_TUNER` still selects the sequential families.
+    let radix_plane = if compute == ComputeChoice::Radix {
+        let pool = Arc::new(WorkerPool::new(1));
+        Some((Arc::new(RadixCompute::with_pool(pool.clone())), pool))
+    } else {
+        None
+    };
+    let (report, wall) = match &radix_plane {
+        Some((plane, pool)) => conformance::run_tier_with(
+            spec,
+            tier,
+            plane.clone(),
+            pool.clone(),
+            1,
+            ExecKind::default(),
+        )?,
+        None => conformance::run_tier(spec, tier, compute, 1)?,
+    };
     print!("{}", report.render());
     let us = report.runtime().as_us_f64();
     println!(
@@ -463,6 +488,11 @@ fn cmd_paper(mut args: Args) -> Result<()> {
     let digest = conformance::digest_json(&report, tier.name());
 
     let mut record = BenchRecord::from_report(&report, tier, wall);
+    if let Some((plane, _)) = &radix_plane {
+        // Telemetry from the primary run: which kernel families the
+        // tuner actually dispatched (digest-invisible, BENCH-only).
+        record = record.with_tuner(plane.tuner_mode(), plane.kernel_histogram());
+    }
     if compute == ComputeChoice::Radix {
         // Differential oracle pass: same tier on NativeCompute; the §8
         // contract says the digest must be byte-identical, and the pair

@@ -1,0 +1,292 @@
+//! Shared fixed-budget host worker pool (no work stealing).
+//!
+//! One `--threads N` budget covers *everything* the host parallelizes in
+//! a run: the executor's shard workers ([`crate::sim::exec`]) and the
+//! data plane's parallel kernel tiles ([`crate::compute::RadixCompute`]).
+//! Without a shared budget the two layers compose multiplicatively — S
+//! shard threads × K kernel threads oversubscribes the machine exactly
+//! when both are busiest. The pool makes the budget a single accountable
+//! quantity:
+//!
+//! - **Claims** reserve *extra* (spawned) worker slots ahead of use:
+//!   [`WorkerPool::claim_exact`] is all-or-nothing (the executor takes
+//!   `shards - 1` up front), [`WorkerPool::claim_up_to`] is best-effort
+//!   (kernel tiles take whatever is left, possibly zero — then they run
+//!   inline on the calling thread). A [`Claim`] releases its slots on
+//!   drop, so a finished kernel immediately returns capacity to the next.
+//! - **Live accounting**: every spawned worker registers through
+//!   [`WorkerPool::enter`] for its lifetime. `live > budget` is a bug by
+//!   construction and asserts — the regression gate the contention tests
+//!   pin ([`WorkerPool::max_live`] never exceeds the budget).
+//! - **No stealing, no queues between claims**: [`WorkerPool::run_jobs`]
+//!   fans a job list over the claimed extras plus the calling thread and
+//!   joins before returning. Kernel outputs are scheduling-independent
+//!   (disjoint slices, deterministic per-job results), so the pool never
+//!   touches determinism — only wall-clock.
+//!
+//! The caller's own thread is an implicit slot: a claim may reserve at
+//! most `budget - 1` extras, so `spawned extras + the caller ≤ budget`
+//! holds on every path. Shard workers double as kernel callers — a
+//! kernel invoked from a registered shard worker claims extras from the
+//! same ledger the executor already drew from, which is what keeps the
+//! two layers from compounding.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Fixed-budget worker pool. See the module docs for the accounting
+/// model. Cheap to share (`Arc`); all state is atomic.
+#[derive(Debug)]
+pub struct WorkerPool {
+    /// Total thread budget, including the calling thread (≥ 1).
+    budget: usize,
+    /// Currently claimed extra-worker slots (≤ budget - 1).
+    extras: AtomicUsize,
+    /// Currently registered live spawned workers.
+    live: AtomicUsize,
+    /// High-water mark of `live` (the contention-test assertion target).
+    max_live: AtomicUsize,
+}
+
+impl WorkerPool {
+    /// A pool with `budget` total threads (clamped to ≥ 1; the calling
+    /// thread always counts as one).
+    pub fn new(budget: usize) -> Self {
+        WorkerPool {
+            budget: budget.max(1),
+            extras: AtomicUsize::new(0),
+            live: AtomicUsize::new(0),
+            max_live: AtomicUsize::new(0),
+        }
+    }
+
+    /// Total thread budget (callers size their tiling to this).
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// High-water mark of concurrently live spawned workers. Bounded by
+    /// `budget` — the invariant the pool asserts and tests pin.
+    pub fn max_live(&self) -> usize {
+        self.max_live.load(Ordering::Relaxed)
+    }
+
+    /// Reserve up to `want` extra-worker slots (best-effort; may return
+    /// an empty claim). At most `budget - 1` extras exist in total.
+    pub fn claim_up_to(&self, want: usize) -> Claim<'_> {
+        let cap = self.budget - 1;
+        let mut cur = self.extras.load(Ordering::Relaxed);
+        loop {
+            let grant = want.min(cap.saturating_sub(cur));
+            if grant == 0 {
+                return Claim { pool: self, workers: 0 };
+            }
+            match self.extras.compare_exchange_weak(
+                cur,
+                cur + grant,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Claim { pool: self, workers: grant },
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Reserve exactly `n` extra-worker slots, or nothing (`None`) if
+    /// fewer are free. The executor's all-or-nothing shard claim.
+    pub fn claim_exact(&self, n: usize) -> Option<Claim<'_>> {
+        if n == 0 {
+            return Some(Claim { pool: self, workers: 0 });
+        }
+        let cap = self.budget - 1;
+        let mut cur = self.extras.load(Ordering::Relaxed);
+        loop {
+            if cur + n > cap {
+                return None;
+            }
+            match self.extras.compare_exchange_weak(
+                cur,
+                cur + n,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(Claim { pool: self, workers: n }),
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Register the current (spawned) thread as a live worker for the
+    /// guard's lifetime. Panics if registration would exceed the budget:
+    /// that is an accounting bug, never load.
+    pub fn enter(&self) -> LiveGuard<'_> {
+        let now = self.live.fetch_add(1, Ordering::AcqRel) + 1;
+        assert!(
+            now <= self.budget,
+            "worker pool oversubscribed: {now} live workers > budget {}",
+            self.budget
+        );
+        self.max_live.fetch_max(now, Ordering::AcqRel);
+        LiveGuard { pool: self }
+    }
+
+    /// Run every job in `jobs`, fanning across however many extra
+    /// workers the pool can grant right now (possibly zero → the calling
+    /// thread runs everything inline). Blocks until all jobs finished.
+    ///
+    /// The caller participates without registering: it either already
+    /// holds a slot (a shard worker draining kernel tiles) or is the
+    /// implicit caller slot every claim leaves free. Job pickup order is
+    /// scheduling-dependent, so jobs must be order-independent —
+    /// disjoint `&mut` slices with deterministic per-job results, which
+    /// is exactly what the kernel callers pass.
+    pub fn run_jobs<I: Send>(&self, jobs: Vec<I>, f: impl Fn(I) + Sync) {
+        if jobs.len() <= 1 {
+            for job in jobs {
+                f(job);
+            }
+            return;
+        }
+        let claim = self.claim_up_to(jobs.len() - 1);
+        if claim.workers() == 0 {
+            for job in jobs {
+                f(job);
+            }
+            return;
+        }
+        let queue = Mutex::new(jobs);
+        let drain = |register: bool| {
+            let _guard = register.then(|| self.enter());
+            loop {
+                let job = queue.lock().expect("worker pool job queue").pop();
+                match job {
+                    Some(job) => f(job),
+                    None => break,
+                }
+            }
+        };
+        std::thread::scope(|scope| {
+            for _ in 0..claim.workers() {
+                scope.spawn(|| drain(true));
+            }
+            drain(false);
+        });
+    }
+}
+
+/// RAII reservation of extra-worker slots; releases them on drop.
+#[must_use = "dropping a claim immediately releases its worker slots"]
+pub struct Claim<'a> {
+    pool: &'a WorkerPool,
+    workers: usize,
+}
+
+impl Claim<'_> {
+    /// How many extra workers this claim actually reserved.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+}
+
+impl Drop for Claim<'_> {
+    fn drop(&mut self) {
+        if self.workers > 0 {
+            self.pool.extras.fetch_sub(self.workers, Ordering::AcqRel);
+        }
+    }
+}
+
+/// RAII live-worker registration (see [`WorkerPool::enter`]).
+pub struct LiveGuard<'a> {
+    pool: &'a WorkerPool,
+}
+
+impl Drop for LiveGuard<'_> {
+    fn drop(&mut self) {
+        self.pool.live.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// A pool shared across layers: convenience alias used in signatures.
+pub type SharedPool = Arc<WorkerPool>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn budget_clamps_to_one() {
+        assert_eq!(WorkerPool::new(0).budget(), 1);
+        assert_eq!(WorkerPool::new(1).budget(), 1);
+        assert_eq!(WorkerPool::new(8).budget(), 8);
+    }
+
+    #[test]
+    fn claims_never_exceed_budget_minus_one() {
+        let pool = WorkerPool::new(4);
+        let a = pool.claim_up_to(10);
+        assert_eq!(a.workers(), 3, "budget 4 = caller + 3 extras");
+        let b = pool.claim_up_to(1);
+        assert_eq!(b.workers(), 0, "pool exhausted");
+        assert!(pool.claim_exact(1).is_none());
+        drop(a);
+        let c = pool.claim_exact(2).expect("slots released on drop");
+        assert_eq!(c.workers(), 2);
+        assert_eq!(pool.claim_up_to(5).workers(), 1, "one slot left");
+    }
+
+    #[test]
+    fn claim_exact_is_all_or_nothing() {
+        let pool = WorkerPool::new(3);
+        assert!(pool.claim_exact(3).is_none(), "3 extras > budget-1");
+        let claim = pool.claim_exact(2).unwrap();
+        assert_eq!(claim.workers(), 2);
+        assert!(pool.claim_exact(1).is_none());
+        assert_eq!(pool.claim_exact(0).unwrap().workers(), 0, "empty claim always succeeds");
+    }
+
+    #[test]
+    fn run_jobs_runs_every_job_at_any_budget() {
+        for budget in [1usize, 2, 4, 8] {
+            let pool = WorkerPool::new(budget);
+            let sum = AtomicU64::new(0);
+            pool.run_jobs((1u64..=100).collect(), |j| {
+                sum.fetch_add(j, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 5050, "budget {budget}");
+            assert!(pool.max_live() <= budget, "budget {budget}");
+        }
+    }
+
+    #[test]
+    fn run_jobs_inline_paths_spawn_nothing() {
+        let pool = WorkerPool::new(1);
+        pool.run_jobs(vec![1, 2, 3], |_| {});
+        assert_eq!(pool.max_live(), 0, "budget 1 always runs inline");
+        let pool = WorkerPool::new(8);
+        pool.run_jobs(vec![42], |_| {});
+        assert_eq!(pool.max_live(), 0, "a single job never spawns");
+    }
+
+    #[test]
+    fn live_accounting_tracks_enter_and_release() {
+        let pool = WorkerPool::new(2);
+        {
+            let _g = pool.enter();
+            assert_eq!(pool.max_live(), 1);
+        }
+        let _g1 = pool.enter();
+        let _g2 = pool.enter();
+        assert_eq!(pool.max_live(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "oversubscribed")]
+    fn entering_past_the_budget_panics() {
+        let pool = WorkerPool::new(1);
+        let _a = pool.enter();
+        let _b = pool.enter();
+    }
+}

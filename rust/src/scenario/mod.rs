@@ -60,6 +60,7 @@ use crate::graysort::ValidationReport;
 use crate::nanopu::{Group, Program};
 use crate::net::{Fabric, NetConfig, Topology};
 use crate::perturb::{KeyDistribution, Perturbations};
+use crate::pool::WorkerPool;
 use crate::sim::{Engine, ExecKind, RunSummary, Time, MAX_STAGES};
 
 /// Everything the environment (not the workload) decides about a run.
@@ -93,6 +94,10 @@ pub struct ScenarioEnv {
     /// Test-only optimistic-executor fault hook: force a rollback on
     /// every `n`-th speculative burst. Never changes results.
     pub force_rollback_every: Option<u64>,
+    /// The shared host worker pool ([`crate::pool`]): one `--threads`
+    /// budget covering executor shard workers and parallel compute
+    /// kernels. Never changes results.
+    pub pool: Arc<WorkerPool>,
 }
 
 /// Result-extraction hook: runs after quiescence with the engine summary.
@@ -235,6 +240,7 @@ impl<W: Workload> DynWorkload for W {
         for node in st.picks(env.seed, 0, env.nodes) {
             engine.slow_down(node, st.factor);
         }
+        engine.set_pool(env.pool.clone());
         let summary = engine.run_exec(
             env.exec,
             env.threads,
@@ -288,6 +294,7 @@ pub struct Scenario {
     exec: ExecKind,
     window_batch: Option<usize>,
     force_rollback_every: Option<u64>,
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl Scenario {
@@ -309,6 +316,7 @@ impl Scenario {
             exec: ExecKind::default(),
             window_batch: None,
             force_rollback_every: None,
+            pool: None,
         }
     }
 
@@ -377,6 +385,14 @@ impl Scenario {
         self
     }
 
+    /// Share a host worker pool across runs (the service layer hands
+    /// every job the same budget). Default: a pool sized to
+    /// [`Scenario::threads`], built per run.
+    pub fn pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
     /// Set the full perturbation block (input distribution + stragglers).
     pub fn perturb(mut self, perturb: Perturbations) -> Self {
         self.perturb = perturb;
@@ -399,8 +415,14 @@ impl Scenario {
     /// Build the environment, run to quiescence, extract the report.
     pub fn run(self) -> Result<RunReport> {
         let nodes = self.nodes.unwrap_or_else(|| self.workload.default_nodes());
+        // One pool = one `--threads` budget: a plane built here shares it
+        // with the executor, so shard workers and kernel tiles can never
+        // oversubscribe the host ([`crate::pool`]).
+        let pool = self.pool.clone().unwrap_or_else(|| {
+            Arc::new(WorkerPool::new(crate::sim::exec::resolve_threads(self.threads)))
+        });
         let compute = match self.compute {
-            ComputeSel::Choice(choice) => choice.build()?,
+            ComputeSel::Choice(choice) => choice.build_pooled(&pool)?,
             ComputeSel::Instance(plane) => plane,
         };
         // The XLA data plane drives a single-threaded PJRT client; the
@@ -422,6 +444,7 @@ impl Scenario {
             exec: self.exec,
             window_batch: self.window_batch,
             force_rollback_every: self.force_rollback_every,
+            pool,
         };
         self.workload.run_on(&env)
     }

@@ -278,6 +278,13 @@ pub fn run_service_trace(
         );
     }
     let net = NetConfig { multicast: false, ..cfg.net.clone() };
+    // One pool = one `--threads` budget for the whole service run: the
+    // shard workers below and any parallel kernels in `cfg.compute` draw
+    // from it. (A plane built elsewhere carries its own pool — still a
+    // single budget per plane, its kernels just stay inline here.)
+    let pool = Arc::new(crate::pool::WorkerPool::new(
+        crate::sim::exec::resolve_threads(cfg.threads),
+    ));
 
     // Host-side build: per-job programs and finish hooks through each
     // workload's own `Workload::build`, against a synthesized per-job
@@ -310,6 +317,7 @@ pub fn run_service_trace(
             exec: cfg.exec,
             window_batch: None,
             force_rollback_every: None,
+            pool: pool.clone(),
         };
         let (programs, finish) = build_job(&spec.kind, &env)
             .with_context(|| format!("building job {} ({})", spec.id, spec.kind.workload()))?;
@@ -362,6 +370,7 @@ pub fn run_service_trace(
     for node in st.picks(seed, 0, cfg.workers) {
         engine.slow_down(node, st.factor);
     }
+    engine.set_pool(pool);
     let summary = engine.run_exec(cfg.exec, cfg.threads, None, None);
 
     let records = std::mem::take(&mut *arena.records.lock().unwrap());

@@ -20,12 +20,16 @@
 //! [`Engine::run_exec`] selects any backend by [`ExecKind`] — all
 //! produce byte-identical results (the §7 + §10 determinism contract).
 
+use std::sync::Arc;
+
 use crate::cpu::CoreModel;
 use crate::nanopu::{Group, GroupId, NodeId, Program};
 use crate::net::Fabric;
+use crate::pool::WorkerPool;
 
 use super::exec::{
-    run_seq_inner, EngineParts, ExecKind, Executor, OptExecutor, ParExecutor, RunSummary,
+    resolve_threads, run_seq_inner, EngineParts, ExecKind, Executor, OptExecutor, ParExecutor,
+    RunSummary,
 };
 
 /// The engine: node programs + fabric + core model + groups, ready to be
@@ -40,6 +44,9 @@ pub struct Engine<P: Program> {
     core: CoreModel,
     groups: Vec<Group>,
     seed: u64,
+    /// Shared host worker pool (`None` until a caller provides one or a
+    /// threaded run sizes a default from its `--threads` budget).
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl<P: Program> Engine<P> {
@@ -47,7 +54,16 @@ impl<P: Program> Engine<P> {
     pub fn new(programs: Vec<P>, fabric: Fabric, core: CoreModel, seed: u64) -> Self {
         assert_eq!(programs.len(), fabric.topo.nodes, "program count != topology nodes");
         let n = programs.len();
-        Engine { programs, slow: vec![1; n], fabric, core, groups: Vec::new(), seed }
+        Engine { programs, slow: vec![1; n], fabric, core, groups: Vec::new(), seed, pool: None }
+    }
+
+    /// Share a host worker pool with this run: shard workers and
+    /// parallel compute kernels then draw from one `--threads` budget
+    /// ([`crate::pool`]). The scenario layer always sets this; a run
+    /// without one gets a budget-1 pool (sequential path) or an
+    /// executor-sized fallback (direct threaded `Executor` calls).
+    pub fn set_pool(&mut self, pool: Arc<WorkerPool>) {
+        self.pool = Some(pool);
     }
 
     /// Register a multicast group (a member list or an id range);
@@ -76,6 +92,7 @@ impl<P: Program> Engine<P> {
             core: self.core,
             groups: self.groups,
             seed: self.seed,
+            pool: self.pool.unwrap_or_else(|| Arc::new(WorkerPool::new(1))),
         }
     }
 
@@ -101,12 +118,15 @@ impl<P: Program + Send + Clone> Engine<P> {
     /// through (ignored where meaningless). Results are byte-identical
     /// across every combination.
     pub fn run_exec(
-        self,
+        mut self,
         kind: ExecKind,
         threads: usize,
         window_batch: Option<usize>,
         force_rollback_every: Option<u64>,
     ) -> RunSummary {
+        if self.pool.is_none() {
+            self.pool = Some(Arc::new(WorkerPool::new(resolve_threads(threads))));
+        }
         match kind {
             ExecKind::Seq => self.run(),
             _ if threads == 1 => self.run(),

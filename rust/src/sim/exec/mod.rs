@@ -51,15 +51,19 @@ mod seq;
 
 pub use self::core::{ExecProfile, NodeStats, RunSummary, MAX_STAGES};
 
+use std::sync::Arc;
+
 use crate::cpu::CoreModel;
 use crate::nanopu::{Group, Program};
 use crate::net::Fabric;
+use crate::pool::WorkerPool;
 
 pub(crate) use seq::run_seq as run_seq_inner;
 
 /// Everything an executor needs to run one simulation: the node programs
 /// (index = node id), per-node slowdown factors, the fabric, the core
-/// cost model, the registered multicast groups, and the run seed.
+/// cost model, the registered multicast groups, the run seed, and the
+/// shared host worker pool.
 pub struct EngineParts<P: Program> {
     pub programs: Vec<P>,
     pub slow: Vec<u32>,
@@ -67,6 +71,11 @@ pub struct EngineParts<P: Program> {
     pub core: CoreModel,
     pub groups: Vec<Group>,
     pub seed: u64,
+    /// The `--threads` budget, shared between shard workers and parallel
+    /// compute kernels ([`crate::pool`]): the parallel executors claim
+    /// their `shards - 1` extra slots from it and register every worker,
+    /// so sim threads and kernel tiles can never oversubscribe the host.
+    pub pool: Arc<WorkerPool>,
 }
 
 /// Resolve the crate-wide `--threads` convention: `0` means all

@@ -108,7 +108,17 @@ pub fn run_opt<P: Program + Send + Clone>(
     let bounds = BoundMatrix::new(&parts.fabric, &ranges);
     let speculate = parts.programs.iter().all(|p| p.speculation_safe());
 
-    let EngineParts { programs, slow, fabric, core, groups, seed } = parts;
+    let EngineParts { programs, slow, fabric, core, groups, seed, pool } = parts;
+    // Same shared-budget accounting as `run_par` (see there): undersized
+    // default pools are replaced, then the shard workers are claimed
+    // all-or-nothing for the run.
+    let pool = if pool.budget() >= ranges.len() {
+        pool
+    } else {
+        std::sync::Arc::new(crate::pool::WorkerPool::new(ranges.len()))
+    };
+    let shard_claim =
+        pool.claim_exact(ranges.len() - 1).expect("shard workers exceed the pool budget");
     let shards = carve_shards(&ranges, programs, slow, &fabric, seed);
     let sync = WindowSync::new(shards.len());
     let starts: Vec<usize> = ranges.iter().map(|r| r.start).collect();
@@ -124,7 +134,9 @@ pub fn run_opt<P: Program + Send + Clone>(
                 let fabric: &Fabric = &fabric;
                 let core = &core;
                 let groups = &groups;
+                let pool = &pool;
                 scope.spawn(move || {
+                    let _live = pool.enter();
                     let sx = SharedCtx { fabric, core, groups: groups.as_slice() };
                     let profile = worker(
                         &mut shard, idx, &sx, sync, starts, bounds, batch, speculate,
@@ -136,6 +148,7 @@ pub fn run_opt<P: Program + Send + Clone>(
             .collect();
         handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
     });
+    drop(shard_claim);
 
     let mut profile = ExecProfile::default();
     let mut shards = Vec::with_capacity(results.len());

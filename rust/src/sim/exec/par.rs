@@ -285,7 +285,20 @@ pub fn run_par<P: Program + Send>(
     let batch = resolve_window_batch(window_batch);
     let bounds = BoundMatrix::new(&parts.fabric, &ranges);
 
-    let EngineParts { programs, slow, fabric, core, groups, seed } = parts;
+    let EngineParts { programs, slow, fabric, core, groups, seed, pool } = parts;
+    // Engines built without an explicit shared pool (direct Executor
+    // calls in tests) get one sized to the shard count; a budget below
+    // the shard count cannot host the workers (shard count is decided by
+    // topology + threads before the pool is consulted).
+    let pool = if pool.budget() >= ranges.len() {
+        pool
+    } else {
+        std::sync::Arc::new(crate::pool::WorkerPool::new(ranges.len()))
+    };
+    // All-or-nothing: shard workers are claimed up front for the whole
+    // run; kernel tiles inside the workers draw from what remains.
+    let shard_claim =
+        pool.claim_exact(ranges.len() - 1).expect("shard workers exceed the pool budget");
     let shards = carve_shards(&ranges, programs, slow, &fabric, seed);
 
     let sync = WindowSync::new(shards.len());
@@ -302,7 +315,9 @@ pub fn run_par<P: Program + Send>(
                 let fabric: &Fabric = &fabric;
                 let core = &core;
                 let groups = &groups;
+                let pool = &pool;
                 scope.spawn(move || {
+                    let _live = pool.enter();
                     let sx = SharedCtx { fabric, core, groups: groups.as_slice() };
                     worker(&mut shard, idx, &sx, sync, starts, bounds, batch);
                     shard
@@ -311,6 +326,7 @@ pub fn run_par<P: Program + Send>(
             .collect();
         handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
     });
+    drop(shard_claim);
 
     merge_shards(shards)
 }

@@ -12,7 +12,7 @@ use crate::sim::Time;
 
 /// Run `parts` to quiescence sequentially.
 pub fn run_seq<P: Program>(parts: EngineParts<P>) -> RunSummary {
-    let EngineParts { programs, slow, fabric, core, groups, seed } = parts;
+    let EngineParts { programs, slow, fabric, core, groups, seed, pool: _ } = parts;
     let n = programs.len();
     let mut shard = Shard::new(0..n, programs, slow, &fabric, seed);
     let sx = SharedCtx { fabric: &fabric, core: &core, groups: &groups };

@@ -78,7 +78,7 @@ fn pivot_lists(rng: &mut SplitMix64) -> Vec<Vec<u64>> {
 
 #[test]
 fn sort_matches_oracle_on_every_distribution_and_edge() {
-    let (native, radix) = (NativeCompute, RadixCompute);
+    let (native, radix) = (NativeCompute, RadixCompute::default());
     for (label, block) in all_blocks() {
         let mut a = block.clone();
         let mut b = block;
@@ -90,7 +90,7 @@ fn sort_matches_oracle_on_every_distribution_and_edge() {
 
 #[test]
 fn sort_pairs_matches_oracle_including_tie_order() {
-    let (native, radix) = (NativeCompute, RadixCompute);
+    let (native, radix) = (NativeCompute, RadixCompute::default());
     for (label, block) in all_blocks() {
         // Payload = input position, so any tie-break difference between
         // the planes shows up as a payload mismatch.
@@ -106,7 +106,7 @@ fn sort_pairs_matches_oracle_including_tie_order() {
 
 #[test]
 fn bucketize_and_partition_match_oracle() {
-    let (native, radix) = (NativeCompute, RadixCompute);
+    let (native, radix) = (NativeCompute, RadixCompute::default());
     let mut rng = SplitMix64::new(0xBEEF);
     let pivot_sets = pivot_lists(&mut rng);
     for (label, block) in all_blocks() {
@@ -138,7 +138,7 @@ fn bucketize_and_partition_match_oracle() {
 
 #[test]
 fn min_and_median_combine_match_oracle() {
-    let (native, radix) = (NativeCompute, RadixCompute);
+    let (native, radix) = (NativeCompute, RadixCompute::default());
     for (label, block) in all_blocks() {
         assert_eq!(native.min(&block), radix.min(&block), "min diverged on {label}");
     }

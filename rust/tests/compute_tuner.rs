@@ -1,0 +1,285 @@
+//! Kernel property battery for the tuner-dispatched radix plane
+//! (DESIGN.md §8): every forced `Algorithm` family × every perturbation
+//! distribution × sizes straddling each tuner threshold, byte-compared
+//! to the `NativeCompute` oracle, plus the forced-tuner conformance
+//! matrix proving the tuner is digest-invisible and the shared-pool
+//! contention pins (live workers never exceed the `--threads` budget).
+
+use std::sync::Arc;
+
+use nanosort::algo::millisort::MilliSort;
+use nanosort::algo::nanosort::NanoSort;
+use nanosort::compute::{
+    LocalCompute, NativeCompute, RadixCompute, StandardTuner, TunerOverride, DEFAULT_CROSSOVER,
+};
+use nanosort::conformance::{digest_json, CONFORMANCE_SEED};
+use nanosort::perturb::KeyDistribution;
+use nanosort::pool::WorkerPool;
+use nanosort::scenario::{RunReport, Scenario};
+use nanosort::sim::ExecKind;
+
+/// Every dispatch the tuner can make: `auto` (the `StandardTuner`
+/// policy) plus each forced family. `Par` resolves to `Regions` for
+/// bare keys and `MtOop` for pairs, so both parallel kernels run.
+fn forces() -> Vec<(&'static str, Option<TunerOverride>)> {
+    let mut f: Vec<(&'static str, Option<TunerOverride>)> = vec![("auto", None)];
+    for o in TunerOverride::ALL {
+        f.push((o.name(), Some(o)));
+    }
+    f
+}
+
+fn plane(force: Option<TunerOverride>, budget: usize) -> RadixCompute {
+    RadixCompute::forced(force, Arc::new(WorkerPool::new(budget)))
+}
+
+/// Sizes one below, at, and one above every `StandardTuner` threshold,
+/// so a fencepost slip in any comparison flips at least one cell.
+fn threshold_sizes() -> Vec<usize> {
+    vec![
+        1,
+        2,
+        DEFAULT_CROSSOVER - 1,
+        DEFAULT_CROSSOVER,
+        DEFAULT_CROSSOVER + 1,
+        StandardTuner::SKA_MIN - 1,
+        StandardTuner::SKA_MIN,
+        StandardTuner::SKA_MIN + 1,
+        StandardTuner::PAR_MIN - 1,
+        StandardTuner::PAR_MIN,
+        10_000,
+    ]
+}
+
+/// Edge shapes sized past `SKA_MIN`/`PAR_MIN` so the degenerate inputs
+/// reach the recursive and parallel kernels, not just the crossover
+/// fallback.
+fn edge_blocks() -> Vec<(&'static str, Vec<u64>)> {
+    vec![
+        ("empty", vec![]),
+        ("single", vec![42]),
+        ("single-max", vec![u64::MAX]),
+        ("all-equal", vec![7; 10_000]),
+        (
+            "max-boundary",
+            (0..9_000u64).map(|i| u64::MAX - (i * 37) % 5).collect(),
+        ),
+        (
+            "duplicate-heavy",
+            (0..10_000u64).map(|i| (i * 0x9E37_79B9) % 3).collect(),
+        ),
+    ]
+}
+
+fn keys_for(dist: KeyDistribution, n: usize) -> Vec<u64> {
+    dist.partitioned_keys(0xC0FFEE ^ n as u64, n, 1).into_iter().next().unwrap()
+}
+
+/// Satellite 1, core cell: every forced family sorts every distribution
+/// at every threshold-straddling size byte-identically to the oracle —
+/// keys and pairs both, so the unstable kernels are proven to never
+/// leak into the stable `sort_pairs` path.
+#[test]
+fn every_family_matches_the_oracle_across_distributions_and_thresholds() {
+    for (fname, force) in forces() {
+        for budget in [1usize, 4] {
+            let rc = plane(force, budget);
+            for dist in KeyDistribution::ALL {
+                for n in threshold_sizes() {
+                    let block = keys_for(dist, n);
+                    let mut a = block.clone();
+                    let mut b = block.clone();
+                    NativeCompute.sort(&mut a);
+                    rc.sort(&mut b);
+                    assert_eq!(
+                        a, b,
+                        "sort diverged: tuner={fname} budget={budget} dist={} n={n}",
+                        dist.name()
+                    );
+                    let pairs: Vec<(u64, u64)> =
+                        block.into_iter().enumerate().map(|(i, k)| (k, i as u64)).collect();
+                    let mut a = pairs.clone();
+                    let mut b = pairs;
+                    NativeCompute.sort_pairs(&mut a);
+                    rc.sort_pairs(&mut b);
+                    assert_eq!(
+                        a, b,
+                        "sort_pairs diverged: tuner={fname} budget={budget} dist={} n={n}",
+                        dist.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Satellite 1: degenerate shapes through every family. All-equal and
+/// duplicate-heavy inputs exercise the trivial-digit skip; the
+/// `u64::MAX` boundary exercises the top bucket of every histogram.
+#[test]
+fn every_family_matches_the_oracle_on_edge_shapes() {
+    for (fname, force) in forces() {
+        for budget in [1usize, 4] {
+            let rc = plane(force, budget);
+            for (label, block) in edge_blocks() {
+                let mut a = block.clone();
+                let mut b = block.clone();
+                NativeCompute.sort(&mut a);
+                rc.sort(&mut b);
+                assert_eq!(a, b, "sort diverged: tuner={fname} budget={budget} shape={label}");
+                let pairs: Vec<(u64, u64)> =
+                    block.into_iter().enumerate().map(|(i, k)| (k, i as u64)).collect();
+                let mut a = pairs.clone();
+                let mut b = pairs;
+                NativeCompute.sort_pairs(&mut a);
+                rc.sort_pairs(&mut b);
+                assert_eq!(
+                    a, b,
+                    "sort_pairs diverged: tuner={fname} budget={budget} shape={label}"
+                );
+            }
+        }
+    }
+}
+
+/// §8 stability contract, pinned independently of the oracle: with
+/// payload = input position, `sort_pairs` must equal a std stable sort
+/// by key alone under every forced family.
+#[test]
+fn sort_pairs_is_stable_under_every_family() {
+    let pairs: Vec<(u64, u64)> = (0..10_000u64).map(|i| ((i * 31) % 7, i)).collect();
+    let mut expect = pairs.clone();
+    expect.sort_by_key(|&(k, _)| k);
+    for (fname, force) in forces() {
+        for budget in [1usize, 4] {
+            let mut got = pairs.clone();
+            plane(force, budget).sort_pairs(&mut got);
+            assert_eq!(got, expect, "stability broken: tuner={fname} budget={budget}");
+        }
+    }
+}
+
+/// Satellite 4: the comparative crossover is a `TuningParams` field,
+/// not a buried constant — exact at the default boundary (95/96/97)
+/// and at a custom `with_crossover(10)` boundary (9/10/11).
+#[test]
+fn crossover_is_configurable_and_exact_at_the_boundary() {
+    assert_eq!(DEFAULT_CROSSOVER, 96, "§8 documents the default crossover");
+    for (crossover, rc) in [
+        (DEFAULT_CROSSOVER, plane(None, 1)),
+        (10, plane(None, 1).with_crossover(10)),
+    ] {
+        for n in [crossover - 1, crossover, crossover + 1] {
+            let block = keys_for(KeyDistribution::Uniform, n);
+            let mut a = block.clone();
+            let mut b = block;
+            NativeCompute.sort(&mut a);
+            rc.sort(&mut b);
+            assert_eq!(a, b, "crossover={crossover} n={n} diverged from the oracle");
+        }
+    }
+}
+
+fn smoke_report(force: Option<TunerOverride>, threads: usize, exec: ExecKind) -> RunReport {
+    let pool = Arc::new(WorkerPool::new(threads));
+    Scenario::new(NanoSort {
+        keys_per_node: 16,
+        buckets: 8,
+        median_incast: 4,
+        shuffle_values: true,
+        ..Default::default()
+    })
+    .nodes(64)
+    .dist(KeyDistribution::Zipfian)
+    .seed(CONFORMANCE_SEED)
+    .threads(threads)
+    .exec(exec)
+    .pool(pool.clone())
+    .compute_with(Arc::new(RadixCompute::forced(force, pool)))
+    .run()
+    .expect("smoke scenario")
+}
+
+/// Satellite 1, matrix cell: a forced `NANOSORT_TUNER` is invisible in
+/// the conformance digest across every (family × threads × executor)
+/// combination — the tuner may only change *how* a slice gets sorted,
+/// never *what* the simulation observes.
+#[test]
+fn forced_tuner_matrix_is_digest_invisible() {
+    let baseline = digest_json(&smoke_report(None, 1, ExecKind::Seq), "tuner");
+    for (fname, force) in forces() {
+        for threads in [1usize, 4] {
+            for exec in [ExecKind::Seq, ExecKind::Par, ExecKind::Opt] {
+                let got = digest_json(&smoke_report(force, threads, exec), "tuner");
+                assert_eq!(
+                    baseline, got,
+                    "digest diverged: tuner={fname} threads={threads} exec={exec:?}"
+                );
+            }
+        }
+    }
+}
+
+fn millisort_report(
+    force: Option<TunerOverride>,
+    pool: Arc<WorkerPool>,
+    threads: usize,
+    exec: ExecKind,
+) -> RunReport {
+    Scenario::new(MilliSort { total_keys: 65_536, ..Default::default() })
+        .nodes(8)
+        .seed(CONFORMANCE_SEED)
+        .threads(threads)
+        .exec(exec)
+        .pool(pool.clone())
+        .compute_with(Arc::new(RadixCompute::forced(force, pool)))
+        .run()
+        .expect("millisort scenario")
+}
+
+/// Satellite 2: shard workers and kernel tiles draw from ONE budget.
+/// 8192 keys/core clears `PAR_MIN`, so the forced-Par plane fans out
+/// inside Par/Opt shard workers at `--threads 4`; the digest must match
+/// seq@1, and the pool's high-water mark must never exceed the budget
+/// (the pool also hard-asserts this on every `enter`).
+#[test]
+fn executors_and_kernels_respect_one_thread_budget() {
+    let seq_pool = Arc::new(WorkerPool::new(1));
+    let baseline =
+        digest_json(&millisort_report(None, seq_pool, 1, ExecKind::Seq), "contention");
+    for exec in [ExecKind::Par, ExecKind::Opt] {
+        let pool = Arc::new(WorkerPool::new(4));
+        let report = millisort_report(Some(TunerOverride::Par), pool.clone(), 4, exec);
+        assert_eq!(
+            baseline,
+            digest_json(&report, "contention"),
+            "parallel kernels under {exec:?}@4 diverged from seq@1"
+        );
+        assert!(
+            pool.max_live() <= 4,
+            "live workers ({}) exceeded the --threads budget",
+            pool.max_live()
+        );
+    }
+}
+
+/// Satellite 2, positive signal: a forced-Par kernel on a budget-4 pool
+/// actually borrows workers (the sharing is real, not a no-op) while
+/// staying within budget and byte-identical to the oracle.
+#[test]
+fn parallel_kernels_borrow_from_the_shared_pool() {
+    let pool = Arc::new(WorkerPool::new(4));
+    let rc = RadixCompute::forced(Some(TunerOverride::Par), pool.clone());
+    let block = keys_for(KeyDistribution::Uniform, 65_536);
+    let mut oracle = block.clone();
+    let mut got = block;
+    NativeCompute.sort(&mut oracle);
+    rc.sort(&mut got);
+    assert_eq!(got, oracle);
+    assert!(pool.max_live() >= 1, "parallel kernel never borrowed a pool worker");
+    assert!(
+        pool.max_live() <= 4,
+        "live workers ({}) exceeded the pool budget",
+        pool.max_live()
+    );
+}

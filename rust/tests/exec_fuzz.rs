@@ -9,15 +9,20 @@
 //! stragglers, oversubscription — the last only on leaf-multiple
 //! fleets), then runs it under a random backend configuration
 //! ({`par`, `opt`} × threads × `window_batch` × an occasional forced
-//! rollback cadence) and compares conformance digests and rendered
+//! rollback cadence × a coin-flipped forced kernel family, the
+//! `NANOSORT_TUNER` equivalent) and compares conformance digests and rendered
 //! reports against the sequential run of the same scenario. The case
 //! generator is seeded, so a failure reproduces by case index.
 //!
 //! `NANOSORT_FUZZ_CASES` scales the campaign (default 64; CI pins 32 in
 //! the release-profile leg; soak runs can set 1000+).
 
+use std::sync::Arc;
+
+use nanosort::compute::{RadixCompute, TunerOverride};
 use nanosort::conformance::{digest_json, Tier, CONFORMANCE_SEED};
 use nanosort::net::NetConfig;
+use nanosort::pool::WorkerPool;
 use nanosort::perturb::{KeyDistribution, Perturbations, StragglerConfig};
 use nanosort::scenario::{registry, RunReport, Scenario};
 use nanosort::service::{self, Mix, SchedPolicy, ServiceConfig};
@@ -51,6 +56,10 @@ struct Case {
     threads: usize,
     window_batch: Option<usize>,
     force_every: Option<u64>,
+    /// Forced kernel family for the backend run (`None` = auto tuner).
+    /// The sequential reference always runs the auto tuner, so every
+    /// drawn override doubles as a tuner-invariance check.
+    tuner: Option<TunerOverride>,
 }
 
 impl Case {
@@ -137,6 +146,9 @@ impl Case {
         };
         let force_every = (exec == ExecKind::Opt && rng.chance(1, 4))
             .then(|| 1 + rng.next_u64() % 4);
+        let tuner = rng
+            .chance(1, 2)
+            .then(|| TunerOverride::ALL[rng.index(TunerOverride::ALL.len())]);
 
         Case {
             spec,
@@ -149,13 +161,14 @@ impl Case {
             threads,
             window_batch,
             force_every,
+            tuner,
         }
     }
 
     fn label(&self) -> String {
         format!(
-            "{} {:?} nodes={} exec={} threads={} wb={:?} force={:?} oversub={} loss={:?} \
-             stragglers={} dist={} seed={:#x}",
+            "{} {:?} nodes={} exec={} threads={} wb={:?} force={:?} tuner={} oversub={} \
+             loss={:?} stragglers={} dist={} seed={:#x}",
             self.spec.name,
             self.pairs,
             self.nodes,
@@ -163,6 +176,7 @@ impl Case {
             self.threads,
             self.window_batch,
             self.force_every,
+            self.tuner.map(TunerOverride::name).unwrap_or("auto"),
             self.net.oversub,
             self.net.loss_prob,
             self.knobs.stragglers.count,
@@ -178,6 +192,7 @@ impl Case {
         threads: usize,
         window_batch: Option<usize>,
         force_every: Option<u64>,
+        tuner: Option<TunerOverride>,
     ) -> RunReport {
         let params = registry::params_from_pairs(self.spec, &self.pairs).unwrap();
         let mut scenario = Scenario::from_dyn((self.spec.build)(&params).unwrap())
@@ -192,6 +207,14 @@ impl Case {
         }
         if let Some(n) = force_every {
             scenario = scenario.force_rollback_every(n);
+        }
+        if let Some(t) = tuner {
+            // Share one budget between shard workers and kernel tiles,
+            // exactly as `repro --threads N` would.
+            let pool = Arc::new(WorkerPool::new(threads));
+            scenario = scenario
+                .pool(pool.clone())
+                .compute_with(Arc::new(RadixCompute::forced(Some(t), pool)));
         }
         scenario
             .run()
@@ -225,8 +248,11 @@ fn randomized_configs_reproduce_the_sequential_digest() {
     let mut opt_cases = 0usize;
     for case_no in 0..cases {
         let case = Case::draw(&mut rng);
-        let seq = case.run(ExecKind::Seq, 1, None, None);
-        let got = case.run(case.exec, case.threads, case.window_batch, case.force_every);
+        // The reference runs the auto tuner at threads 1, so a drawn
+        // override must also be digest-invisible, not just exec-invariant.
+        let seq = case.run(ExecKind::Seq, 1, None, None, None);
+        let got =
+            case.run(case.exec, case.threads, case.window_batch, case.force_every, case.tuner);
         assert_case_identical(case_no, &case.label(), &seq, &got);
         if case.exec == ExecKind::Opt {
             opt_cases += 1;
