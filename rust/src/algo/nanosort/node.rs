@@ -7,7 +7,10 @@ use anyhow::Result;
 use crate::algo::tree::AggTree;
 use crate::compute::LocalCompute;
 use crate::cpu::Temp;
-use crate::graysort::{validate_sorted_output, value_of_key};
+use crate::graysort::{
+    validate_sorted_output, value_of_key, MultisetHash, SpillWriter, StreamingValidator,
+    ValidationReport, DEFAULT_SPILL_BINS,
+};
 use crate::nanopu::{Ctx, Group, GroupId, NodeId, Program, WireMsg};
 use crate::scenario::{
     Built, Finish, MetricValue, NodeSlots, RunReport, ScenarioEnv, Validation, Workload,
@@ -220,6 +223,16 @@ pub struct NanoSortNode {
     /// Highest termination-detection epoch this node saw as a group root
     /// (see [`Shared::retry_epochs`]).
     max_retry_epoch: u64,
+
+    /// Reused pivot-broadcast buffer (§Scale): the previous level's
+    /// `Arc<Vec<u64>>` payload is retained here by the group root; if
+    /// every receiver has dropped its clone by the next mint,
+    /// `Arc::try_unwrap` reclaims the allocation instead of reallocating
+    /// one per level per group. Under optimistic rollback the checkpoint
+    /// clone shares the Arc, `try_unwrap` fails, and the mint falls back
+    /// to a fresh allocation — same bytes either way, so this is
+    /// digest-invisible by construction.
+    pivot_pool: Option<Arc<Vec<u64>>>,
 }
 
 impl NanoSortNode {
@@ -308,15 +321,24 @@ impl NanoSortNode {
         loop {
             let next = self.mt_round + 1;
             if next > rounds {
-                // Root holds the final pivots.
+                // Root holds the final pivots. The payload buffer comes
+                // from the pool when the previous level's broadcast has
+                // fully drained (see `pivot_pool`).
                 debug_assert_eq!(pos, 0);
-                let pivots = Arc::new(if self.my_pivots.is_empty() {
+                let mut buf = self
+                    .pivot_pool
+                    .take()
+                    .and_then(|a| Arc::try_unwrap(a).ok())
+                    .unwrap_or_default();
+                buf.clear();
+                if self.my_pivots.is_empty() {
                     // Entire group abstained (no keys anywhere): synthesize
                     // even pivots; routing is vacuous.
-                    evenly_spaced_pivots(self.shared.buckets)
+                    buf.extend(evenly_spaced_pivots(self.shared.buckets));
                 } else {
-                    self.my_pivots.clone()
-                });
+                    buf.extend_from_slice(&self.my_pivots);
+                }
+                let pivots = Arc::new(buf);
                 let gid = self.shared.group_id(self.id, self.level);
                 ctx.broadcast_to(
                     gid,
@@ -325,6 +347,7 @@ impl NanoSortNode {
                 );
                 // Root applies the pivots locally, too.
                 self.start_shuffle(ctx, &pivots);
+                self.pivot_pool = Some(pivots);
                 return;
             }
             if tree.aggregates_at(pos, next) {
@@ -714,15 +737,43 @@ impl Workload for NanoSort {
         // clock). The key values come from the scenario's input
         // distribution; `Uniform` (the default) is the exact GraySort
         // KeyGen path the goldens pin.
-        let per_node = env
-            .perturb
-            .dist
-            .partitioned_keys(env.seed, env.nodes * self.keys_per_node, env.nodes);
-        let input: Vec<u64> = per_node.iter().flatten().copied().collect();
+        //
+        // §Scale: under `env.stream_input` (the hyper tiers) each node's
+        // share is drawn from its own derived stream at construction time
+        // and folded into an order-independent [`MultisetHash`] — the
+        // flat input array never exists on the host. Only per-node-pure
+        // distributions stream ([`crate::perturb::KeyDistribution::node_keys`]);
+        // global constructions fall back to the materialized path. Key
+        // content is identical either way (the materialized path is the
+        // concatenation of the same streams), so run digests are
+        // byte-identical — pinned by `rust/tests/hyper.rs`.
+        let kpn = self.keys_per_node;
+        let streamed =
+            env.stream_input && env.perturb.dist.node_keys(env.seed, 0, 0).is_some();
+        let (per_node, input) = if streamed {
+            (None, None)
+        } else {
+            let per_node =
+                env.perturb.dist.partitioned_keys(env.seed, env.nodes * kpn, env.nodes);
+            let input: Vec<u64> = per_node.iter().flatten().copied().collect();
+            (Some(per_node), Some(input))
+        };
 
+        let mut input_summary = MultisetHash::default();
         let programs: Vec<NanoSortNode> = (0..env.nodes)
             .map(|id| {
-                let keys = per_node[id].clone();
+                let keys = match &per_node {
+                    Some(p) => p[id].clone(),
+                    None => {
+                        let k = env
+                            .perturb
+                            .dist
+                            .node_keys(env.seed, id, kpn)
+                            .expect("streamed build requires a per-node distribution");
+                        input_summary.add_all(&k);
+                        k
+                    }
+                };
                 let mut initial = keys.clone();
                 initial.sort_unstable();
                 NanoSortNode {
@@ -749,6 +800,7 @@ impl Workload for NanoSort {
                     values_by_slot: Vec::new(),
                     values_received: 0,
                     max_retry_epoch: 0,
+                    pivot_pool: None,
                 }
             })
             .collect();
@@ -767,15 +819,14 @@ impl Workload for NanoSort {
         }
 
         let shuffle_values = self.shuffle_values;
+        let spill_dir = env.spill_dir.clone();
         let finish: Finish = Box::new(move |env, summary| {
-            // Per-node slots merge in canonical order by construction:
-            // `take_vecs` is index order, clone-free.
-            let final_keys = shared.final_keys.take_vecs();
-            let final_values = shared.final_values.take_vecs();
-            let validation = validate_sorted_output(
-                &input,
-                &final_keys,
-                shuffle_values.then_some(final_values.as_slice()),
+            let validation = validate_final_output(
+                &shared,
+                input.as_deref(),
+                streamed.then_some(input_summary),
+                shuffle_values,
+                spill_dir.as_deref(),
             );
             let skew = crate::graysort::bucket_skew(&validation.node_counts);
             let max_retry_epoch =
@@ -786,6 +837,80 @@ impl Workload for NanoSort {
                 .with_metric("max_retry_epoch", MetricValue::U64(max_retry_epoch))
         });
         Ok(Built { programs, groups, finish })
+    }
+}
+
+/// Collect and validate the final output, choosing among three routes
+/// that all produce identical [`ValidationReport`]s on passing runs:
+///
+/// - **exact** (materialized input, no spill): the original path — pull
+///   every block out of the slots and run the element-wise oracle;
+/// - **streamed** (per-node input summary): take blocks out one node at
+///   a time, feed the [`StreamingValidator`], drop each before the next —
+///   O(block) live memory;
+/// - **spill detour** (`--spill` / `NANOSORT_SPILL_DIR`): stream the
+///   blocks through the binned [`SpillWriter`] first, then validate from
+///   the clustered read-back — the output arrays leave RAM entirely.
+///
+/// Spill runs at finish time only — after quiescence, so no speculative
+/// burst can roll back a block that already hit disk. Spill I/O failure
+/// (disk full, unwritable dir) panics: the run's outputs are already
+/// consumed from the slots, so there is no clean fallback, and a
+/// half-spilled benchmark run should die loudly, not validate partially.
+fn validate_final_output(
+    shared: &Shared,
+    exact_input: Option<&[u64]>,
+    input_summary: Option<MultisetHash>,
+    shuffle_values: bool,
+    spill_dir: Option<&std::path::Path>,
+) -> ValidationReport {
+    let nodes = shared.final_keys.len();
+    // Streaming-validator oracle: from generation time on the streamed
+    // path, from one cheap extra pass on the materialized path.
+    let summarize = || {
+        input_summary.unwrap_or_else(|| {
+            let mut s = MultisetHash::default();
+            s.add_all(exact_input.expect("one input oracle always exists"));
+            s
+        })
+    };
+    if let Some(dir) = spill_dir {
+        let mut w =
+            SpillWriter::create(dir, DEFAULT_SPILL_BINS).expect("creating spill sink");
+        for id in 0..nodes {
+            let keys = shared.final_keys.take(id);
+            let values =
+                if shuffle_values { shared.final_values.take(id) } else { Vec::new() };
+            w.push_node(id, &keys, &values).expect("spilling output block");
+        }
+        let mut r = w.into_reader().expect("opening spill read-back");
+        let mut sv = StreamingValidator::new(summarize());
+        while let Some(block) = r.next().expect("reading spilled block") {
+            sv.push_node(&block.keys, shuffle_values.then_some(block.values.as_slice()));
+        }
+        return sv.finish();
+    }
+    match exact_input {
+        Some(input) => {
+            // Per-node slots merge in canonical order by construction:
+            // `take_vecs` is index order, clone-free.
+            let final_keys = shared.final_keys.take_vecs();
+            let final_values = shared.final_values.take_vecs();
+            validate_sorted_output(
+                input,
+                &final_keys,
+                shuffle_values.then_some(final_values.as_slice()),
+            )
+        }
+        None => {
+            let mut sv = StreamingValidator::new(summarize());
+            for id in 0..nodes {
+                let keys = shared.final_keys.take(id);
+                let values = shuffle_values.then(|| shared.final_values.take(id));
+                sv.push_node(&keys, values.as_deref());
+            }
+            sv.finish()
+        }
     }
 }
 

@@ -21,12 +21,12 @@ use crate::coordinator::{RunOptions, Table};
 
 /// All figure/table ids in paper order (plus the conformance-tier
 /// `paperscale` summary, the sweep-driven `skewsweep`/`tailsweep`
-/// sensitivity studies, the service-layer `loadsweep`, and the
-/// host-kernel `tunersweep`).
+/// sensitivity studies, the service-layer `loadsweep`, the host-kernel
+/// `tunersweep`, and the host-memory `memsweep`).
 pub const ALL_FIGURES: &[&str] = &[
     "table1", "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "12", "13", "14",
     "15", "multicast", "16", "headline", "table2", "ablation", "paperscale", "skewsweep",
-    "tailsweep", "loadsweep", "tunersweep",
+    "tailsweep", "loadsweep", "tunersweep", "memsweep",
 ];
 
 /// Run one figure/table by id; returns the report tables.
@@ -58,6 +58,7 @@ pub fn run_figure(id: &str, opts: &RunOptions) -> Result<Vec<Table>> {
         "tailsweep" => vec![crate::perturb::sweep::tail_sweep_figure(opts)?],
         "loadsweep" => vec![crate::service::loadsweep_figure(opts)?],
         "tunersweep" => vec![tunersweep(opts)?],
+        "memsweep" => vec![memsweep(opts)?],
         other => bail!("unknown figure id {other:?}; ids: {}", ALL_FIGURES.join(", ")),
     })
 }
@@ -125,6 +126,61 @@ fn tunersweep(opts: &RunOptions) -> Result<Table> {
     Ok(table)
 }
 
+/// `memsweep`: peak RSS and allocation count vs fleet size — the
+/// memory-diet figure behind the hyper tiers. Cells run in **ascending**
+/// node order because `VmHWM` is a process-lifetime high-water mark: a
+/// cell's reading can only be attributed to that cell when everything
+/// before it was smaller. Streamed input generation is on (the hyper-tier
+/// configuration), so the footprint being measured is arenas + slots, not
+/// a materialized key array.
+fn memsweep(opts: &RunOptions) -> Result<Table> {
+    use std::time::Instant;
+
+    use crate::algo::nanosort::NanoSort;
+    use crate::coordinator::f;
+    use crate::mem::{alloc_count, peak_rss_mb};
+    use crate::scenario::Scenario;
+
+    // (nodes, buckets): nodes must be an exact bucket power.
+    let cells: &[(usize, usize)] = if opts.quick {
+        &[(256, 16), (1024, 4), (4096, 16)]
+    } else {
+        &[(4096, 16), (16_384, 4), (65_536, 16)]
+    };
+    let mut table = Table::new(
+        "memsweep — host memory vs fleet size (kpn=16, streamed input; ascending sizes)"
+            .to_string(),
+        &["nodes", "keys", "peak_rss_mb", "allocs", "wall_ms"],
+    );
+    for &(nodes, buckets) in cells {
+        let alloc_before = alloc_count();
+        let t0 = Instant::now();
+        let report = Scenario::new(NanoSort {
+            keys_per_node: 16,
+            buckets,
+            ..Default::default()
+        })
+        .nodes(nodes)
+        .seed(opts.seed)
+        .stream_input()
+        .run()?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let allocs = alloc_count().saturating_sub(alloc_before);
+        anyhow::ensure!(report.validation.ok(), "memsweep nodes={nodes}: validation failed");
+        table.row(vec![
+            nodes.to_string(),
+            (nodes * 16).to_string(),
+            peak_rss_mb().map_or_else(|| "n/a".into(), |mb| mb.to_string()),
+            allocs.to_string(),
+            f(ms),
+        ]);
+    }
+    table.note("peak_rss_mb is the process high-water mark (VmHWM): strictly monotone down the table");
+    table.note("allocs is the heap-allocation delta per cell (counting global allocator)");
+    table.note("sublinear-in-keys, tight-in-nodes is the claim: RSS growth should track nodes, not keys");
+    Ok(table)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,9 +190,10 @@ mod tests {
     #[test]
     fn cheap_figures_render() {
         let opts = RunOptions { quick: true, ..Default::default() };
-        for id in
-            ["table1", "1", "2", "3", "4", "6", "7", "8", "skewsweep", "tailsweep", "tunersweep"]
-        {
+        for id in [
+            "table1", "1", "2", "3", "4", "6", "7", "8", "skewsweep", "tailsweep",
+            "tunersweep", "memsweep",
+        ] {
             let tables = run_figure(id, &opts).unwrap();
             assert!(!tables.is_empty(), "{id}");
             for t in &tables {

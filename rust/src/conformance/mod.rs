@@ -47,6 +47,14 @@ pub const PAPER_KEYS_PER_NODE: usize = 16;
 pub const PAPER_KEYS: usize = PAPER_NODES * PAPER_KEYS_PER_NODE;
 /// Mid-tier fleet size (the `--quick` headline scale).
 pub const MID_NODES: usize = 4096;
+/// Hyper-smoke fleet size: 2^17 cores — past the paper's headline, small
+/// enough for a CI leg with a hard memory ceiling.
+pub const HYPER_SMOKE_NODES: usize = 131_072;
+/// Hyper fleet size: 2^20 cores (= 16^5, so the bucket fan-out stays 16).
+pub const HYPER_NODES: usize = 1_048_576;
+/// Keys per core at the hyper tier: 96 × 2^20 ≈ 100.7M keys — the
+/// 100×-headline run the memory diet exists for.
+pub const HYPER_KEYS_PER_NODE: usize = 96;
 
 /// Fixed seed for every conformance run: goldens are a function of
 /// (workload, tier, seed), and pinning the seed makes them a function of
@@ -63,16 +71,28 @@ pub enum Tier {
     /// The paper's published configuration (NanoSort: 65,536 cores ×
     /// 1M keys with the GraySort value phase; seconds of wall-clock).
     Paper,
+    /// Memory-gated scale probe at 2^17 cores: streamed input is forced
+    /// on and the CI leg enforces a peak-RSS ceiling. Key-only (the
+    /// value phase doubles the footprint without exercising anything the
+    /// memory diet doesn't already cover).
+    HyperSmoke,
+    /// The 1M+-core tier: 2^20 cores × 96 keys ≈ 100.7M keys, streamed
+    /// input forced on. Minutes of wall-clock; run locally with
+    /// `--spill` when host RAM is tight.
+    Hyper,
 }
 
 impl Tier {
-    pub const ALL: [Tier; 3] = [Tier::Smoke, Tier::Mid, Tier::Paper];
+    pub const ALL: [Tier; 5] =
+        [Tier::Smoke, Tier::Mid, Tier::Paper, Tier::HyperSmoke, Tier::Hyper];
 
     pub fn name(self) -> &'static str {
         match self {
             Tier::Smoke => "smoke",
             Tier::Mid => "mid",
             Tier::Paper => "paper",
+            Tier::HyperSmoke => "hyper-smoke",
+            Tier::Hyper => "hyper",
         }
     }
 
@@ -81,8 +101,19 @@ impl Tier {
             "smoke" => Ok(Tier::Smoke),
             "mid" => Ok(Tier::Mid),
             "paper" => Ok(Tier::Paper),
-            other => bail!("unknown tier {other:?} (known: smoke|mid|paper)"),
+            "hyper-smoke" => Ok(Tier::HyperSmoke),
+            "hyper" => Ok(Tier::Hyper),
+            other => {
+                bail!("unknown tier {other:?} (known: smoke|mid|paper|hyper-smoke|hyper)")
+            }
         }
+    }
+
+    /// Hyper tiers run with per-node streamed input generation forced on
+    /// (the whole point is that the full key array never exists on
+    /// host); every other tier leaves the default materialized path.
+    pub fn is_hyper(self) -> bool {
+        matches!(self, Tier::HyperSmoke | Tier::Hyper)
     }
 }
 
@@ -117,6 +148,37 @@ pub fn tier_params(spec: &WorkloadSpec, tier: Tier) -> Vec<(&'static str, u64)> 
             // Fig 3's design-space probe at 1M values.
             "mergemin" => vec![("cores", PAPER_NODES as u64), ("vpc", 16), ("incast", 16)],
             "setalgebra" => vec![("cores", 4096), ("ids", 256)],
+            _ => spec.smoke.to_vec(),
+        },
+        Tier::HyperSmoke => match spec.name {
+            // 2^17 nodes forces buckets = 2 (depth 17: nodes must be an
+            // exact bucket power); key-only keeps the CI leg's RSS
+            // ceiling about nodes, not payload.
+            "nanosort" => vec![
+                ("nodes", HYPER_SMOKE_NODES as u64),
+                ("kpn", 8),
+                ("buckets", 2),
+                ("values", 0),
+            ],
+            "millisort" => vec![("cores", 512), ("keys", 65_536)],
+            "mergemin" => {
+                vec![("cores", HYPER_SMOKE_NODES as u64), ("vpc", 8), ("incast", 16)]
+            }
+            "setalgebra" => vec![("cores", 1024), ("ids", 256)],
+            _ => spec.smoke.to_vec(),
+        },
+        Tier::Hyper => match spec.name {
+            // 2^20 = 16^5 nodes × 96 keys ≈ 100.7M keys: the sublinear-
+            // in-keys, tight-in-nodes footprint claim at full stretch.
+            "nanosort" => vec![
+                ("nodes", HYPER_NODES as u64),
+                ("kpn", HYPER_KEYS_PER_NODE as u64),
+                ("buckets", 16),
+                ("values", 0),
+            ],
+            "millisort" => vec![("cores", 1024), ("keys", 131_072)],
+            "mergemin" => vec![("cores", HYPER_NODES as u64), ("vpc", 8), ("incast", 16)],
+            "setalgebra" => vec![("cores", 8192), ("ids", 512)],
             _ => spec.smoke.to_vec(),
         },
     }
@@ -154,13 +216,16 @@ pub fn run_tier_exec(
     let workload = (spec.build)(&params)?;
     let nodes = params.u64(spec.nodes_param.name)? as usize;
     let start = std::time::Instant::now();
-    let report = Scenario::from_dyn(workload)
+    let mut scenario = Scenario::from_dyn(workload)
         .nodes(nodes)
         .compute(compute)
         .seed(CONFORMANCE_SEED)
         .threads(threads)
-        .exec(exec)
-        .run()?;
+        .exec(exec);
+    if tier.is_hyper() {
+        scenario = scenario.stream_input();
+    }
+    let report = scenario.run()?;
     Ok((report, start.elapsed().as_secs_f64()))
 }
 
@@ -182,14 +247,17 @@ pub fn run_tier_with(
     let workload = (spec.build)(&params)?;
     let nodes = params.u64(spec.nodes_param.name)? as usize;
     let start = std::time::Instant::now();
-    let report = Scenario::from_dyn(workload)
+    let mut scenario = Scenario::from_dyn(workload)
         .nodes(nodes)
         .compute_with(plane)
         .pool(pool)
         .seed(CONFORMANCE_SEED)
         .threads(threads)
-        .exec(exec)
-        .run()?;
+        .exec(exec);
+    if tier.is_hyper() {
+        scenario = scenario.stream_input();
+    }
+    let report = scenario.run()?;
     Ok((report, start.elapsed().as_secs_f64()))
 }
 
@@ -240,6 +308,18 @@ pub struct BenchRecord {
     /// Per-kernel dispatch counts from the primary run, in canonical
     /// algorithm order (radix plane only; digest-invisible telemetry).
     pub kernel_histogram: Option<Vec<(&'static str, u64)>>,
+    /// Process peak RSS in MiB after the primary run
+    /// ([`crate::mem::peak_rss_mb`]); `None` off Linux. The CI
+    /// memory-ceiling gate reads this field from the hyper-smoke BENCH
+    /// sidecar.
+    pub peak_rss_mb: Option<u64>,
+    /// Bytes routed through the spill sinks during the primary run
+    /// ([`crate::graysort::take_bytes_spilled`]); 0 when spill is off.
+    pub bytes_spilled: u64,
+    /// Heap allocations during the primary run
+    /// ([`crate::mem::alloc_count`] delta) — the churn proxy next to
+    /// peak RSS.
+    pub alloc_count: u64,
     pub events: u64,
     pub msgs_sent: u64,
     pub validated: bool,
@@ -269,6 +349,9 @@ impl BenchRecord {
             native_wall_clock_s: None,
             tuner: None,
             kernel_histogram: None,
+            peak_rss_mb: None,
+            bytes_spilled: 0,
+            alloc_count: 0,
             events: report.summary.events,
             msgs_sent: report.summary.net.msgs_sent,
             validated: report.validation.ok(),
@@ -319,6 +402,22 @@ impl BenchRecord {
         self
     }
 
+    /// Attach the host memory measurements: peak RSS (`None` off
+    /// Linux), bytes routed through spill sinks (0 when spill is off),
+    /// and the heap-allocation delta across the primary run. These are
+    /// measurements like wall-clock, never digest material.
+    pub fn with_mem(
+        mut self,
+        peak_rss_mb: Option<u64>,
+        bytes_spilled: u64,
+        alloc_count: u64,
+    ) -> BenchRecord {
+        self.peak_rss_mb = peak_rss_mb;
+        self.bytes_spilled = bytes_spilled;
+        self.alloc_count = alloc_count;
+        self
+    }
+
     pub fn to_json(&self) -> String {
         let parallel = match self.parallel {
             Some((threads, wall)) => format!(
@@ -353,12 +452,27 @@ impl BenchRecord {
             }
             _ => String::new(),
         };
+        // Memory section: present once `with_mem` attached a
+        // measurement (any real run allocates, so alloc_count > 0
+        // whenever the measurement was taken).
+        let mem = if self.peak_rss_mb.is_some() || self.alloc_count > 0 {
+            let rss = match self.peak_rss_mb {
+                Some(mb) => format!("\n  \"peak_rss_mb\": {mb},"),
+                None => String::new(),
+            };
+            format!(
+                "{rss}\n  \"bytes_spilled\": {},\n  \"alloc_count\": {},",
+                self.bytes_spilled, self.alloc_count
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{{\n  \"workload\": \"{}\",\n  \"tier\": \"{}\",\n  \"nodes\": {},\n  \
              \"keys\": {},\n  \"compute\": \"{}\",\n  \"exec\": \"{}\",\n  \
              \"makespan_us\": {:.3},\n  \
              \"paper_makespan_us\": {:.1},\n  \"wall_clock_s\": {:.3},\n  \
-             \"input_gen_s\": {:.3},\n  \"sim_s\": {:.3},\n  \"validate_s\": {:.3},{}{}{}{}\n  \
+             \"input_gen_s\": {:.3},\n  \"sim_s\": {:.3},\n  \"validate_s\": {:.3},{}{}{}{}{}\n  \
              \"events\": {},\n  \"msgs_sent\": {},\n  \"validated\": {}\n}}\n",
             self.workload,
             self.tier,
@@ -376,6 +490,7 @@ impl BenchRecord {
             opt,
             native,
             tuner,
+            mem,
             self.events,
             self.msgs_sent,
             self.validated
@@ -432,6 +547,28 @@ mod tests {
                     .unwrap_or_else(|e| panic!("{} {}: {e:#}", spec.name, tier.name()));
             }
         }
+    }
+
+    /// Hyper tiers must keep node counts exact bucket powers (the tree
+    /// depth math requires it) and stay key-only; both force streamed
+    /// input.
+    #[test]
+    fn hyper_tiers_are_bucket_exact_and_key_only() {
+        let spec = registry::find("nanosort").unwrap();
+        for (tier, nodes, buckets) in [
+            (Tier::HyperSmoke, HYPER_SMOKE_NODES as u64, 2u64),
+            (Tier::Hyper, HYPER_NODES as u64, 16),
+        ] {
+            assert!(tier.is_hyper());
+            let p = registry::params_from_pairs(spec, &tier_params(spec, tier)).unwrap();
+            assert_eq!(p.u64("nodes").unwrap(), nodes);
+            assert_eq!(p.u64("buckets").unwrap(), buckets);
+            assert!(buckets.pow(nodes.ilog(buckets)) == nodes, "exact bucket power");
+            assert!(!p.flag("values"), "hyper tiers are key-only");
+        }
+        assert!(!Tier::Paper.is_hyper());
+        // ~100.7M keys at the hyper tier — the 100×-headline claim.
+        assert!(HYPER_NODES * HYPER_KEYS_PER_NODE > 100_000_000);
     }
 
     #[test]
@@ -526,6 +663,26 @@ mod tests {
             json.contains("\"kernel_histogram\": {\"comparative\": 12, \"lsb\": 3}"),
             "{json}"
         );
+    }
+
+    /// The memory section appears only once `with_mem` attaches a
+    /// measurement, and the optional peak-RSS field degrades gracefully
+    /// off Linux.
+    #[test]
+    fn bench_record_carries_memory_measurements() {
+        let spec = registry::find("mergemin").unwrap();
+        let (report, wall) = run_tier(spec, Tier::Smoke, ComputeChoice::Native, 1).unwrap();
+        let record = BenchRecord::from_report(&report, Tier::Smoke, wall);
+        let json = record.to_json();
+        assert!(!json.contains("\"peak_rss_mb\""), "mem only when attached: {json}");
+        assert!(!json.contains("\"alloc_count\""), "mem only when attached: {json}");
+        let json = record.clone().with_mem(Some(123), 4096, 77).to_json();
+        assert!(json.contains("\"peak_rss_mb\": 123"), "{json}");
+        assert!(json.contains("\"bytes_spilled\": 4096"), "{json}");
+        assert!(json.contains("\"alloc_count\": 77"), "{json}");
+        let json = record.with_mem(None, 0, 77).to_json();
+        assert!(!json.contains("\"peak_rss_mb\""), "optional off Linux: {json}");
+        assert!(json.contains("\"bytes_spilled\": 0"), "{json}");
     }
 
     /// `run_tier_with` (explicit plane + pool) matches the

@@ -9,7 +9,14 @@
 //! starts, exactly like MilliSort's setup.
 
 mod records;
+mod spill;
 mod validate;
 
 pub use records::{value_of_key, KeyGen, Record, KEY_BYTES, RECORD_BYTES, VALUE_BYTES};
-pub use validate::{bucket_skew, validate_sorted_output, Throughput, ValidationReport};
+pub use spill::{
+    take_bytes_spilled, SpillBlock, SpillReader, SpillWriter, DEFAULT_SPILL_BINS,
+};
+pub use validate::{
+    bucket_skew, validate_sorted_output, MultisetHash, StreamingValidator, Throughput,
+    ValidationReport,
+};

@@ -28,7 +28,24 @@ pub fn value_of_key(key: u64) -> u64 {
     SplitMix64::new(key ^ 0x9604_5375_0937_0a93u64.rotate_left(9)).next_u64()
 }
 
-/// Generator of distinct random keys, pre-partitioned across cores.
+/// Generator of random keys, pre-partitioned across cores.
+///
+/// # Per-node streams (§Scale)
+///
+/// Node `i`'s share is a pure function of `(seed, i, per)` through
+/// [`SplitMix64::derive`] — [`KeyGen::node_keys`] is the unit of
+/// generation, and [`KeyGen::generate`] is just its concatenation over
+/// the fleet. This is what lets the hyper tiers build each node's input
+/// at program-construction time and never hold the full key array on the
+/// host: the streamed and materialized paths are byte-identical by
+/// construction (pinned by the digest-identity tests in
+/// `rust/tests/hyper.rs`).
+///
+/// Distinctness is **per node**, not global: each node dedups within its
+/// own stream. A cross-node collision needs two of `n` uniform u64 draws
+/// to land on one value (~n²/2⁶⁵ — about 3×10⁻⁸ even at 10⁹ keys), and
+/// is harmless anyway: the sort and its multiset permutation check are
+/// duplicate-correct, only the "distinct" flavor text weakens.
 pub struct KeyGen {
     rng: SplitMix64,
 }
@@ -38,16 +55,35 @@ impl KeyGen {
         KeyGen { rng: SplitMix64::new(seed ^ 0x6772_6179_736f_7274) }
     }
 
-    /// `total` distinct keys split evenly across `cores` (total must be a
-    /// multiple of cores — the paper pre-loads an equal share per core).
+    /// `total` keys split evenly across `cores` (total must be a multiple
+    /// of cores — the paper pre-loads an equal share per core). Defined
+    /// as the concatenation of every core's [`KeyGen::node_keys`] stream.
     pub fn generate(&mut self, total: usize, cores: usize) -> Vec<Vec<u64>> {
         assert!(total % cores == 0, "keys must divide evenly across cores");
-        let keys = self.distinct_keys(total);
         let per = total / cores;
-        keys.chunks(per).map(|c| c.to_vec()).collect()
+        (0..cores).map(|node| self.node_keys(node, per)).collect()
     }
 
-    /// `n` distinct keys, all `< u64::MAX` (padding-sentinel safe).
+    /// Node `node`'s `per` keys — the streamed unit of generation. Keys
+    /// are node-locally distinct and `< u64::MAX` (padding-sentinel
+    /// safe). Pure in `(seed, node, per)`: calling this for one node
+    /// neither touches nor depends on any other node's stream.
+    pub fn node_keys(&self, node: usize, per: usize) -> Vec<u64> {
+        let mut rng = self.rng.derive(node as u64);
+        let mut keys = Vec::with_capacity(per);
+        let mut seen = std::collections::HashSet::with_capacity(per * 2);
+        while keys.len() < per {
+            let k = rng.next_u64();
+            if k != u64::MAX && seen.insert(k) {
+                keys.push(k);
+            }
+        }
+        keys
+    }
+
+    /// `n` distinct keys from the generator's own (non-derived) stream,
+    /// all `< u64::MAX`. The skewed perturbation distributions build on
+    /// this global path; the uniform/default path is per-node.
     pub fn distinct_keys(&mut self, n: usize) -> Vec<u64> {
         let mut keys = Vec::with_capacity(n);
         let mut seen = std::collections::HashSet::with_capacity(n * 2);
@@ -66,17 +102,32 @@ mod tests {
     use super::*;
 
     #[test]
-    fn keys_distinct_and_partitioned() {
+    fn keys_node_distinct_and_partitioned() {
         let mut kg = KeyGen::new(1);
         let parts = kg.generate(1024, 64);
         assert_eq!(parts.len(), 64);
         assert!(parts.iter().all(|p| p.len() == 16));
-        let mut all: Vec<u64> = parts.iter().flatten().copied().collect();
-        let n = all.len();
-        all.sort_unstable();
-        all.dedup();
-        assert_eq!(all.len(), n, "keys must be distinct");
-        assert!(all.iter().all(|&k| k < u64::MAX));
+        for p in &parts {
+            let mut node = p.clone();
+            let n = node.len();
+            node.sort_unstable();
+            node.dedup();
+            assert_eq!(node.len(), n, "keys must be distinct within a node");
+            assert!(node.iter().all(|&k| k < u64::MAX));
+        }
+    }
+
+    /// The streamed contract: `generate` is exactly the concatenation of
+    /// per-node streams, and each stream is pure in `(seed, node, per)` —
+    /// generating node 37 alone yields the same keys as generating the
+    /// whole fleet and slicing.
+    #[test]
+    fn node_streams_match_materialized_partitions() {
+        let parts = KeyGen::new(9).generate(1024, 64);
+        let kg = KeyGen::new(9);
+        for (node, part) in parts.iter().enumerate() {
+            assert_eq!(&kg.node_keys(node, 16), part, "node {node} stream drifted");
+        }
     }
 
     #[test]

@@ -1,0 +1,300 @@
+//! Disk-spill output sinks for the hyper tiers (GraySort style).
+//!
+//! At 2^20 nodes × 96 keys the final output alone is ~800 MB of u64 —
+//! holding every node's sorted block in RAM until validation defeats the
+//! point of streaming the input. This module spills cold per-node output
+//! blocks to disk the way external sorts bin their runs:
+//!
+//! - [`SpillWriter`] hashes each node into one of `bins` shard files
+//!   round-robin (`bin = node % bins`), appending a small framed segment
+//!   per node. Round-robin binning means every bin file holds nodes in
+//!   ascending node order — no index, no sort on read-back.
+//! - [`SpillReader`] walks the bins with one buffered cursor each,
+//!   yielding segments **clustered back into canonical node order** by
+//!   strict round-robin rotation over the cursors. Validation therefore
+//!   streams the spilled output exactly as it would have streamed the
+//!   in-memory slots — same order, same blocks, same digest.
+//!
+//! Spill is digest-invisible by contract: every byte written is read back
+//! verbatim, the clustered iterator visits nodes in the same canonical
+//! order as [`crate::scenario::NodeSlots::take_each`], and nothing about
+//! the simulated run (event order, metrics, validation flags) depends on
+//! whether blocks detoured through disk. `bytes_spilled` is reported via
+//! a process-wide side channel ([`take_bytes_spilled`]) precisely so the
+//! figure never enters a `RunReport` — reports stay byte-identical with
+//! spill on or off.
+//!
+//! Writes happen only from workload finish paths (after quiescence) or
+//! from FINISH-stage node handlers — never from inside a speculative
+//! burst, which could be rolled back and leave a duplicate segment.
+//!
+//! # Segment framing
+//!
+//! Little-endian, self-delimiting, append-only:
+//!
+//! ```text
+//! [node: u64][klen: u64][vlen: u64][keys: klen × u64][values: vlen × u64]
+//! ```
+//!
+//! Empty blocks are written too (klen = vlen = 0) so the reader can rely
+//! on every node appearing exactly once in its bin.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+/// Process-wide spill byte counter. A static side channel rather than a
+/// `RunReport` metric: reports are digest material and must not change
+/// when spill is toggled, but BENCH records (wall-clock territory) want
+/// the figure. Monotone within a run; [`take_bytes_spilled`] drains it.
+static BYTES_SPILLED: AtomicU64 = AtomicU64::new(0);
+
+/// Drain and return the bytes spilled since the last call (0 when spill
+/// never ran). The CLI calls this once per run for the BENCH record.
+pub fn take_bytes_spilled() -> u64 {
+    BYTES_SPILLED.swap(0, Ordering::Relaxed)
+}
+
+/// Default shard-file count: enough that each bin stays a sequential
+/// append stream of reasonable size, few enough that read-back holds one
+/// buffered cursor per bin without pressure.
+pub const DEFAULT_SPILL_BINS: usize = 16;
+
+/// Round-robin binned writer: node `i`'s block is appended to shard file
+/// `i % bins`. Blocks MUST arrive in ascending node order (the canonical
+/// finish order) — that is what makes each bin internally ordered and
+/// the clustered read-back a zero-index merge.
+pub struct SpillWriter {
+    dir: PathBuf,
+    bins: Vec<BufWriter<File>>,
+    next_node: usize,
+}
+
+impl SpillWriter {
+    /// Create `bins` empty shard files under `dir` (created if absent;
+    /// pre-existing shard files are truncated — a spill dir is scratch).
+    pub fn create(dir: impl AsRef<Path>, bins: usize) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        anyhow::ensure!(bins > 0, "spill needs at least one bin");
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating spill dir {}", dir.display()))?;
+        let bins = (0..bins)
+            .map(|b| {
+                let path = bin_path(&dir, b);
+                File::create(&path)
+                    .map(BufWriter::new)
+                    .with_context(|| format!("creating spill bin {}", path.display()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SpillWriter { dir, bins, next_node: 0 })
+    }
+
+    /// Append node `node`'s block. Nodes must be pushed exactly once, in
+    /// ascending order starting at 0; `values` may be empty for key-only
+    /// runs (it is framed as vlen = 0 either way).
+    pub fn push_node(&mut self, node: usize, keys: &[u64], values: &[u64]) -> Result<()> {
+        anyhow::ensure!(
+            node == self.next_node,
+            "spill blocks must arrive in canonical node order (got {node}, want {})",
+            self.next_node
+        );
+        self.next_node += 1;
+        let w = &mut self.bins[node % self.bins.len()];
+        let mut bytes = 0u64;
+        for word in [node as u64, keys.len() as u64, values.len() as u64] {
+            w.write_all(&word.to_le_bytes())?;
+            bytes += 8;
+        }
+        for &k in keys {
+            w.write_all(&k.to_le_bytes())?;
+            bytes += 8;
+        }
+        for &v in values {
+            w.write_all(&v.to_le_bytes())?;
+            bytes += 8;
+        }
+        BYTES_SPILLED.fetch_add(bytes, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Flush every bin and hand back a clustered reader over the same
+    /// directory. `nodes` written so far is carried over so the reader
+    /// knows when the rotation is exhausted.
+    pub fn into_reader(mut self) -> Result<SpillReader> {
+        let bins = self.bins.len();
+        for w in &mut self.bins {
+            w.flush().context("flushing spill bin")?;
+        }
+        let nodes = self.next_node;
+        let dir = self.dir;
+        drop(self.bins);
+        SpillReader::open(&dir, bins, nodes)
+    }
+}
+
+/// One decoded spill segment: the node id and its key/value blocks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpillBlock {
+    pub node: usize,
+    pub keys: Vec<u64>,
+    pub values: Vec<u64>,
+}
+
+/// Clustered read-back: strict round-robin over the bin cursors yields
+/// nodes 0, 1, 2, … in canonical order, each bin read strictly forward
+/// (sequential I/O, no seeks, one buffer per bin).
+pub struct SpillReader {
+    bins: Vec<BufReader<File>>,
+    nodes: usize,
+    next_node: usize,
+}
+
+impl SpillReader {
+    /// Open the `bins` shard files under `dir` holding `nodes` segments
+    /// total (what the paired writer pushed).
+    pub fn open(dir: impl AsRef<Path>, bins: usize, nodes: usize) -> Result<Self> {
+        let dir = dir.as_ref();
+        anyhow::ensure!(bins > 0, "spill needs at least one bin");
+        let bins = (0..bins)
+            .map(|b| {
+                let path = bin_path(dir, b);
+                File::open(&path)
+                    .map(BufReader::new)
+                    .with_context(|| format!("opening spill bin {}", path.display()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SpillReader { bins, nodes, next_node: 0 })
+    }
+
+    /// Next node's block in canonical order, `None` after the last.
+    #[allow(clippy::should_implement_trait)] // fallible iteration, anyhow-flavored
+    pub fn next(&mut self) -> Result<Option<SpillBlock>> {
+        if self.next_node >= self.nodes {
+            return Ok(None);
+        }
+        let want = self.next_node;
+        self.next_node += 1;
+        let n = self.bins.len();
+        let r = &mut self.bins[want % n];
+        let node = read_u64(r)? as usize;
+        if node != want {
+            bail!("spill bin out of order: read node {node}, expected {want}");
+        }
+        let klen = read_u64(r)? as usize;
+        let vlen = read_u64(r)? as usize;
+        let mut keys = Vec::with_capacity(klen);
+        for _ in 0..klen {
+            keys.push(read_u64(r)?);
+        }
+        let mut values = Vec::with_capacity(vlen);
+        for _ in 0..vlen {
+            values.push(read_u64(r)?);
+        }
+        Ok(Some(SpillBlock { node: want, keys, values }))
+    }
+}
+
+fn bin_path(dir: &Path, bin: usize) -> PathBuf {
+    dir.join(format!("spill_bin_{bin:04}.dat"))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf).context("truncated spill segment")?;
+    Ok(u64::from_le_bytes(buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("nanosort_spill_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn round_trip(tag: &str, blocks: &[(Vec<u64>, Vec<u64>)], bins: usize) {
+        let dir = scratch(tag);
+        let mut w = SpillWriter::create(&dir, bins).unwrap();
+        for (node, (keys, values)) in blocks.iter().enumerate() {
+            w.push_node(node, keys, values).unwrap();
+        }
+        let mut r = w.into_reader().unwrap();
+        for (node, (keys, values)) in blocks.iter().enumerate() {
+            let b = r.next().unwrap().expect("segment present");
+            assert_eq!(b.node, node);
+            assert_eq!(&b.keys, keys, "node {node} keys");
+            assert_eq!(&b.values, values, "node {node} values");
+        }
+        assert!(r.next().unwrap().is_none(), "reader exhausted");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn round_trips_typical_blocks() {
+        let blocks: Vec<(Vec<u64>, Vec<u64>)> = (0..37)
+            .map(|i| {
+                let keys: Vec<u64> = (0..(i % 5 + 1) as u64).map(|k| k * 31 + i as u64).collect();
+                let values: Vec<u64> = keys.iter().map(|&k| k ^ 0xabcd).collect();
+                (keys, values)
+            })
+            .collect();
+        // More bins than nodes, fewer bins than nodes, one bin.
+        round_trip("typical_many", &blocks, 64);
+        round_trip("typical_few", &blocks, 4);
+        round_trip("typical_one", &blocks, 1);
+    }
+
+    #[test]
+    fn round_trips_empty_run() {
+        round_trip("empty", &[], DEFAULT_SPILL_BINS);
+    }
+
+    #[test]
+    fn round_trips_single_node_and_empty_blocks() {
+        round_trip("single", &[(vec![42u64, 43], vec![])], 3);
+        // Interleaved empty blocks: every node still appears once.
+        round_trip(
+            "holes",
+            &[(vec![], vec![]), (vec![7u64], vec![9u64]), (vec![], vec![])],
+            2,
+        );
+    }
+
+    #[test]
+    fn round_trips_duplicate_heavy_blocks() {
+        let hot = vec![0xdead_beefu64; 97];
+        round_trip(
+            "dups",
+            &[(hot.clone(), vec![]), (hot.clone(), vec![]), (hot, vec![])],
+            2,
+        );
+    }
+
+    #[test]
+    fn out_of_order_writes_are_rejected() {
+        let dir = scratch("order");
+        let mut w = SpillWriter::create(&dir, 2).unwrap();
+        w.push_node(0, &[1], &[]).unwrap();
+        assert!(w.push_node(2, &[1], &[]).is_err(), "skipping a node must fail");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bytes_spilled_side_channel_counts_frames() {
+        let dir = scratch("bytes");
+        let _ = take_bytes_spilled(); // drain whatever ran before
+        let mut w = SpillWriter::create(&dir, 1).unwrap();
+        w.push_node(0, &[1, 2, 3], &[4, 5]).unwrap();
+        // 3 header words + 3 keys + 2 values = 8 × 8 bytes. The counter
+        // is process-global and sibling spill tests run in parallel, so
+        // assert a floor, not equality.
+        assert!(take_bytes_spilled() >= 64, "frame bytes not accounted");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

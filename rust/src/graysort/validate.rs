@@ -69,6 +69,118 @@ pub fn validate_sorted_output<K: AsRef<[u64]>>(
     }
 }
 
+/// Order-independent multiset summary: element count, wrapping sum, and
+/// xor of a 64-bit hash of each key. Two key sequences are the same
+/// multiset iff (modulo an engineered-collision probability of ~2⁻⁶⁴ per
+/// check — far below the simulator's own cosmic-ray floor) their
+/// summaries are equal, regardless of order.
+///
+/// This is the streaming replacement for the materialized permutation
+/// check in [`validate_sorted_output`]: the hyper tiers summarize each
+/// node's input at generation time and each node's output at read-back,
+/// so the full key array never exists on the host. The materialized path
+/// remains the exact oracle; `rust/tests/hyper.rs` cross-checks the two
+/// at tiers small enough to hold both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MultisetHash {
+    count: u64,
+    sum: u64,
+    xor: u64,
+}
+
+impl MultisetHash {
+    /// SplitMix64 finalizer: hashing keys before summing keeps crafted
+    /// key sets (e.g. arithmetic progressions) from cancelling in the
+    /// sum/xor lanes.
+    fn mix(k: u64) -> u64 {
+        let mut z = k.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    pub fn add(&mut self, key: u64) {
+        let h = Self::mix(key);
+        self.count += 1;
+        self.sum = self.sum.wrapping_add(h);
+        self.xor ^= h;
+    }
+
+    pub fn add_all(&mut self, keys: &[u64]) {
+        for &k in keys {
+            self.add(k);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+/// Streaming counterpart of [`validate_sorted_output`]: blocks arrive one
+/// node at a time in canonical node order, each is checked and summarized,
+/// then dropped — O(nodes) state instead of O(keys).
+///
+/// On a passing run the resulting [`ValidationReport`] is field-for-field
+/// identical to the materialized validator's (both digest-visible paths
+/// agree byte-for-byte); on a failing run the same flags trip, only the
+/// permutation check is the multiset-hash comparison rather than an
+/// element-wise sorted compare.
+pub struct StreamingValidator {
+    input: MultisetHash,
+    output: MultisetHash,
+    last: Option<u64>,
+    globally_sorted: bool,
+    values_intact: bool,
+    node_counts: Vec<usize>,
+}
+
+impl StreamingValidator {
+    /// `input` is the summary of the full input multiset, accumulated at
+    /// generation time (per node, in any order).
+    pub fn new(input: MultisetHash) -> Self {
+        StreamingValidator {
+            input,
+            output: MultisetHash::default(),
+            last: None,
+            globally_sorted: true,
+            values_intact: true,
+            node_counts: Vec::new(),
+        }
+    }
+
+    /// Feed the next node's final block (canonical node order; sortedness
+    /// is checked across node boundaries too). `values` carries the value
+    /// words that traveled with the keys, or `None` for key-only runs.
+    pub fn push_node(&mut self, keys: &[u64], values: Option<&[u64]>) {
+        self.node_counts.push(keys.len());
+        for &k in keys {
+            if self.last.is_some_and(|prev| prev > k) {
+                self.globally_sorted = false;
+            }
+            self.last = Some(k);
+            self.output.add(k);
+        }
+        match values {
+            None => {}
+            Some(vs) => {
+                self.values_intact &= keys.len() == vs.len()
+                    && keys.iter().zip(vs).all(|(&k, &v)| value_of_key(k) == v);
+            }
+        }
+    }
+
+    pub fn finish(self) -> ValidationReport {
+        ValidationReport {
+            total_keys: self.output.count as usize,
+            globally_sorted: self.globally_sorted,
+            is_permutation: self.output == self.input,
+            values_intact: self.values_intact,
+            node_counts: self.node_counts,
+        }
+    }
+}
+
 /// Max/mean skew of final bucket sizes (Fig 13's metric: how unbalanced
 /// the final partitions are; 1.0 = perfectly balanced).
 ///
@@ -203,6 +315,70 @@ mod tests {
         let vals: Vec<Vec<u64>> = vec![vec![], vec![]];
         let r = validate_sorted_output(&[], &[vec![], vec![]], Some(&vals));
         assert!(r.values_intact);
+    }
+
+    /// Drive both validators over the same blocks and require
+    /// field-for-field agreement (the streaming path must be
+    /// digest-invisible).
+    fn cross_check(input: &[u64], outputs: &[Vec<u64>], values: Option<&[Vec<u64>]>) {
+        let exact = validate_sorted_output(input, outputs, values);
+        let mut summary = MultisetHash::default();
+        summary.add_all(input);
+        let mut sv = StreamingValidator::new(summary);
+        for (i, keys) in outputs.iter().enumerate() {
+            sv.push_node(keys, values.map(|vs| vs[i].as_slice()));
+        }
+        let streamed = sv.finish();
+        assert_eq!(streamed.total_keys, exact.total_keys);
+        assert_eq!(streamed.globally_sorted, exact.globally_sorted);
+        assert_eq!(streamed.is_permutation, exact.is_permutation);
+        assert_eq!(streamed.values_intact, exact.values_intact);
+        assert_eq!(streamed.node_counts, exact.node_counts);
+    }
+
+    #[test]
+    fn streaming_validator_matches_exact_oracle() {
+        // Clean run, with values.
+        let input = vec![5u64, 3, 9, 1, 7, 2];
+        let outputs = vec![vec![1u64, 2], vec![3, 5], vec![7, 9]];
+        let values: Vec<Vec<u64>> = outputs
+            .iter()
+            .map(|ks| ks.iter().map(|&k| value_of_key(k)).collect())
+            .collect();
+        cross_check(&input, &outputs, Some(&values));
+        // Unsorted across a node boundary.
+        cross_check(&[1u64, 2, 3], &[vec![2u64], vec![1], vec![3]], None);
+        // Lost and duplicated keys.
+        cross_check(&[1u64, 2, 3], &[vec![1u64], vec![2]], None);
+        cross_check(&[1u64, 2, 3], &[vec![1u64, 2], vec![2, 3]], None);
+        // Corrupt value word.
+        let vals = vec![vec![value_of_key(1), value_of_key(2) ^ 1]];
+        cross_check(&[1u64, 2], &[vec![1u64, 2]], Some(&vals));
+        // Empty nodes and the zero-key sort.
+        cross_check(&[4u64, 8], &[vec![], vec![4u64, 8], vec![]], None);
+        cross_check(&[], &[vec![], vec![]], None);
+        // Duplicate-heavy multiset (hash lanes must not cancel).
+        cross_check(
+            &[7u64, 7, 7, 7, 2, 2],
+            &[vec![2u64, 2], vec![7, 7, 7, 7]],
+            None,
+        );
+    }
+
+    #[test]
+    fn multiset_hash_is_order_independent_but_multiplicity_sensitive() {
+        let mut a = MultisetHash::default();
+        a.add_all(&[3u64, 1, 2]);
+        let mut b = MultisetHash::default();
+        b.add_all(&[1u64, 2, 3]);
+        assert_eq!(a, b);
+        let mut c = MultisetHash::default();
+        c.add_all(&[1u64, 2, 3, 3]);
+        assert_ne!(a, c, "extra copy must change the summary");
+        let mut d = MultisetHash::default();
+        d.add_all(&[1u64, 2, 4]);
+        assert_ne!(a, d);
+        assert_eq!(a.count(), 3);
     }
 
     #[test]

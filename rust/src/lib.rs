@@ -32,7 +32,12 @@
 //! - [`algo`] — NanoSort (the paper's contribution), MilliSort (the
 //!   baseline), MergeMin (the §3.1 design-space probe), set algebra (the
 //!   §3.2 nanoTask workload).
-//! - [`graysort`] — GraySort 1M benchmark harness + output validation.
+//! - [`graysort`] — GraySort 1M benchmark harness + output validation,
+//!   including the streaming multiset validator and the disk-spill
+//!   output sinks behind the hyper tiers.
+//! - [`mem`] — host memory accounting (peak RSS via `VmHWM`, heap
+//!   allocation count via the counting global allocator) for the
+//!   `BENCH_*.json` perf trajectory and the CI memory ceiling.
 //! - [`coordinator`] — CLI argument cursor, data-plane selection, and
 //!   figure-style reports.
 //! - [`scenario`] — the unified run API: every algorithm is a
@@ -41,8 +46,10 @@
 //!   threads) and reported as a [`scenario::RunReport`];
 //!   [`scenario::registry`] maps workload names to typed parameter
 //!   descriptors for the data-driven CLI.
-//! - [`conformance`] — scale tiers (`smoke`/`mid`/`paper`, up to the
-//!   65,536-core × 1M-key headline), canonical run-report digests,
+//! - [`conformance`] — scale tiers (`smoke`/`mid`/`paper` up to the
+//!   65,536-core × 1M-key headline, plus the memory-gated
+//!   `hyper-smoke`/`hyper` tiers at 2^17 and 2^20 cores with streamed
+//!   input), canonical run-report digests,
 //!   golden-file regression comparison (`rust/conformance/golden/`), and
 //!   `BENCH_*.json` perf-trajectory records. Driven by `repro paper
 //!   [--tier T] [--bless]` and the `rust/tests/conformance.rs` CI gate.
@@ -77,6 +84,7 @@ pub mod conformance;
 pub mod coordinator;
 pub mod cpu;
 pub mod graysort;
+pub mod mem;
 pub mod nanopu;
 pub mod net;
 pub mod perturb;
@@ -86,3 +94,10 @@ pub mod scenario;
 pub mod service;
 pub mod sim;
 pub mod stats;
+
+/// Counting allocator (see [`mem`]): BENCH records carry the process
+/// allocation count next to peak RSS so reallocation churn regressions
+/// are visible in the perf trajectory. One relaxed atomic add per
+/// allocation — measurement noise next to the allocation itself.
+#[global_allocator]
+static GLOBAL_ALLOC: mem::CountingAlloc = mem::CountingAlloc;

@@ -13,8 +13,8 @@
 //!                      [--jobs N] [--iat NS] [--bless] [--compute P] [--threads N]
 //!                      [--exec E]
 //! repro serve --help   # service parameter descriptors
-//! repro paper          [--tier smoke|mid|paper] [--bless] [--compute P]
-//!                      [--threads N] [--exec E]
+//! repro paper          [--tier smoke|mid|paper|hyper-smoke|hyper] [--bless]
+//!                      [--compute P] [--threads N] [--exec E] [--spill]
 //! repro artifacts      # list loaded XLA artifacts
 //! repro list           # list figure ids and registered workloads
 //! ```
@@ -43,7 +43,12 @@
 //! with the fixed conformance seed, compares the canonical digest against
 //! the golden under `rust/conformance/golden/` (`--bless` accepts an
 //! intentional change; a missing golden is created), and writes
-//! `BENCH_nanosort.json` with the simulated makespan + wall-clock.
+//! `BENCH_nanosort.json` with the simulated makespan + wall-clock plus
+//! the memory trajectory (`peak_rss_mb`/`bytes_spilled`/`alloc_count`).
+//! The `hyper-smoke` (2^17 cores) and `hyper` (2^20 cores × 96 keys)
+//! tiers force per-node streamed input generation; `--spill` routes the
+//! final output blocks through disk-binned spill files (also enabled by
+//! `NANOSORT_SPILL_DIR=<dir>`) — digests are byte-identical either way.
 //!
 //! `--threads N` (everywhere) picks the executor worker count: `1`
 //! (default) is the sequential reference, `0` = all host cores, anything
@@ -115,11 +120,14 @@ fn help() -> String {
   repro serve [mix]  [--sched fifo|sjf|reserve|all] [--tier smoke|mid|paper] [--jobs N] [--iat NS] [--bless] [--compute P] [--threads N] [--exec E]
   repro serve --help # service parameter descriptors (mix, scheduler, arrival knobs)
   repro fig loadsweep # offered load × scheduler sweep of the job service
-  repro paper       [--tier smoke|mid|paper] [--bless] [--compute P] [--threads N] [--exec E]
+  repro fig memsweep # peak RSS + allocation count vs fleet size (the memory-diet figure)
+  repro paper       [--tier smoke|mid|paper|hyper-smoke|hyper] [--bless] [--compute P] [--threads N] [--exec E] [--spill]
   repro artifacts | repro list
   (--compute P: data plane, native|radix|xla, default radix; digests are plane-invariant)
   (--threads N: executor worker threads; 1 = sequential, 0 = all cores; results are identical)
-  (--exec E: sharded backend, seq|par|opt, default par; opt speculates past the window bound with rollback — results are identical)",
+  (--exec E: sharded backend, seq|par|opt, default par; opt speculates past the window bound with rollback — results are identical)
+  (--spill: spill output blocks to disk bins, GraySort style; NANOSORT_SPILL_DIR=<dir> picks the directory — results are identical)
+  (hyper tiers: hyper-smoke = 2^17 cores, hyper = 2^20 cores × 96 keys ≈ 100.7M; streamed input forced on, BENCH records peak_rss_mb)",
         registry::cli_help()
     )
 }
@@ -224,10 +232,13 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
         if sweep::resolve_threads(threads) == 1 { "" } else { "s" }
     );
     let start = std::time::Instant::now();
-    let outcome = sweep::run_sweep(spec, tier, &axes, compute, seed, threads, exec)?;
-    for line in outcome.json_lines() {
-        println!("{line}");
-    }
+    // Cells stream to stdout as they complete (grid order): at big
+    // grids the JSON trajectory is available to a consumer long before
+    // the sweep finishes, and no per-cell record is buffered for
+    // printing's sake.
+    let outcome = sweep::run_sweep_with(spec, tier, &axes, compute, seed, threads, exec, &|_, cell| {
+        println!("{}", cell.json_line(spec.name, tier.name(), seed));
+    })?;
     println!("{}", outcome.table.render());
     eprintln!("[sweep: {} cells in {:.2?}]", outcome.cells.len(), start.elapsed());
     Ok(())
@@ -426,7 +437,17 @@ fn cmd_paper(mut args: Args) -> Result<()> {
     let compute = args.compute_choice()?;
     let threads: usize = args.num_checked("threads")?.unwrap_or(1);
     let exec = exec_choice(&mut args)?.unwrap_or_default();
+    let spill = args.flag("spill");
     ensure_consumed(&args)?;
+    if spill && std::env::var_os("NANOSORT_SPILL_DIR").is_none() {
+        // `--spill` without an explicit NANOSORT_SPILL_DIR gets a
+        // per-process scratch directory. The scenario layer reads the
+        // variable on every run, so setting it here covers the primary
+        // leg and both comparison legs — all digest-invisible.
+        let dir = std::env::temp_dir().join(format!("nanosort_spill_{}", std::process::id()));
+        std::env::set_var("NANOSORT_SPILL_DIR", &dir);
+        eprintln!("[spill: binned output sinks under {}]", dir.display());
+    }
     // Fail fast, before the (potentially minutes-long) sequential tier
     // run: the XLA plane drives a single-threaded PJRT client, so the
     // parallel pass would be rejected by the scenario layer anyway.
@@ -455,6 +476,7 @@ fn cmd_paper(mut args: Args) -> Result<()> {
     } else {
         None
     };
+    let alloc_before = nanosort::mem::alloc_count();
     let (report, wall) = match &radix_plane {
         Some((plane, pool)) => conformance::run_tier_with(
             spec,
@@ -466,6 +488,11 @@ fn cmd_paper(mut args: Args) -> Result<()> {
         )?,
         None => conformance::run_tier(spec, tier, compute, 1)?,
     };
+    // Memory trajectory of the primary leg: drain the spill byte
+    // counter before the comparison legs run (they spill too when the
+    // knob is on, but BENCH records the primary measurement).
+    let alloc_delta = nanosort::mem::alloc_count().saturating_sub(alloc_before);
+    let bytes_spilled = nanosort::graysort::take_bytes_spilled();
     print!("{}", report.render());
     let us = report.runtime().as_us_f64();
     println!(
@@ -487,7 +514,14 @@ fn cmd_paper(mut args: Args) -> Result<()> {
     );
     let digest = conformance::digest_json(&report, tier.name());
 
-    let mut record = BenchRecord::from_report(&report, tier, wall);
+    let peak_rss = nanosort::mem::peak_rss_mb();
+    if let Some(mb) = peak_rss {
+        println!(
+            "memory: peak RSS {mb} MiB | {bytes_spilled} bytes spilled | {alloc_delta} allocs"
+        );
+    }
+    let mut record = BenchRecord::from_report(&report, tier, wall)
+        .with_mem(peak_rss, bytes_spilled, alloc_delta);
     if let Some((plane, _)) = &radix_plane {
         // Telemetry from the primary run: which kernel families the
         // tuner actually dispatched (digest-invisible, BENCH-only).

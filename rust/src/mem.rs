@@ -1,0 +1,99 @@
+//! Host memory accounting for the BENCH records (§Scale).
+//!
+//! The hyper tiers exist to prove the simulator's footprint scales
+//! sublinearly in keys and tightly in nodes — which is only checkable if
+//! the memory trajectory is recorded next to wall-clock. Two figures:
+//!
+//! - **peak RSS** ([`peak_rss_mb`]): the kernel's high-water mark for
+//!   resident set size (`VmHWM` in `/proc/self/status`). Monotone over
+//!   the process lifetime, which is exactly what a ceiling check wants
+//!   (CI fails the job if a hyper-smoke run's peak exceeds the budget in
+//!   the golden's BENCH sidecar) — but it also means a figure sweeping
+//!   node counts must run ascending sizes to attribute the peak
+//!   per-cell (`repro fig memsweep` does).
+//! - **allocation count** ([`alloc_count`]): total heap allocations via
+//!   the counting global allocator, a churn proxy that catches
+//!   per-node/per-round reallocation regressions RSS alone hides (a
+//!   free/alloc ping-pong has flat RSS and a huge count).
+//!
+//! Both are pure host-side measurements: never digest material, never in
+//! a `RunReport`, surfaced only through `BENCH_*.json`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process peak resident set size in MiB (`VmHWM`), or `None` where
+/// `/proc/self/status` is unavailable (non-Linux hosts) — the BENCH
+/// field is optional for exactly that case.
+pub fn peak_rss_mb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb / 1024);
+        }
+    }
+    None
+}
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Total heap allocations since process start (relaxed counter; exact
+/// enough for a churn trajectory, free of synchronization cost).
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// System allocator wrapped with one relaxed counter increment per
+/// allocation. Installed as the crate's `#[global_allocator]`
+/// (`src/lib.rs`); the per-alloc cost is a single uncontended atomic
+/// add, noise next to the allocation itself.
+pub struct CountingAlloc;
+
+// SAFETY: pure delegation to `System`; the counter has no effect on the
+// returned memory.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_count_is_monotone_and_advances() {
+        let before = alloc_count();
+        let v: Vec<u64> = Vec::with_capacity(1024);
+        drop(v);
+        assert!(alloc_count() > before, "heap allocation not counted");
+    }
+
+    #[test]
+    fn peak_rss_parses_on_linux() {
+        // On Linux the file exists and the process surely exceeds 1 MiB;
+        // elsewhere None is the contract.
+        if std::path::Path::new("/proc/self/status").exists() {
+            let mb = peak_rss_mb().expect("VmHWM present on Linux");
+            assert!(mb >= 1, "implausible peak RSS {mb} MiB");
+        } else {
+            assert_eq!(peak_rss_mb(), None);
+        }
+    }
+}

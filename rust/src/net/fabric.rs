@@ -245,13 +245,21 @@ impl RxLane {
 /// One in-flight message leg after the sender-side phase: the candidate
 /// arrival time (before destination contention), the canonical tie-break
 /// key, and the spine-entry time for oversubscribed cores.
+///
+/// Node ids are stored as `u32` (§Scale: a `Transit` rides in every
+/// event-queue entry, inbox slot, and speculation redo log — at the
+/// hyper tier that is millions of live flights, and two `usize` ids per
+/// flight were 8 wasted bytes each). The fabric API still speaks
+/// `usize`; the cast happens only at Flight construction/consumption,
+/// and `u32::MAX` nodes is ~4 × 10⁹ — four decades past the 2^20-node
+/// hyper tier.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Flight {
     /// Candidate arrival at `dst` (propagation + tail + retransmits
     /// applied; destination queueing not yet).
     pub at: Time,
-    pub src: usize,
-    pub dst: usize,
+    pub src: u32,
+    pub dst: u32,
     /// Source-local flight sequence number (unique per `src`).
     pub ctr: u64,
     /// When the packet reaches the spine layer (used only when the core
@@ -389,7 +397,7 @@ impl Fabric {
         let slot = src - tx.base;
         let ctr = tx.ctr[slot];
         tx.ctr[slot] += 1;
-        Flight { at, src, dst: src, ctr, spine_at: at, cross_leaf: false }
+        Flight { at, src: src as u32, dst: src as u32, ctr, spine_at: at, cross_leaf: false }
     }
 
     // ------------------------------------------------------ phase 2: admit
@@ -541,8 +549,8 @@ fn leg_impl(
     tx.ctr[slot] += 1;
     Flight {
         at: sent_at + prop + tail,
-        src,
-        dst,
+        src: src as u32,
+        dst: dst as u32,
         ctr,
         // The packet reaches the spine roughly halfway along the path.
         spine_at: sent_at + Time(prop.0 / 2),
@@ -564,8 +572,8 @@ fn admit_impl(
         // Oversubscribed core (perturbation, default off): packets into
         // this leaf contend for its reduced set of spine downlink
         // registers instead of the non-blocking full-bisection core.
-        let leaf = topo.leaf_of(flight.dst);
-        let s = ecmp_spine(flight.src, flight.dst, rx.spines_per_leaf);
+        let leaf = topo.leaf_of(flight.dst as usize);
+        let s = ecmp_spine(flight.src as usize, flight.dst as usize, rx.spines_per_leaf);
         let reg = (leaf - rx.leaf_base) * rx.spines_per_leaf + s;
         let spine_start = flight.spine_at.max(rx.spine_free[reg]);
         rx.spine_free[reg] = spine_start + ser;
@@ -573,7 +581,7 @@ fn admit_impl(
     }
     // Store-and-forward on the destination downlink: the message can only
     // start occupying it once the link is free.
-    let slot = flight.dst - rx.base;
+    let slot = flight.dst as usize - rx.base;
     let start = at.max(rx.ingress_free[slot]);
     let arrival = start + ser;
     rx.ingress_free[slot] = arrival;

@@ -157,6 +157,21 @@ impl KeyDistribution {
         }
     }
 
+    /// Streamed unit of [`KeyDistribution::partitioned_keys`]: node
+    /// `node`'s `per`-key share, generated without materializing any
+    /// other node's input. `Some` only where the distribution is defined
+    /// per node (`Uniform` — the [`KeyGen::node_keys`] stream); the
+    /// skewed shapes are global constructions (a sort over all keys, a
+    /// fleet-wide shuffle) and return `None`, telling the caller to fall
+    /// back to the materialized path. Where `Some`, the result is
+    /// byte-identical to `partitioned_keys(..)[node]`.
+    pub fn node_keys(self, seed: u64, node: usize, per: usize) -> Option<Vec<u64>> {
+        match self {
+            KeyDistribution::Uniform => Some(KeyGen::new(seed).node_keys(node, per)),
+            _ => None,
+        }
+    }
+
     /// Per-core element counts for workloads whose input is local load
     /// rather than a shared key space (MergeMin values, set-algebra
     /// shards). `Uniform` is every core at `base`; the other shapes
@@ -366,6 +381,32 @@ mod tests {
         let a = KeyDistribution::Uniform.partitioned_keys(7, 256, 16);
         let b = KeyGen::new(7).generate(256, 16);
         assert_eq!(a, b, "default distribution must not disturb goldens");
+    }
+
+    /// The streamed path is defined exactly where it is byte-identical to
+    /// the materialized slices; global constructions opt out with `None`.
+    #[test]
+    fn node_keys_match_materialized_where_defined() {
+        for d in KeyDistribution::ALL {
+            let parts = d.partitioned_keys(7, 256, 16);
+            match d {
+                KeyDistribution::Uniform => {
+                    for (node, part) in parts.iter().enumerate() {
+                        assert_eq!(
+                            d.node_keys(7, node, 16).as_ref(),
+                            Some(part),
+                            "uniform node {node} stream drifted"
+                        );
+                    }
+                }
+                _ => assert_eq!(
+                    d.node_keys(7, 0, 16),
+                    None,
+                    "{}: global construction must fall back",
+                    d.name()
+                ),
+            }
+        }
     }
 
     #[test]

@@ -165,6 +165,29 @@ pub fn run_sweep(
     threads: usize,
     exec: Option<ExecKind>,
 ) -> Result<SweepOutcome> {
+    run_sweep_with(spec, tier, axes, compute, seed, threads, exec, &|_, _| {})
+}
+
+/// [`run_sweep`] with a per-cell emitter: `emit(index, cell)` is called
+/// exactly once per completed cell **in grid order** (baseline first) as
+/// results become available — the serial path emits each cell the moment
+/// it finishes; the pooled path drains an ordered cursor as slots fill.
+/// This is how the CLI streams one JSON line per cell to stdout instead
+/// of materializing the whole grid's records before printing a byte (at
+/// the 4,096-cell grid cap the buffered variant held every record —
+/// and, before the cells were slimmed, every full `RunReport` — until
+/// the end of the run).
+#[allow(clippy::too_many_arguments)]
+pub fn run_sweep_with(
+    spec: &'static WorkloadSpec,
+    tier: Tier,
+    axes: &[Axis],
+    compute: ComputeChoice,
+    seed: u64,
+    threads: usize,
+    exec: Option<ExecKind>,
+    emit: &(dyn Fn(usize, &SweepCell) + Sync),
+) -> Result<SweepOutcome> {
     // Validate axis names up front so a typo fails before any run.
     for (name, values) in axes {
         anyhow::ensure!(!values.is_empty(), "axis {name:?} has no values");
@@ -199,12 +222,14 @@ pub fn run_sweep(
     let workers = resolve_threads(threads).min(assignments.len()).max(1);
     let cells: Vec<SweepCell> = if workers <= 1 {
         let mut cells = Vec::with_capacity(assignments.len());
-        for a in &assignments {
-            cells.push(run_cell(spec, tier, a, compute, seed, exec)?);
+        for (i, a) in assignments.iter().enumerate() {
+            let cell = run_cell(spec, tier, a, compute, seed, exec)?;
+            emit(i, &cell);
+            cells.push(cell);
         }
         cells
     } else {
-        run_cells_pooled(spec, tier, &assignments, compute, seed, workers, exec)?
+        run_cells_pooled(spec, tier, &assignments, compute, seed, workers, exec, emit)?
     };
 
     let table = render_table(spec.name, tier, &cells);
@@ -214,6 +239,10 @@ pub fn run_sweep(
 /// Dispatch cells across `workers` threads via an atomic work queue;
 /// results land in their slot, so the output order (and every digest) is
 /// identical to the serial path. The first error (in cell order) wins.
+/// After landing a result, each worker advances the shared emission
+/// cursor over the contiguous prefix of completed slots, so `emit` fires
+/// in grid order while later cells are still running (an `Err` slot
+/// halts emission; the error surfaces from the ordered drain below).
 #[allow(clippy::too_many_arguments)]
 fn run_cells_pooled(
     spec: &'static WorkloadSpec,
@@ -223,12 +252,14 @@ fn run_cells_pooled(
     seed: u64,
     workers: usize,
     exec: Option<ExecKind>,
+    emit: &(dyn Fn(usize, &SweepCell) + Sync),
 ) -> Result<Vec<SweepCell>> {
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Mutex;
 
     type CellSlot = Mutex<Option<Result<SweepCell>>>;
     let next = AtomicUsize::new(0);
+    let cursor = Mutex::new(0usize);
     let slots: Vec<CellSlot> = assignments.iter().map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
@@ -239,6 +270,19 @@ fn run_cells_pooled(
                 }
                 let cell = run_cell(spec, tier, &assignments[i], compute, seed, exec);
                 *slots[i].lock().expect("cell slot") = Some(cell);
+                // Drain the contiguous completed prefix in grid order.
+                // Holding the cursor lock serializes emission, so no
+                // two workers can emit the same index or reorder lines.
+                let mut done = cursor.lock().expect("emit cursor");
+                while *done < slots.len() {
+                    let slot = slots[*done].lock().expect("cell slot");
+                    match slot.as_ref() {
+                        Some(Ok(cell)) => emit(*done, cell),
+                        _ => break,
+                    }
+                    drop(slot);
+                    *done += 1;
+                }
             });
         }
     });
@@ -582,7 +626,7 @@ mod tests {
         let spec = registry::find("nanosort").unwrap();
         let axes = vec![("loss".to_string(), vec!["2000".to_string()])];
         let out =
-            run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, CONFORMANCE_SEED, 1)
+            run_sweep(spec, Tier::Smoke, &axes, ComputeChoice::Native, CONFORMANCE_SEED, 1, None)
                 .unwrap();
         let base = &out.cells[0];
         let lossy = &out.cells[1];
@@ -590,6 +634,38 @@ mod tests {
         assert!(lossy.retransmits > 0, "20% loss must retransmit");
         assert!(lossy.makespan_us > base.makespan_us);
         assert!(lossy.validated, "loss must not break correctness");
+    }
+
+    /// The streaming emitter fires exactly once per cell, in grid order,
+    /// with the same records the outcome carries — serial and pooled.
+    #[test]
+    fn emitter_streams_cells_in_grid_order() {
+        use std::sync::Mutex;
+        let spec = registry::find("mergemin").unwrap();
+        let axes = vec![
+            ("incast".to_string(), vec!["2".into(), "4".into(), "8".into()]),
+            ("vpc".to_string(), vec!["8".into(), "16".into()]),
+        ];
+        for threads in [1usize, 4] {
+            let seen: Mutex<Vec<(usize, String)>> = Mutex::new(Vec::new());
+            let out = run_sweep_with(
+                spec,
+                Tier::Smoke,
+                &axes,
+                ComputeChoice::Native,
+                CONFORMANCE_SEED,
+                threads,
+                None,
+                &|i, c| seen.lock().unwrap().push((i, c.label())),
+            )
+            .unwrap();
+            let seen = seen.into_inner().unwrap();
+            assert_eq!(seen.len(), out.cells.len(), "threads={threads}");
+            for (slot, (i, label)) in seen.iter().enumerate() {
+                assert_eq!(slot, *i, "grid order (threads={threads})");
+                assert_eq!(label, &out.cells[slot].label(), "threads={threads}");
+            }
+        }
     }
 
     #[test]

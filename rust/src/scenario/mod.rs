@@ -98,6 +98,21 @@ pub struct ScenarioEnv {
     /// budget covering executor shard workers and parallel compute
     /// kernels. Never changes results.
     pub pool: Arc<WorkerPool>,
+    /// Stream input generation per node instead of materializing the full
+    /// key array up front (`--stream-input` / `NANOSORT_STREAM_INPUT`,
+    /// auto-enabled by the hyper conformance tiers). Workloads whose
+    /// input distribution supports per-node derivation generate each
+    /// node's keys lazily and validate against a streaming summary;
+    /// everything else silently falls back to the materialized path.
+    /// Never changes results — the per-node streams are byte-identical
+    /// to the materialized slices (pinned by digest-identity tests).
+    pub stream_input: bool,
+    /// Spill cold per-node output buffers to binned shard files under
+    /// this directory instead of holding them in RAM
+    /// (`--spill` / `NANOSORT_SPILL_DIR`). `None` (the default) keeps
+    /// outputs in memory. Never changes results — validation reads the
+    /// spilled blocks back in canonical node order.
+    pub spill_dir: Option<std::path::PathBuf>,
 }
 
 /// Result-extraction hook: runs after quiescence with the engine summary.
@@ -109,9 +124,15 @@ pub type Finish = Box<dyn FnOnce(&ScenarioEnv, RunSummary) -> RunReport>;
 /// §Perf: the sort workloads used to funnel every node's final block
 /// through one `Mutex<Vec<...>>` — at 65,536 nodes across a threaded
 /// executor that is a 100k-acquisition contention burst at the end of the
-/// run. One `Mutex<Option<T>>` per slot keeps writes contention-free
-/// (each node only ever touches its own slot), and the canonical merge
-/// is just index order.
+/// run. The first fix was one `Mutex<Option<T>>` per slot, but a `Mutex`
+/// is 16+ bytes of lock word and poison flag — at the hyper tier
+/// (2^20 nodes) that is ~16 MiB of pure lock overhead per slot arena, and
+/// three arenas per sort run. The current shape stripes the slots into
+/// [`SLOT_STRIPES`] *contiguous* `Mutex<Vec<Option<T>>>` blocks: executor
+/// shards own contiguous node ranges, so concurrent writers land on
+/// different stripes almost always (and merely queue briefly when ranges
+/// straddle a stripe boundary), while lock overhead drops from O(nodes)
+/// to O(1).
 ///
 /// Writes *overwrite* (last write wins) rather than write-once: under the
 /// optimistic executor a node's finishing event can run inside a
@@ -120,26 +141,44 @@ pub type Finish = Box<dyn FnOnce(&ScenarioEnv, RunSummary) -> RunReport>;
 /// converges on exactly the sequential value (DESIGN.md §10); a
 /// write-once panic here would turn a legal rollback into a crash.
 pub struct NodeSlots<T> {
-    slots: Vec<Mutex<Option<T>>>,
+    /// Contiguous stripes of `stripe_len` slots each (ragged tail on the
+    /// last stripe).
+    stripes: Vec<Mutex<Vec<Option<T>>>>,
+    stripe_len: usize,
+    len: usize,
 }
+
+/// Lock-stripe count for [`NodeSlots`]: enough that contiguous executor
+/// shard ranges map to disjoint stripes at any realistic `--threads`,
+/// small enough that the lock overhead is constant, not per-node.
+const SLOT_STRIPES: usize = 64;
 
 impl<T> NodeSlots<T> {
     pub fn new(nodes: usize) -> Self {
-        NodeSlots { slots: (0..nodes).map(|_| Mutex::new(None)).collect() }
+        let stripe_len = nodes.div_ceil(SLOT_STRIPES).max(1);
+        let stripes = (0..nodes.div_ceil(stripe_len))
+            .map(|s| {
+                let lo = s * stripe_len;
+                let hi = ((s + 1) * stripe_len).min(nodes);
+                Mutex::new((lo..hi).map(|_| None).collect())
+            })
+            .collect();
+        NodeSlots { stripes, stripe_len, len: nodes }
     }
 
     /// Write node `id`'s output, replacing any previous write (see the
     /// type docs for why replacement is the correct semantics).
     pub fn set(&self, id: usize, value: T) {
-        *self.slots[id].lock().expect("node output slot") = Some(value);
+        let stripe = &self.stripes[id / self.stripe_len];
+        stripe.lock().expect("node output stripe")[id % self.stripe_len] = Some(value);
     }
 
     pub fn len(&self) -> usize {
-        self.slots.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.slots.is_empty()
+        self.len == 0
     }
 
     /// Move every slot value out, in canonical node order (an unwritten
@@ -150,10 +189,39 @@ impl<T> NodeSlots<T> {
     where
         T: Default,
     {
-        self.slots
-            .iter()
-            .map(|s| s.lock().expect("node output slot").take().unwrap_or_default())
-            .collect()
+        let mut out = Vec::with_capacity(self.len);
+        self.take_each(|_, v| out.push(v));
+        out
+    }
+
+    /// Move one slot's value out (the default if unwritten), leaving the
+    /// slot empty. The streaming finish paths use this to pair blocks
+    /// from two slot arenas (keys + values) node by node.
+    pub fn take(&self, id: usize) -> T
+    where
+        T: Default,
+    {
+        self.stripes[id / self.stripe_len].lock().expect("node output stripe")
+            [id % self.stripe_len]
+            .take()
+            .unwrap_or_default()
+    }
+
+    /// Stream every slot value out in canonical node order without
+    /// materializing a `Vec` of all of them — the hyper-tier finish path
+    /// feeds each block to a streaming validator or spill sink and drops
+    /// it before touching the next. Unwritten slots yield the default,
+    /// exactly like [`NodeSlots::take_vecs`].
+    pub fn take_each(&self, mut visit: impl FnMut(usize, T))
+    where
+        T: Default,
+    {
+        for (s, stripe) in self.stripes.iter().enumerate() {
+            let mut guard = stripe.lock().expect("node output stripe");
+            for (i, slot) in guard.iter_mut().enumerate() {
+                visit(s * self.stripe_len + i, slot.take().unwrap_or_default());
+            }
+        }
     }
 }
 
@@ -295,6 +363,8 @@ pub struct Scenario {
     window_batch: Option<usize>,
     force_rollback_every: Option<u64>,
     pool: Option<Arc<WorkerPool>>,
+    stream_input: bool,
+    spill_dir: Option<std::path::PathBuf>,
 }
 
 impl Scenario {
@@ -317,6 +387,8 @@ impl Scenario {
             window_batch: None,
             force_rollback_every: None,
             pool: None,
+            stream_input: false,
+            spill_dir: None,
         }
     }
 
@@ -393,6 +465,24 @@ impl Scenario {
         self
     }
 
+    /// Generate inputs per node instead of materializing the full key
+    /// array ([`ScenarioEnv::stream_input`]; also enabled by the
+    /// `NANOSORT_STREAM_INPUT` environment knob). Results are
+    /// byte-identical with streaming on or off.
+    pub fn stream_input(mut self) -> Self {
+        self.stream_input = true;
+        self
+    }
+
+    /// Spill cold per-node output buffers under `dir`
+    /// ([`ScenarioEnv::spill_dir`]; also enabled by the
+    /// `NANOSORT_SPILL_DIR` environment knob). Results are byte-identical
+    /// with spill on or off.
+    pub fn spill_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.spill_dir = Some(dir.into());
+        self
+    }
+
     /// Set the full perturbation block (input distribution + stragglers).
     pub fn perturb(mut self, perturb: Perturbations) -> Self {
         self.perturb = perturb;
@@ -415,6 +505,12 @@ impl Scenario {
     /// Build the environment, run to quiescence, extract the report.
     pub fn run(self) -> Result<RunReport> {
         let nodes = self.nodes.unwrap_or_else(|| self.workload.default_nodes());
+        // Fabric flights store node ids at u32 width (§Scale, DESIGN.md
+        // §11); every fleet is sized through this one path.
+        anyhow::ensure!(
+            nodes <= u32::MAX as usize,
+            "fleet of {nodes} nodes exceeds the u32 node-id width"
+        );
         // One pool = one `--threads` budget: a plane built here shares it
         // with the executor, so shard workers and kernel tiles can never
         // oversubscribe the host ([`crate::pool`]).
@@ -433,6 +529,16 @@ impl Scenario {
              (the executor backends are byte-identical, so native --threads N \
              and xla --threads 1 still cross-check)"
         );
+        // Environment knobs fill in what the builder left unset; the
+        // builder always wins so programmatic callers are immune to a
+        // stray variable. Both knobs are digest-invisible by contract.
+        let stream_input = self.stream_input
+            || std::env::var("NANOSORT_STREAM_INPUT").is_ok_and(|v| v != "0" && !v.is_empty());
+        let spill_dir = self.spill_dir.or_else(|| {
+            std::env::var_os("NANOSORT_SPILL_DIR")
+                .filter(|v| !v.is_empty())
+                .map(std::path::PathBuf::from)
+        });
         let env = ScenarioEnv {
             nodes,
             net: self.net,
@@ -445,6 +551,8 @@ impl Scenario {
             window_batch: self.window_batch,
             force_rollback_every: self.force_rollback_every,
             pool,
+            stream_input,
+            spill_dir,
         };
         self.workload.run_on(&env)
     }

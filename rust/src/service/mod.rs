@@ -318,6 +318,10 @@ pub fn run_service_trace(
             window_batch: None,
             force_rollback_every: None,
             pool: pool.clone(),
+            // Service jobs are smoke/mid-sized: the hyper-tier memory
+            // paths (streamed input, spill) stay off here.
+            stream_input: false,
+            spill_dir: None,
         };
         let (programs, finish) = build_job(&spec.kind, &env)
             .with_context(|| format!("building job {} ({})", spec.id, spec.kind.workload()))?;
@@ -455,6 +459,12 @@ pub fn service_tier(tier: Tier, mix: Mix) -> (usize, ArrivalConfig) {
             (1024, ArrivalConfig { jobs: 64, mean_iat_ns: 2_000, mix, ..Default::default() })
         }
         Tier::Paper => {
+            (4096, ArrivalConfig { jobs: 256, mean_iat_ns: 1_000, mix, ..Default::default() })
+        }
+        // The service ladder tops out at the paper shape: the hyper
+        // tiers probe single-tenant memory scaling ([`crate::mem`]), not
+        // multi-tenant scheduling, so they alias the paper arrivals.
+        Tier::HyperSmoke | Tier::Hyper => {
             (4096, ArrivalConfig { jobs: 256, mean_iat_ns: 1_000, mix, ..Default::default() })
         }
     }

@@ -364,7 +364,7 @@ impl<M> EventQueue<M> {
     pub fn push(&mut self, t: Transit<M>) {
         let ev = Event {
             at: t.flight.at,
-            src: t.flight.src as u32,
+            src: t.flight.src,
             ctr: t.flight.ctr,
             slot: 0,
         };
@@ -445,14 +445,35 @@ impl NodeStats {
 }
 
 /// Hot per-node scheduling state: everything the deliver/invoke path
-/// mutates on every event, packed into a flat 16 B/node arena so the top
-/// of the event loop touches one cache line per node instead of the full
-/// program + stats struct (§Scale).
+/// mutates on every event, packed into a flat arena so the top of the
+/// event loop touches one cache line per node instead of the full
+/// program + stats struct (§Scale). The stage and finished flag share
+/// one byte (stage needs 4 bits — [`MAX_STAGES`] is 16 — and finished
+/// is bit 7), so a HotNode is 9 B payload instead of 16 and the hyper
+/// tier's 2^20-entry arena stays under 10 MB.
 #[derive(Clone, Copy)]
 struct HotNode {
     busy_until: Time,
-    stage: u8,
-    finished: bool,
+    /// Bit 7 = finished; low 4 bits = stage.
+    packed: u8,
+}
+
+impl HotNode {
+    const FINISHED: u8 = 0x80;
+    const STAGE_MASK: u8 = (MAX_STAGES - 1) as u8;
+
+    fn stage(self) -> u8 {
+        self.packed & Self::STAGE_MASK
+    }
+
+    fn finished(self) -> bool {
+        self.packed & Self::FINISHED != 0
+    }
+
+    fn set(&mut self, stage: u8, finished: bool) {
+        debug_assert!(stage < MAX_STAGES as u8);
+        self.packed = (stage & Self::STAGE_MASK) | if finished { Self::FINISHED } else { 0 };
+    }
 }
 
 /// Cold per-node state: the program itself, its RNG stream, and the
@@ -460,8 +481,9 @@ struct HotNode {
 struct NodeSlot<P: Program> {
     prog: P,
     rng: SplitMix64,
-    /// Reorder buffer: (step, src, msg), kept in arrival order.
-    held: Vec<(u32, NodeId, P::Msg)>,
+    /// Reorder buffer: (step, src, msg), kept in arrival order. The
+    /// source id is stored at fabric width (`u32`, see [`Flight`]).
+    held: Vec<(u32, u32, P::Msg)>,
 }
 
 /// Outcome of a completed run.
@@ -594,10 +616,7 @@ impl<P: Program> Shard<P> {
         Shard {
             nodes,
             slow,
-            hot: vec![
-                HotNode { busy_until: Time::ZERO, stage: 0, finished: false };
-                range.len()
-            ],
+            hot: vec![HotNode { busy_until: Time::ZERO, packed: 0 }; range.len()],
             stats: vec![NodeStats::default(); range.len()],
             queue: EventQueue::new(),
             tx: fabric.tx_lane(range.clone()),
@@ -621,7 +640,7 @@ impl<P: Program> Shard<P> {
 
     /// Accept a transit produced by another shard.
     pub fn push(&mut self, t: Transit<P::Msg>) {
-        debug_assert!(self.owns(t.flight.dst));
+        debug_assert!(self.owns(t.flight.dst as usize));
         self.queue.push(t);
     }
 
@@ -682,7 +701,7 @@ impl<P: Program> Shard<P> {
             if t.phantom {
                 continue; // multicast self-leg: delivered, never invoked
             }
-            self.deliver(sx, arrival, t.flight.src, t.flight.dst, t.msg, emit);
+            self.deliver(sx, arrival, t.flight.src as usize, t.flight.dst as usize, t.msg, emit);
         }
     }
 
@@ -704,7 +723,7 @@ impl<P: Program> Shard<P> {
             let st = &mut self.stats[i];
             let start = at.max(hot.busy_until);
             let idle = start.saturating_sub(hot.busy_until);
-            let stage = hot.stage as usize;
+            let stage = hot.stage() as usize;
             st.idle[stage] += idle;
             let cost = Time::from_cycles(
                 (sx.core.rx_cycles(msg.wire_bytes()) + REORDER_STORE_CYCLES) * sf,
@@ -713,7 +732,7 @@ impl<P: Program> Shard<P> {
             st.busy[stage] += cost;
             st.last_active = hot.busy_until;
             st.msgs_in += 1;
-            self.nodes[i].held.push((step, src, msg));
+            self.nodes[i].held.push((step, src as u32, msg));
             return;
         }
         self.invoke(sx, dst, at, Some((src, msg, true)), emit);
@@ -734,7 +753,7 @@ impl<P: Program> Shard<P> {
             let Some(pos) = pos else { break };
             let (_, src, msg) = self.nodes[i].held.remove(pos);
             let at = self.hot[i].busy_until;
-            self.invoke_held(sx, id, at, src, msg, emit);
+            self.invoke_held(sx, id, at, src as usize, msg, emit);
         }
     }
 
@@ -776,7 +795,7 @@ impl<P: Program> Shard<P> {
         // Idle attribution: waiting between end of previous work and start.
         let idle = start.saturating_sub(hot.busy_until);
         if input.is_some() {
-            st.idle[hot.stage as usize] += idle;
+            st.idle[hot.stage() as usize] += idle;
         }
 
         let mut entry = start;
@@ -788,8 +807,8 @@ impl<P: Program> Shard<P> {
             st.msgs_in += 1;
         }
 
-        let mut stage = hot.stage;
-        let mut finished = hot.finished;
+        let mut stage = hot.stage();
+        let mut finished = hot.finished();
         debug_assert!(self.ops_scratch.is_empty());
         let mut ctx = Ctx {
             node: id,
@@ -813,9 +832,8 @@ impl<P: Program> Shard<P> {
 
         let end = entry + Time::from_cycles(cycles * sf);
         let busy_span = end.saturating_sub(start);
-        st.busy[hot.stage as usize] += busy_span;
-        hot.stage = stage;
-        hot.finished = finished;
+        st.busy[hot.stage() as usize] += busy_span;
+        hot.set(stage, finished);
         st.finished = finished;
         hot.busy_until = end;
         if busy_span > Time::ZERO || was_msg {
@@ -878,7 +896,7 @@ impl<P: Program> Shard<P> {
         msg: P::Msg,
         emit: &mut impl FnMut(Transit<P::Msg>),
     ) {
-        let own = self.owns(flight.dst);
+        let own = self.owns(flight.dst as usize);
         let t = Transit { flight, phantom, timer, msg };
         if own && !self.divert {
             self.queue.push(t);
@@ -927,7 +945,7 @@ impl<P: Program> Shard<P> {
         debug_assert!(bound() <= self.spec_fence(), "burst bound past the rewind fence");
         self.divert = true;
         while let Some(t) = self.queue.pop_before(bound()) {
-            let i = self.ix(t.flight.dst);
+            let i = self.ix(t.flight.dst as usize);
             if log.node_stamp[i] != log.burst {
                 log.node_stamp[i] = log.burst;
                 log.saved.push((
@@ -938,8 +956,8 @@ impl<P: Program> Shard<P> {
                         held: self.nodes[i].held.clone(),
                         hot: self.hot[i],
                         stats: self.stats[i].clone(),
-                        tx: self.tx.spec_save(t.flight.dst),
-                        ingress: self.rx.spec_save(t.flight.dst),
+                        tx: self.tx.spec_save(t.flight.dst as usize),
+                        ingress: self.rx.spec_save(t.flight.dst as usize),
                     },
                 ));
             }
@@ -951,7 +969,14 @@ impl<P: Program> Shard<P> {
                 sx.fabric.admit(&mut self.rx, &mut self.net, &t.flight, t.msg.wire_bytes())
             };
             if !t.phantom {
-                self.deliver(sx, arrival, t.flight.src, t.flight.dst, t.msg, emit);
+                self.deliver(
+                    sx,
+                    arrival,
+                    t.flight.src as usize,
+                    t.flight.dst as usize,
+                    t.msg,
+                    emit,
+                );
             }
         }
         self.divert = false;
@@ -999,7 +1024,7 @@ impl<P: Program> Shard<P> {
 struct NodeBackup<P: Program> {
     prog: P,
     rng: SplitMix64,
-    held: Vec<(u32, NodeId, P::Msg)>,
+    held: Vec<(u32, u32, P::Msg)>,
     hot: HotNode,
     stats: NodeStats,
     /// Sender-side lane registers (egress busy-until, RNG, flight ctr).
@@ -1039,7 +1064,7 @@ impl<P: Program> SpecLog<P> {
     }
 
     /// Canonical key of the last (deepest) speculated event.
-    pub fn last_key(&self) -> Option<(Time, usize, u64)> {
+    pub fn last_key(&self) -> Option<(Time, u32, u64)> {
         self.redo.last().map(|t| (t.flight.at, t.flight.src, t.flight.ctr))
     }
 

@@ -70,7 +70,7 @@ use crate::sim::Time;
 /// round that resolves it.
 struct PendingBurst<M> {
     /// Canonical key of the deepest speculated event.
-    last_key: (Time, usize, u64),
+    last_key: (Time, u32, u64),
     /// Time of the first speculated event (the published minimum).
     first_at: Time,
     /// Buffered own-shard emissions, released into the queue on commit.
@@ -183,7 +183,7 @@ fn worker<P: Program + Clone>(
 
     // Round 0: fire every on_start and exchange the initial transits.
     {
-        let mut emit = |t: Transit<P::Msg>| out[shard_of(starts, t.flight.dst)].push(t);
+        let mut emit = |t: Transit<P::Msg>| out[shard_of(starts, t.flight.dst as usize)].push(t);
         shard.start(sx, &mut emit);
     }
     flush(&mut out, sync, idx);
@@ -285,7 +285,7 @@ fn worker<P: Program + Clone>(
         let drained_to = {
             let guard = Cell::new(horizon.min(own_cap));
             let mut emit = |t: Transit<P::Msg>| {
-                let d = shard_of(starts, t.flight.dst);
+                let d = shard_of(starts, t.flight.dst as usize);
                 guard.set(guard.get().min(t.flight.at.0.saturating_add(bounds.get(d, idx))));
                 out[d].push(t);
             };
@@ -309,7 +309,7 @@ fn worker<P: Program + Clone>(
                     (0..n).map(|_| Vec::new()).collect();
                 {
                     let mut emit = |t: Transit<P::Msg>| {
-                        let d = shard_of(starts, t.flight.dst);
+                        let d = shard_of(starts, t.flight.dst as usize);
                         if d == idx {
                             // Buffered until commit, so the burst must
                             // not pop past its arrival: anything later in

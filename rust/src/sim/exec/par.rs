@@ -359,7 +359,7 @@ fn worker<P: Program>(
     // Round 0: fire every on_start and exchange the initial transits.
     {
         let mut emit =
-            |t: Transit<P::Msg>| out[shard_of(starts, t.flight.dst)].push(t);
+            |t: Transit<P::Msg>| out[shard_of(starts, t.flight.dst as usize)].push(t);
         shard.start(sx, &mut emit);
     }
     flush(&mut out, sync, idx);
@@ -413,7 +413,7 @@ fn worker<P: Program>(
             // stretches coalesce freely up to the `batch` cap.
             let guard = std::cell::Cell::new(horizon.min(own_cap));
             let mut emit = |t: Transit<P::Msg>| {
-                let d = shard_of(starts, t.flight.dst);
+                let d = shard_of(starts, t.flight.dst as usize);
                 guard.set(guard.get().min(t.flight.at.0.saturating_add(bounds.get(d, idx))));
                 out[d].push(t);
             };

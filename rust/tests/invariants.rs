@@ -1,9 +1,10 @@
 //! Invariant suite for the distributed sort: for a seeded sweep of
 //! (nodes, keys-per-node, buckets) shapes, the NanoSort output must be
 //! globally sorted, conserve every key across the shuffle (none lost,
-//! none duplicated), be deterministic across runs, and — since the input
-//! multiset is a function of (seed, total keys) alone — be independent of
-//! how many nodes the same keys are spread over.
+//! none duplicated), be deterministic across runs, and — since node
+//! `i`'s input is a pure per-node stream of (seed, i, keys-per-node) —
+//! be identical whether the fleet's keys were generated all at once or
+//! one node at a time.
 
 use nanosort::algo::nanosort::NanoSort;
 use nanosort::graysort::KeyGen;
@@ -94,41 +95,34 @@ fn determinism_across_two_runs() {
     }
 }
 
-/// Node-count independence: the input multiset is `KeyGen(seed)`'s first
-/// `total` distinct keys regardless of how many cores they are split
-/// over, and a validated run's concatenated output *is* that multiset
-/// sorted. So for a fixed (seed, total), every fleet shape must sort the
-/// same keys — verified here by (a) pinning the generator property and
-/// (b) requiring full validation on each shape.
+/// Stream independence: node `i`'s input is `KeyGen(seed).node_keys(i,
+/// kpn)` whether the fleet is generated all at once or one node at a
+/// time — the per-node streams are the definition, the materialized
+/// array just their concatenation. Every shape must then fully validate:
+/// sorted + permutation-of-input ⇒ output == sorted(input), which the
+/// generator check pins to the per-node streams.
 #[test]
-fn sorted_output_is_node_count_independent() {
+fn sorted_output_matches_per_node_streams() {
     let seed = 5u64;
     let total = 1024usize;
     // 1024 keys as 16×64, 64×16, and 256×4 (buckets chosen so nodes is an
     // exact power).
     let shapes: &[(usize, usize, usize)] = &[(16, 64, 4), (64, 16, 8), (256, 4, 16)];
 
-    let canonical: Vec<Vec<u64>> = shapes
-        .iter()
-        .map(|&(nodes, _, _)| {
-            let mut flat: Vec<u64> = KeyGen::new(seed)
-                .generate(total, nodes)
-                .into_iter()
-                .flatten()
-                .collect();
-            flat.sort_unstable();
-            flat
-        })
-        .collect();
-    assert_eq!(canonical[0], canonical[1], "input multiset depends on node count");
-    assert_eq!(canonical[0], canonical[2], "input multiset depends on node count");
-
     for &(nodes, kpn, buckets) in shapes {
         assert_eq!(nodes * kpn, total);
+        let materialized = KeyGen::new(seed).generate(total, nodes);
+        let kg = KeyGen::new(seed);
+        for (i, part) in materialized.iter().enumerate() {
+            assert_eq!(
+                &kg.node_keys(i, kpn),
+                part,
+                "nodes={nodes}: node {i} stream diverged from the materialized path"
+            );
+        }
+
         let r = run(nodes, kpn, buckets, seed, false);
         let v = r.validation.sort.as_ref().unwrap();
-        // sorted + permutation-of-input ⇒ output == sorted(input), which
-        // the generator check above pinned to be shape-independent.
         assert!(v.globally_sorted && v.is_permutation, "nodes={nodes}: {v:?}");
         assert_eq!(v.total_keys, total);
     }
