@@ -7,10 +7,41 @@ mod common;
 use common::{section, Bench};
 use nanosort::algo::nanosort::pivot::pivot_select;
 use nanosort::compute::{LocalCompute, NativeCompute, XlaCompute};
+use nanosort::mem::thread_alloc_count;
+use nanosort::nanopu::SmallWords;
 use nanosort::net::{Fabric, NetConfig, Topology};
+use nanosort::sim::exec::queue_churn_allocs;
 use nanosort::sim::{SplitMix64, Time};
 
 fn main() {
+    section("Event queue — steady-state churn (allocs asserted)");
+    // Timed row: one push/pop round trip through the timing wheel.
+    Bench::new("wheel/push_pop_x100k").samples(20).run(|| queue_churn_allocs(100_000));
+    // The asserted row: steady state must allocate exactly zero (the
+    // ISSUE 10 contract — the wheel recycles every bucket and slot).
+    let allocs = queue_churn_allocs(100_000);
+    assert_eq!(allocs, 0, "timing wheel allocated {allocs}× in steady state");
+    println!("    -> wheel steady-state allocs per 100k events: {allocs} (asserted 0)");
+
+    section("Message path — small-payload construction (allocs asserted)");
+    let words = [3u64, 1, 2];
+    Bench::new("small_words/inline3_x1M").samples(20).run(|| {
+        let mut acc = 0u64;
+        for i in 0..1_000_000u64 {
+            let s = SmallWords::from_slice(std::hint::black_box(&words));
+            acc ^= s.as_slice()[(i % 3) as usize];
+        }
+        acc
+    });
+    let before = thread_alloc_count();
+    for _ in 0..10_000u64 {
+        let s = SmallWords::from_slice(std::hint::black_box(&words));
+        std::hint::black_box(s.as_slice()[0]);
+    }
+    let allocs = thread_alloc_count() - before;
+    assert_eq!(allocs, 0, "inline small-message path allocated {allocs}×");
+    println!("    -> inline small-message allocs per 10k constructions: {allocs} (asserted 0)");
+
     section("Fabric — per-message routing cost");
     let mut fabric = Fabric::new(Topology::paper(65_536), NetConfig::default(), 1);
     let mut i = 0usize;

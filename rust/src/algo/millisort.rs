@@ -28,7 +28,7 @@ use crate::algo::tree::AggTree;
 use crate::compute::LocalCompute;
 use crate::cpu::Temp;
 use crate::graysort::validate_sorted_output;
-use crate::nanopu::{Ctx, NodeId, Program, WireMsg};
+use crate::nanopu::{Ctx, NodeId, Program, SmallWords, WireMsg};
 use crate::scenario::{
     Built, Finish, NodeSlots, RunReport, ScenarioEnv, Validation, Workload,
 };
@@ -56,8 +56,11 @@ pub enum MsMsg {
     /// `Arc`-pooled so each scatter hop clones a pointer, not the list
     /// (§Perf, [`WireMsg`] payload-pooling note).
     Probe { round: u16, candidates: Arc<Vec<u64>> },
-    /// Local/aggregated cumulative counts at the candidates (cores-1 words).
-    Counts { round: u16, cum: Vec<u64> },
+    /// Local/aggregated cumulative counts at the candidates (cores-1
+    /// words). [`SmallWords`]: at small core counts the vector rides
+    /// inline through the event queue; bigger fleets spill to the heap
+    /// arm with identical observable behavior (DESIGN.md §12).
+    Counts { round: u16, cum: SmallWords },
     /// Final boundary list scattered down the tree (`Arc`-pooled).
     Boundaries { boundaries: Arc<Vec<u64>> },
     /// One shuffled key.
@@ -156,10 +159,10 @@ impl MilliSortNode {
     /// its children's vectors, push the sum up (or conclude, at the root).
     fn probe_contribute(&mut self, ctx: &mut Ctx<MsMsg>, round: u16, candidates: &[u64]) {
         let own = self.local_cum(ctx, candidates);
-        self.probe_fold(ctx, round, own, true);
+        self.probe_fold(ctx, round, &own, true);
     }
 
-    fn probe_fold(&mut self, ctx: &mut Ctx<MsMsg>, round: u16, cum: Vec<u64>, is_own: bool) {
+    fn probe_fold(&mut self, ctx: &mut Ctx<MsMsg>, round: u16, cum: &[u64], is_own: bool) {
         let tree = self.tree();
         // Expected children = all subtree children across rounds (the
         // whole subtree reports through this node).
@@ -172,7 +175,7 @@ impl MilliSortNode {
             .entry(round)
             .or_insert_with(|| (vec![0u64; self.shared.cores - 1], 0));
         ctx.compute(COUNT_SUM_CYCLES * cum.len() as u64);
-        for (a, b) in entry.0.iter_mut().zip(&cum) {
+        for (a, b) in entry.0.iter_mut().zip(cum) {
             *a += b;
         }
         if is_own {
@@ -180,22 +183,24 @@ impl MilliSortNode {
         } else {
             entry.1 += 1;
         }
-        let (sum, have) = self.probe_pending.get(&round).cloned().unwrap();
+        let have = self.probe_pending.get(&round).expect("entry just touched").1;
         let own_done = self.probe_sent_own.get(&round).copied().unwrap_or(false);
         if have < expected || !own_done {
             return;
         }
-        self.probe_pending.remove(&round);
+        // §Perf: move the accumulated sum out of the map (it is dead
+        // there) instead of cloning the full vector per fold.
+        let (sum, _) = self.probe_pending.remove(&round).expect("entry just touched");
         if self.id == 0 {
-            self.root_advance_probe(ctx, round, sum);
+            self.root_advance_probe(ctx, round, &sum);
         } else {
-            ctx.send(self.tree().parent(self.id), MsMsg::Counts { round, cum: sum });
+            ctx.send(self.tree().parent(self.id), MsMsg::Counts { round, cum: sum.into() });
         }
     }
 
     /// Root: bisect each splitter toward its target rank; next round or
     /// finish.
-    fn root_advance_probe(&mut self, ctx: &mut Ctx<MsMsg>, round: u16, cum: Vec<u64>) {
+    fn root_advance_probe(&mut self, ctx: &mut Ctx<MsMsg>, round: u16, cum: &[u64]) {
         let cores = self.shared.cores;
         ctx.compute(BISECT_CYCLES * (cores as u64 - 1));
         // Target rank of splitter j is (j+1) * total / cores; `total` is
@@ -351,7 +356,7 @@ impl Program for MilliSortNode {
                 self.probe_contribute(ctx, round, &candidates);
             }
             MsMsg::Counts { round, cum } => {
-                self.probe_fold(ctx, round, cum, false);
+                self.probe_fold(ctx, round, &cum, false);
             }
             MsMsg::Boundaries { boundaries } => {
                 self.scatter(ctx, || MsMsg::Boundaries { boundaries: boundaries.clone() });

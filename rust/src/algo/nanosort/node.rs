@@ -11,7 +11,7 @@ use crate::graysort::{
     validate_sorted_output, value_of_key, MultisetHash, SpillWriter, StreamingValidator,
     ValidationReport, DEFAULT_SPILL_BINS,
 };
-use crate::nanopu::{Ctx, Group, GroupId, NodeId, Program, WireMsg};
+use crate::nanopu::{Ctx, Group, GroupId, NodeId, Program, SmallWords, WireMsg};
 use crate::scenario::{
     Built, Finish, MetricValue, NodeSlots, RunReport, ScenarioEnv, Validation, Workload,
 };
@@ -69,8 +69,11 @@ pub fn depth_of(nodes: usize, buckets: usize) -> Result<u32> {
 /// value phase run at `2r`.
 #[derive(Debug, Clone)]
 pub enum NsMsg {
-    /// Median-tree contribution (empty pivots = abstain: node had no keys).
-    PivotUp { level: u8, round: u8, pivots: Vec<u64> },
+    /// Median-tree contribution (empty pivots = abstain: node had no
+    /// keys). The payload is a [`SmallWords`]: at the paper's bucket
+    /// count the pivot vector fits inline, so the dominant unicast of the
+    /// pivot phase never allocates (§Perf, DESIGN.md §12).
+    PivotUp { level: u8, round: u8, pivots: SmallWords },
     /// Final pivots broadcast by the group root. The vector is shared
     /// behind `Arc`: the engine clones the message once per multicast
     /// member (65,536 at level 0 of the paper tier), and a pooled payload
@@ -202,7 +205,7 @@ pub struct NanoSortNode {
     /// arrival order. Live entries are incast-bounded, so a flat vec
     /// beats a HashMap (§Scale: two maps per node was 2 × 65,536 heap
     /// tables at paper scale).
-    mt_pending: Vec<(u32, Vec<u64>)>,
+    mt_pending: Vec<(u32, SmallWords)>,
 
     // Count-tree state.
     sent_this_level: u64,
@@ -358,26 +361,28 @@ impl NanoSortNode {
                 }
                 // Combine: element-wise median over own + non-abstaining
                 // child vectors (paper: median-of-medians per position).
-                let mut vectors: Vec<Vec<u64>> = Vec::with_capacity(have + 1);
-                self.mt_pending.retain_mut(|(r, pivots)| {
-                    if *r == next {
-                        vectors.push(std::mem::take(pivots));
-                        false
-                    } else {
-                        true
+                // §Perf: the rows are borrowed in place — no per-combine
+                // clone of the child vectors or of `my_pivots`.
+                let my = std::mem::take(&mut self.my_pivots);
+                let mut rows: Vec<&[u64]> = Vec::with_capacity(have + 1);
+                for (r, pivots) in &self.mt_pending {
+                    if *r == next && !pivots.is_empty() {
+                        rows.push(pivots.as_slice());
                     }
-                });
-                if !self.my_pivots.is_empty() {
-                    vectors.push(self.my_pivots.clone());
                 }
-                vectors.retain(|v| !v.is_empty());
-                if !vectors.is_empty() {
+                if !my.is_empty() {
+                    rows.push(&my);
+                }
+                if rows.is_empty() {
+                    self.my_pivots = my; // whole subtree abstained
+                } else {
                     ctx.compute(ctx.core().median_combine_cycles(
-                        vectors.len() as u64,
+                        rows.len() as u64,
                         (self.shared.buckets - 1) as u64,
                     ));
-                    self.my_pivots = self.compute.median_combine(&vectors);
+                    self.my_pivots = self.compute.median_combine(&rows);
                 }
+                self.mt_pending.retain(|(r, _)| *r != next);
                 self.mt_round = next;
             } else {
                 // Leaf/exit: contribute upward once, then wait for Pivots.
@@ -388,7 +393,7 @@ impl NanoSortNode {
                     NsMsg::PivotUp {
                         level: self.level as u8,
                         round: next as u8,
-                        pivots: self.my_pivots.clone(),
+                        pivots: SmallWords::from_slice(&self.my_pivots),
                     },
                 );
                 self.mt_round = rounds + 1;

@@ -92,7 +92,9 @@ pub trait LocalCompute: Send + Sync {
     /// Element-wise lower median across rows. All rows must be the same
     /// length (callers aggregate fixed-width pivot vectors); ragged input
     /// is a caller bug and panics rather than silently truncating.
-    fn median_combine(&self, rows: &[Vec<u64>]) -> Vec<u64>;
+    /// Rows are borrowed slices so callers can aggregate in place —
+    /// combining must not force a clone of every contribution (§Perf).
+    fn median_combine(&self, rows: &[&[u64]]) -> Vec<u64>;
 
     /// Fused kernel: sort `(key, payload)` pairs ascending by key,
     /// **stable** (equal keys keep input order — the contract every

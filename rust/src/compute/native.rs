@@ -25,7 +25,7 @@ impl LocalCompute for NativeCompute {
             .collect()
     }
 
-    fn median_combine(&self, rows: &[Vec<u64>]) -> Vec<u64> {
+    fn median_combine(&self, rows: &[&[u64]]) -> Vec<u64> {
         let m = rows.len();
         assert!(m > 0, "median_combine of zero rows");
         let p = rows[0].len();
@@ -79,10 +79,10 @@ mod tests {
     #[test]
     fn median_combine_lower_median() {
         let nc = NativeCompute;
-        let rows = vec![vec![1u64, 100], vec![2, 200], vec![3, 300], vec![4, 400]];
+        let rows: [&[u64]; 4] = [&[1, 100], &[2, 200], &[3, 300], &[4, 400]];
         // even m: lower median = element (m-1)/2 = index 1
         assert_eq!(nc.median_combine(&rows), vec![2, 200]);
-        let rows5 = vec![vec![5u64], vec![1], vec![3], vec![2], vec![4]];
+        let rows5: [&[u64]; 5] = [&[5], &[1], &[3], &[2], &[4]];
         assert_eq!(nc.median_combine(&rows5), vec![3]);
     }
 
@@ -92,7 +92,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "median_combine rows must share one length")]
     fn median_combine_rejects_ragged_rows() {
-        NativeCompute.median_combine(&[vec![1u64, 2, 3], vec![4, 5]]);
+        NativeCompute.median_combine(&[&[1u64, 2, 3], &[4, 5]]);
     }
 
     #[test]

@@ -472,7 +472,7 @@ impl LocalCompute for RadixCompute {
         partition_by(pairs, pivots, |p| p.0)
     }
 
-    fn median_combine(&self, rows: &[Vec<u64>]) -> Vec<u64> {
+    fn median_combine(&self, rows: &[&[u64]]) -> Vec<u64> {
         NativeCompute.median_combine(rows)
     }
 

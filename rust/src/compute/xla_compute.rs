@@ -228,14 +228,14 @@ impl LocalCompute for XlaCompute {
         out
     }
 
-    fn median_combine(&self, rows: &[Vec<u64>]) -> Vec<u64> {
+    fn median_combine(&self, rows: &[&[u64]]) -> Vec<u64> {
         let m = rows.len();
         let p = rows.first().map(|r| r.len()).unwrap_or(0);
         if !MEDIAN_SHAPES.contains(&(m, p)) {
             self.bump_fallback();
             return self.native.median_combine(rows);
         }
-        let flat: Vec<u64> = rows.iter().flatten().copied().collect();
+        let flat: Vec<u64> = rows.iter().flat_map(|r| r.iter()).copied().collect();
         let art = self
             .engine
             .load(&format!("median_combine_m{m}_p{p}"))
@@ -333,17 +333,18 @@ mod tests {
         let Some(x) = engine_or_skip() else { return };
         let native = NativeCompute;
         for &(m, p) in &MEDIAN_SHAPES {
-            let rows: Vec<Vec<u64>> = (0..m)
+            let owned: Vec<Vec<u64>> = (0..m)
                 .map(|i| {
                     let mut r = rand_keys((m * p + i) as u64, p);
                     r.sort_unstable();
                     r
                 })
                 .collect();
+            let rows: Vec<&[u64]> = owned.iter().map(|r| r.as_slice()).collect();
             assert_eq!(x.median_combine(&rows), native.median_combine(&rows), "m={m} p={p}");
         }
         // Un-compiled shape falls back to native.
-        let rows = vec![vec![1u64, 2], vec![3, 4], vec![5, 6]];
+        let rows: [&[u64]; 3] = [&[1, 2], &[3, 4], &[5, 6]];
         assert_eq!(x.median_combine(&rows), native.median_combine(&rows));
         assert!(x.counters.native_fallbacks.load(Ordering::Relaxed) >= 1);
     }

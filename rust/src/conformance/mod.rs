@@ -320,6 +320,11 @@ pub struct BenchRecord {
     /// ([`crate::mem::alloc_count`] delta) — the churn proxy next to
     /// peak RSS.
     pub alloc_count: u64,
+    /// `alloc_count / events`: allocation churn normalized per simulated
+    /// event, so records at different tiers are comparable and the CI
+    /// alloc-churn gate has a scale-free figure to ceiling-check
+    /// (computed by [`BenchRecord::with_mem`]; 0 until then).
+    pub allocs_per_event: f64,
     pub events: u64,
     pub msgs_sent: u64,
     pub validated: bool,
@@ -352,6 +357,7 @@ impl BenchRecord {
             peak_rss_mb: None,
             bytes_spilled: 0,
             alloc_count: 0,
+            allocs_per_event: 0.0,
             events: report.summary.events,
             msgs_sent: report.summary.net.msgs_sent,
             validated: report.validation.ok(),
@@ -415,6 +421,7 @@ impl BenchRecord {
         self.peak_rss_mb = peak_rss_mb;
         self.bytes_spilled = bytes_spilled;
         self.alloc_count = alloc_count;
+        self.allocs_per_event = alloc_count as f64 / self.events.max(1) as f64;
         self
     }
 
@@ -461,8 +468,9 @@ impl BenchRecord {
                 None => String::new(),
             };
             format!(
-                "{rss}\n  \"bytes_spilled\": {},\n  \"alloc_count\": {},",
-                self.bytes_spilled, self.alloc_count
+                "{rss}\n  \"bytes_spilled\": {},\n  \"alloc_count\": {},\n  \
+                 \"allocs_per_event\": {:.3},",
+                self.bytes_spilled, self.alloc_count, self.allocs_per_event
             )
         } else {
             String::new()
@@ -676,10 +684,16 @@ mod tests {
         let json = record.to_json();
         assert!(!json.contains("\"peak_rss_mb\""), "mem only when attached: {json}");
         assert!(!json.contains("\"alloc_count\""), "mem only when attached: {json}");
-        let json = record.clone().with_mem(Some(123), 4096, 77).to_json();
+        let with_mem = record.clone().with_mem(Some(123), 4096, 77);
+        let json = with_mem.to_json();
         assert!(json.contains("\"peak_rss_mb\": 123"), "{json}");
         assert!(json.contains("\"bytes_spilled\": 4096"), "{json}");
         assert!(json.contains("\"alloc_count\": 77"), "{json}");
+        assert!(json.contains("\"allocs_per_event\""), "{json}");
+        // allocs_per_event = alloc_count / events, never NaN/inf.
+        let expect = 77.0 / with_mem.events.max(1) as f64;
+        assert!((with_mem.allocs_per_event - expect).abs() < 1e-12);
+        assert!(with_mem.allocs_per_event.is_finite());
         let json = record.with_mem(None, 0, 77).to_json();
         assert!(!json.contains("\"peak_rss_mb\""), "optional off Linux: {json}");
         assert!(json.contains("\"bytes_spilled\": 0"), "{json}");

@@ -38,10 +38,28 @@ pub fn peak_rss_mb() -> Option<u64> {
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+std::thread_local! {
+    /// Per-thread allocation counter (see [`thread_alloc_count`]). A
+    /// const-initialized `Cell<u64>` has no destructor, so touching it
+    /// from inside the allocator cannot recurse through TLS
+    /// registration, and `try_with` makes the increment a no-op during
+    /// thread teardown instead of a panic.
+    static THREAD_ALLOCS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
 /// Total heap allocations since process start (relaxed counter; exact
 /// enough for a churn trajectory, free of synchronization cost).
 pub fn alloc_count() -> u64 {
     ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Heap allocations made by the *calling thread* since it started.
+/// Zero-alloc pins diff this across a code region: unlike the global
+/// [`alloc_count`], it cannot be perturbed by concurrently running
+/// threads (the test harness runs tests in parallel), so
+/// `assert_eq!(delta, 0)` is race-free.
+pub fn thread_alloc_count() -> u64 {
+    THREAD_ALLOCS.try_with(std::cell::Cell::get).unwrap_or(0)
 }
 
 /// System allocator wrapped with one relaxed counter increment per
@@ -55,6 +73,7 @@ pub struct CountingAlloc;
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
         System.alloc(layout)
     }
 
@@ -64,11 +83,13 @@ unsafe impl GlobalAlloc for CountingAlloc {
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
         System.realloc(ptr, layout, new_size)
     }
 
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
         System.alloc_zeroed(layout)
     }
 }
@@ -83,6 +104,20 @@ mod tests {
         let v: Vec<u64> = Vec::with_capacity(1024);
         drop(v);
         assert!(alloc_count() > before, "heap allocation not counted");
+    }
+
+    #[test]
+    fn thread_alloc_count_advances_and_is_quiet_when_idle() {
+        let before = thread_alloc_count();
+        let v: Vec<u64> = Vec::with_capacity(64);
+        drop(v);
+        assert!(thread_alloc_count() > before, "own-thread allocation not counted");
+        // An allocation-free region moves the thread counter by exactly
+        // zero, regardless of what other test threads are doing.
+        let quiet = thread_alloc_count();
+        let x = std::hint::black_box(42u64) + std::hint::black_box(1);
+        assert_eq!(x, 43);
+        assert_eq!(thread_alloc_count(), quiet);
     }
 
     #[test]

@@ -106,6 +106,107 @@ pub trait WireMsg: Clone + Send {
     }
 }
 
+/// Words of payload a [`SmallWords`] stores inline (24 bytes — the
+/// Kick/Probe/Done/counts class that dominates message counts stays at
+/// or under this at the paper fanout).
+pub const INLINE_WORDS: usize = 3;
+
+/// A small-message payload: up to [`INLINE_WORDS`] `u64`s stored inline
+/// in the message itself, spilling to a heap `Vec` only beyond that.
+///
+/// §Perf: the nanoPU's premise is that per-message overhead bounds
+/// granularity, and most NanoSort control messages carry ≤ 3 words
+/// (a cumulative count, a pivot pair, a round tag). Storing them inline
+/// means a unicast small message is `memcpy`'d through the event queue
+/// and inboxes without ever touching the allocator — the heap variant
+/// survives only for genuinely bulky payloads (full splitter lists at
+/// high fanout). The enum is 32 bytes either way, so the inline arm
+/// costs nothing in event-queue footprint.
+///
+/// Digest-invisible by construction: [`SmallWords::as_slice`] yields the
+/// same words for both representations, and wire-byte accounting is
+/// `8 * len` regardless of where the words live (DESIGN.md §7, §12).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SmallWords {
+    /// Up to [`INLINE_WORDS`] words stored in the message body.
+    Inline { len: u8, words: [u64; INLINE_WORDS] },
+    /// Heap spill for payloads beyond the inline threshold.
+    Heap(Vec<u64>),
+}
+
+/// Test hook: force every [`SmallWords`] onto the heap arm so digest
+/// tests can byte-compare inline vs boxed runs (see `tests/exec.rs`).
+static FORCE_BOXED: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// Globally disable the inline arm (test-only; affects subsequently
+/// constructed payloads). The two representations must produce identical
+/// digests — this hook lets a test pin that.
+pub fn force_boxed_small_words(on: bool) {
+    FORCE_BOXED.store(on, std::sync::atomic::Ordering::SeqCst);
+}
+
+fn force_boxed() -> bool {
+    FORCE_BOXED.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+impl SmallWords {
+    /// Build from a slice, inlining when it fits.
+    pub fn from_slice(words: &[u64]) -> SmallWords {
+        if words.len() <= INLINE_WORDS && !force_boxed() {
+            let mut buf = [0u64; INLINE_WORDS];
+            buf[..words.len()].copy_from_slice(words);
+            SmallWords::Inline { len: words.len() as u8, words: buf }
+        } else {
+            SmallWords::Heap(words.to_vec())
+        }
+    }
+
+    /// The payload as a word slice, representation-independent.
+    pub fn as_slice(&self) -> &[u64] {
+        match self {
+            SmallWords::Inline { len, words } => &words[..*len as usize],
+            SmallWords::Heap(v) => v,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            SmallWords::Inline { len, .. } => *len as usize,
+            SmallWords::Heap(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for SmallWords {
+    /// Empty inline payload (no allocation).
+    fn default() -> SmallWords {
+        SmallWords::Inline { len: 0, words: [0; INLINE_WORDS] }
+    }
+}
+
+impl From<Vec<u64>> for SmallWords {
+    /// Moves the Vec when it exceeds the inline threshold (no copy), and
+    /// inlines + drops it otherwise.
+    fn from(v: Vec<u64>) -> SmallWords {
+        if v.len() <= INLINE_WORDS && !force_boxed() {
+            SmallWords::from_slice(&v)
+        } else {
+            SmallWords::Heap(v)
+        }
+    }
+}
+
+impl std::ops::Deref for SmallWords {
+    type Target = [u64];
+    fn deref(&self) -> &[u64] {
+        self.as_slice()
+    }
+}
+
 /// A node program (one per simulated core).
 pub trait Program {
     type Msg: WireMsg;

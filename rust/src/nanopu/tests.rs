@@ -139,3 +139,44 @@ fn broadcast_to_uses_single_multicast_when_supported() {
     assert_eq!(ctx.ops.len(), 1);
     assert_eq!(ctx.cycles, core.tx_cycles(8));
 }
+
+#[test]
+fn small_words_inlines_at_or_below_threshold() {
+    for n in 0..=INLINE_WORDS {
+        let words: Vec<u64> = (0..n as u64).map(|i| i * 7 + 1).collect();
+        let s = SmallWords::from_slice(&words);
+        assert!(matches!(s, SmallWords::Inline { .. }), "{n} words should inline");
+        assert_eq!(s.as_slice(), &words[..]);
+        assert_eq!(s.len(), n);
+        assert_eq!(s.is_empty(), n == 0);
+    }
+    let big: Vec<u64> = (0..INLINE_WORDS as u64 + 1).collect();
+    let s = SmallWords::from_slice(&big);
+    assert!(matches!(s, SmallWords::Heap(_)));
+    assert_eq!(s.as_slice(), &big[..]);
+}
+
+#[test]
+fn small_words_from_vec_matches_from_slice() {
+    for n in [0usize, 1, INLINE_WORDS, INLINE_WORDS + 1, 16] {
+        let words: Vec<u64> = (0..n as u64).map(|i| i.wrapping_mul(0x9E37)).collect();
+        let a = SmallWords::from_slice(&words);
+        let b = SmallWords::from(words.clone());
+        assert_eq!(a, b);
+        assert_eq!(&b[..], &words[..]); // Deref surface
+    }
+    assert_eq!(SmallWords::default().as_slice(), &[] as &[u64]);
+    assert!(matches!(SmallWords::default(), SmallWords::Inline { len: 0, .. }));
+}
+
+#[test]
+fn small_words_representations_are_interchangeable() {
+    // The digest contract (DESIGN.md §12): inline and heap forms of the
+    // same words are observationally identical through the slice view.
+    let words = [3u64, 1, 2];
+    let inline = SmallWords::from_slice(&words);
+    let heap = SmallWords::Heap(words.to_vec());
+    assert!(matches!(inline, SmallWords::Inline { .. }));
+    assert_eq!(inline.as_slice(), heap.as_slice());
+    assert_eq!(inline.len(), heap.len());
+}

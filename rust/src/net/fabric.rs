@@ -230,11 +230,14 @@ impl RxLane {
         self.ingress_free[node - self.base] = t;
     }
 
-    /// Snapshot of every spine downlink register the lane covers. Empty
-    /// unless the core is oversubscribed, so a wholesale copy per
-    /// speculative burst is cheap.
-    pub(crate) fn spec_save_spines(&self) -> Vec<Time> {
-        self.spine_free.clone()
+    /// Snapshot of every spine downlink register the lane covers into a
+    /// caller-owned buffer. Empty unless the core is oversubscribed, so a
+    /// wholesale copy per speculative burst is cheap — and writing into
+    /// the `SpecLog`'s retained Vec (§Perf) means the snapshot allocates
+    /// nothing after the first burst.
+    pub(crate) fn spec_save_spines_into(&self, saved: &mut Vec<Time>) {
+        saved.clear();
+        saved.extend_from_slice(&self.spine_free);
     }
 
     pub(crate) fn spec_restore_spines(&mut self, saved: &[Time]) {

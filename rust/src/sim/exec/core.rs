@@ -1,6 +1,7 @@
 //! The engine core shared by every executor backend: per-node hot/cold
-//! state, the calendar event queue, the reorder buffer, stats arenas, and
-//! the deliver/invoke machinery — everything below the scheduling policy.
+//! state, the timing-wheel event queue, the reorder buffer, stats arenas,
+//! and the deliver/invoke machinery — everything below the scheduling
+//! policy.
 //!
 //! A [`Shard`] owns a contiguous node range plus that range's fabric
 //! endpoint state ([`TxLane`]/[`RxLane`]). The sequential backend runs one
@@ -27,19 +28,30 @@ const REORDER_POP_CYCLES: u64 = 6;
 /// Maximum number of stages tracked per node (Fig 16 breakdown).
 pub const MAX_STAGES: usize = 16;
 
-/// One in-flight message: the sender-side [`Flight`] plus the payload.
-/// `phantom` marks a multicast self-leg — it occupies the ingress link
-/// and counts as a delivery (the switch really replicates the packet
-/// back down) but never reaches the handler.
+/// One in-flight message: the sender-side [`Flight`] plus what arrives
+/// at the destination ([`TransitKind`]).
 #[derive(Clone)]
 pub(crate) struct Transit<M> {
     pub flight: Flight,
-    pub phantom: bool,
+    pub kind: TransitKind<M>,
+}
+
+/// What a [`Transit`] delivers (DESIGN.md §12: the loopback leg of a
+/// multicast carries no payload at all).
+#[derive(Clone)]
+pub(crate) enum TransitKind<M> {
+    /// A fabric-crossing message: admitted at the destination (spine +
+    /// ingress queueing in canonical order), then invoked.
+    Msg(M),
+    /// A multicast self-leg — it occupies the ingress link and counts as
+    /// a delivery (the switch really replicates the packet back down) but
+    /// never reaches the handler, so it carries only the wire size the
+    /// admission charge needs instead of a payload clone.
+    Phantom { payload_bytes: u64 },
     /// Core-local timer self-delivery: skips the destination-side fabric
     /// phase entirely (no admit, no ingress occupancy, no net counters) —
     /// the flight's `at` *is* the delivery time.
-    pub timer: bool,
-    pub msg: M,
+    Timer(M),
 }
 
 /// Heap entry: the canonical ordering key `(at, src, ctr)` plus the slab
@@ -72,66 +84,100 @@ impl Ord for Event {
     }
 }
 
-/// Calendar queue: a ring of per-4ns-window mini-heaps plus a sharded far
-/// tier for events beyond the lookahead window.
+/// Number of recycled level-1 far-window slots (one aligned ring span
+/// each): 64 slots × 262 µs = ~16.8 ms of level-1 reach before the
+/// `BTreeMap` overflow tier is touched at all.
+const FAR_SLOTS: usize = 64;
+
+/// One bucket of the near ring. When `sorted`, events are descending by
+/// the canonical key so the next event pops from the back in O(1).
+struct Bucket {
+    events: Vec<Event>,
+    sorted: bool,
+}
+
+/// One recycled level-1 slot: an aligned far window's events, in push
+/// order. `window` is meaningful only while `events` is non-empty; the
+/// Vec's capacity survives re-homing, so a steady-state orbit of far
+/// pushes allocates nothing.
+struct FarSlot {
+    window: u64,
+    events: Vec<Event>,
+}
+
+/// Hierarchical timing wheel: a near ring of per-4ns-bucket mini-arrays
+/// (level 0), a fixed ring of recycled far-window slots (level 1), and a
+/// `BTreeMap` overflow for the pathological far future (level 2).
 ///
 /// §Perf: a single `BinaryHeap` over ~1M in-flight events spent >60% of
 /// the headline run in `pop` (20 sift levels of cache misses). Event
 /// *lookahead* (arrival − now) is bounded by propagation + endpoint-link
 /// queueing (µs-scale), so bucketing by coarse time keeps every touched
-/// mini-heap tiny and cache-resident; the cursor only moves forward.
+/// mini-array tiny and cache-resident; the cursor only moves forward.
+/// The predecessor `CalendarQueue` (retained under `#[cfg(test)]` as the
+/// differential reference) kept its far tier solely in a `BTreeMap`,
+/// paying a node allocation per far push and dropping each window's Vec
+/// after re-homing; the level-1 slot ring recycles both, so steady-state
+/// rounds allocate zero (pinned by the engine's zero-alloc test).
 ///
-/// §Scale: events beyond the ring window live in a far tier *sharded* by
-/// aligned window index (`bucket >> ring_bits`): pushes append to their
-/// shard in O(1), and when the cursor crosses a window boundary the next
-/// shard is re-homed wholesale into the ring. Ordering is exact: shards
-/// and buckets partition time, and each mini-heap orders by the canonical
-/// `(at, src, ctr)` key — identical results to one global heap (tested).
+/// §Scale: events beyond the ring window live in a far tier keyed by the
+/// aligned window index (`bucket >> ring_bits`). Windows within
+/// [`FAR_SLOTS`] spans of the cursor land in their level-1 slot (index
+/// `window % FAR_SLOTS` — injective over the reachable range, see
+/// [`TimingWheel::push`]); anything further lands in the overflow map,
+/// whose drained Vecs are recycled through `spare`. When the cursor
+/// crosses a window boundary the window is re-homed wholesale into the
+/// ring **from both far tiers** — a window can be split across them when
+/// the cursor's advance moved it into level-1 reach after overflow
+/// pushes. Ordering is exact: windows and buckets partition time, and
+/// each bucket orders by the canonical `(at, src, ctr)` key — identical
+/// results to one global heap (differentially tested against the
+/// reference queue).
 ///
-/// §Exec: [`CalendarQueue::pop_before`] bounds how far the cursor may
+/// §Exec: [`TimingWheel::pop_before`] bounds how far the cursor may
 /// advance, so the parallel executor can drain exactly one conservative
 /// time window and still accept later cross-shard pushes behind the next
-/// window boundary. [`CalendarQueue::peek_at`] reports the earliest event
+/// window boundary. [`TimingWheel::peek_at`] reports the earliest event
 /// time without moving the cursor (cached; invalidated by pops).
-struct Bucket {
-    /// Events of this bucket. When `sorted`, descending by the canonical
-    /// key so the next event pops from the back in O(1).
-    events: Vec<Event>,
-    sorted: bool,
-}
-
-struct CalendarQueue {
+struct TimingWheel {
     ring: Vec<Bucket>,
     /// log2 of time-units per bucket (6 => 64 units = 4 ns).
     g_shift: u32,
     /// Ring size mask (ring.len() - 1).
     mask: u64,
-    /// log2 of the ring length — the aligned far-shard width.
+    /// log2 of the ring length — the aligned far-window width.
     ring_bits: u32,
     /// Absolute bucket index the cursor is on.
     cur: u64,
-    /// Far tier: aligned window index (bucket >> ring_bits) → its events,
-    /// in push order. Re-homed in bulk when the cursor enters the window.
-    far: BTreeMap<u64, Vec<Event>>,
-    /// Events currently resident in the ring (vs the far tier).
+    /// Level 1: recycled slots for far windows within `FAR_SLOTS` spans
+    /// of the cursor, indexed by `window % FAR_SLOTS`.
+    far_ring: Vec<FarSlot>,
+    /// Level 2: aligned window index → events, for windows beyond the
+    /// level-1 reach. Re-homed (with the level-1 slot) at window entry.
+    overflow: BTreeMap<u64, Vec<Event>>,
+    /// Recycled Vec capacities from drained overflow windows.
+    spare: Vec<Vec<Event>>,
+    /// Events currently resident in the near ring (vs the far tiers).
     ring_count: usize,
     len: usize,
     /// Cached earliest event time (None = unknown, recompute on demand).
     peek_cache: Option<Time>,
 }
 
-impl CalendarQueue {
-    /// 2^16 buckets x 4 ns = 262 µs of lookahead window.
+impl TimingWheel {
+    /// 2^16 buckets x 4 ns = 262 µs of near-ring lookahead window.
     fn new() -> Self {
         let ring_bits = 16u32;
         let buckets = 1usize << ring_bits;
-        CalendarQueue {
+        TimingWheel {
             ring: (0..buckets).map(|_| Bucket { events: Vec::new(), sorted: true }).collect(),
             g_shift: 6,
             mask: (buckets - 1) as u64,
             ring_bits,
             cur: 0,
-            far: BTreeMap::new(),
+            far_ring: (0..FAR_SLOTS).map(|_| FarSlot { window: 0, events: Vec::new() }).collect(),
+            overflow: BTreeMap::new(),
+            spare: Vec::new(),
             ring_count: 0,
             len: 0,
             peek_cache: None,
@@ -142,6 +188,17 @@ impl CalendarQueue {
         at.0 >> self.g_shift
     }
 
+    /// Land one event in the near ring (its bucket must lie within one
+    /// ring span of the cursor).
+    fn home(&mut self, ev: Event) {
+        let b = self.bucket_of(ev.at);
+        debug_assert!(b >= self.cur && b < self.cur + self.ring.len() as u64);
+        let bucket = &mut self.ring[(b & self.mask) as usize];
+        bucket.events.push(ev);
+        bucket.sorted = false;
+        self.ring_count += 1;
+    }
+
     fn push(&mut self, ev: Event) {
         let b = self.bucket_of(ev.at);
         debug_assert!(b >= self.cur, "event scheduled in the past");
@@ -149,28 +206,88 @@ impl CalendarQueue {
         if let Some(cache) = self.peek_cache {
             self.peek_cache = Some(cache.min(ev.at));
         }
-        if b >= self.cur + self.ring.len() as u64 {
-            self.far.entry(b >> self.ring_bits).or_default().push(ev);
-        } else {
-            let bucket = &mut self.ring[(b & self.mask) as usize];
-            bucket.events.push(ev);
-            bucket.sorted = false;
-            self.ring_count += 1;
+        if b < self.cur + self.ring.len() as u64 {
+            self.home(ev);
+            return;
+        }
+        // Far event. Level-1 residency argument: a slot holds window `w'`
+        // only while `cur_window < w' <= cur_window + FAR_SLOTS` (it was
+        // in that range when pushed, the cursor only advances between
+        // bursts, and window entry re-homes the slot), so two distinct
+        // windows in the reachable range can never share `w % FAR_SLOTS`
+        // — the range spans exactly FAR_SLOTS values.
+        let w = b >> self.ring_bits;
+        let cur_window = self.cur >> self.ring_bits;
+        if w <= cur_window + FAR_SLOTS as u64 {
+            let slot = &mut self.far_ring[(w % FAR_SLOTS as u64) as usize];
+            if slot.events.is_empty() {
+                slot.window = w;
+            }
+            debug_assert!(slot.window == w, "far-ring slot collision");
+            slot.events.push(ev);
+            return;
+        }
+        match self.overflow.entry(w) {
+            std::collections::btree_map::Entry::Occupied(mut e) => e.get_mut().push(ev),
+            std::collections::btree_map::Entry::Vacant(e) => {
+                let mut events = self.spare.pop().unwrap_or_default();
+                events.push(ev);
+                e.insert(events);
+            }
         }
     }
 
-    /// Move one far shard's events into the ring. Only called once the
-    /// cursor has entered (or is jumping to) that aligned window, at which
-    /// point every shard event's bucket lies within the ring's lookahead.
+    /// Move one far window's events into the ring — from its level-1 slot
+    /// *and* the overflow map (the window can be split across both). Only
+    /// called once the cursor has entered (or is jumping to) that aligned
+    /// window, at which point every event's bucket lies within the ring's
+    /// lookahead. Both containers' capacities are recycled.
     fn rehome(&mut self, window: u64) {
-        let Some(events) = self.far.remove(&window) else { return };
-        for ev in events {
-            let b = self.bucket_of(ev.at);
-            debug_assert!(b >= self.cur && b < self.cur + self.ring.len() as u64);
-            let bucket = &mut self.ring[(b & self.mask) as usize];
-            bucket.events.push(ev);
-            bucket.sorted = false;
-            self.ring_count += 1;
+        let idx = (window % FAR_SLOTS as u64) as usize;
+        if self.far_ring[idx].window == window && !self.far_ring[idx].events.is_empty() {
+            let mut events = std::mem::take(&mut self.far_ring[idx].events);
+            for ev in events.drain(..) {
+                self.home(ev);
+            }
+            self.far_ring[idx].events = events; // hand the capacity back
+        }
+        if let Some(mut events) = self.overflow.remove(&window) {
+            for ev in events.drain(..) {
+                self.home(ev);
+            }
+            self.spare.push(events);
+        }
+    }
+
+    /// Earliest populated far window across both far tiers (a 64-slot
+    /// scan plus the overflow map's first key).
+    fn first_far_window(&self) -> Option<u64> {
+        let mut min_w: Option<u64> = None;
+        for slot in &self.far_ring {
+            if !slot.events.is_empty() {
+                min_w = Some(min_w.map_or(slot.window, |m| m.min(slot.window)));
+            }
+        }
+        if let Some((&w, _)) = self.overflow.iter().next() {
+            min_w = Some(min_w.map_or(w, |m| m.min(w)));
+        }
+        min_w
+    }
+
+    /// Earliest event time within far window `w`, across both far tiers.
+    fn far_window_min(&self, w: u64) -> Option<Time> {
+        let slot = &self.far_ring[(w % FAR_SLOTS as u64) as usize];
+        let slot_min = if slot.window == w {
+            slot.events.iter().map(|e| e.at).min()
+        } else {
+            None
+        };
+        let over_min =
+            self.overflow.get(&w).and_then(|events| events.iter().map(|e| e.at).min());
+        match (slot_min, over_min) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, None) => a,
+            (None, b) => b,
         }
     }
 
@@ -179,14 +296,15 @@ impl CalendarQueue {
     /// expected). O(1) when the cache is warm; otherwise a forward scan
     /// from the cursor, amortized by the cursor's own monotone walk.
     ///
-    /// The earliest *far* shard must be consulted too: once the cursor
-    /// has advanced into the aligned window *before* that shard, the
-    /// ring's bucket range overlaps the shard's — a ring bucket can hold
-    /// a later event than an un-rehomed far one, and reporting the ring
+    /// The earliest *far* window must be consulted too: once the cursor
+    /// has advanced into the aligned window *before* it, the ring's
+    /// bucket range overlaps the window's — a ring bucket can hold a
+    /// later event than an un-rehomed far one, and reporting the ring
     /// minimum alone would inflate the parallel executor's window bound
     /// and break the conservative-window closure. (Re-homing is still
-    /// deferred to the cursor crossing: a shard's *late* events may not
-    /// fit the ring yet.)
+    /// deferred to the cursor crossing: a window's *late* events may not
+    /// fit the ring yet.) Later far windows start at or beyond the first
+    /// one's end, so only the first can compete.
     fn peek_at(&mut self) -> Option<Time> {
         if self.len == 0 {
             return None;
@@ -208,15 +326,12 @@ impl CalendarQueue {
                 i += 1;
             }
         };
-        // Later far shards have strictly larger buckets than the first,
-        // so only the first shard can compete; skip its O(len) scan when
-        // its window starts after the ring minimum's bucket.
-        let far_min = self.far.iter().next().and_then(|(&window, events)| {
+        let far_min = self.first_far_window().and_then(|window| {
             let wstart = window << self.ring_bits;
             if ring_min.is_some_and(|t| wstart > self.bucket_of(t)) {
                 None
             } else {
-                events.iter().map(|e| e.at).min()
+                self.far_window_min(window)
             }
         });
         let t = match (ring_min, far_min) {
@@ -242,13 +357,10 @@ impl CalendarQueue {
         let limit = (bound.0 - 1) >> self.g_shift;
         loop {
             if self.ring_count == 0 {
-                if self.far.is_empty() {
-                    return None;
-                }
-                // Everything left lives in the far tier: fast-forward the
-                // cursor to the first populated shard and re-home it
-                // wholesale — unless that shard lies beyond the bound.
-                let (&window, _) = self.far.iter().next().expect("checked non-empty");
+                // Everything left lives in the far tiers: fast-forward
+                // the cursor to the first populated window and re-home it
+                // wholesale — unless that window lies beyond the bound.
+                let Some(window) = self.first_far_window() else { return None };
                 let wstart = window << self.ring_bits;
                 if wstart > limit {
                     return None;
@@ -291,8 +403,8 @@ impl CalendarQueue {
             }
             self.cur += 1;
             if self.cur & self.mask == 0 {
-                // Entered a new aligned window: its far shard (if any) can
-                // now land in the ring before the cursor reaches it.
+                // Entered a new aligned window: its far events (if any)
+                // can now land in the ring before the cursor reaches them.
                 self.rehome(self.cur >> self.ring_bits);
             }
         }
@@ -300,18 +412,21 @@ impl CalendarQueue {
 
     /// Highest pop bound a speculative burst may use such that rewinding
     /// the cursor afterwards is sound: the start of the next aligned far
-    /// window. Under any bound `<=` this, `pop_before` can never re-home a
-    /// far shard (far windows begin at or beyond the boundary) and the
+    /// window. Under any bound `<=` this, `pop_before` can never re-home
+    /// a far window (far windows begin at or beyond the boundary) and the
     /// cursor never crosses the window boundary, so every popped event's
     /// bucket stays within one ring span of the saved cursor and a
-    /// rollback can re-push it verbatim without ring aliasing.
+    /// rollback can re-push it verbatim without ring aliasing. The
+    /// level-1 residency invariant survives too: no pushes reach the
+    /// wheel mid-burst (the shard diverts all emissions), and the rewind
+    /// restores the exact cursor the resident slots were admitted under.
     fn spec_fence(&self) -> Time {
         let boundary = ((self.cur >> self.ring_bits) + 1) << self.ring_bits;
         Time(boundary << self.g_shift)
     }
 
     /// Rewind the cursor to a position saved before a speculative burst
-    /// bounded by [`CalendarQueue::spec_fence`]. The caller re-pushes the
+    /// bounded by [`TimingWheel::spec_fence`]. The caller re-pushes the
     /// burst's pops afterwards.
     fn rewind(&mut self, cursor: u64) {
         debug_assert!(cursor <= self.cur);
@@ -349,16 +464,16 @@ impl<M> EventSlab<M> {
     }
 }
 
-/// Calendar queue + payload slab, keyed by the canonical `(at, src, ctr)`
+/// Timing wheel + payload slab, keyed by the canonical `(at, src, ctr)`
 /// order. One per shard.
 pub(crate) struct EventQueue<M> {
-    cal: CalendarQueue,
+    wheel: TimingWheel,
     slab: EventSlab<M>,
 }
 
 impl<M> EventQueue<M> {
     pub fn new() -> Self {
-        EventQueue { cal: CalendarQueue::new(), slab: EventSlab::new() }
+        EventQueue { wheel: TimingWheel::new(), slab: EventSlab::new() }
     }
 
     pub fn push(&mut self, t: Transit<M>) {
@@ -369,39 +484,39 @@ impl<M> EventQueue<M> {
             slot: 0,
         };
         let slot = self.slab.insert(t);
-        self.cal.push(Event { slot, ..ev });
+        self.wheel.push(Event { slot, ..ev });
     }
 
     pub fn peek_at(&mut self) -> Option<Time> {
-        self.cal.peek_at()
+        self.wheel.peek_at()
     }
 
     pub fn pop_before(&mut self, bound: Time) -> Option<Transit<M>> {
-        self.cal.pop_before(bound).map(|ev| self.slab.remove(ev.slot))
+        self.wheel.pop_before(bound).map(|ev| self.slab.remove(ev.slot))
     }
 
     pub fn is_empty(&self) -> bool {
-        self.cal.len == 0
+        self.wheel.len == 0
     }
 
     /// Opaque cursor token for [`EventQueue::rewind`].
     pub fn cursor(&self) -> u64 {
-        self.cal.cur
+        self.wheel.cur
     }
 
     /// The cursor position corresponding to `at`'s bucket.
     pub fn cursor_of(&self, at: Time) -> u64 {
-        self.cal.bucket_of(at)
+        self.wheel.bucket_of(at)
     }
 
-    /// See [`CalendarQueue::spec_fence`].
+    /// See [`TimingWheel::spec_fence`].
     pub fn spec_fence(&self) -> Time {
-        self.cal.spec_fence()
+        self.wheel.spec_fence()
     }
 
-    /// See [`CalendarQueue::rewind`].
+    /// See [`TimingWheel::rewind`].
     pub fn rewind(&mut self, cursor: u64) {
-        self.cal.rewind(cursor);
+        self.wheel.rewind(cursor);
     }
 }
 
@@ -690,18 +805,23 @@ impl<P: Program> Shard<P> {
     ) {
         while let Some(t) = self.queue.pop_before(bound()) {
             self.events += 1;
+            let (src, dst) = (t.flight.src as usize, t.flight.dst as usize);
             // Destination-side fabric phase: spine + ingress queueing, in
             // canonical order per destination. Timers never crossed the
             // fabric, so they bypass admission and fire at their own time.
-            let arrival = if t.timer {
-                t.flight.at
-            } else {
-                sx.fabric.admit(&mut self.rx, &mut self.net, &t.flight, t.msg.wire_bytes())
-            };
-            if t.phantom {
-                continue; // multicast self-leg: delivered, never invoked
+            match t.kind {
+                TransitKind::Timer(msg) => self.deliver(sx, t.flight.at, src, dst, msg, emit),
+                TransitKind::Msg(msg) => {
+                    let arrival = sx
+                        .fabric
+                        .admit(&mut self.rx, &mut self.net, &t.flight, msg.wire_bytes());
+                    self.deliver(sx, arrival, src, dst, msg, emit);
+                }
+                TransitKind::Phantom { payload_bytes } => {
+                    // Multicast self-leg: delivered, never invoked.
+                    sx.fabric.admit(&mut self.rx, &mut self.net, &t.flight, payload_bytes);
+                }
             }
-            self.deliver(sx, arrival, t.flight.src as usize, t.flight.dst as usize, t.msg, emit);
         }
     }
 
@@ -855,30 +975,38 @@ impl<P: Program> Shard<P> {
                         msg.wire_bytes(),
                         ready,
                     );
-                    self.route(flight, false, false, msg, emit);
+                    self.route(flight, TransitKind::Msg(msg), emit);
                 }
                 SendOp::Timer { delay, msg } => {
                     // Core-local self-delivery: mint a canonical flight at
                     // the absolute fire time, never touching the fabric.
                     let flight = sx.fabric.timer(&mut self.tx, id, ready + delay);
-                    self.route(flight, false, true, msg, emit);
+                    self.route(flight, TransitKind::Timer(msg), emit);
                 }
                 SendOp::Multicast { group, msg } => {
                     // The packet serializes once at the sender; every
                     // member gets its own leg (and the sender's own copy
                     // travels as a phantom: it holds the downlink and
-                    // counts as delivered but is never invoked).
+                    // counts as delivered but is never invoked — so the
+                    // loopback leg carries the wire size, not a payload
+                    // clone).
+                    let payload_bytes = msg.wire_bytes();
                     let on_wire = sx.fabric.mcast_depart(
                         &mut self.tx,
                         &mut self.net,
                         id,
-                        msg.wire_bytes(),
+                        payload_bytes,
                         ready,
                     );
                     for dst in sx.groups[group].iter() {
                         let flight =
                             sx.fabric.mcast_leg(&mut self.tx, &mut self.net, id, dst, on_wire);
-                        self.route(flight, dst == id, false, msg.clone(), emit);
+                        let kind = if dst == id {
+                            TransitKind::Phantom { payload_bytes }
+                        } else {
+                            TransitKind::Msg(msg.clone())
+                        };
+                        self.route(flight, kind, emit);
                     }
                 }
             }
@@ -891,13 +1019,11 @@ impl<P: Program> Shard<P> {
     fn route(
         &mut self,
         flight: Flight,
-        phantom: bool,
-        timer: bool,
-        msg: P::Msg,
+        kind: TransitKind<P::Msg>,
         emit: &mut impl FnMut(Transit<P::Msg>),
     ) {
         let own = self.owns(flight.dst as usize);
-        let t = Transit { flight, phantom, timer, msg };
+        let t = Transit { flight, kind };
         if own && !self.divert {
             self.queue.push(t);
         } else {
@@ -918,7 +1044,7 @@ impl<P: Program> Shard<P> {
         log.burst += 1;
         log.saved.clear();
         log.redo.clear();
-        log.spines = self.rx.spec_save_spines();
+        self.rx.spec_save_spines_into(&mut log.spines);
         log.net = self.net.clone();
         log.events = self.events;
         log.cursor = self.queue.cursor();
@@ -963,20 +1089,18 @@ impl<P: Program> Shard<P> {
             }
             log.redo.push(t.clone());
             self.events += 1;
-            let arrival = if t.timer {
-                t.flight.at
-            } else {
-                sx.fabric.admit(&mut self.rx, &mut self.net, &t.flight, t.msg.wire_bytes())
-            };
-            if !t.phantom {
-                self.deliver(
-                    sx,
-                    arrival,
-                    t.flight.src as usize,
-                    t.flight.dst as usize,
-                    t.msg,
-                    emit,
-                );
+            let (src, dst) = (t.flight.src as usize, t.flight.dst as usize);
+            match t.kind {
+                TransitKind::Timer(msg) => self.deliver(sx, t.flight.at, src, dst, msg, emit),
+                TransitKind::Msg(msg) => {
+                    let arrival = sx
+                        .fabric
+                        .admit(&mut self.rx, &mut self.net, &t.flight, msg.wire_bytes());
+                    self.deliver(sx, arrival, src, dst, msg, emit);
+                }
+                TransitKind::Phantom { payload_bytes } => {
+                    sx.fabric.admit(&mut self.rx, &mut self.net, &t.flight, payload_bytes);
+                }
             }
         }
         self.divert = false;
@@ -1101,6 +1225,35 @@ pub(crate) fn merge_shards<P: Program>(shards: Vec<Shard<P>>) -> RunSummary {
     RunSummary { makespan, node_stats, net, events, profile: ExecProfile::default() }
 }
 
+/// Bench-only probe (`rust/benches/substrate.rs`): drive `rounds`
+/// push/pop alternations through a [`TimingWheel`] after a warm-up lap,
+/// and return how many heap allocations the measured pass performed on
+/// this thread. The wheel's steady-state contract is **zero** — the
+/// bench asserts the returned count, not just the wall-clock.
+#[doc(hidden)]
+pub fn queue_churn_allocs(rounds: u64) -> u64 {
+    let mut wheel = TimingWheel::new();
+    // One 64-bucket stride per round, bucket-aligned: the orbit closes
+    // after 1,024 rounds (65,536-bucket ring), so the warm lap touches
+    // every slot the measured pass will revisit.
+    let step = 64u64 << 6;
+    let mut at = 0u64;
+    let mut ctr = 0u64;
+    let mut churn = |wheel: &mut TimingWheel, n: u64| {
+        for _ in 0..n {
+            at += step;
+            ctr += 1;
+            wheel.push(Event { at: Time(at), src: 0, ctr, slot: 0 });
+            let popped = wheel.pop_before(Time(u64::MAX)).expect("event just pushed");
+            debug_assert_eq!(popped.at, Time(at));
+        }
+    };
+    churn(&mut wheel, 2048);
+    let before = crate::mem::thread_alloc_count();
+    churn(&mut wheel, rounds);
+    crate::mem::thread_alloc_count() - before
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1109,188 +1262,512 @@ mod tests {
         Event { at: Time(at), src, ctr, slot: 0 }
     }
 
-    /// The sharded far tier + bounded pop must order exactly like one
-    /// global heap, for events scattered across many ring windows (far
-    /// beyond the 262 µs lookahead) interleaved with near events.
-    #[test]
-    fn calendar_far_tier_orders_exactly() {
-        let mut q = CalendarQueue::new();
-        let window_units: u64 = 64 << 16; // one full ring span in time units
-        let mut rng = SplitMix64::new(0xCA1);
-        let mut expect: Vec<(u64, u32, u64)> = Vec::new();
-        let mut ctr = 0u64;
-        // Phase 1: events spread over ~40 windows, pushed in random order.
-        for _ in 0..5_000 {
-            let at = rng.next_below(40 * window_units);
-            let src = rng.index(64) as u32;
-            ctr += 1;
-            q.push(ev(at, src, ctr));
-            expect.push((at, src, ctr));
-        }
-        expect.sort_unstable();
-        let mut popped = Vec::new();
-        // Interleave: drain half, then push more events *ahead of the
-        // cursor* (as the fabric does — positive latency), drain the rest.
-        for _ in 0..2_500 {
-            let e = q.pop_before(Time(u64::MAX)).unwrap();
-            popped.push((e.at.0, e.src, e.ctr));
-        }
-        let now = popped.last().unwrap().0;
-        let mut late: Vec<(u64, u32, u64)> = Vec::new();
-        for _ in 0..2_500 {
-            let at = now + rng.next_below(45 * window_units);
-            let src = rng.index(64) as u32;
-            ctr += 1;
-            q.push(ev(at, src, ctr));
-            late.push((at, src, ctr));
-        }
-        while let Some(e) = q.pop_before(Time(u64::MAX)) {
-            popped.push((e.at.0, e.src, e.ctr));
-        }
-        assert_eq!(popped.len(), 7_500);
-        // Every pop must be totally ordered by (at, src, ctr).
-        assert!(popped.windows(2).all(|w| w[0] < w[1]), "pops out of order");
-        // And the multiset must be exactly what was pushed.
-        let mut all = expect;
-        all.extend(late);
-        all.sort_unstable();
-        let mut got = popped;
-        got.sort_unstable();
-        assert_eq!(got, all);
+    /// The predecessor calendar queue, retained verbatim as the
+    /// differential reference for the production [`TimingWheel`]: the
+    /// same near ring, but the whole far tier lives in a `BTreeMap`
+    /// keyed by aligned window index — one node allocation per far push,
+    /// and each window's Vec is dropped after re-homing. The contract
+    /// battery below runs against both implementations, and the
+    /// randomized test byte-compares their pop sequences under every
+    /// operation the executors use.
+    struct CalendarQueue {
+        ring: Vec<Bucket>,
+        g_shift: u32,
+        mask: u64,
+        ring_bits: u32,
+        cur: u64,
+        far: BTreeMap<u64, Vec<Event>>,
+        ring_count: usize,
+        len: usize,
+        peek_cache: Option<Time>,
     }
 
-    /// Bounded pops stop exactly at the bound (strictly-before contract)
-    /// and later pushes behind the *cursor's* high-water mark but ahead
-    /// of the bound still order correctly — the window-barrier edge case.
-    #[test]
-    fn calendar_bounded_pop_respects_windows() {
-        let mut q = CalendarQueue::new();
-        q.push(ev(10, 0, 0));
-        q.push(ev(500, 0, 1));
-        q.push(ev(10_000, 0, 2));
-        assert_eq!(q.peek_at(), Some(Time(10)));
-        // Window [0, 500): only the first event pops.
-        assert_eq!(q.pop_before(Time(500)).unwrap().at, Time(10));
-        assert!(q.pop_before(Time(500)).is_none());
-        // A cross-shard push lands between the windows.
-        q.push(ev(600, 3, 0));
-        assert_eq!(q.peek_at(), Some(Time(500)));
-        // Window [500, 10_000): both mid events pop, in order.
-        assert_eq!(q.pop_before(Time(10_000)).unwrap().at, Time(500));
-        assert_eq!(q.pop_before(Time(10_000)).unwrap().at, Time(600));
-        assert!(q.pop_before(Time(10_000)).is_none());
-        assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(10_000));
-        assert!(q.pop_before(Time(u64::MAX)).is_none());
-        assert_eq!(q.peek_at(), None);
-    }
-
-    /// Ties at one timestamp break by (src, ctr) — the canonical order is
-    /// processing-order independent.
-    #[test]
-    fn calendar_ties_break_by_src_then_ctr() {
-        let mut q = CalendarQueue::new();
-        q.push(ev(64, 2, 0));
-        q.push(ev(64, 0, 1));
-        q.push(ev(64, 0, 0));
-        q.push(ev(64, 1, 9));
-        let order: Vec<(u32, u64)> = std::iter::from_fn(|| q.pop_before(Time(u64::MAX)))
-            .map(|e| (e.src, e.ctr))
-            .collect();
-        assert_eq!(order, vec![(0, 0), (0, 1), (1, 9), (2, 0)]);
-    }
-
-    /// Regression: the ring's bucket range can overlap the earliest far
-    /// shard's window once the cursor has advanced, so `peek_at` must
-    /// consult both — an un-rehomed far event can be earlier than every
-    /// ring event, and reporting the ring minimum alone would inflate
-    /// the parallel executor's window bound.
-    #[test]
-    fn peek_sees_far_events_earlier_than_ring_events() {
-        let mut q = CalendarQueue::new();
-        let bucket_units = 64u64; // 1 << g_shift
-        // Event in bucket 40,000 — popping it advances the cursor there
-        // without crossing the 65,536-bucket window boundary (no rehome).
-        q.push(ev(40_000 * bucket_units, 0, 0));
-        // Far event (bucket 66,000, window 1): beyond the ring span while
-        // the cursor sits at 0, so it lands in the far tier.
-        q.push(ev(66_000 * bucket_units, 0, 1));
-        assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(40_000 * bucket_units));
-        // Ring now spans buckets [40,000, 105,536): this later event goes
-        // into the ring even though the earlier far event is still far.
-        q.push(ev(70_000 * bucket_units, 0, 2));
-        // The true minimum is the far event, not the ring one.
-        assert_eq!(q.peek_at(), Some(Time(66_000 * bucket_units)));
-        assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(66_000 * bucket_units));
-        assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(70_000 * bucket_units));
-        assert!(q.pop_before(Time(u64::MAX)).is_none());
-    }
-
-    /// Regression: a bounded pop walking empty buckets must not advance
-    /// the cursor past the bound's own bucket. With an unaligned bound, a
-    /// later push at `at >= bound` can still land in that bucket — an
-    /// overshot cursor would reject it as "scheduled in the past" (and
-    /// alias its ring slot a full span later in release builds).
-    #[test]
-    fn bounded_pop_never_overshoots_the_bound_bucket() {
-        let mut q = CalendarQueue::new();
-        q.push(ev(10, 0, 0));
-        // Unaligned bound inside bucket 3 (64-unit buckets): the drain
-        // pops the one event, then walks empty buckets up to the limit.
-        assert_eq!(q.pop_before(Time(230)).unwrap().at, Time(10));
-        assert!(q.pop_before(Time(230)).is_none());
-        assert!(q.cur <= 3, "cursor overshot the bound bucket");
-        // A conservative-window push at `at >= bound` sharing the bound's
-        // bucket must be accepted and pop next.
-        q.push(ev(250, 1, 0));
-        assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(250));
-    }
-
-    /// The speculation fence/rewind contract: a burst bounded by
-    /// `spec_fence` can be undone by rewinding the cursor and re-pushing
-    /// its pops, after which the identical sequence replays and later
-    /// (beyond-fence) events still drain in order.
-    #[test]
-    fn rewind_replays_a_fenced_burst_exactly() {
-        let mut q = CalendarQueue::new();
-        let mut rng = SplitMix64::new(0x5EC);
-        let fence = q.spec_fence();
-        let mut ctr = 0u64;
-        for _ in 0..500 {
-            // Spread events below and beyond the fence.
-            let at = rng.next_below(fence.0 + fence.0 / 2);
-            ctr += 1;
-            q.push(ev(at, rng.index(8) as u32, ctr));
+    impl CalendarQueue {
+        fn new() -> Self {
+            let ring_bits = 16u32;
+            let buckets = 1usize << ring_bits;
+            CalendarQueue {
+                ring: (0..buckets)
+                    .map(|_| Bucket { events: Vec::new(), sorted: true })
+                    .collect(),
+                g_shift: 6,
+                mask: (buckets - 1) as u64,
+                ring_bits,
+                cur: 0,
+                far: BTreeMap::new(),
+                ring_count: 0,
+                len: 0,
+                peek_cache: None,
+            }
         }
-        let cursor = q.cur;
-        let first: Vec<(u64, u32, u64)> = std::iter::from_fn(|| q.pop_before(fence))
-            .map(|e| (e.at.0, e.src, e.ctr))
-            .collect();
-        assert!(!first.is_empty(), "degenerate test: nothing below the fence");
-        q.rewind(cursor);
-        for &(at, src, c) in &first {
-            q.push(ev(at, src, c));
+
+        fn bucket_of(&self, at: Time) -> u64 {
+            at.0 >> self.g_shift
         }
-        let replay: Vec<(u64, u32, u64)> = std::iter::from_fn(|| q.pop_before(fence))
-            .map(|e| (e.at.0, e.src, e.ctr))
-            .collect();
-        assert_eq!(first, replay);
-        let rest: Vec<u64> =
-            std::iter::from_fn(|| q.pop_before(Time(u64::MAX))).map(|e| e.at.0).collect();
-        assert_eq!(first.len() + rest.len(), 500);
-        assert!(rest.windows(2).all(|w| w[0] <= w[1]), "post-fence drain out of order");
-        assert!(rest.iter().all(|&at| at >= fence.0));
+
+        fn push(&mut self, ev: Event) {
+            let b = self.bucket_of(ev.at);
+            debug_assert!(b >= self.cur, "event scheduled in the past");
+            self.len += 1;
+            if let Some(cache) = self.peek_cache {
+                self.peek_cache = Some(cache.min(ev.at));
+            }
+            if b >= self.cur + self.ring.len() as u64 {
+                self.far.entry(b >> self.ring_bits).or_default().push(ev);
+            } else {
+                let bucket = &mut self.ring[(b & self.mask) as usize];
+                bucket.events.push(ev);
+                bucket.sorted = false;
+                self.ring_count += 1;
+            }
+        }
+
+        fn rehome(&mut self, window: u64) {
+            let Some(events) = self.far.remove(&window) else { return };
+            for ev in events {
+                let b = self.bucket_of(ev.at);
+                debug_assert!(b >= self.cur && b < self.cur + self.ring.len() as u64);
+                let bucket = &mut self.ring[(b & self.mask) as usize];
+                bucket.events.push(ev);
+                bucket.sorted = false;
+                self.ring_count += 1;
+            }
+        }
+
+        fn peek_at(&mut self) -> Option<Time> {
+            if self.len == 0 {
+                return None;
+            }
+            if let Some(t) = self.peek_cache {
+                return Some(t);
+            }
+            let ring_min = if self.ring_count == 0 {
+                None
+            } else {
+                let mut i = self.cur;
+                loop {
+                    let b = &self.ring[(i & self.mask) as usize];
+                    if !b.events.is_empty() {
+                        break Some(
+                            b.events.iter().map(|e| e.at).min().expect("non-empty bucket"),
+                        );
+                    }
+                    i += 1;
+                }
+            };
+            let far_min = self.far.iter().next().and_then(|(&window, events)| {
+                let wstart = window << self.ring_bits;
+                if ring_min.is_some_and(|t| wstart > self.bucket_of(t)) {
+                    None
+                } else {
+                    events.iter().map(|e| e.at).min()
+                }
+            });
+            let t = match (ring_min, far_min) {
+                (Some(r), Some(f)) => r.min(f),
+                (Some(r), None) => r,
+                (None, Some(f)) => f,
+                (None, None) => unreachable!("len > 0 but no events"),
+            };
+            self.peek_cache = Some(t);
+            Some(t)
+        }
+
+        fn pop_before(&mut self, bound: Time) -> Option<Event> {
+            if self.len == 0 || bound == Time::ZERO {
+                return None;
+            }
+            let limit = (bound.0 - 1) >> self.g_shift;
+            loop {
+                if self.ring_count == 0 {
+                    if self.far.is_empty() {
+                        return None;
+                    }
+                    let (&window, _) = self.far.iter().next().expect("checked non-empty");
+                    let wstart = window << self.ring_bits;
+                    if wstart > limit {
+                        return None;
+                    }
+                    self.cur = self.cur.max(wstart);
+                    self.rehome(window);
+                    continue;
+                }
+                if self.cur > limit {
+                    return None;
+                }
+                let bucket = &mut self.ring[(self.cur & self.mask) as usize];
+                if !bucket.events.is_empty() {
+                    if !bucket.sorted {
+                        bucket.events.sort_unstable_by(|a, b| b.key().cmp(&a.key()));
+                        bucket.sorted = true;
+                    }
+                    let next = bucket.events.last().expect("non-empty bucket");
+                    if next.at >= bound {
+                        return None;
+                    }
+                    self.len -= 1;
+                    self.ring_count -= 1;
+                    self.peek_cache = None;
+                    return bucket.events.pop();
+                }
+                if self.cur == limit {
+                    return None;
+                }
+                self.cur += 1;
+                if self.cur & self.mask == 0 {
+                    self.rehome(self.cur >> self.ring_bits);
+                }
+            }
+        }
+
+        fn spec_fence(&self) -> Time {
+            let boundary = ((self.cur >> self.ring_bits) + 1) << self.ring_bits;
+            Time(boundary << self.g_shift)
+        }
+
+        fn rewind(&mut self, cursor: u64) {
+            debug_assert!(cursor <= self.cur);
+            self.cur = cursor;
+            self.peek_cache = None;
+        }
     }
 
-    /// peek_at never advances the cursor: a push earlier than a previous
-    /// peek result (but later than anything popped) must still surface.
+    /// The queue contract every executor relies on, instantiated against
+    /// both the production wheel and the retained reference — one macro,
+    /// two gates, so a wheel regression shows up as a one-sided failure.
+    macro_rules! queue_contract_tests {
+        ($modname:ident, $Q:ty) => {
+            mod $modname {
+                use super::*;
+
+                /// The far tier + bounded pop must order exactly like one
+                /// global heap, for events scattered across many ring
+                /// windows (far beyond the 262 µs lookahead) interleaved
+                /// with near events.
+                #[test]
+                fn far_tier_orders_exactly() {
+                    let mut q = <$Q>::new();
+                    let window_units: u64 = 64 << 16; // one ring span in time units
+                    let mut rng = SplitMix64::new(0xCA1);
+                    let mut expect: Vec<(u64, u32, u64)> = Vec::new();
+                    let mut ctr = 0u64;
+                    // Phase 1: events over ~40 windows, in random order.
+                    for _ in 0..5_000 {
+                        let at = rng.next_below(40 * window_units);
+                        let src = rng.index(64) as u32;
+                        ctr += 1;
+                        q.push(ev(at, src, ctr));
+                        expect.push((at, src, ctr));
+                    }
+                    expect.sort_unstable();
+                    let mut popped = Vec::new();
+                    // Interleave: drain half, then push more events *ahead
+                    // of the cursor* (as the fabric does — positive
+                    // latency), drain the rest.
+                    for _ in 0..2_500 {
+                        let e = q.pop_before(Time(u64::MAX)).unwrap();
+                        popped.push((e.at.0, e.src, e.ctr));
+                    }
+                    let now = popped.last().unwrap().0;
+                    let mut late: Vec<(u64, u32, u64)> = Vec::new();
+                    for _ in 0..2_500 {
+                        let at = now + rng.next_below(45 * window_units);
+                        let src = rng.index(64) as u32;
+                        ctr += 1;
+                        q.push(ev(at, src, ctr));
+                        late.push((at, src, ctr));
+                    }
+                    while let Some(e) = q.pop_before(Time(u64::MAX)) {
+                        popped.push((e.at.0, e.src, e.ctr));
+                    }
+                    assert_eq!(popped.len(), 7_500);
+                    // Every pop must be totally ordered by (at, src, ctr).
+                    assert!(popped.windows(2).all(|w| w[0] < w[1]), "pops out of order");
+                    // And the multiset must be exactly what was pushed.
+                    let mut all = expect;
+                    all.extend(late);
+                    all.sort_unstable();
+                    let mut got = popped;
+                    got.sort_unstable();
+                    assert_eq!(got, all);
+                }
+
+                /// Bounded pops stop exactly at the bound (strictly-before
+                /// contract) and later pushes behind the *cursor's*
+                /// high-water mark but ahead of the bound still order
+                /// correctly — the window-barrier edge case.
+                #[test]
+                fn bounded_pop_respects_windows() {
+                    let mut q = <$Q>::new();
+                    q.push(ev(10, 0, 0));
+                    q.push(ev(500, 0, 1));
+                    q.push(ev(10_000, 0, 2));
+                    assert_eq!(q.peek_at(), Some(Time(10)));
+                    // Window [0, 500): only the first event pops.
+                    assert_eq!(q.pop_before(Time(500)).unwrap().at, Time(10));
+                    assert!(q.pop_before(Time(500)).is_none());
+                    // A cross-shard push lands between the windows.
+                    q.push(ev(600, 3, 0));
+                    assert_eq!(q.peek_at(), Some(Time(500)));
+                    // Window [500, 10_000): both mid events pop, in order.
+                    assert_eq!(q.pop_before(Time(10_000)).unwrap().at, Time(500));
+                    assert_eq!(q.pop_before(Time(10_000)).unwrap().at, Time(600));
+                    assert!(q.pop_before(Time(10_000)).is_none());
+                    assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(10_000));
+                    assert!(q.pop_before(Time(u64::MAX)).is_none());
+                    assert_eq!(q.peek_at(), None);
+                }
+
+                /// Ties at one timestamp break by (src, ctr) — the
+                /// canonical order is processing-order independent.
+                #[test]
+                fn ties_break_by_src_then_ctr() {
+                    let mut q = <$Q>::new();
+                    q.push(ev(64, 2, 0));
+                    q.push(ev(64, 0, 1));
+                    q.push(ev(64, 0, 0));
+                    q.push(ev(64, 1, 9));
+                    let order: Vec<(u32, u64)> =
+                        std::iter::from_fn(|| q.pop_before(Time(u64::MAX)))
+                            .map(|e| (e.src, e.ctr))
+                            .collect();
+                    assert_eq!(order, vec![(0, 0), (0, 1), (1, 9), (2, 0)]);
+                }
+
+                /// Regression: the ring's bucket range can overlap the
+                /// earliest far window once the cursor has advanced, so
+                /// `peek_at` must consult both — an un-rehomed far event
+                /// can be earlier than every ring event, and reporting the
+                /// ring minimum alone would inflate the parallel
+                /// executor's window bound.
+                #[test]
+                fn peek_sees_far_events_earlier_than_ring_events() {
+                    let mut q = <$Q>::new();
+                    let bucket_units = 64u64; // 1 << g_shift
+                    // Event in bucket 40,000 — popping it advances the
+                    // cursor there without crossing the 65,536-bucket
+                    // window boundary (no rehome).
+                    q.push(ev(40_000 * bucket_units, 0, 0));
+                    // Far event (bucket 66,000, window 1): beyond the ring
+                    // span while the cursor sits at 0.
+                    q.push(ev(66_000 * bucket_units, 0, 1));
+                    assert_eq!(
+                        q.pop_before(Time(u64::MAX)).unwrap().at,
+                        Time(40_000 * bucket_units)
+                    );
+                    // Ring now spans buckets [40,000, 105,536): this later
+                    // event goes into the ring even though the earlier far
+                    // event is still far.
+                    q.push(ev(70_000 * bucket_units, 0, 2));
+                    // The true minimum is the far event, not the ring one.
+                    assert_eq!(q.peek_at(), Some(Time(66_000 * bucket_units)));
+                    assert_eq!(
+                        q.pop_before(Time(u64::MAX)).unwrap().at,
+                        Time(66_000 * bucket_units)
+                    );
+                    assert_eq!(
+                        q.pop_before(Time(u64::MAX)).unwrap().at,
+                        Time(70_000 * bucket_units)
+                    );
+                    assert!(q.pop_before(Time(u64::MAX)).is_none());
+                }
+
+                /// Regression: a bounded pop walking empty buckets must
+                /// not advance the cursor past the bound's own bucket.
+                /// With an unaligned bound, a later push at `at >= bound`
+                /// can still land in that bucket — an overshot cursor
+                /// would reject it as "scheduled in the past" (and alias
+                /// its ring slot a full span later in release builds).
+                #[test]
+                fn bounded_pop_never_overshoots_the_bound_bucket() {
+                    let mut q = <$Q>::new();
+                    q.push(ev(10, 0, 0));
+                    // Unaligned bound inside bucket 3 (64-unit buckets):
+                    // the drain pops the one event, then walks empty
+                    // buckets up to the limit.
+                    assert_eq!(q.pop_before(Time(230)).unwrap().at, Time(10));
+                    assert!(q.pop_before(Time(230)).is_none());
+                    assert!(q.cur <= 3, "cursor overshot the bound bucket");
+                    // A conservative-window push at `at >= bound` sharing
+                    // the bound's bucket must be accepted and pop next.
+                    q.push(ev(250, 1, 0));
+                    assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(250));
+                }
+
+                /// The speculation fence/rewind contract: a burst bounded
+                /// by `spec_fence` can be undone by rewinding the cursor
+                /// and re-pushing its pops, after which the identical
+                /// sequence replays and later (beyond-fence) events still
+                /// drain in order.
+                #[test]
+                fn rewind_replays_a_fenced_burst_exactly() {
+                    let mut q = <$Q>::new();
+                    let mut rng = SplitMix64::new(0x5EC);
+                    let fence = q.spec_fence();
+                    let mut ctr = 0u64;
+                    for _ in 0..500 {
+                        // Spread events below and beyond the fence.
+                        let at = rng.next_below(fence.0 + fence.0 / 2);
+                        ctr += 1;
+                        q.push(ev(at, rng.index(8) as u32, ctr));
+                    }
+                    let cursor = q.cur;
+                    let first: Vec<(u64, u32, u64)> =
+                        std::iter::from_fn(|| q.pop_before(fence))
+                            .map(|e| (e.at.0, e.src, e.ctr))
+                            .collect();
+                    assert!(!first.is_empty(), "degenerate test: nothing below the fence");
+                    q.rewind(cursor);
+                    for &(at, src, c) in &first {
+                        q.push(ev(at, src, c));
+                    }
+                    let replay: Vec<(u64, u32, u64)> =
+                        std::iter::from_fn(|| q.pop_before(fence))
+                            .map(|e| (e.at.0, e.src, e.ctr))
+                            .collect();
+                    assert_eq!(first, replay);
+                    let rest: Vec<u64> = std::iter::from_fn(|| q.pop_before(Time(u64::MAX)))
+                        .map(|e| e.at.0)
+                        .collect();
+                    assert_eq!(first.len() + rest.len(), 500);
+                    assert!(
+                        rest.windows(2).all(|w| w[0] <= w[1]),
+                        "post-fence drain out of order"
+                    );
+                    assert!(rest.iter().all(|&at| at >= fence.0));
+                }
+
+                /// peek_at never advances the cursor: a push earlier than
+                /// a previous peek result (but later than anything popped)
+                /// must still surface.
+                #[test]
+                fn peek_does_not_commit_the_cursor() {
+                    let mut q = <$Q>::new();
+                    q.push(ev(100_000, 0, 0));
+                    assert_eq!(q.peek_at(), Some(Time(100_000)));
+                    q.push(ev(70, 0, 1));
+                    assert_eq!(q.peek_at(), Some(Time(70)));
+                    assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(70));
+                    assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(100_000));
+                }
+            }
+        };
+    }
+
+    queue_contract_tests!(wheel_contract, TimingWheel);
+    queue_contract_tests!(reference_contract, CalendarQueue);
+
+    /// Differential battery: the production wheel against the reference
+    /// calendar queue under randomized interleavings of the full surface
+    /// (push bursts into every tier, bounded drains, peeks, fenced
+    /// speculative bursts with rewind + replay), byte-comparing every pop.
+    /// `floor` tracks the highest drain bound used so far: after a
+    /// bounded drain the cursor may sit on the bound's bucket, so new
+    /// pushes must stay at or beyond it (exactly the executors' positive-
+    /// latency discipline).
     #[test]
-    fn peek_does_not_commit_the_cursor() {
-        let mut q = CalendarQueue::new();
-        q.push(ev(100_000, 0, 0));
-        assert_eq!(q.peek_at(), Some(Time(100_000)));
-        q.push(ev(70, 0, 1));
-        assert_eq!(q.peek_at(), Some(Time(70)));
-        assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(70));
-        assert_eq!(q.pop_before(Time(u64::MAX)).unwrap().at, Time(100_000));
+    fn wheel_matches_reference_under_random_interleavings() {
+        let window_units: u64 = 64 << 16;
+        for case in 0..40u64 {
+            let mut rng = SplitMix64::new(0xD1FF ^ (case * 0x9E37_79B9));
+            let mut wheel = TimingWheel::new();
+            let mut cal = CalendarQueue::new();
+            let mut ctr = 0u64;
+            let mut floor = 0u64;
+            let mut live = 0i64;
+            for _ in 0..400 {
+                match rng.index(10) {
+                    0..=3 => {
+                        // Push burst: identical events into both queues,
+                        // spread from near buckets deep into the far
+                        // tiers (past the 64-window level-1 reach).
+                        let n = 8 + rng.index(56);
+                        let span = 1 + rng.next_below(90 * window_units);
+                        for _ in 0..n {
+                            let at = floor + 1 + rng.next_below(span);
+                            let src = rng.index(64) as u32;
+                            ctr += 1;
+                            wheel.push(ev(at, src, ctr));
+                            cal.push(ev(at, src, ctr));
+                            live += 1;
+                        }
+                    }
+                    4..=6 => {
+                        // Bounded drain: byte-compare the pop sequences.
+                        let bound = Time(floor + 1 + rng.next_below(4 * window_units));
+                        loop {
+                            let a = wheel.pop_before(bound).map(|e| e.key());
+                            let b = cal.pop_before(bound).map(|e| e.key());
+                            assert_eq!(a, b, "case {case}: bounded pops diverged");
+                            if a.is_none() {
+                                break;
+                            }
+                            live -= 1;
+                        }
+                        floor = floor.max(bound.0);
+                    }
+                    7 => {
+                        assert_eq!(
+                            wheel.peek_at(),
+                            cal.peek_at(),
+                            "case {case}: peeks diverged"
+                        );
+                    }
+                    _ => {
+                        // Fenced burst + rewind + replay: the speculation
+                        // surface. The fences agree because the cursor
+                        // trajectories agree.
+                        assert_eq!(wheel.cur, cal.cur, "case {case}: cursors diverged");
+                        assert_eq!(wheel.spec_fence(), cal.spec_fence());
+                        let fence = wheel.spec_fence();
+                        let saved = wheel.cur;
+                        let mut burst = Vec::new();
+                        loop {
+                            let a = wheel.pop_before(fence).map(|e| e.key());
+                            let b = cal.pop_before(fence).map(|e| e.key());
+                            assert_eq!(a, b, "case {case}: fenced pops diverged");
+                            match a {
+                                Some(k) => burst.push(k),
+                                None => break,
+                            }
+                        }
+                        wheel.rewind(saved);
+                        cal.rewind(saved);
+                        for &(at, src, c) in &burst {
+                            wheel.push(ev(at.0, src, c));
+                            cal.push(ev(at.0, src, c));
+                        }
+                        for &k in &burst {
+                            assert_eq!(
+                                wheel.pop_before(fence).map(|e| e.key()),
+                                Some(k),
+                                "case {case}: wheel replay diverged"
+                            );
+                            assert_eq!(
+                                cal.pop_before(fence).map(|e| e.key()),
+                                Some(k),
+                                "case {case}: reference replay diverged"
+                            );
+                            live -= 1;
+                        }
+                        assert!(wheel.pop_before(fence).is_none());
+                        assert!(cal.pop_before(fence).is_none());
+                        floor = floor.max(fence.0);
+                    }
+                }
+            }
+            // Final unbounded drain: full order + multiset identity.
+            let mut last = None;
+            loop {
+                let a = wheel.pop_before(Time(u64::MAX)).map(|e| e.key());
+                let b = cal.pop_before(Time(u64::MAX)).map(|e| e.key());
+                assert_eq!(a, b, "case {case}: final drain diverged");
+                let Some(k) = a else { break };
+                assert!(last < Some(k), "case {case}: final drain out of order");
+                last = Some(k);
+                live -= 1;
+            }
+            assert_eq!(live, 0, "case {case}: events lost or duplicated");
+        }
     }
 }

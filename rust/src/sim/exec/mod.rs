@@ -1,8 +1,8 @@
 //! Pluggable execution backends for the discrete-event engine.
 //!
-//! The engine core (`core.rs`: event slab, calendar queue, hot-node
-//! arena, reorder buffer, stats arena) is decoupled from the *scheduling
-//! policy* behind the [`Executor`] trait, with two backends:
+//! The engine core (`core.rs`: event slab, timing-wheel event queue,
+//! hot-node arena, reorder buffer, stats arena) is decoupled from the
+//! *scheduling policy* behind the [`Executor`] trait, with two backends:
 //!
 //! - [`SeqExecutor`] — the reference semantics: one shard covering every
 //!   node, drained to quiescence on the calling thread.
@@ -49,7 +49,7 @@ mod opt;
 mod par;
 mod seq;
 
-pub use self::core::{ExecProfile, NodeStats, RunSummary, MAX_STAGES};
+pub use self::core::{queue_churn_allocs, ExecProfile, NodeStats, RunSummary, MAX_STAGES};
 
 use std::sync::Arc;
 

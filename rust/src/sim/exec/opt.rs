@@ -180,6 +180,12 @@ fn worker<P: Program + Clone>(
     let mut log: SpecLog<P> = SpecLog::new(shard.range.len());
     let mut pending: Option<PendingBurst<P::Msg>> = None;
     let mut bursts = 0u64;
+    // Recycled burst buffers (§Perf): every resolved burst hands its
+    // emission Vecs back here, so steady-state speculation allocates
+    // nothing — the buffers ping-pong between the spares and the one
+    // in-flight [`PendingBurst`].
+    let mut spare_local: Vec<Transit<P::Msg>> = Vec::new();
+    let mut spare_cross: Vec<Vec<Transit<P::Msg>>> = (0..n).map(|_| Vec::new()).collect();
 
     // Round 0: fire every on_start and exchange the initial transits.
     {
@@ -199,15 +205,22 @@ fn worker<P: Program + Clone>(
         // event means the sequential order would have processed it first
         // — the burst is wrong. (Equal keys cannot occur: `(at, src,
         // ctr)` is unique.) The forced hook fails every nth burst here.
-        if let Some(p) = &pending {
-            let straggler = inbox
+        let must_roll = pending.as_ref().is_some_and(|p| {
+            inbox
                 .first()
-                .is_some_and(|t| (t.flight.at, t.flight.src, t.flight.ctr) < p.last_key);
-            if straggler || force_every.is_some_and(|k| bursts % k == 0) {
-                shard.rollback_burst(&mut log);
-                pending = None;
-                profile.rollbacks += 1;
+                .is_some_and(|t| (t.flight.at, t.flight.src, t.flight.ctr) < p.last_key)
+                || force_every.is_some_and(|k| bursts % k == 0)
+        });
+        if must_roll {
+            let mut p = pending.take().expect("checked pending");
+            shard.rollback_burst(&mut log);
+            profile.rollbacks += 1;
+            p.local.clear();
+            for buf in &mut p.cross {
+                buf.clear();
             }
+            spare_local = p.local;
+            spare_cross = p.cross;
         }
 
         // Publish the event minimum. The inbox is not queued yet (its
@@ -246,7 +259,7 @@ fn worker<P: Program + Clone>(
         // journal and the pending handoff always agree: the journal holds
         // redo entries exactly while a burst awaits resolution.
         debug_assert_eq!(log.is_pending(), pending.is_some());
-        if let Some(p) = pending.take() {
+        if let Some(mut p) = pending.take() {
             if p.last_key.0 .0 < horizon {
                 // Commit: every speculated event is provably final. The
                 // buffered own-shard sends re-enter the queue (their
@@ -257,11 +270,11 @@ fn worker<P: Program + Clone>(
                 profile.committed += 1;
                 profile.committed_span += p.last_key.0 .0 - p.first_at.0;
                 log.resolve();
-                for t in p.local {
+                for t in p.local.drain(..) {
                     shard.push(t);
                 }
-                for (d, buf) in p.cross.into_iter().enumerate() {
-                    out[d].extend(buf);
+                for (d, buf) in p.cross.iter_mut().enumerate() {
+                    out[d].append(buf);
                 }
             } else {
                 // Not fully covered: retry conservatively rather than
@@ -269,7 +282,14 @@ fn worker<P: Program + Clone>(
                 // the conservative drain below always makes progress).
                 shard.rollback_burst(&mut log);
                 profile.rollbacks += 1;
+                p.local.clear();
+                for buf in &mut p.cross {
+                    buf.clear();
+                }
             }
+            // Either way the emptied buffers go back to the spares.
+            spare_local = p.local;
+            spare_cross = p.cross;
         }
 
         // Inbound transits enter the queue only now, after any rollback
@@ -304,9 +324,9 @@ fn worker<P: Program + Clone>(
                 bursts += 1;
                 shard.begin_burst(&mut log);
                 let spec_bound = Cell::new(cap);
-                let mut local: Vec<Transit<P::Msg>> = Vec::new();
-                let mut cross: Vec<Vec<Transit<P::Msg>>> =
-                    (0..n).map(|_| Vec::new()).collect();
+                let mut local: Vec<Transit<P::Msg>> = std::mem::take(&mut spare_local);
+                let mut cross: Vec<Vec<Transit<P::Msg>>> = std::mem::take(&mut spare_cross);
+                debug_assert_eq!(cross.len(), n, "spare burst buffers out of shape");
                 {
                     let mut emit = |t: Transit<P::Msg>| {
                         let d = shard_of(starts, t.flight.dst as usize);
@@ -328,6 +348,9 @@ fn worker<P: Program + Clone>(
                     pending = Some(PendingBurst { last_key, first_at, local, cross });
                 } else {
                     debug_assert!(local.is_empty(), "emissions without pops");
+                    debug_assert!(cross.iter().all(Vec::is_empty), "emissions without pops");
+                    spare_local = local;
+                    spare_cross = cross;
                 }
             }
         }

@@ -144,8 +144,9 @@ fn min_and_median_combine_match_oracle() {
     }
     let mut rng = SplitMix64::new(0xD0E);
     for (m, p) in [(1usize, 5usize), (2, 15), (7, 15), (16, 3), (5, 1)] {
-        let rows: Vec<Vec<u64>> =
+        let owned: Vec<Vec<u64>> =
             (0..m).map(|_| (0..p).map(|_| rng.next_u64()).collect()).collect();
+        let rows: Vec<&[u64]> = owned.iter().map(|r| r.as_slice()).collect();
         assert_eq!(
             native.median_combine(&rows),
             radix.median_combine(&rows),

@@ -196,6 +196,44 @@ fn window_barrier_edge_cases() {
     assert_digests_match("mergemin", "threads > nodes", &two(1), &two(64));
 }
 
+/// Small-message inlining is digest-invisible: forcing every
+/// `SmallWords` payload onto the boxed (heap) representation must
+/// reproduce the inline reference digests byte-for-byte, across every
+/// workload and all three backends. The flag only changes the in-memory
+/// representation — wire-byte accounting reads the logical length — so
+/// any divergence here means the inline path leaked into semantics.
+#[test]
+fn inline_and_boxed_small_messages_share_digests() {
+    use nanosort::nanopu::force_boxed_small_words;
+    use nanosort::sim::ExecKind;
+
+    let run = |spec: &registry::WorkloadSpec, exec: ExecKind, threads: usize| {
+        let params = registry::params_from_pairs(spec, spec.smoke).unwrap();
+        let nodes = params.u64(spec.nodes_param.name).unwrap() as usize;
+        Scenario::from_dyn((spec.build)(&params).unwrap())
+            .nodes(nodes)
+            .seed(CONFORMANCE_SEED)
+            .exec(exec)
+            .threads(threads)
+            .run()
+            .unwrap_or_else(|e| {
+                panic!("{} ({} threads={threads}): {e:#}", spec.name, exec.name())
+            })
+    };
+    for spec in registry::WORKLOADS {
+        force_boxed_small_words(false);
+        let inline = run(spec, ExecKind::Seq, 1);
+        force_boxed_small_words(true);
+        let boxed_seq = run(spec, ExecKind::Seq, 1);
+        let boxed_par = run(spec, ExecKind::Par, 3);
+        let boxed_opt = run(spec, ExecKind::Opt, 4);
+        force_boxed_small_words(false);
+        assert_digests_match(spec.name, "boxed seq", &inline, &boxed_seq);
+        assert_digests_match(spec.name, "boxed par threads=3", &inline, &boxed_par);
+        assert_digests_match(spec.name, "boxed opt threads=4", &inline, &boxed_opt);
+    }
+}
+
 /// Different seeds still disagree with each other under the parallel
 /// backend (it must not collapse seed sensitivity while being exact).
 #[test]
